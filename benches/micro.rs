@@ -1,0 +1,83 @@
+//! Micro-benchmarks: per-artifact PJRT call latency. The L3 perf pass
+//! reads these to find the hot path (EXPERIMENTS.md §Perf).
+//!
+//!   cargo bench --bench micro
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use dvi::runtime::{Role, Runtime, Tensor};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn bench_artifact(rt: &Arc<Runtime>, name: &str, iters: usize) {
+    let art = rt.artifact(name).expect("artifact");
+    let spec = art.spec.clone();
+    let mut kv: Vec<_> = rt.fresh_kv(name).unwrap();
+    let inputs: Vec<Tensor> = spec
+        .params_with_role(Role::In)
+        .map(|p| match p.dtype {
+            dvi::runtime::DType::F32 => Tensor::zeros_f32(p.shape.clone()),
+            dvi::runtime::DType::I32 => {
+                let n: usize = p.shape.iter().product();
+                Tensor::i32(p.shape.clone(), vec![1; n.max(1)][..n].to_vec())
+            }
+        })
+        .collect();
+
+    // warmup (chain kv state only when the artifact takes kv inputs —
+    // prefill artifacts *emit* kv without consuming it)
+    for _ in 0..3 {
+        let out = art.call(&rt.store, &kv, &inputs).unwrap();
+        if out.kv.len() == kv.len() {
+            kv = out.kv;
+        }
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let out = art.call(&rt.store, &kv, &inputs).unwrap();
+        if out.kv.len() == kv.len() {
+            kv = out.kv;
+        }
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:24} {:8.3} ms/call   ({iters} iters)", per * 1e3);
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP micro bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
+    println!("== per-artifact PJRT call latency ==");
+    let iters = std::env::var("DVI_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    for name in [
+        "draft_step",
+        "draft_block",
+        "verify_block",
+        "target_step",
+        "target_verify_block",
+        "sps_draft_step",
+        "medusa_heads",
+        "hydra_chain",
+        "eagle_step",
+        "train_step",
+        "prefill_shallow",
+        "prefill_deep",
+        "prefill_full",
+    ] {
+        if rt.has_artifact(name) {
+            bench_artifact(&rt, name, iters);
+        }
+    }
+}

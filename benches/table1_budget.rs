@@ -1,0 +1,29 @@
+//! Table 1 regenerator: training-budget comparison. Ours are measured
+//! (exposures.json written by distill.py + the online run's prompt
+//! count); the paper's numbers are shown alongside for reference.
+//!
+//!   cargo bench --bench table1_budget
+
+use std::path::{Path, PathBuf};
+
+use dvi::harness;
+use dvi::runtime::Runtime;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table1 bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir, Some(&[])).unwrap();
+    let prompts: usize = std::env::var("DVI_BENCH_TRAIN")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    println!("\n== Table 1 (training budgets) ==\n");
+    println!("{}", harness::table1(&rt, prompts));
+}

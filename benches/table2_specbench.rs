@@ -1,0 +1,49 @@
+//! Table 2 regenerator: the Spec-Bench grid (7 methods x 6 tasks, MAT +
+//! wall-time speedup + average). This is the paper's headline table.
+//!
+//!   cargo bench --bench table2_specbench
+//!
+//! Knobs: DVI_BENCH_N (prompts/task, default 25),
+//!        DVI_BENCH_TRAIN (online prompts for DVI first, default 400),
+//!        DVI_BENCH_METHODS (comma list).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dvi::harness;
+use dvi::learner::Objective;
+use dvi::runtime::Runtime;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table2 bench: run `make artifacts` first");
+        return;
+    }
+    let n: usize = std::env::var("DVI_BENCH_N")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let train: usize = std::env::var("DVI_BENCH_TRAIN")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let methods_env = std::env::var("DVI_BENCH_METHODS")
+        .unwrap_or_else(|_| harness::METHODS.join(","));
+    let methods: Vec<&str> = methods_env.split(',').collect();
+
+    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
+    if train > 0 && methods.contains(&"dvi") {
+        eprintln!("[table2] online-training DVI on {train} prompts");
+        harness::online_train(rt.clone(), Objective::Dvi, train, true).unwrap();
+    }
+    let result = harness::table2(rt, &methods, n).unwrap();
+    println!("\n== Table 2 (Spec-Bench comparison; n={n}/task) ==\n");
+    println!("{}", result.markdown);
+    if let Ok(path) = std::env::var("DVI_BENCH_CSV") {
+        std::fs::write(&path, &result.csv).unwrap();
+        eprintln!("[table2] csv -> {path}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 3 + Figure 2 regenerator: objective ablations (KL-only /
+//! PG-only / CE-only), each trained online from a fresh LoRA and then
+//! evaluated on the Spec-Bench grid; learning curves dumped as CSV.
+//!
+//!   cargo bench --bench table3_ablations
+//!
+//! Knobs: DVI_BENCH_TRAIN (default 400), DVI_BENCH_N (default 15),
+//!        DVI_BENCH_OUT (curve dir, default results/).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dvi::harness;
+use dvi::learner::Objective;
+use dvi::runtime::Runtime;
+use dvi::util::plot::ascii_plot;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table3 bench: run `make artifacts` first");
+        return;
+    }
+    let train: usize = std::env::var("DVI_BENCH_TRAIN")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let n: usize = std::env::var("DVI_BENCH_N")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let out_dir = PathBuf::from(
+        std::env::var("DVI_BENCH_OUT").unwrap_or_else(|_| "results".into()));
+    std::fs::create_dir_all(&out_dir).unwrap();
+
+    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
+    let objectives = [Objective::KlOnly, Objective::PgOnly, Objective::CeOnly,
+                      Objective::Dvi];
+    let results = harness::ablations(rt, &objectives, train, n).unwrap();
+
+    println!("\n== Table 3 (objective ablations; train={train}, n={n}) ==\n");
+    println!("{}", harness::table3_markdown(&results));
+
+    for r in &results {
+        let path = out_dir.join(format!("fig2_{}.csv", r.objective.name()));
+        let mut csv = String::from("step,batch_accept\n");
+        for (s, a) in &r.curve {
+            csv.push_str(&format!("{s},{a:.5}\n"));
+        }
+        std::fs::write(&path, csv).unwrap();
+        println!("{}", ascii_plot(
+            &format!("Fig 2 [{}]", r.objective.name()),
+            &[("batch accept", &r.curve)], 70, 10));
+    }
+}

@@ -1,0 +1,81 @@
+//! Distribution-shift demo — the paper's core motivation (§1): offline
+//! drafters go brittle when traffic drifts; DVI adapts online.
+//!
+//! Phase A: online-train the drafter on QA-style traffic and watch
+//!          acceptance climb.
+//! Phase B: switch traffic to translation (a different distribution) —
+//!          acceptance drops, then RECOVERS as verifier feedback keeps
+//!          flowing, with no offline retraining.
+//!
+//!   cargo run --release --example online_adaptation -- artifacts
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use dvi::engine::dvi::DviEngine;
+use dvi::engine::Engine;
+use dvi::harness::load_prompts;
+use dvi::learner::{Objective, ReplayBuffer, Schedule, Trainer};
+use dvi::runtime::Runtime;
+use dvi::util::plot::ascii_plot;
+
+fn main() -> Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
+
+    let buffer = Arc::new(Mutex::new(ReplayBuffer::new(8192)));
+    let mut trainer = Trainer::new(
+        rt.clone(), buffer.clone(), Schedule::new(Objective::Dvi), 7)?;
+    trainer.reset()?;
+    let mut engine = DviEngine::new(rt.clone())?.with_buffer(buffer);
+
+    let qa = load_prompts(&rt, "qa")?;
+    let translation = load_prompts(&rt, "translation")?;
+    let phase_a = 150.min(qa.len());
+    let phase_b = 150.min(translation.len());
+
+    let mut curve: Vec<(f64, f64)> = Vec::new();
+    let mut x = 0.0;
+
+    println!("== phase A: QA traffic ({phase_a} prompts, online updates) ==");
+    for s in qa.samples.iter().cycle().take(phase_a) {
+        let r = engine.generate(&s.prompt, s.max_new)?;
+        curve.push((x, r.acceptance_rate()));
+        x += 1.0;
+        trainer.maybe_train()?;
+    }
+    let a_end: f64 = curve[curve.len().saturating_sub(25)..]
+        .iter().map(|(_, a)| a).sum::<f64>() / 25.0;
+
+    println!("== phase B: traffic shifts to TRANSLATION ({phase_b} prompts) ==");
+    let shift_x = x;
+    for s in translation.samples.iter().cycle().take(phase_b) {
+        let r = engine.generate(&s.prompt, s.max_new)?;
+        curve.push((x, r.acceptance_rate()));
+        x += 1.0;
+        trainer.maybe_train()?;
+    }
+
+    // windowed means around the shift
+    let win = |lo: f64, hi: f64| -> f64 {
+        let v: Vec<f64> = curve.iter()
+            .filter(|(cx, _)| *cx >= lo && *cx < hi)
+            .map(|(_, a)| *a)
+            .collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let drop = win(shift_x, shift_x + 25.0);
+    let recovered = win(x - 25.0, x);
+
+    println!("{}", ascii_plot(
+        "acceptance rate (traffic shifts QA -> translation at the midpoint)",
+        &[("accept", &curve)], 72, 14));
+    println!("phase A final acceptance : {a_end:.3}");
+    println!("post-shift acceptance    : {drop:.3}   (drift penalty)");
+    println!("after online adaptation  : {recovered:.3}");
+    println!("learner steps            : {}", trainer.steps_done);
+    Ok(())
+}

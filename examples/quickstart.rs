@@ -1,0 +1,44 @@
+//! Quickstart: load the artifacts, run DVI self-speculative decoding on a
+//! few prompts, and compare against the AR baseline.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use dvi::harness::{load_prompts, make_engine};
+use dvi::runtime::Runtime;
+use dvi::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
+    let tok = Tokenizer::load(&rt.manifest.vocab_file)?;
+
+    let set = load_prompts(&rt, "qa")?;
+    let mut ar = make_engine(rt.clone(), "ar")?;
+    let mut dvi = make_engine(rt.clone(), "dvi")?;
+
+    println!("== DVI quickstart: greedy QA decoding, AR vs self-speculative ==\n");
+    for s in set.samples.iter().take(5) {
+        let a = ar.generate(&s.prompt, s.max_new)?;
+        let d = dvi.generate(&s.prompt, s.max_new)?;
+        assert_eq!(a.tokens, d.tokens, "speculation must be lossless");
+        println!("prompt : {}", tok.decode(&s.prompt[1..]));
+        println!("output : {}", tok.decode(&d.tokens));
+        println!(
+            "         AR {:.1}ms | DVI {:.1}ms ({:.2}x) | MAT {:.2} | accept {:.0}%\n",
+            a.decode_ns as f64 / 1e6,
+            d.decode_ns as f64 / 1e6,
+            a.decode_ns as f64 / d.decode_ns.max(1) as f64,
+            d.mat(),
+            d.acceptance_rate() * 100.0
+        );
+    }
+    println!("(drafter is untrained here — run the online_adaptation example");
+    println!(" or `dvi train` to watch acceptance climb)");
+    Ok(())
+}

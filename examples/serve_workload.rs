@@ -1,0 +1,96 @@
+//! End-to-end serving driver (the repository's E2E validation run —
+//! EXPERIMENTS.md §E2E): start the router with a worker pool and the
+//! online learner, replay a mixed live-traffic stream through it, and
+//! report latency percentiles, throughput, acceptance drift, and learner
+//! progress.
+//!
+//!   cargo run --release --example serve_workload -- artifacts 300
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use dvi::harness::load_prompts;
+use dvi::learner::Objective;
+use dvi::runtime::Runtime;
+use dvi::server::{Router, RouterConfig};
+
+fn pct(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dir = args.next().unwrap_or_else(|| "artifacts".into());
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
+    let stream = load_prompts(&rt, "stream")?;
+    let router = Router::start(
+        rt,
+        RouterConfig {
+            workers: 2,
+            method: "dvi".into(),
+            online: true,
+            objective: Objective::Dvi,
+            buffer_capacity: 8192,
+        },
+    )?;
+
+    println!("== serving {n} live-traffic prompts through the DVI router ==");
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n);
+    let mut accepts: Vec<f64> = Vec::with_capacity(n);
+    let mut tokens = 0usize;
+    let t0 = Instant::now();
+    for (i, s) in stream.samples.iter().take(n).enumerate() {
+        let t = Instant::now();
+        let resp = router.generate(s.prompt.clone(), s.max_new)?;
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        accepts.push(resp.acceptance);
+        tokens += resp.tokens.len();
+        if (i + 1) % 50 == 0 {
+            let recent: f64 =
+                accepts[accepts.len() - 50..].iter().sum::<f64>() / 50.0;
+            println!(
+                "  {:4}/{n}  acceptance(last50) = {recent:.3}  \
+                 train_steps = {}",
+                i + 1,
+                router
+                    .stats
+                    .train_steps
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut sorted = latencies_ms.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let first50: f64 = accepts[..50.min(accepts.len())].iter().sum::<f64>()
+        / 50.min(accepts.len()) as f64;
+    let last50: f64 = accepts[accepts.len().saturating_sub(50)..]
+        .iter()
+        .sum::<f64>()
+        / 50.min(accepts.len()) as f64;
+
+    println!("\n== report ==");
+    println!("prompts        : {n}");
+    println!("wall time      : {wall:.1}s");
+    println!("tokens         : {tokens} ({:.1} tok/s end-to-end)",
+             tokens as f64 / wall);
+    println!("latency p50    : {:.1} ms", pct(&sorted, 0.50));
+    println!("latency p90    : {:.1} ms", pct(&sorted, 0.90));
+    println!("latency p99    : {:.1} ms", pct(&sorted, 0.99));
+    println!("acceptance     : first50 {first50:.3} -> last50 {last50:.3}");
+    println!(
+        "train steps    : {}",
+        router.stats.train_steps.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    router.shutdown();
+    Ok(())
+}

@@ -1,0 +1,648 @@
+"""AOT exporter: lowers every decode/train computation to HLO text and
+packages weights + manifest + vocab + prompt sets into `artifacts/`.
+
+This is the ONLY bridge between Python and Rust. Python never runs on the
+request path; the Rust coordinator loads:
+
+  * `manifest.json`  — for each artifact: HLO file + ordered parameter and
+    output descriptors {name, shape, dtype, role}. Roles drive the generic
+    Rust runtime:
+      weight  — immutable tensor from weights.bin, uploaded once
+      global  — named mutable device buffer (LoRA adapters, Adam moments),
+                updated in place when an output carries the same name
+      kv      — per-sequence chained device buffer (caller-owned)
+      in/out  — per-call host data
+  * `weights.bin`    — named tensors (backbone split + baseline heads)
+  * `vocab.json`     — token id -> string
+  * `prompts/*.bin`  — token-id prompt sets (6 eval tasks + online stream)
+
+Interchange is HLO *text* via mlir_module_to_xla_computation — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts [--skip-train-heads]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from . import model as M
+from . import train as T
+from .config import DEFAULT_MODEL, DEFAULT_SPEC, DEFAULT_TRAIN, config_dict
+from .distill import (EAGLE_HIDDEN, HYDRA_HIDDEN, MEDUSA_HEADS, MEDUSA_HIDDEN,
+                      SPS_CFG, medusa_logits, eagle_predict)
+
+CFG = DEFAULT_MODEL
+SPEC = DEFAULT_SPEC
+TCFG = DEFAULT_TRAIN
+
+F32, I32 = "f32", "i32"
+
+
+@dataclass
+class Port:
+    name: str
+    shape: tuple
+    dtype: str
+    role: str   # weight | global | kv | in | out
+
+
+def _spec(p: Port):
+    dt = jnp.float32 if p.dtype == F32 else jnp.int32
+    return jax.ShapeDtypeStruct(tuple(p.shape), dt)
+
+
+def to_hlo_text(fn, in_specs, donate=()) -> str:
+    """Lower to HLO text. `donate` = parameter indices to mark donated —
+    XLA then updates KV caches in place instead of copying the whole
+    cache every call (input_output_alias survives the text round-trip;
+    EXPERIMENTS.md §Perf). Only caller-owned per-sequence state (role=kv)
+    is ever donated: `global` buffers are read concurrently by workers
+    while the learner replaces them, so they must stay immutable."""
+    lowered = jax.jit(fn, donate_argnums=tuple(donate)).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------------------------------------------------------
+# Weight naming: split the pretrained backbone into shallow/deep groups
+# ----------------------------------------------------------------------------
+
+def split_weights(params: dict) -> dict:
+    k = CFG.split_layer
+    w = {"sh.embed": params["embed"]}
+    for t in M.LAYER_TENSORS:
+        w[f"sh.{t}"] = params[t][:k]
+        w[f"dp.{t}"] = params[t][k:]
+    w["dp.final_norm"] = params["final_norm"]
+    w["dp.lm_head"] = params["lm_head"]
+    # Frozen draft-head base projection = transplanted LM head (paper §3.1).
+    w["draft_base"] = params["lm_head"]
+    # Full-model stacked tensors for the AR/baseline executables.
+    w["fl.embed"] = params["embed"]
+    for t in M.LAYER_TENSORS:
+        w[f"fl.{t}"] = params[t]
+    w["fl.final_norm"] = params["final_norm"]
+    w["fl.lm_head"] = params["lm_head"]
+    return w
+
+
+def _shallow_ports() -> list:
+    d, k = CFG.d_model, CFG.split_layer
+    ff, V = CFG.d_ff, CFG.vocab_size
+    shapes = {
+        "wq": (k, d, d), "wk": (k, d, d), "wv": (k, d, d), "wo": (k, d, d),
+        "w_gate": (k, d, ff), "w_up": (k, d, ff), "w_down": (k, ff, d),
+        "rms_attn": (k, d), "rms_mlp": (k, d),
+    }
+    ports = [Port("sh.embed", (V, d), F32, "weight")]
+    ports += [Port(f"sh.{t}", shapes[t], F32, "weight") for t in M.LAYER_TENSORS]
+    return ports
+
+
+def _deep_ports(prefix="dp", n=None, cfg=None) -> list:
+    cfg = cfg or CFG
+    n = n if n is not None else cfg.deep_layers
+    d, ff = cfg.d_model, cfg.d_ff
+    shapes = {
+        "wq": (n, d, d), "wk": (n, d, d), "wv": (n, d, d), "wo": (n, d, d),
+        "w_gate": (n, d, ff), "w_up": (n, d, ff), "w_down": (n, ff, d),
+        "rms_attn": (n, d), "rms_mlp": (n, d),
+    }
+    return [Port(f"{prefix}.{t}", shapes[t], F32, "weight")
+            for t in M.LAYER_TENSORS]
+
+
+def _params_from(ports, args, prefix):
+    """Rebuild a model.py-style params dict from flat artifact args."""
+    out = {}
+    for port, arr in zip(ports, args):
+        if port.name.startswith(prefix + "."):
+            out[port.name[len(prefix) + 1:]] = arr
+    return out
+
+
+def _kv_shape(n_layers):
+    return (n_layers, CFG.max_seq, CFG.n_heads, CFG.head_dim)
+
+
+# ----------------------------------------------------------------------------
+# Artifact definitions
+# ----------------------------------------------------------------------------
+
+ARTIFACTS = {}
+
+
+def artifact(name):
+    def reg(build):
+        ARTIFACTS[name] = build
+        return build
+    return reg
+
+
+@artifact("draft_step")
+def _draft_step():
+    d, V, r = CFG.d_model, CFG.vocab_size, CFG.lora_rank
+    k = CFG.split_layer
+    ports = _shallow_ports() + [
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("draft_base", (V, d), F32, "weight"),
+        Port("lora.A", (V, r), F32, "global"),
+        Port("lora.B", (r, d), F32, "global"),
+        Port("kv_sh_k", _kv_shape(k), F32, "kv"),
+        Port("kv_sh_v", _kv_shape(k), F32, "kv"),
+        Port("tok", (), I32, "in"),
+        Port("pos", (), I32, "in"),
+    ]
+    outs = [
+        Port("logits_theta", (V,), F32, "out"),
+        Port("hk", (d,), F32, "out"),
+        Port("kv_sh_k", _kv_shape(k), F32, "kv"),
+        Port("kv_sh_v", _kv_shape(k), F32, "kv"),
+    ]
+
+    def fn(*args):
+        p = _params_from(ports, args, "sh")
+        p["final_norm"] = args[10]
+        p["draft_base"] = args[11]
+        lora_a, lora_b = args[12], args[13]
+        kv_k, kv_v, tok, pos = args[14], args[15], args[16], args[17]
+        x = p["embed"][tok][None, :]
+        x, kv_k, kv_v = M.run_layers_decode(p, x, kv_k, kv_v, pos, 0, k, CFG)
+        hk = x[0]
+        logits = M.draft_head_logits(p, lora_a, lora_b, x, CFG)[0]
+        return logits, hk, kv_k, kv_v
+
+    return fn, ports, outs
+
+
+@artifact("draft_block")
+def _draft_block():
+    """Fused k_spec-step draft loop (PERF, EXPERIMENTS.md §Perf): greedy
+    argmax between steps happens in-graph, collapsing k_spec PJRT calls
+    (and their host round-trips) into one. The per-step variant
+    (`draft_step`) is kept for parity tests and ablation."""
+    d, V, r = CFG.d_model, CFG.vocab_size, CFG.lora_rank
+    k, B = CFG.split_layer, SPEC.k_spec
+    ports = _shallow_ports() + [
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("draft_base", (V, d), F32, "weight"),
+        Port("lora.A", (V, r), F32, "global"),
+        Port("lora.B", (r, d), F32, "global"),
+        Port("kv_sh_k", _kv_shape(k), F32, "kv"),
+        Port("kv_sh_v", _kv_shape(k), F32, "kv"),
+        Port("tok", (), I32, "in"),
+        Port("pos", (), I32, "in"),
+    ]
+    outs = [
+        Port("drafted", (B,), I32, "out"),
+        Port("hk_rows", (B, d), F32, "out"),
+        Port("kv_sh_k", _kv_shape(k), F32, "kv"),
+        Port("kv_sh_v", _kv_shape(k), F32, "kv"),
+    ]
+
+    def fn(*args):
+        p = _params_from(ports, args, "sh")
+        p["final_norm"] = args[10]
+        p["draft_base"] = args[11]
+        lora_a, lora_b = args[12], args[13]
+        kv_k, kv_v, tok, pos = args[14], args[15], args[16], args[17]
+        drafted, hks = [], []
+        for i in range(B):
+            x = p["embed"][tok][None, :]
+            x, kv_k, kv_v = M.run_layers_decode(p, x, kv_k, kv_v, pos + i,
+                                                0, k, CFG)
+            hks.append(x[0])
+            logits = M.draft_head_logits(p, lora_a, lora_b, x, CFG)[0]
+            tok = jnp.argmax(logits).astype(jnp.int32)
+            drafted.append(tok)
+        return jnp.stack(drafted), jnp.stack(hks), kv_k, kv_v
+
+    return fn, ports, outs
+
+
+@artifact("verify_block")
+def _verify_block():
+    d, V = CFG.d_model, CFG.vocab_size
+    n, B = CFG.deep_layers, SPEC.k_spec
+    ports = _deep_ports() + [
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("dp.lm_head", (V, d), F32, "weight"),
+        Port("kv_dp_k", _kv_shape(n), F32, "kv"),
+        Port("kv_dp_v", _kv_shape(n), F32, "kv"),
+        Port("hk_block", (B, d), F32, "in"),
+        Port("pos", (), I32, "in"),
+    ]
+    outs = [
+        Port("logits_phi", (B, V), F32, "out"),
+        Port("kv_dp_k", _kv_shape(n), F32, "kv"),
+        Port("kv_dp_v", _kv_shape(n), F32, "kv"),
+    ]
+
+    def fn(*args):
+        p = _params_from(ports, args, "dp")
+        kv_k, kv_v, hk, pos = args[11], args[12], args[13], args[14]
+        # Deep path: layer indices split..L map to cache rows 0..n-1; the
+        # params dict here holds only deep tensors so lo=0, hi=n.
+        x, kv_k, kv_v = M.run_layers_decode(p, hk, kv_k, kv_v, pos, 0, n, CFG)
+        logits = M.verifier_logits(p, x, CFG)
+        return logits, kv_k, kv_v
+
+    return fn, ports, outs
+
+
+@artifact("prefill_shallow")
+def _prefill_shallow():
+    d, k, P = CFG.d_model, CFG.split_layer, SPEC.prefill_seq
+    ports = _shallow_ports() + [
+        Port("tokens", (P,), I32, "in"),
+    ]
+    outs = [
+        Port("hk_seq", (P, d), F32, "out"),
+        Port("kv_sh_k", _kv_shape(k), F32, "kv"),
+        Port("kv_sh_v", _kv_shape(k), F32, "kv"),
+    ]
+
+    def fn(*args):
+        p = _params_from(ports, args, "sh")
+        tokens = args[10]
+        x = p["embed"][tokens]
+        x, kv_k, kv_v = M.run_layers_prefill(p, x, 0, k, CFG, CFG.max_seq)
+        return x, kv_k, kv_v
+
+    return fn, ports, outs
+
+
+@artifact("prefill_deep")
+def _prefill_deep():
+    d, V = CFG.d_model, CFG.vocab_size
+    n, P = CFG.deep_layers, SPEC.prefill_seq
+    ports = _deep_ports() + [
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("dp.lm_head", (V, d), F32, "weight"),
+        Port("hk_seq", (P, d), F32, "in"),
+        Port("length", (), I32, "in"),
+    ]
+    outs = [
+        Port("logits_last", (V,), F32, "out"),
+        Port("kv_dp_k", _kv_shape(n), F32, "kv"),
+        Port("kv_dp_v", _kv_shape(n), F32, "kv"),
+    ]
+
+    def fn(*args):
+        p = _params_from(ports, args, "dp")
+        hk_seq, length = args[11], args[12]
+        x, kv_k, kv_v = M.run_layers_prefill(p, hk_seq, 0, n, CFG, CFG.max_seq)
+        last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, x.shape[1]))
+        logits = M.verifier_logits(p, last, CFG)[0]
+        return logits, kv_k, kv_v
+
+    return fn, ports, outs
+
+
+def _full_ports(prefix, cfg):
+    V, d = cfg.vocab_size, cfg.d_model
+    return ([Port(f"{prefix}.embed", (V, d), F32, "weight")]
+            + _deep_ports(prefix, cfg.n_layers, cfg)
+            + [Port(f"{prefix}.final_norm", (d,), F32, "weight"),
+               Port(f"{prefix}.lm_head", (V, d), F32, "weight")])
+
+
+def _full_model_artifacts(prefix, cfg, kv_prefix):
+    """prefill / step / verify-block for a *complete* model (backbone via
+    prefix 'fl', SpS drafter via prefix 'sps')."""
+    V, d, L = cfg.vocab_size, cfg.d_model, cfg.n_layers
+    P, B = SPEC.prefill_seq, SPEC.k_spec
+    kv = (L, CFG.max_seq, cfg.n_heads, cfg.head_dim)
+    base = _full_ports(prefix, cfg)
+    nb = len(base)
+
+    def prefill():
+        ports = base + [Port("tokens", (P,), I32, "in"),
+                        Port("length", (), I32, "in")]
+        outs = [Port("logits_last", (V,), F32, "out"),
+                Port("hl_last", (d,), F32, "out"),
+                Port(f"{kv_prefix}_k", kv, F32, "kv"),
+                Port(f"{kv_prefix}_v", kv, F32, "kv")]
+
+        def fn(*args):
+            p = _params_from(ports, args, prefix)
+            tokens, length = args[nb], args[nb + 1]
+            x = p["embed"][tokens]
+            x, kv_k, kv_v = M.run_layers_prefill(p, x, 0, L, cfg, CFG.max_seq)
+            last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, d))
+            logits = M.verifier_logits(p, last, cfg)[0]
+            return logits, last[0], kv_k, kv_v
+
+        return fn, ports, outs
+
+    def step():
+        ports = base + [Port(f"{kv_prefix}_k", kv, F32, "kv"),
+                        Port(f"{kv_prefix}_v", kv, F32, "kv"),
+                        Port("tok", (), I32, "in"),
+                        Port("pos", (), I32, "in")]
+        outs = [Port("logits", (V,), F32, "out"),
+                Port("hl", (d,), F32, "out"),
+                Port(f"{kv_prefix}_k", kv, F32, "kv"),
+                Port(f"{kv_prefix}_v", kv, F32, "kv")]
+
+        def fn(*args):
+            p = _params_from(ports, args, prefix)
+            kv_k, kv_v, tok, pos = args[nb], args[nb + 1], args[nb + 2], args[nb + 3]
+            x = p["embed"][tok][None, :]
+            x, kv_k, kv_v = M.run_layers_decode(p, x, kv_k, kv_v, pos, 0, L, cfg)
+            logits = M.verifier_logits(p, x, cfg)[0]
+            return logits, x[0], kv_k, kv_v
+
+        return fn, ports, outs
+
+    def verify():
+        ports = base + [Port(f"{kv_prefix}_k", kv, F32, "kv"),
+                        Port(f"{kv_prefix}_v", kv, F32, "kv"),
+                        Port("toks", (B,), I32, "in"),
+                        Port("pos", (), I32, "in")]
+        outs = [Port("logits", (B, V), F32, "out"),
+                Port("hl_block", (B, d), F32, "out"),
+                Port(f"{kv_prefix}_k", kv, F32, "kv"),
+                Port(f"{kv_prefix}_v", kv, F32, "kv")]
+
+        def fn(*args):
+            p = _params_from(ports, args, prefix)
+            kv_k, kv_v, toks, pos = args[nb], args[nb + 1], args[nb + 2], args[nb + 3]
+            x = p["embed"][toks]
+            x, kv_k, kv_v = M.run_layers_decode(p, x, kv_k, kv_v, pos, 0, L, cfg)
+            logits = M.verifier_logits(p, x, cfg)
+            return logits, x, kv_k, kv_v
+
+        return fn, ports, outs
+
+    return prefill, step, verify
+
+
+(_pf, _st, _vf) = _full_model_artifacts("fl", CFG, "kv_fl")
+ARTIFACTS["prefill_full"] = _pf
+ARTIFACTS["target_step"] = _st
+ARTIFACTS["target_verify_block"] = _vf
+
+(_spf, _sst, _svf) = _full_model_artifacts("sps", SPS_CFG, "kv_sps")
+ARTIFACTS["sps_prefill"] = _spf
+ARTIFACTS["sps_draft_step"] = _sst
+
+
+@artifact("train_step")
+def _train_step():
+    d, V, r = CFG.d_model, CFG.vocab_size, CFG.lora_rank
+    N = TCFG.batch_size
+    ports = [
+        Port("draft_base", (V, d), F32, "weight"),
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("lora.A", (V, r), F32, "global"),
+        Port("lora.B", (r, d), F32, "global"),
+        Port("adam.mA", (V, r), F32, "global"),
+        Port("adam.vA", (V, r), F32, "global"),
+        Port("adam.mB", (r, d), F32, "global"),
+        Port("adam.vB", (r, d), F32, "global"),
+        Port("hk", (N, d), F32, "in"),
+        Port("actions", (N,), I32, "in"),
+        Port("logits_phi", (N, V), F32, "in"),
+        Port("rewards", (N,), F32, "in"),
+        Port("mask", (N,), F32, "in"),
+        Port("hyper", (T.HYPER_LEN,), F32, "in"),
+    ]
+    outs = [
+        Port("metrics", (T.METRICS_LEN,), F32, "out"),
+        Port("lora.A", (V, r), F32, "global"),
+        Port("lora.B", (r, d), F32, "global"),
+        Port("adam.mA", (V, r), F32, "global"),
+        Port("adam.vA", (V, r), F32, "global"),
+        Port("adam.mB", (r, d), F32, "global"),
+        Port("adam.vB", (r, d), F32, "global"),
+    ]
+
+    def fn(draft_base, final_norm, a, b, m_a, v_a, m_b, v_b,
+           hk, actions, logits_phi, rewards, mask, hyper):
+        frozen = {"draft_base": draft_base, "final_norm": final_norm}
+        a, b, m_a, v_a, m_b, v_b, metrics = T.train_step(
+            frozen, a, b, m_a, v_a, m_b, v_b,
+            hk, actions, logits_phi, rewards, mask, hyper, CFG, TCFG)
+        return metrics, a, b, m_a, v_a, m_b, v_b
+
+    return fn, ports, outs
+
+
+@artifact("medusa_heads")
+def _medusa_heads():
+    d, V = CFG.d_model, CFG.vocab_size
+    ports = [
+        Port("med.U", (MEDUSA_HEADS, d, MEDUSA_HIDDEN), F32, "weight"),
+        Port("med.W", (MEDUSA_HEADS, MEDUSA_HIDDEN, V), F32, "weight"),
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("hl", (d,), F32, "in"),
+    ]
+    outs = [Port("logits", (MEDUSA_HEADS, V), F32, "out")]
+
+    def fn(u, w, norm, hl):
+        hln = M.rmsnorm(hl, norm, CFG.norm_eps)
+        return (medusa_logits({"U": u, "W": w}, hln),)
+
+    return fn, ports, outs
+
+
+@artifact("hydra_chain")
+def _hydra_chain():
+    d, V = CFG.d_model, CFG.vocab_size
+    K = MEDUSA_HEADS
+    ports = [
+        Port("hy.W0", (d, HYDRA_HIDDEN), F32, "weight"),
+        Port("hy.Ws", (HYDRA_HIDDEN, HYDRA_HIDDEN), F32, "weight"),
+        Port("hy.We", (d, HYDRA_HIDDEN), F32, "weight"),
+        Port("hy.W", (HYDRA_HIDDEN, V), F32, "weight"),
+        Port("fl.embed", (V, d), F32, "weight"),
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("hl", (d,), F32, "in"),
+        Port("tok0", (), I32, "in"),
+    ]
+    outs = [Port("toks", (K,), I32, "out"),
+            Port("logits", (K, V), F32, "out")]
+
+    def fn(w0, ws, we, w, embed, norm, hl, tok0):
+        hln = M.rmsnorm(hl, norm, CFG.norm_eps)
+        s = jax.nn.silu(hln @ w0)
+        tok = tok0
+        toks, logits = [], []
+        for _ in range(K):
+            s = jax.nn.silu(s @ ws + embed[tok] @ we)
+            lg = s @ w
+            tok = jnp.argmax(lg).astype(jnp.int32)
+            toks.append(tok)
+            logits.append(lg)
+        return jnp.stack(toks), jnp.stack(logits)
+
+    return fn, ports, outs
+
+
+@artifact("eagle_step")
+def _eagle_step():
+    d, V = CFG.d_model, CFG.vocab_size
+    ports = [
+        Port("ea.W1", (2 * d, EAGLE_HIDDEN), F32, "weight"),
+        Port("ea.W2", (EAGLE_HIDDEN, d), F32, "weight"),
+        Port("fl.embed", (V, d), F32, "weight"),
+        Port("dp.final_norm", (d,), F32, "weight"),
+        Port("dp.lm_head", (V, d), F32, "weight"),
+        Port("feat", (d,), F32, "in"),
+        Port("tok", (), I32, "in"),
+    ]
+    outs = [Port("logits", (V,), F32, "out"),
+            Port("feat_next", (d,), F32, "out")]
+
+    def fn(w1, w2, embed, norm, head, feat, tok):
+        f = eagle_predict({"W1": w1, "W2": w2}, feat, embed[tok])
+        logits = M.rmsnorm(f, norm, CFG.norm_eps) @ head.T
+        return logits, f
+
+    return fn, ports, outs
+
+
+# ----------------------------------------------------------------------------
+# Packaging: weights.bin, prompts, vocab, manifest
+# ----------------------------------------------------------------------------
+
+DT_CODE = {"float32": 0, "int32": 1}
+
+
+def write_weights_bin(path: str, tensors: dict):
+    with open(path, "wb") as f:
+        f.write(b"DVIW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in sorted(tensors.items()):
+            # NB: np.ascontiguousarray would promote 0-d scalars to 1-d;
+            # np.asarray(order="C") preserves rank.
+            arr = np.asarray(arr, order="C")
+            code = DT_CODE[str(arr.dtype)]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+TASK_IDS = {name: i for i, name in enumerate(
+    ["mt", "translation", "summarization", "qa", "math", "rag"])}
+
+
+def write_prompts_bin(path: str, samples, max_new: int):
+    with open(path, "wb") as f:
+        f.write(b"DVIP")
+        f.write(struct.pack("<II", 1, len(samples)))
+        for s in samples:
+            ids = np.asarray(s.prompt, dtype=np.uint32)
+            ans = np.asarray(s.answer, dtype=np.uint32)
+            f.write(struct.pack("<IIII", TASK_IDS[s.task], max_new,
+                                len(ids), len(ans)))
+            f.write(ids.tobytes())
+            f.write(ans.tobytes())
+
+
+def export(out_dir: str, backbone_path: str, heads_path: str | None,
+           only: list | None = None):
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "prompts"), exist_ok=True)
+
+    params = {k: jnp.asarray(v) for k, v in np.load(backbone_path).items()}
+    tensors = split_weights(params)
+    if heads_path and os.path.exists(heads_path):
+        tensors.update({k: np.asarray(v) for k, v in np.load(heads_path).items()})
+
+    # LoRA / Adam initial values (role=global buffers start from these).
+    lora = M.init_lora(CFG, jax.random.PRNGKey(42))
+    tensors["lora.A"] = lora["A"]
+    tensors["lora.B"] = lora["B"]
+    for n, shape in (("adam.mA", lora["A"].shape), ("adam.vA", lora["A"].shape),
+                     ("adam.mB", lora["B"].shape), ("adam.vB", lora["B"].shape)):
+        tensors[n] = np.zeros(shape, np.float32)
+
+    manifest = {"version": 1, "config": config_dict(), "artifacts": {}}
+    names = only or list(ARTIFACTS.keys())
+    for name in names:
+        build = ARTIFACTS[name]
+        t0 = time.time()
+        fn, ports, outs = build()
+        missing = [p.name for p in ports
+                   if p.role in ("weight", "global") and p.name not in tensors]
+        if missing:
+            print(f"  SKIP {name}: missing weights {missing}")
+            continue
+        donate = [i for i, p in enumerate(ports) if p.role == "kv"]
+        hlo = to_hlo_text(fn, [_spec(p) for p in ports], donate)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "params": [asdict(p) for p in ports],
+            "outputs": [asdict(p) for p in outs],
+        }
+        print(f"  exported {name} ({time.time() - t0:.1f}s, "
+              f"{len(hlo) // 1024}KB)", flush=True)
+
+    write_weights_bin(os.path.join(out_dir, "weights.bin"), tensors)
+
+    with open(os.path.join(out_dir, "vocab.json"), "w") as f:
+        json.dump(corpus.VOCAB, f)
+
+    # Eval prompt sets (held-out seeds) + the ShareGPT-analogue stream.
+    prompt_index = {}
+    for i, task in enumerate(TASK_IDS):
+        samples = corpus.eval_prompts(task, 100, corpus.EVAL_SEED_BASE + i)
+        fname = f"prompts/{task}.bin"
+        write_prompts_bin(os.path.join(out_dir, fname), samples,
+                          SPEC.max_new_tokens)
+        prompt_index[task] = fname
+    stream = corpus.sharegpt_stream(2000, corpus.STREAM_SEED)
+    write_prompts_bin(os.path.join(out_dir, "prompts/stream.bin"), stream,
+                      SPEC.max_new_tokens)
+    prompt_index["stream"] = "prompts/stream.bin"
+    manifest["prompts"] = prompt_index
+    manifest["weights"] = "weights.bin"
+    manifest["vocab"] = "vocab.json"
+
+    if os.path.exists(os.path.join(out_dir, "exposures.json")):
+        with open(os.path.join(out_dir, "exposures.json")) as f:
+            manifest["exposures"] = json.load(f)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--backbone", default="../artifacts/backbone.npz")
+    ap.add_argument("--heads", default="../artifacts/heads.npz")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names")
+    args = ap.parse_args()
+    export(args.out, args.backbone, args.heads, args.only)
+
+
+if __name__ == "__main__":
+    main()

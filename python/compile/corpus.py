@@ -1,0 +1,293 @@
+"""Synthetic language + workload generators.
+
+This module is the data substrate that replaces ShareGPT (training stream)
+and Spec-Bench (six evaluation workloads) — see DESIGN.md §Substitutions.
+
+Design goals:
+  * a 512-token vocabulary shared between Python (pretraining/AOT) and the
+    Rust coordinator (tokenizer + workloads read `artifacts/vocab.json` /
+    `artifacts/prompts/*.bin`);
+  * a language a ~5M-param model learns to low perplexity in ~1.5k steps;
+  * six task flavours whose *distributional signatures* match the axes that
+    drive the paper's per-task results (local lexical structure, copy rate,
+    long-range dependence — see DESIGN.md).
+
+Everything is deterministic given a seed; eval prompt sets use held-out
+seeds so online training never sees the benchmark prompts.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+# ----------------------------------------------------------------------------
+# Vocabulary (512 tokens)
+# ----------------------------------------------------------------------------
+
+PAD, BOS, EOS, SEP, USR, ASST = 0, 1, 2, 3, 4, 5
+
+_SPECIALS = ["<pad>", "<bos>", "<eos>", "<sep>", "<usr>", "<asst>"]
+_DIGITS = [str(d) for d in range(10)]
+_PUNCT = ["+", "-", "*", "=", "(", ")", ".", ",", "?", "!", ":", ";"]
+_CONTROL = [
+    "translate", "summarize", "question", "answer", "context", "compute",
+    "what", "who", "the", "is", "of", "and", "to", "a", "in", "it",
+    "please", "tell", "me", "about", "hello", "thanks", "yes", "no",
+]
+
+_N_ENTITIES = 48
+_N_RELATIONS = 8
+_N_VERBS = 24
+_N_ADJ = 24
+_N_NOUNS = 40
+_N_MAPPABLE = 100   # base words with a foreign-token translation
+
+_ENTITIES = [f"ent{i:02d}" for i in range(_N_ENTITIES)]
+_RELATIONS = [
+    "owns", "likes", "visits", "knows", "leads", "follows", "builds", "sells",
+]
+assert len(_RELATIONS) == _N_RELATIONS
+_VERBS = [f"verb{i:02d}" for i in range(_N_VERBS)]
+_ADJ = [f"adj{i:02d}" for i in range(_N_ADJ)]
+_NOUNS = [f"noun{i:02d}" for i in range(_N_NOUNS)]
+_FOREIGN = [f"g{i:03d}" for i in range(_N_MAPPABLE)]
+
+
+def build_vocab() -> list[str]:
+    """Token id -> string. Padded with filler words to exactly 512."""
+    words = (
+        _SPECIALS + _DIGITS + _PUNCT + _CONTROL
+        + _ENTITIES + _RELATIONS + _VERBS + _ADJ + _NOUNS + _FOREIGN
+    )
+    i = 0
+    while len(words) < 512:
+        words.append(f"fill{i:03d}")
+        i += 1
+    assert len(words) == 512, len(words)
+    assert len(set(words)) == 512
+    return words
+
+
+VOCAB = build_vocab()
+TOK = {w: i for i, w in enumerate(VOCAB)}
+
+
+def encode(words: list[str]) -> list[int]:
+    return [TOK[w] for w in words]
+
+
+def decode(ids: list[int]) -> list[str]:
+    return [VOCAB[i] for i in ids]
+
+
+# Mappable words for the translation task: the first 100 "content" words.
+_MAPPABLE = (_ENTITIES + _VERBS + _ADJ + _NOUNS)[:_N_MAPPABLE]
+TRANSLATION = {w: g for w, g in zip(_MAPPABLE, _FOREIGN)}
+
+
+# ----------------------------------------------------------------------------
+# Knowledge base (deterministic): relation(entity) -> entity
+# ----------------------------------------------------------------------------
+
+def _kb() -> dict[tuple[str, str], str]:
+    rng = random.Random(1337)
+    kb = {}
+    for e in _ENTITIES:
+        for r in _RELATIONS:
+            kb[(e, r)] = _ENTITIES[rng.randrange(_N_ENTITIES)]
+    return kb
+
+
+KB = _kb()
+
+
+def _fact_words(e: str, r: str) -> list[str]:
+    return [e, r, KB[(e, r)], "."]
+
+
+# ----------------------------------------------------------------------------
+# Task generators. Each returns (prompt_words, answer_words).
+# Prompt ends with <sep>; answer ends with <eos>.
+# ----------------------------------------------------------------------------
+
+def gen_translation(rng: random.Random) -> tuple[list[str], list[str]]:
+    n = rng.randint(4, 10)
+    src = [rng.choice(_MAPPABLE) for _ in range(n)]
+    tgt = [TRANSLATION[w] for w in src]
+    return ["translate", ":"] + src + ["<sep>"], tgt + ["<eos>"]
+
+
+def _digits_of(x: int) -> list[str]:
+    return list(str(x))
+
+
+def gen_math(rng: random.Random) -> tuple[list[str], list[str]]:
+    a = rng.randint(10, 999)
+    b = rng.randint(10, 999)
+    op = rng.choice(["+", "-"])
+    res = a + b if op == "+" else a - b
+    ans = _digits_of(abs(res))
+    if res < 0:
+        ans = ["-"] + ans
+    prompt = ["compute", ":"] + _digits_of(a) + [op] + _digits_of(b) + ["=", "<sep>"]
+    return prompt, ans + ["<eos>"]
+
+
+def gen_qa(rng: random.Random) -> tuple[list[str], list[str]]:
+    e = rng.choice(_ENTITIES)
+    r = rng.choice(_RELATIONS)
+    prompt = ["question", ":", "what", r, e, "?", "<sep>"]
+    return prompt, [KB[(e, r)], ".", "<eos>"]
+
+
+def _doc_sentences(rng: random.Random, n: int) -> list[list[str]]:
+    sents = []
+    for _ in range(n):
+        kind = rng.random()
+        if kind < 0.5:
+            e, r = rng.choice(_ENTITIES), rng.choice(_RELATIONS)
+            sents.append(_fact_words(e, r))
+        else:
+            s = [
+                "the", rng.choice(_ADJ), rng.choice(_NOUNS),
+                rng.choice(_VERBS), "the", rng.choice(_NOUNS), ".",
+            ]
+            sents.append(s)
+    return sents
+
+
+def gen_summarization(rng: random.Random) -> tuple[list[str], list[str]]:
+    sents = _doc_sentences(rng, rng.randint(4, 7))
+    doc = [w for s in sents for w in s]
+    # Extractive convention the model learns: the summary is the first
+    # fact sentence (or the first sentence if no facts).
+    summary = next((s for s in sents if s[1] in _RELATIONS), sents[0])
+    return ["summarize", ":"] + doc + ["<sep>"], summary + ["<eos>"]
+
+
+def gen_rag(rng: random.Random) -> tuple[list[str], list[str]]:
+    # Retrieved context contains the answer; high copy-rate workload.
+    e, r = rng.choice(_ENTITIES), rng.choice(_RELATIONS)
+    chunks = [_fact_words(e, r)]
+    for _ in range(rng.randint(2, 3)):
+        e2, r2 = rng.choice(_ENTITIES), rng.choice(_RELATIONS)
+        chunks.append(_fact_words(e2, r2))
+    rng.shuffle(chunks)
+    ctx = [w for c in chunks for w in c]
+    prompt = ["context", ":"] + ctx + ["question", ":", "what", r, e, "?", "<sep>"]
+    # Answer restates the full fact (copying from context).
+    return prompt, [e, r, KB[(e, r)], ".", "<eos>"]
+
+
+_GREETINGS = [
+    ["hello", "please", "tell", "me", "about"],
+    ["what", "is", "the"],
+    ["please", "compute"],
+]
+
+
+def gen_chat(rng: random.Random) -> tuple[list[str], list[str]]:
+    """Multi-turn assistant-flavoured dialogue (MT-Bench analogue)."""
+    turns: list[str] = []
+    n_turns = rng.randint(1, 2)
+    answer: list[str] = []
+    for t in range(n_turns):
+        e = rng.choice(_ENTITIES)
+        r = rng.choice(_RELATIONS)
+        turns += ["<usr>"] + rng.choice(_GREETINGS) + [e, "?"]
+        resp = [e, r, KB[(e, r)], ",", "and", e, rng.choice(_VERBS),
+                "the", rng.choice(_NOUNS), "."]
+        if t < n_turns - 1:
+            turns += ["<asst>"] + resp
+        else:
+            turns += ["<sep>"]
+            answer = resp + ["<eos>"]
+    return turns, answer
+
+
+TASKS = {
+    "translation": gen_translation,
+    "math": gen_math,
+    "qa": gen_qa,
+    "summarization": gen_summarization,
+    "rag": gen_rag,
+    "mt": gen_chat,
+}
+
+# Pretraining mixture: heavier on translation (local structure) so the
+# backbone masters the deterministic tasks; mirrors an instruction-tuned
+# LM being confident on templated continuations.
+_PRETRAIN_MIX = [
+    ("translation", 0.28),
+    ("math", 0.14),
+    ("qa", 0.14),
+    ("rag", 0.16),
+    ("summarization", 0.12),
+    ("mt", 0.16),
+]
+
+# ShareGPT-analogue online stream: assistant-flavoured mixture (more chat /
+# qa / rag), deliberately *not* identical to the eval task mixture.
+_STREAM_MIX = [
+    ("mt", 0.30),
+    ("qa", 0.20),
+    ("rag", 0.20),
+    ("translation", 0.15),
+    ("summarization", 0.10),
+    ("math", 0.05),
+]
+
+
+def _pick(rng: random.Random, mix) -> str:
+    x = rng.random()
+    acc = 0.0
+    for name, p in mix:
+        acc += p
+        if x < acc:
+            return name
+    return mix[-1][0]
+
+
+@dataclass
+class Sample:
+    task: str
+    prompt: list[int]    # token ids, starts with BOS, ends with SEP
+    answer: list[int]    # token ids, ends with EOS
+
+
+def make_sample(task: str, rng: random.Random) -> Sample:
+    p, a = TASKS[task](rng)
+    return Sample(task, [BOS] + encode(p), encode(a))
+
+
+def pretrain_doc(rng: random.Random) -> list[int]:
+    """One LM-training document: prompt + answer as a flat sequence."""
+    s = make_sample(_pick(rng, _PRETRAIN_MIX), rng)
+    return s.prompt + s.answer
+
+
+def token_stream(seed: int, n_tokens: int) -> list[int]:
+    """Concatenated documents, for fixed-length LM batch packing."""
+    rng = random.Random(seed)
+    out: list[int] = []
+    while len(out) < n_tokens:
+        out.extend(pretrain_doc(rng))
+    return out[:n_tokens]
+
+
+def eval_prompts(task: str, n: int, seed: int) -> list[Sample]:
+    rng = random.Random(seed)
+    return [make_sample(task, rng) for _ in range(n)]
+
+
+def sharegpt_stream(n: int, seed: int) -> list[Sample]:
+    rng = random.Random(seed)
+    return [make_sample(_pick(rng, _STREAM_MIX), rng) for _ in range(n)]
+
+
+# Seeds: pretraining uses 0xC0FFEE-range, the online stream uses 7000,
+# eval prompt sets use 9000+task-index — all disjoint.
+PRETRAIN_SEED = 0xC0FFEE
+STREAM_SEED = 7000
+EVAL_SEED_BASE = 9000

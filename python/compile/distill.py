@@ -1,0 +1,257 @@
+"""Offline training of the baseline speculative-decoding components.
+
+The paper's Table 2 compares DVI against offline-trained methods (SpS,
+Medusa, Hydra, EAGLE, PLD). PLD is training-free; the other four need
+trained components, which this module produces — *from scratch*, against
+the same frozen backbone, on the same synthetic corpus (DESIGN.md
+§Substitutions):
+
+  * SpS drafter  — an independent 2-layer mini-LM (own embed/head),
+                   knowledge-distilled from the backbone (classic SD).
+  * Medusa heads — 4 time-independent MLP heads over h_L predicting
+                   offsets +2..+5 (the LM head covers +1).
+  * Hydra heads  — sequentially-dependent head chain: state s_k =
+                   silu(Ws s_{k-1} + We emb(token_k)), logits = W s_k.
+  * EAGLE head   — feature-level drafter: predicts the *next h_L feature*
+                   from (h_L, next-token embedding) with a residual MLP;
+                   tokens come from the frozen verifier LM head. (The
+                   original uses a 1-layer transformer over features; the
+                   residual-MLP variant preserves the feature-drafting
+                   insight at this scale — see DESIGN.md.)
+
+All four train in ONE loop sharing each batch's teacher forward (the
+dominant cost), with independent Adam states. Prompt exposures per
+component are logged to `artifacts/exposures.json` for the Table-1 budget
+comparison harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from . import model as M
+from .config import DEFAULT_MODEL, ModelConfig
+from .pretrain import adam_init, adam_update
+
+# Baseline-component geometry (exported into the manifest by aot.py).
+SPS_CFG = ModelConfig(d_model=128, n_layers=2, n_heads=4, d_ff=384)
+MEDUSA_HEADS = 4
+MEDUSA_HIDDEN = 256
+HYDRA_HIDDEN = 256
+EAGLE_HIDDEN = 384
+
+
+# ----------------------------------------------------------------------------
+# Component initializers
+# ----------------------------------------------------------------------------
+
+def init_components(mcfg: ModelConfig, key) -> dict:
+    d, v = mcfg.d_model, mcfg.vocab_size
+    ks = iter(jax.random.split(key, 16))
+
+    def nrm(shape, scale):
+        return (jax.random.normal(next(ks), shape) * scale).astype(jnp.float32)
+
+    sps = M.init_params(SPS_CFG, next(ks))
+    med = {
+        "U": nrm((MEDUSA_HEADS, d, MEDUSA_HIDDEN), (2.0 / (d + MEDUSA_HIDDEN)) ** 0.5),
+        "W": nrm((MEDUSA_HEADS, MEDUSA_HIDDEN, v), (2.0 / (MEDUSA_HIDDEN + v)) ** 0.5),
+    }
+    hy = {
+        "W0": nrm((d, HYDRA_HIDDEN), (2.0 / (d + HYDRA_HIDDEN)) ** 0.5),
+        "Ws": nrm((HYDRA_HIDDEN, HYDRA_HIDDEN), (2.0 / (2 * HYDRA_HIDDEN)) ** 0.5),
+        "We": nrm((d, HYDRA_HIDDEN), (2.0 / (d + HYDRA_HIDDEN)) ** 0.5),
+        "W": nrm((HYDRA_HIDDEN, v), (2.0 / (HYDRA_HIDDEN + v)) ** 0.5),
+    }
+    ea = {
+        "W1": nrm((2 * d, EAGLE_HIDDEN), (2.0 / (2 * d + EAGLE_HIDDEN)) ** 0.5),
+        "W2": nrm((EAGLE_HIDDEN, d), (2.0 / (EAGLE_HIDDEN + d)) ** 0.5),
+    }
+    return {"sps": sps, "med": med, "hy": hy, "ea": ea}
+
+
+# ----------------------------------------------------------------------------
+# Forward passes (training-time; decode-time twins live in aot.py artifacts)
+# ----------------------------------------------------------------------------
+
+def medusa_logits(med, hln):
+    """hln [..., d] (final-norm'd h_L) -> [..., MEDUSA_HEADS, V]."""
+    z = jax.nn.silu(jnp.einsum("...d,kdh->...kh", hln, med["U"]))
+    return jnp.einsum("...kh,khv->...kv", z, med["W"])
+
+
+def hydra_states(hy, hln, embs):
+    """Teacher-forced chain. hln [..., d]; embs [..., K, d] = embeddings of
+    the K tokens preceding each head's prediction. Returns [..., K, V]."""
+    s = jax.nn.silu(hln @ hy["W0"])
+    outs = []
+    for k in range(MEDUSA_HEADS):
+        s = jax.nn.silu(s @ hy["Ws"] + embs[..., k, :] @ hy["We"])
+        outs.append(s @ hy["W"])
+    return jnp.stack(outs, axis=-2)
+
+
+def eagle_predict(ea, feat, emb):
+    """feat [..., d] raw h_L, emb [..., d] next-token embedding."""
+    x = jnp.concatenate([feat, emb], axis=-1)
+    return feat + jax.nn.silu(x @ ea["W1"]) @ ea["W2"]
+
+
+def teacher_forward(params, tokens, mcfg: ModelConfig):
+    """tokens [B, T] -> (h_L raw [B, T, d], teacher logits [B, T, V])."""
+    x = params["embed"][tokens]
+    x = M.forward_layers_train(params, x, 0, mcfg.n_layers, mcfg)
+    logits = M.rmsnorm(x, params["final_norm"], mcfg.norm_eps) @ params["lm_head"].T
+    return x, logits
+
+
+# ----------------------------------------------------------------------------
+# Losses (one per component; shared teacher tensors)
+# ----------------------------------------------------------------------------
+
+def _soft_ce(student_logits, teacher_logits):
+    p = jax.nn.softmax(teacher_logits, axis=-1)
+    return -(p * jax.nn.log_softmax(student_logits, axis=-1)).sum(-1).mean()
+
+
+def _hard_ce(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def sps_loss(sps, tokens, teacher_logits):
+    student = M.forward_train(sps, tokens, SPS_CFG)
+    return _soft_ce(student, teacher_logits)
+
+
+def medusa_loss(med, params, hl, tokens, mcfg):
+    # Head k (0-based) at position t predicts token t+2+k.
+    hln = M.rmsnorm(hl, params["final_norm"], mcfg.norm_eps)
+    t_max = tokens.shape[1] - (MEDUSA_HEADS + 1)
+    logits = medusa_logits(med, hln[:, :t_max])          # [B, t, K, V]
+    loss = 0.0
+    for k in range(MEDUSA_HEADS):
+        loss += _hard_ce(logits[:, :, k], tokens[:, 2 + k: t_max + 2 + k])
+    return loss / MEDUSA_HEADS
+
+
+def hydra_loss(hy, params, hl, tokens, mcfg):
+    hln = M.rmsnorm(hl, params["final_norm"], mcfg.norm_eps)
+    t_max = tokens.shape[1] - (MEDUSA_HEADS + 1)
+    # Head k consumes embedding of token t+1+k and predicts token t+2+k.
+    embs = jnp.stack(
+        [params["embed"][tokens[:, 1 + k: t_max + 1 + k]]
+         for k in range(MEDUSA_HEADS)], axis=2)          # [B, t, K, d]
+    logits = hydra_states(hy, hln[:, :t_max], embs)      # [B, t, K, V]
+    loss = 0.0
+    for k in range(MEDUSA_HEADS):
+        loss += _hard_ce(logits[:, :, k], tokens[:, 2 + k: t_max + 2 + k])
+    return loss / MEDUSA_HEADS
+
+
+def eagle_loss(ea, params, hl, tokens, mcfg):
+    # Predict f_{t+1} from (f_t, emb(x_{t+1})); token loss via frozen head.
+    # hl covers token positions 0..S-1 where S = tokens.shape[1] - 2.
+    s = tokens.shape[1] - 2
+    f_in, f_tgt = hl[:, : s - 1], hl[:, 1:s]
+    emb = params["embed"][tokens[:, 1:s]]
+    f_pred = eagle_predict(ea, f_in, emb)
+    reg = jnp.abs(f_pred - f_tgt).mean()
+    logits = M.verifier_logits(params, f_pred, mcfg)
+    tok = _hard_ce(logits, tokens[:, 2 : s + 1])
+    return reg + 0.5 * tok
+
+
+# ----------------------------------------------------------------------------
+# Shared training loop
+# ----------------------------------------------------------------------------
+
+def distill(params, mcfg: ModelConfig, steps: int, batch: int, seq: int,
+            seed: int, lr: float = 2e-3):
+    comps = init_components(mcfg, jax.random.PRNGKey(seed))
+    opts = {k: adam_init(v) for k, v in comps.items()}
+
+    n_tok = steps * batch * (seq + 2)
+    stream = np.asarray(
+        corpus.token_stream(corpus.PRETRAIN_SEED + 1, n_tok), dtype=np.int32
+    ).reshape(steps, batch, seq + 2)
+
+    @jax.jit
+    def step_fn(comps, opts, tokens, t):
+        hl, tlogits = teacher_forward(params, tokens[:, :-2], mcfg)
+        hl = jax.lax.stop_gradient(hl)
+        tlogits = jax.lax.stop_gradient(tlogits)
+        losses = {}
+
+        def upd(name, loss_fn, *args):
+            loss, g = jax.value_and_grad(loss_fn)(comps[name], *args)
+            new_p, new_o = adam_update(comps[name], g, opts[name], lr, t=t)
+            losses[name] = loss
+            return new_p, new_o
+
+        new_comps, new_opts = {}, {}
+        new_comps["sps"], new_opts["sps"] = upd(
+            "sps", lambda c: sps_loss(c, tokens[:, :-2], tlogits))
+        new_comps["med"], new_opts["med"] = upd(
+            "med", lambda c: medusa_loss(c, params, hl, tokens, mcfg))
+        new_comps["hy"], new_opts["hy"] = upd(
+            "hy", lambda c: hydra_loss(c, params, hl, tokens, mcfg))
+        new_comps["ea"], new_opts["ea"] = upd(
+            "ea", lambda c: eagle_loss(c, params, hl, tokens, mcfg))
+        return new_comps, new_opts, losses
+
+    t0 = time.time()
+    for step in range(steps):
+        comps, opts, losses = step_fn(comps, opts, stream[step], step + 1)
+        if step % 25 == 0 or step == steps - 1:
+            msg = " ".join(f"{k}={float(v):.4f}" for k, v in losses.items())
+            dt = time.time() - t0
+            print(f"distill {step:5d} {msg} ({dt:.0f}s)", flush=True)
+
+    exposures = {
+        # sequences seen = steps * batch; each roughly one "prompt".
+        name: {"prompt_exposures": steps * batch, "optimiser_steps": steps}
+        for name in ("sps", "med", "hy", "ea")
+    }
+    return comps, exposures
+
+
+def flatten_components(comps: dict) -> dict:
+    """{"sps.embed": arr, "med.U": arr, ...} for weights.bin."""
+    out = {}
+    for group, tree in comps.items():
+        for name, arr in tree.items():
+            out[f"{group}.{name}"] = np.asarray(arr)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=900)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=80)
+    ap.add_argument("--backbone", default="../artifacts/backbone.npz")
+    ap.add_argument("--out", default="../artifacts/heads.npz")
+    ap.add_argument("--exposures", default="../artifacts/exposures.json")
+    args = ap.parse_args()
+
+    params = {k: jnp.asarray(v) for k, v in np.load(args.backbone).items()}
+    comps, exposures = distill(params, DEFAULT_MODEL, args.steps, args.batch,
+                               args.seq, seed=5)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    np.savez(args.out, **flatten_components(comps))
+    with open(args.exposures, "w") as f:
+        json.dump(exposures, f, indent=2)
+    print(f"saved {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: masked decode attention over a KV cache (online softmax).
+
+Computes, for a block of Bq query positions starting at `pos`, attention
+over an S-slot KV cache where query i may only attend to slots j <= pos+i.
+Slots beyond the mask may contain *stale speculative garbage* (the Rust
+coordinator rolls speculation back by decrementing positions, not by
+clearing cache lines), so masking is a correctness requirement, not an
+optimization.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this plays the role the
+paper's serving stack delegates to fused GPU decode-attention. Grid =
+(heads, S/S_TILE); KV tiles stream HBM->VMEM (BlockSpec), with the classic
+online-softmax running statistics (max, denominator, weighted accumulator)
+carried across KV tiles — the TPU analogue of a threadblock marching over
+shared-memory tiles. Single pass over the cache. The running statistics
+live in output refs mapped to the same block for every KV tile (the
+portable Pallas accumulation idiom, equivalent to VMEM scratch on TPU).
+
+interpret=True for CPU-PJRT executability; block shapes are TPU-shaped
+(S_TILE=64 keys) so the kernel lifts to Mosaic unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+S_TILE = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, s_tile: int):
+    t = pl.program_id(1)                         # KV tile index
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                               # [Bq, hd] (one head)
+    k = k_ref[...]                               # [S_TILE, hd]
+    v = v_ref[...]                               # [S_TILE, hd]
+    bq, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=q.dtype))
+    s = (q @ k.T) * scale                        # [Bq, S_TILE]
+
+    pos = pos_ref[0]
+    j = t * s_tile + jax.lax.broadcasted_iota(jnp.int32, (bq, s_tile), 1)
+    i = jax.lax.broadcasted_iota(jnp.int32, (bq, s_tile), 0)
+    s = jnp.where(j <= pos + i, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # [Bq, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    correction = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                       # [Bq, S_TILE]
+    l_ref[...] = l_ref[...] * correction + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / l_ref[...]
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q [Bq, H, hd], caches [S, H, hd], pos scalar int32 -> [Bq, H, hd]."""
+    bq, h, hd = q.shape
+    s = k_cache.shape[0]
+    assert s % S_TILE == 0, f"cache {s} must be a multiple of {S_TILE}"
+    pos = jnp.asarray(pos, jnp.int32).reshape((1,))
+    grid = (h, s // S_TILE)
+    out, _m, _l, _acc = pl.pallas_call(
+        functools.partial(_attn_kernel, s_tile=S_TILE),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, t: (0,)),                 # pos
+            pl.BlockSpec((bq, None, hd), lambda hh, t: (0, hh, 0)),  # q
+            pl.BlockSpec((S_TILE, None, hd), lambda hh, t: (t, hh, 0)),
+            pl.BlockSpec((S_TILE, None, hd), lambda hh, t: (t, hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, None, hd), lambda hh, t: (0, hh, 0)),  # o
+            pl.BlockSpec((bq, None, 1), lambda hh, t: (0, hh, 0)),   # m
+            pl.BlockSpec((bq, None, 1), lambda hh, t: (0, hh, 0)),   # l
+            pl.BlockSpec((bq, None, hd), lambda hh, t: (0, hh, 0)),  # acc
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bq, h, hd), q.dtype),
+            jax.ShapeDtypeStruct((bq, h, 1), q.dtype),
+            jax.ShapeDtypeStruct((bq, h, 1), q.dtype),
+            jax.ShapeDtypeStruct((bq, h, hd), q.dtype),
+        ],
+        interpret=True,
+    )(pos, q, k_cache, v_cache)
+    return out

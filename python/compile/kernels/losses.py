@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: fused per-example loss statistics, fwd + custom VJP.
+
+For drafter logits z_t [N, V], verifier logits z_p [N, V], actions a [N]:
+
+    ce   = -log p_theta(a)
+    kl   = KL(p_theta || softmax(z_p / tau))
+    ent  = H[p_theta]
+    logp = log p_theta(a)
+
+All four share the same softmax statistics, so the kernel computes each
+row's log-softmax (for both distributions) ONCE and emits the four scalars
+in a single pass — the fusion the composite DVI objective (paper §3.4)
+wants on every optimizer step. The backward pass uses the closed forms
+
+    d ce  /dz_t =  p - onehot(a)
+    d kl  /dz_t =  p * (logp - logq - kl)
+    d ent /dz_t = -p * (logp_row + ent)
+    d logp/dz_t =  onehot(a) - p
+    d kl  /dz_p =  (q - p) / tau
+
+in a second single-pass kernel, avoiding softmax recomputation via saved
+row statistics.
+
+Grid = row tiles (N_TILE rows per step); V fits a single VMEM block at this
+scale (512 f32 columns). interpret=True throughout (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_TILE = 8
+
+
+def _row_logsoftmax(z):
+    m = z.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.exp(z - m).sum(axis=-1, keepdims=True)) + m
+    return z - lse
+
+
+def _fwd_kernel(zt_ref, zp_ref, a_ref, ce_ref, kl_ref, ent_ref, logp_ref,
+                *, tau: float):
+    zt = zt_ref[...]                             # [T, V]
+    zp = zp_ref[...] / tau
+    a = a_ref[...]                               # [T]
+    t, v = zt.shape
+    logp = _row_logsoftmax(zt)
+    logq = _row_logsoftmax(zp)
+    p = jnp.exp(logp)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (t, v), 1)
+              == a[:, None]).astype(zt.dtype)
+    logp_a = (onehot * logp).sum(axis=-1)
+    ce_ref[...] = -logp_a
+    kl_ref[...] = (p * (logp - logq)).sum(axis=-1)
+    ent_ref[...] = -(p * logp).sum(axis=-1)
+    logp_ref[...] = logp_a
+
+
+def _bwd_kernel(zt_ref, zp_ref, a_ref, gce_ref, gkl_ref, gent_ref, glogp_ref,
+                dzt_ref, dzp_ref, *, tau: float):
+    zt = zt_ref[...]
+    zp = zp_ref[...] / tau
+    a = a_ref[...]
+    t, v = zt.shape
+    logp = _row_logsoftmax(zt)
+    logq = _row_logsoftmax(zp)
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (t, v), 1)
+              == a[:, None]).astype(zt.dtype)
+    kl = (p * (logp - logq)).sum(axis=-1, keepdims=True)
+    ent = -(p * logp).sum(axis=-1, keepdims=True)
+    gce = gce_ref[...][:, None]
+    gkl = gkl_ref[...][:, None]
+    gent = gent_ref[...][:, None]
+    glogp = glogp_ref[...][:, None]
+    dzt = (gce * (p - onehot)
+           + gkl * p * (logp - logq - kl)
+           + gent * (-p) * (logp + ent)
+           + glogp * (onehot - p))
+    dzp = gkl * (q - p) / tau
+    dzt_ref[...] = dzt
+    dzp_ref[...] = dzp
+
+
+def _pallas_fwd(zt, zp, a, tau: float):
+    n, v = zt.shape
+    assert n % N_TILE == 0, f"rows {n} must be a multiple of {N_TILE}"
+    grid = (n // N_TILE,)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, tau=tau),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((N_TILE,), lambda i: (i,))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((n,), zt.dtype)] * 4,
+        interpret=True,
+    )(zt, zp, a)
+
+
+def _pallas_bwd(zt, zp, a, gce, gkl, gent, glogp, tau: float):
+    n, v = zt.shape
+    grid = (n // N_TILE,)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, tau=tau),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+            pl.BlockSpec((N_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((N_TILE, v), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, v), zt.dtype),
+            jax.ShapeDtypeStruct((n, v), zt.dtype),
+        ],
+        interpret=True,
+    )(zt, zp, a, gce, gkl, gent, glogp)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_losses(logits_theta, logits_phi, actions, tau: float):
+    """Per-example (ce, kl, ent, logp) — see module docstring."""
+    return _pallas_fwd(logits_theta, logits_phi, actions, tau)
+
+
+def _vjp_fwd(logits_theta, logits_phi, actions, tau: float):
+    out = _pallas_fwd(logits_theta, logits_phi, actions, tau)
+    return out, (logits_theta, logits_phi, actions)
+
+
+def _vjp_bwd(tau: float, res, g):
+    zt, zp, a = res
+    gce, gkl, gent, glogp = g
+    dzt, dzp = _pallas_bwd(zt, zp, a, gce, gkl, gent, glogp, tau)
+    return dzt, dzp, None
+
+
+fused_losses.defvjp(_vjp_fwd, _vjp_bwd)

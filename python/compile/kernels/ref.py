@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas implementations
+(interpret=True) match these to tight tolerances, including gradients for
+the custom-vjp kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# LoRA draft head: logits = h @ (W + gamma * A @ B)^T
+#   h [N, d], W [V, d], A [V, r], B [r, d]  ->  [N, V]
+# ----------------------------------------------------------------------------
+
+def lora_head(h, w, a, b, gamma: float):
+    z = h @ b.T                       # [N, r]
+    return h @ w.T + gamma * (z @ a.T)
+
+
+# ----------------------------------------------------------------------------
+# Masked decode attention over a KV cache.
+#   q       [Bq, H, hd]   queries for positions pos .. pos+Bq-1
+#   k_cache [S, H, hd]    (positions >= pos+i already hold garbage/stale data
+#   v_cache [S, H, hd]     and must be masked out)
+#   pos     scalar int32  position of the first query
+# Query i attends to cache slots j <= pos + i.
+# ----------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos):
+    bq, h, hd = q.shape
+    s = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=q.dtype))
+    # [H, Bq, S]
+    scores = jnp.einsum("bhd,shd->hbs", q, k_cache) * scale
+    j = jnp.arange(s)[None, None, :]
+    i = jnp.arange(bq)[None, :, None]
+    mask = j <= (pos + i)
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, dtype=scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hbs,shd->bhd", p, v_cache)
+
+
+# ----------------------------------------------------------------------------
+# Fused per-example loss statistics.
+#   logits_theta [N, V] (drafter), logits_phi [N, V] (frozen verifier),
+#   actions [N] int32, tau scalar.
+# Returns per-example:
+#   ce   = -log p_theta(action)
+#   kl   = KL(p_theta || softmax(logits_phi / tau))
+#   ent  = entropy(p_theta)
+#   logp = log p_theta(action)          (= -ce; kept for PG-term clarity)
+# ----------------------------------------------------------------------------
+
+def fused_losses(logits_theta, logits_phi, actions, tau: float):
+    logp_t = jax.nn.log_softmax(logits_theta, axis=-1)           # [N, V]
+    logq = jax.nn.log_softmax(logits_phi / tau, axis=-1)         # [N, V]
+    p_t = jnp.exp(logp_t)
+    n = logits_theta.shape[0]
+    rows = jnp.arange(n)
+    logp_a = logp_t[rows, actions]
+    ce = -logp_a
+    kl = jnp.sum(p_t * (logp_t - logq), axis=-1)
+    ent = -jnp.sum(p_t * logp_t, axis=-1)
+    return ce, kl, ent, logp_a
+
+
+# ----------------------------------------------------------------------------
+# Composite DVI loss (paper eq. in §3.4) built on fused_losses; used both by
+# the reference train step and by tests of the exported train_step artifact.
+#   L = lam_pg * PG_masked + lam_kl * KL + w_ce * CE_masked - w_ent * H
+# PG/CE averaged over accepted positions only; KL/H over all logged rows.
+# ----------------------------------------------------------------------------
+
+def dvi_loss(logits_theta, logits_phi, actions, rewards, mask,
+             lam_pg, lam_kl, w_ce, w_ent, tau, w_rl, baseline):
+    ce, kl, ent, logp_a = fused_losses(logits_theta, logits_phi, actions, tau)
+    mask = mask.astype(logits_theta.dtype)
+    rewards = rewards.astype(logits_theta.dtype)
+    acc = mask * rewards                         # accepted rows
+    n_acc = jnp.maximum(acc.sum(), 1.0)
+    n_all = jnp.maximum(mask.sum(), 1.0)
+    # Reward-masked CE on accepted rows (paper's L_pg "reward-masked term").
+    l_pg = (acc * ce).sum() / n_acc
+    l_kl = (mask * kl).sum() / n_all
+    l_ce = (acc * ce).sum() / n_acc
+    l_ent = (mask * ent).sum() / n_all
+    # On-policy REINFORCE with EMA baseline over accepted + first-reject rows.
+    adv = rewards - baseline
+    l_rl = -(mask * adv * logp_a).sum() / n_all
+    total = (lam_pg * l_pg + lam_kl * l_kl + w_ce * l_ce
+             - w_ent * l_ent + w_rl * l_rl)
+    metrics = jnp.stack([total, l_pg, l_kl, l_ce, l_ent, l_rl,
+                         acc.sum() / n_all])
+    return total, metrics

@@ -1,0 +1,278 @@
+"""L2 JAX model: llama-style tiny backbone with a self-speculative split.
+
+Pure-functional weights (a flat dict of stacked arrays) so every decode
+artifact can expose weights/state as explicit HLO parameters. Two families
+of forward functions:
+
+  * `forward_train` — full-sequence causal forward used by pretraining and
+    offline distillation (pure jnp; XLA fuses it well on CPU).
+  * decode-time step/block/prefill functions — the bodies of the AOT
+    artifacts the Rust coordinator executes. These call the L1 Pallas
+    kernels (`kernels.attention.decode_attention` for KV-cache attention,
+    `kernels.lora_head.lora_head` for the LoRA draft head).
+
+Position/KV-cache conventions (mirrored by `rust/src/spec/kv.rs`):
+  * cache slot j holds K/V for sequence position j;
+  * a step at position `pos` writes slot `pos` *before* attending, and
+    attends to slots j <= pos (query i of a block: j <= pos+i);
+  * slots strictly greater than the current decode position may hold stale
+    speculative garbage — they are always overwritten before they become
+    attendable. Rollback after a rejected draft is therefore O(1).
+
+Draft head (paper §3.1): p_theta = softmax((W_S + gamma*A@B) h_k_norm)
+where `W_S` is a frozen copy of the LM head, A=0 at init, and h_k_norm is
+the *frozen* final RMSNorm applied to the layer-k residual stream (the
+standard early-exit-head convention; see DESIGN.md §Fidelity).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from .config import ModelConfig
+from .kernels.attention import decode_attention as _pallas_attention
+from .kernels.lora_head import lora_head
+from .kernels import ref as _ref
+
+# L1 kernel selection for the *decode* path. The Pallas kernels are the
+# default and the deliverable (TPU-shaped; verified vs ref in pytest).
+# DVI_ATTN=jnp swaps decode attention for the jnp oracle at export time —
+# an XLA-CPU fusion is faster than an interpret-mode grid loop on this
+# substrate (EXPERIMENTS.md §Perf quantifies the gap). Numerics are
+# verified identical to tolerance by the same pytest suite.
+_ATTN_IMPL = os.environ.get("DVI_ATTN", "pallas")
+decode_attention = (_ref.decode_attention if _ATTN_IMPL == "jnp"
+                    else _pallas_attention)
+
+# Same trade-off for the LoRA draft head (used on the per-token draft hot
+# path): DVI_HEAD=jnp swaps the Pallas kernel for the jnp oracle at
+# export. Gradients in train_step keep the Pallas custom-VJP path either
+# way unless DVI_HEAD=jnp is set at train_step export too (it is a single
+# switch — §Perf records both variants).
+_HEAD_IMPL = os.environ.get("DVI_HEAD", "pallas")
+if _HEAD_IMPL == "jnp":
+    def lora_head(h, w, a, b, gamma):  # noqa: F811 (deliberate override)
+        return _ref.lora_head(h, w, a, b, gamma)
+
+# ----------------------------------------------------------------------------
+# Parameter initialization
+# ----------------------------------------------------------------------------
+
+LAYER_TENSORS = (
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "rms_attn", "rms_mlp",
+)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Stacked-weight dict. Layer tensors have a leading [n_layers] dim."""
+    k = iter(jax.random.split(key, 16))
+    d, ff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    s_attn = (2.0 / (d + d)) ** 0.5
+    s_ff = (2.0 / (d + ff)) ** 0.5
+
+    def nrm(kk, shape, scale):
+        return (jax.random.normal(kk, shape) * scale).astype(jnp.float32)
+
+    p = {
+        "embed": nrm(next(k), (V, d), d ** -0.5),
+        "wq": nrm(next(k), (L, d, d), s_attn),
+        "wk": nrm(next(k), (L, d, d), s_attn),
+        "wv": nrm(next(k), (L, d, d), s_attn),
+        "wo": nrm(next(k), (L, d, d), s_attn / (2 * L) ** 0.5),
+        "w_gate": nrm(next(k), (L, d, ff), s_ff),
+        "w_up": nrm(next(k), (L, d, ff), s_ff),
+        "w_down": nrm(next(k), (L, ff, d), s_ff / (2 * L) ** 0.5),
+        "rms_attn": jnp.ones((L, d), jnp.float32),
+        "rms_mlp": jnp.ones((L, d), jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": nrm(next(k), (V, d), d ** -0.5),
+    }
+    return p
+
+
+def init_lora(cfg: ModelConfig, key) -> dict:
+    """LoRA draft-head params: A=0 (cold start == transplanted LM head)."""
+    b = jax.random.normal(key, (cfg.lora_rank, cfg.d_model)) * 0.01
+    return {
+        "A": jnp.zeros((cfg.vocab_size, cfg.lora_rank), jnp.float32),
+        "B": b.astype(jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Shared pieces
+# ----------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta: float):
+    """x [..., T, H, hd], positions [T] -> rotated."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]                                 # [T, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _swiglu(x, gate, up, down):
+    return (jax.nn.silu(x @ gate) * (x @ up)) @ down
+
+
+def _layer_weights(p: dict, i: int) -> dict:
+    return {t: p[t][i] for t in LAYER_TENSORS}
+
+
+# ----------------------------------------------------------------------------
+# Full-sequence training forward (pretraining / distillation; pure jnp)
+# ----------------------------------------------------------------------------
+
+def _train_attention(x, lw, positions, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ lw["wq"]).reshape(b, t, h, hd)
+    k = (x @ lw["wk"]).reshape(b, t, h, hd)
+    v = (x @ lw["wv"]).reshape(b, t, h, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bjhd->bihd", att, v).reshape(b, t, d)
+    return out @ lw["wo"]
+
+
+def forward_layers_train(p, x, lo: int, hi: int, cfg: ModelConfig):
+    """Run layers [lo, hi) over a full sequence batch x [B, T, d]."""
+    t = x.shape[1]
+    positions = jnp.arange(t)
+
+    def body(x, lw):
+        xa = rmsnorm(x, lw["rms_attn"], cfg.norm_eps)
+        x = x + _train_attention(xa, lw, positions, cfg)
+        xm = rmsnorm(x, lw["rms_mlp"], cfg.norm_eps)
+        x = x + _swiglu(xm, lw["w_gate"], lw["w_up"], lw["w_down"])
+        return x, None
+
+    stacked = {tname: p[tname][lo:hi] for tname in LAYER_TENSORS}
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def forward_train(p, tokens, cfg: ModelConfig):
+    """tokens [B, T] -> logits [B, T, V] (full model, causal)."""
+    x = p["embed"][tokens]
+    x = forward_layers_train(p, x, 0, cfg.n_layers, cfg)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return x @ p["lm_head"].T
+
+
+def h_k_train(p, tokens, cfg: ModelConfig):
+    """tokens [B, T] -> raw residual stream after the split layer [B, T, d]."""
+    x = p["embed"][tokens]
+    return forward_layers_train(p, x, 0, cfg.split_layer, cfg)
+
+
+def draft_logits_train(p, lora, hk, cfg: ModelConfig):
+    """Draft-head logits over a batch of h_k rows [N, d] (uses L1 kernel)."""
+    hk_n = rmsnorm(hk, p["final_norm"], cfg.norm_eps)
+    return lora_head(hk_n, p["draft_base"], lora["A"], lora["B"],
+                     cfg.lora_gamma)
+
+
+# ----------------------------------------------------------------------------
+# Decode-time building blocks (KV cache; used by the AOT artifacts)
+# ----------------------------------------------------------------------------
+
+def _decode_layer(lw, x, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One layer over a block x [Bq, d]; caches [S, H, hd]; writes slots
+    pos..pos+Bq-1 then attends (query i -> slots j <= pos+i)."""
+    bq = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    positions = pos + jnp.arange(bq)
+    xa = rmsnorm(x, lw["rms_attn"], cfg.norm_eps)
+    q = (xa @ lw["wq"]).reshape(bq, h, hd)
+    k = (xa @ lw["wk"]).reshape(bq, h, hd)
+    v = (xa @ lw["wv"]).reshape(bq, h, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos, 0, 0))
+    att = decode_attention(q, k_cache, v_cache, pos)      # L1 Pallas kernel
+    x = x + att.reshape(bq, h * hd) @ lw["wo"]
+    xm = rmsnorm(x, lw["rms_mlp"], cfg.norm_eps)
+    x = x + _swiglu(xm, lw["w_gate"], lw["w_up"], lw["w_down"])
+    return x, k_cache, v_cache
+
+
+def run_layers_decode(p, x, k_caches, v_caches, pos, lo: int, hi: int,
+                      cfg: ModelConfig):
+    """Layers [lo, hi) over block x [Bq, d]. Caches [n_path, S, H, hd] are
+    indexed by *path-local* layer (layer lo -> cache 0)."""
+    new_k, new_v = [], []
+    for i in range(lo, hi):
+        li = i - lo
+        x, kc, vc = _decode_layer(_layer_weights(p, i), x,
+                                  k_caches[li], v_caches[li], pos, cfg)
+        new_k.append(kc)
+        new_v.append(vc)
+    return x, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def _prefill_layer(lw, x, positions, cfg: ModelConfig):
+    """Full-seq causal layer for prefill; returns (x, k, v) for caching."""
+    t = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    xa = rmsnorm(x, lw["rms_attn"], cfg.norm_eps)
+    q = (xa @ lw["wq"]).reshape(t, h, hd)
+    k = (xa @ lw["wk"]).reshape(t, h, hd)
+    v = (xa @ lw["wv"]).reshape(t, h, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scores = jnp.einsum("ihd,jhd->hij", q, k) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hij,jhd->ihd", att, v).reshape(t, h * hd)
+    x = x + out @ lw["wo"]
+    xm = rmsnorm(x, lw["rms_mlp"], cfg.norm_eps)
+    x = x + _swiglu(xm, lw["w_gate"], lw["w_up"], lw["w_down"])
+    return x, k, v
+
+
+def run_layers_prefill(p, x, lo: int, hi: int, cfg: ModelConfig,
+                       cache_seq: int):
+    """Layers [lo, hi) over a padded prompt x [T, d]. Returns x plus path
+    KV caches [n_path, cache_seq, H, hd] (slots >= T are zero-padded)."""
+    t = x.shape[0]
+    positions = jnp.arange(t)
+    ks, vs = [], []
+    pad = cache_seq - t
+    for i in range(lo, hi):
+        x, k, v = _prefill_layer(_layer_weights(p, i), x, positions, cfg)
+        if pad:
+            k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        ks.append(k)
+        vs.append(v)
+    return x, jnp.stack(ks), jnp.stack(vs)
+
+
+def verifier_logits(p, x, cfg: ModelConfig):
+    """Frozen verifier head over rows x [..., d]."""
+    return rmsnorm(x, p["final_norm"], cfg.norm_eps) @ p["lm_head"].T
+
+
+def draft_head_logits(p, lora_a, lora_b, hk, cfg: ModelConfig):
+    """LoRA draft head over raw h_k rows [N, d] (L1 Pallas kernel)."""
+    hk_n = rmsnorm(hk, p["final_norm"], cfg.norm_eps)
+    return lora_head(hk_n, p["draft_base"], lora_a, lora_b, cfg.lora_gamma)

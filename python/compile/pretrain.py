@@ -1,0 +1,116 @@
+"""Backbone pretraining on the synthetic corpus (build path only).
+
+Trains the full llama-style backbone with Adam + cosine decay on packed
+LM batches from `corpus.token_stream`. The trained weights are the
+"Vicuna-7B analogue" of this reproduction (DESIGN.md §Substitutions): a
+model that has genuinely *learned* the language, so the shallow/deep
+representation gap that drives DVI's online-learning dynamics is real.
+
+Outputs `artifacts/backbone.npz` (plus a loss log in
+`artifacts/pretrain_log.csv`). Run via `make artifacts` — cached, never on
+the request path.
+
+Usage: python -m compile.pretrain [--steps N] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .config import DEFAULT_MODEL, DEFAULT_PRETRAIN, ModelConfig, PretrainConfig
+from . import model as M
+
+
+def lm_loss(params, tokens, cfg: ModelConfig):
+    """Mean next-token CE over a packed batch [B, T+1]."""
+    logits = M.forward_train(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8, t=1):
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v}
+
+
+def lr_schedule(step: int, cfg: PretrainConfig) -> float:
+    if step < cfg.warmup:
+        return cfg.lr * (step + 1) / cfg.warmup
+    frac = (step - cfg.warmup) / max(1, cfg.steps - cfg.warmup)
+    return cfg.lr * 0.5 * (1 + math.cos(math.pi * frac))
+
+
+def pretrain(mcfg: ModelConfig, pcfg: PretrainConfig, out_path: str,
+             log_path: str | None = None) -> dict:
+    key = jax.random.PRNGKey(pcfg.seed)
+    params = M.init_params(mcfg, key)
+    opt = adam_init(params)
+
+    n_tok = pcfg.steps * pcfg.batch_size * (pcfg.seq_len + 1)
+    stream = np.asarray(
+        corpus.token_stream(corpus.PRETRAIN_SEED, n_tok), dtype=np.int32
+    ).reshape(pcfg.steps, pcfg.batch_size, pcfg.seq_len + 1)
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr, t):
+        loss, grads = jax.value_and_grad(lm_loss)(params, batch, mcfg)
+        params, opt = adam_update(params, grads, opt, lr, t=t)
+        return params, opt, loss
+
+    log: list[tuple[int, float]] = []
+    t0 = time.time()
+    for step in range(pcfg.steps):
+        lr = lr_schedule(step, pcfg)
+        params, opt, loss = step_fn(params, opt, stream[step],
+                                    jnp.float32(lr), step + 1)
+        if step % 25 == 0 or step == pcfg.steps - 1:
+            loss_f = float(loss)
+            log.append((step, loss_f))
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {loss_f:.4f} "
+                  f"({dt:.0f}s, {dt / (step + 1):.2f}s/step)", flush=True)
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    np.savez(out_path, **{k: np.asarray(v) for k, v in params.items()})
+    if log_path:
+        with open(log_path, "w") as f:
+            f.write("step,loss\n")
+            for s, l in log:
+                f.write(f"{s},{l:.6f}\n")
+    print(f"saved {out_path}")
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=DEFAULT_PRETRAIN.steps)
+    ap.add_argument("--out", default="../artifacts/backbone.npz")
+    ap.add_argument("--log", default="../artifacts/pretrain_log.csv")
+    args = ap.parse_args()
+    pcfg = PretrainConfig(steps=args.steps)
+    pretrain(DEFAULT_MODEL, pcfg, args.out, args.log)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Golden test vectors for Rust<->Python numerics parity.
+
+For each core artifact, runs the *Python* function on deterministic inputs
+and dumps inputs + expected outputs as named tensors (weights.bin format)
+into `artifacts/testvecs.bin`. The Rust integration test
+(`rust/tests/parity.rs`) executes the compiled HLO with the same inputs and
+asserts allclose — proving the whole AOT bridge (lowering, text round-trip,
+PJRT compile, buffer plumbing, manifest ordering) end to end.
+
+Naming: `<artifact>.<in|out>.<port_name>` (+ ".N" for repeated KV ports).
+
+Usage: python -m compile.testvec --out ../artifacts/testvecs.bin
+"""
+
+from __future__ import annotations
+
+import argparse
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import aot
+from .aot import ARTIFACTS, _spec, write_weights_bin
+from .config import DEFAULT_MODEL
+
+CFG = DEFAULT_MODEL
+
+# Artifacts worth a golden vector (cover every port-role combination).
+COVER = [
+    "draft_step", "draft_block", "verify_block", "train_step", "prefill_shallow",
+    "prefill_deep", "target_step", "target_verify_block", "prefill_full",
+    "medusa_heads", "hydra_chain", "eagle_step",
+]
+
+
+def _gen_input(port, rng, tensors):
+    """Deterministic input for a port. Weight/global ports read the real
+    tensor from weights.bin content so the vector matches serving."""
+    if port.role == "weight":
+        return jnp.asarray(tensors[port.name])
+    if port.role == "global":
+        # Use small random values (NOT the init tensors: lora.A inits to
+        # zero, which would leave the LoRA path untested).
+        shape = tuple(port.shape)
+        return jnp.asarray(rng.normal(size=shape) * 0.05, jnp.float32)
+    shape = tuple(port.shape)
+    if port.dtype == "i32":
+        if port.name in ("tok", "tok0"):
+            return jnp.asarray(rng.integers(6, CFG.vocab_size), jnp.int32)
+        if port.name == "pos":
+            return jnp.asarray(17, jnp.int32)
+        if port.name == "length":
+            return jnp.asarray(11, jnp.int32)
+        if port.name in ("tokens", "toks"):
+            arr = rng.integers(6, CFG.vocab_size, size=shape)
+            return jnp.asarray(arr, jnp.int32)
+        if port.name == "actions":
+            return jnp.asarray(rng.integers(0, CFG.vocab_size, size=shape),
+                               jnp.int32)
+        return jnp.asarray(np.zeros(shape), jnp.int32)
+    if port.name == "hyper":
+        # lam_pg, lam_kl, w_ce, w_ent, w_rl, baseline, lr, step
+        return jnp.asarray([0.5, 1.0, 0.5, 0.01, 0.5, 0.6, 1e-3, 3.0],
+                           jnp.float32)
+    if port.name in ("rewards", "mask"):
+        return jnp.asarray(rng.integers(0, 2, size=shape), jnp.float32)
+    scale = 0.5 if port.name.startswith(("hk", "hl", "feat")) else 0.3
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def build_testvecs(tensors: dict) -> dict:
+    out = {}
+    for name in COVER:
+        if name not in ARTIFACTS:
+            continue
+        fn, ports, outs = ARTIFACTS[name]()
+        if any(p.role in ("weight", "global") and p.name not in tensors
+               for p in ports):
+            print(f"  skip {name} (missing weights)")
+            continue
+        rng = np.random.default_rng(zlib.crc32(name.encode()))
+        args = [_gen_input(p, rng, tensors) for p in ports]
+        results = jax.jit(fn)(*args)
+        for p, a in zip(ports, args):
+            if p.role in ("in", "kv", "global"):
+                out[f"{name}.in.{p.name}"] = np.asarray(a)
+        for o, r in zip(outs, results):
+            out[f"{name}.out.{o.name}"] = np.asarray(r)
+        print(f"  testvec {name}: {len(ports)} in, {len(outs)} out")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/testvecs.bin")
+    ap.add_argument("--backbone", default="../artifacts/backbone.npz")
+    ap.add_argument("--heads", default="../artifacts/heads.npz")
+    args = ap.parse_args()
+
+    import os
+    params = {k: jnp.asarray(v) for k, v in np.load(args.backbone).items()}
+    tensors = aot.split_weights(params)
+    if os.path.exists(args.heads):
+        tensors.update({k: np.asarray(v)
+                        for k, v in np.load(args.heads).items()})
+    lora = __import__("compile.model", fromlist=["init_lora"]).init_lora(
+        CFG, jax.random.PRNGKey(42))
+    tensors["lora.A"] = np.asarray(lora["A"])
+    tensors["lora.B"] = np.asarray(lora["B"])
+    for n, ref in (("adam.mA", "lora.A"), ("adam.vA", "lora.A"),
+                   ("adam.mB", "lora.B"), ("adam.vB", "lora.B")):
+        tensors[n] = np.zeros_like(tensors[ref])
+
+    vecs = build_testvecs(tensors)
+    write_weights_bin(args.out, vecs)
+    print(f"wrote {len(vecs)} tensors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""L2 DVI online-training step — exported as the `train_step` HLO artifact.
+
+This is the paper's §3.4 composite objective with the KL->RL schedule
+*weights as runtime inputs* (the Rust learner anneals them; the HLO is
+schedule-agnostic):
+
+    L = lam_pg * L_pg + lam_kl * KL(p_theta || p_phi^tau)
+        + w_ce * L_CE - w_ent * H[p_theta] + w_rl * L_policy
+
+  * L_pg / L_CE: reward-masked CE on accepted rows only (censored rows —
+    anything past the first reject — never reach the buffer; the Rust
+    side enforces that and `mask` re-enforces it here).
+  * KL / H: over all logged rows (accepted + first reject).
+  * L_policy: on-policy REINFORCE with an EMA-baseline advantage
+    (r - b) * log p_theta(a), over all logged rows.
+
+Gradients flow only into the LoRA adapters (A, B) — through the L1 Pallas
+kernels `lora_head` and `fused_losses`, both of which carry custom VJPs.
+The Adam update (bias-corrected) is fused into the same artifact so one
+PJRT call performs the whole optimizer step; A/B/moments are chained
+device-resident buffers on the Rust side.
+
+Hyper vector layout (f32[8], also in manifest):
+    [0] lam_pg  [1] lam_kl  [2] w_ce  [3] w_ent
+    [4] w_rl    [5] baseline  [6] lr  [7] step (t >= 1, for bias correction)
+
+Metrics vector layout (f32[8]):
+    [0] total  [1] l_pg  [2] l_kl  [3] l_ce  [4] l_ent  [5] l_rl
+    [6] batch acceptance rate  [7] grad l2-norm
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, TrainConfig
+from .kernels.losses import fused_losses
+from . import model as M
+
+HYPER_LEN = 8
+METRICS_LEN = 8
+
+
+def dvi_loss(logits_theta, logits_phi, actions, rewards, mask, hyper,
+             tau: float):
+    """Composite DVI objective; mirrors kernels.ref.dvi_loss (the oracle)
+    but routes the per-example statistics through the Pallas kernel."""
+    ce, kl, ent, logp_a = fused_losses(
+        logits_theta, jax.lax.stop_gradient(logits_phi), actions, tau)
+    lam_pg, lam_kl, w_ce, w_ent, w_rl, baseline = (
+        hyper[0], hyper[1], hyper[2], hyper[3], hyper[4], hyper[5])
+    mask = mask.astype(logits_theta.dtype)
+    rewards = rewards.astype(logits_theta.dtype)
+    acc = mask * rewards
+    n_acc = jnp.maximum(acc.sum(), 1.0)
+    n_all = jnp.maximum(mask.sum(), 1.0)
+    l_pg = (acc * ce).sum() / n_acc          # reward-masked CE (paper L_pg)
+    l_kl = (mask * kl).sum() / n_all
+    l_ce = (acc * ce).sum() / n_acc
+    l_ent = (mask * ent).sum() / n_all
+    adv = rewards - baseline
+    l_rl = -(mask * adv * logp_a).sum() / n_all
+    total = (lam_pg * l_pg + lam_kl * l_kl + w_ce * l_ce
+             - w_ent * l_ent + w_rl * l_rl)
+    parts = jnp.stack([total, l_pg, l_kl, l_ce, l_ent, l_rl,
+                       acc.sum() / n_all])
+    return total, parts
+
+
+def train_step(frozen, lora_a, lora_b, m_a, v_a, m_b, v_b,
+               hk, actions, logits_phi, rewards, mask, hyper,
+               mcfg: ModelConfig, tcfg: TrainConfig):
+    """One fused loss+grad+Adam step. `frozen` = dict with draft_base,
+    final_norm (weight-role params). Returns
+    (lora_a', lora_b', m_a', v_a', m_b', v_b', metrics)."""
+
+    def loss_fn(ab):
+        a, b = ab
+        logits_theta = M.draft_head_logits(frozen, a, b, hk, mcfg)
+        return dvi_loss(logits_theta, logits_phi, actions, rewards, mask,
+                        hyper, tcfg.kd_tau)
+
+    (_, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        (lora_a, lora_b))
+    ga, gb = grads
+    gnorm = jnp.sqrt((ga * ga).sum() + (gb * gb).sum())
+
+    lr, t = hyper[6], hyper[7]
+    b1, b2, eps = tcfg.adam_b1, tcfg.adam_b2, tcfg.adam_eps
+
+    def adam(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+    lora_a, m_a, v_a = adam(lora_a, ga, m_a, v_a)
+    lora_b, m_b, v_b = adam(lora_b, gb, m_b, v_b)
+
+    metrics = jnp.concatenate([parts, gnorm[None]])
+    return lora_a, lora_b, m_a, v_a, m_b, v_b, metrics

@@ -1,0 +1,227 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes and magnitudes; every kernel is checked for both
+forward numerics and (where a custom VJP exists) gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, S_TILE
+from compile.kernels.lora_head import lora_head, V_TILE
+from compile.kernels.losses import fused_losses, N_TILE
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------------
+# lora_head
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([32, 64, 192]),
+    v_tiles=st.integers(1, 4),
+    r=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_head_forward(n, d, v_tiles, r, seed):
+    rng = _rng(seed)
+    v = v_tiles * V_TILE
+    h = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(v, d)) * 0.1, jnp.float32)
+    a = jnp.asarray(rng.normal(size=(v, r)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(r, d)) * 0.1, jnp.float32)
+    got = lora_head(h, w, a, b, 2.0)
+    want = ref.lora_head(h, w, a, b, 2.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_head_grads(n, seed):
+    rng = _rng(seed)
+    d, v, r = 64, V_TILE * 2, 8
+    h = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(v, d)) * 0.1, jnp.float32)
+    a = jnp.asarray(rng.normal(size=(v, r)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(r, d)) * 0.1, jnp.float32)
+    g = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+
+    def loss_k(a_, b_, h_):
+        return (lora_head(h_, w, a_, b_, 2.0) * g).sum()
+
+    def loss_r(a_, b_, h_):
+        return (ref.lora_head(h_, w, a_, b_, 2.0) * g).sum()
+
+    gk = jax.grad(loss_k, (0, 1, 2))(a, b, h)
+    gr = jax.grad(loss_r, (0, 1, 2))(a, b, h)
+    for x, y, name in zip(gk, gr, ["dA", "dB", "dh"]):
+        np.testing.assert_allclose(x, y, atol=3e-5, rtol=3e-5, err_msg=name)
+
+
+def test_lora_head_zero_adapter_is_base_head():
+    rng = _rng(0)
+    n, d, v, r = 4, 192, 512, 32
+    h = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(v, d)) * 0.1, jnp.float32)
+    a = jnp.zeros((v, r), jnp.float32)  # LoRA cold-start init
+    b = jnp.asarray(rng.normal(size=(r, d)) * 0.1, jnp.float32)
+    got = lora_head(h, w, a, b, 2.0)
+    np.testing.assert_allclose(got, h @ w.T, atol=1e-5)
+
+
+def test_lora_head_rejects_unaligned_vocab():
+    h = jnp.zeros((2, 16), jnp.float32)
+    w = jnp.zeros((100, 16), jnp.float32)  # not a multiple of V_TILE
+    a = jnp.zeros((100, 4), jnp.float32)
+    b = jnp.zeros((4, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        lora_head(h, w, a, b, 1.0)
+
+
+# ----------------------------------------------------------------------------
+# decode_attention
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    bq=st.sampled_from([1, 2, 4]),
+    heads=st.sampled_from([1, 2, 6]),
+    hd=st.sampled_from([8, 32]),
+    s_tiles=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bq, heads, hd, s_tiles, seed):
+    rng = _rng(seed)
+    s = s_tiles * S_TILE
+    q = jnp.asarray(rng.normal(size=(bq, heads, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, heads, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, heads, hd)), jnp.float32)
+    pos = int(rng.integers(0, s - bq))
+    got = decode_attention(q, k, v, pos)
+    want = ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_masks_stale_slots():
+    """Garbage written beyond the mask must not affect the output — the
+    rollback-correctness property the Rust coordinator relies on."""
+    rng = _rng(7)
+    bq, h, hd, s = 2, 2, 16, S_TILE * 2
+    q = jnp.asarray(rng.normal(size=(bq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    pos = 10
+    out1 = decode_attention(q, k, v, pos)
+    # poison all slots beyond pos+bq-1
+    k2 = k.at[pos + bq:].set(1e3)
+    v2 = v.at[pos + bq:].set(-1e3)
+    out2 = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_attention_causal_within_block():
+    """Query i must not see key i+1 of the same block."""
+    rng = _rng(8)
+    h, hd, s = 1, 8, S_TILE
+    k = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, h, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(2, h, hd)), jnp.float32)
+    pos = 5
+    out_block = decode_attention(q, k, v, pos)
+    # query 0 alone must equal its value in the block
+    out_single = decode_attention(q[:1], k, v, pos)
+    np.testing.assert_allclose(out_block[0], out_single[0], atol=1e-5)
+
+
+def test_attention_pos_zero():
+    rng = _rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(S_TILE, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(S_TILE, 2, 8)), jnp.float32)
+    got = decode_attention(q, k, v, 0)
+    # only slot 0 visible -> output = v[0]
+    np.testing.assert_allclose(got[0], v[0], atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# fused_losses
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 8),
+    v=st.sampled_from([32, 512]),
+    tau=st.sampled_from([0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_losses_match_ref(rows, v, tau, seed):
+    rng = _rng(seed)
+    n = rows * N_TILE
+    zt = jnp.asarray(rng.normal(size=(n, v)) * 2, jnp.float32)
+    zp = jnp.asarray(rng.normal(size=(n, v)) * 2, jnp.float32)
+    a = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    got = fused_losses(zt, zp, a, tau)
+    want = ref.fused_losses(zt, zp, a, tau)
+    for g, w, name in zip(got, want, ["ce", "kl", "ent", "logp"]):
+        np.testing.assert_allclose(g, w, atol=3e-5, rtol=3e-5, err_msg=name)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_losses_grads_match_ref(seed):
+    rng = _rng(seed)
+    n, v, tau = N_TILE * 2, 64, 1.3
+    zt = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    zp = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    cw = jnp.asarray(rng.normal(size=(4, n)), jnp.float32)
+
+    def lk(zt_, zp_):
+        ce, kl, ent, lp = fused_losses(zt_, zp_, a, tau)
+        return (cw[0] * ce + cw[1] * kl + cw[2] * ent + cw[3] * lp).sum()
+
+    def lr(zt_, zp_):
+        ce, kl, ent, lp = ref.fused_losses(zt_, zp_, a, tau)
+        return (cw[0] * ce + cw[1] * kl + cw[2] * ent + cw[3] * lp).sum()
+
+    gk = jax.grad(lk, (0, 1))(zt, zp)
+    gr = jax.grad(lr, (0, 1))(zt, zp)
+    np.testing.assert_allclose(gk[0], gr[0], atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(gk[1], gr[1], atol=3e-5, rtol=3e-5)
+
+
+def test_losses_kl_properties():
+    """KL >= 0; KL(p||p) == 0 at tau=1."""
+    rng = _rng(11)
+    n, v = N_TILE, 32
+    z = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    a = jnp.zeros((n,), jnp.int32)
+    _, kl_same, _, _ = fused_losses(z, z, a, 1.0)
+    np.testing.assert_allclose(kl_same, np.zeros(n), atol=1e-5)
+    z2 = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    _, kl, _, _ = fused_losses(z, z2, a, 1.0)
+    assert (np.asarray(kl) >= -1e-6).all()
+
+
+def test_losses_ce_is_neg_logp():
+    rng = _rng(12)
+    n, v = N_TILE, 48
+    zt = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    zp = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    ce, _, _, logp = fused_losses(zt, zp, a, 1.0)
+    np.testing.assert_allclose(ce, -logp, atol=1e-6)

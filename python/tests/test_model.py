@@ -1,0 +1,205 @@
+"""L2 model invariants: decode-path == train-path numerics, KV masking,
+split consistency, and the DVI loss/`train_step` against the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.config import ModelConfig, TrainConfig
+from compile.kernels import ref
+
+CFG = ModelConfig(d_model=64, n_layers=4, n_heads=2, d_ff=128,
+                  vocab_size=512, max_seq=64, split_layer=2, lora_rank=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = M.init_params(CFG, jax.random.PRNGKey(0))
+    p["draft_base"] = p["lm_head"]
+    return p
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.PRNGKey(1), (1, 16), 6, CFG.vocab_size)
+
+
+def test_prefill_matches_train_forward(params, toks):
+    logits_train = M.forward_train(params, toks, CFG)[0]
+    x = params["embed"][toks[0]]
+    hk, _, _ = M.run_layers_prefill(params, x, 0, CFG.split_layer, CFG, 64)
+    hl, _, _ = M.run_layers_prefill(params, hk, CFG.split_layer, CFG.n_layers,
+                                    CFG, 64)
+    got = M.verifier_logits(params, hl, CFG)
+    np.testing.assert_allclose(got, logits_train, atol=5e-5, rtol=1e-4)
+
+
+def test_decode_steps_match_train_forward(params, toks):
+    logits_train = M.forward_train(params, toks, CFG)[0]
+    x = params["embed"][toks[0, :8]]
+    hk, ks, vs = M.run_layers_prefill(params, x, 0, CFG.split_layer, CFG, 64)
+    _, kd, vd = M.run_layers_prefill(params, hk, CFG.split_layer,
+                                     CFG.n_layers, CFG, 64)
+    for pos in range(8, 16):
+        x1 = params["embed"][toks[0, pos]][None]
+        x1, ks, vs = M.run_layers_decode(params, x1, ks, vs, pos, 0,
+                                         CFG.split_layer, CFG)
+        x1, kd, vd = M.run_layers_decode(params, x1, kd, vd, pos,
+                                         CFG.split_layer, CFG.n_layers, CFG)
+        got = M.verifier_logits(params, x1, CFG)[0]
+        np.testing.assert_allclose(got, logits_train[pos], atol=5e-5, rtol=1e-4)
+
+
+def test_verify_block_matches_train_forward(params, toks):
+    """The self-speculative deep block over true h_k rows reproduces the
+    full model exactly — the losslessness precondition."""
+    logits_train = M.forward_train(params, toks, CFG)[0]
+    x = params["embed"][toks[0]]
+    hk_all, _, _ = M.run_layers_prefill(params, x, 0, CFG.split_layer, CFG, 64)
+    _, kd, vd = M.run_layers_prefill(params, hk_all[:8], CFG.split_layer,
+                                     CFG.n_layers, CFG, 64)
+    blk, kd, vd = M.run_layers_decode(params, hk_all[8:12], kd, vd, 8,
+                                      CFG.split_layer, CFG.n_layers, CFG)
+    got = M.verifier_logits(params, blk, CFG)
+    np.testing.assert_allclose(got, logits_train[8:12], atol=5e-5, rtol=1e-4)
+
+
+def test_stale_kv_slots_do_not_leak(params, toks):
+    """Writing speculative garbage beyond the feed position then re-feeding
+    at the same position must give identical logits (rollback safety)."""
+    x = params["embed"][toks[0, :8]]
+    hk, ks, vs = M.run_layers_prefill(params, x, 0, CFG.split_layer, CFG, 64)
+
+    x_cln = params["embed"][toks[0, 8]][None]
+    clean, ks2, _ = M.run_layers_decode(params, x_cln, ks, vs, 8, 0,
+                                        CFG.split_layer, CFG)
+    # poison: run three bogus speculative steps at 8,9,10 first
+    ks_p, vs_p = ks, vs
+    for pos in range(8, 11):
+        bogus = params["embed"][5][None]
+        _, ks_p, vs_p = M.run_layers_decode(params, bogus, ks_p, vs_p, pos, 0,
+                                            CFG.split_layer, CFG)
+    redo, _, _ = M.run_layers_decode(params, x_cln, ks_p, vs_p, 8, 0,
+                                     CFG.split_layer, CFG)
+    np.testing.assert_allclose(clean, redo, atol=1e-5)
+
+
+def test_lora_init_zero_matches_base_head(params):
+    lora = M.init_lora(CFG, jax.random.PRNGKey(3))
+    hk = jax.random.normal(jax.random.PRNGKey(4), (4, CFG.d_model))
+    got = M.draft_head_logits(params, lora["A"], lora["B"], hk, CFG)
+    hkn = M.rmsnorm(hk, params["final_norm"], CFG.norm_eps)
+    np.testing.assert_allclose(got, hkn @ params["lm_head"].T, atol=1e-5)
+
+
+def test_rope_position_dependence():
+    x = jnp.ones((3, 2, 16))
+    r0 = M.rope(x, jnp.array([0, 1, 2]), 10000.0)
+    r1 = M.rope(x, jnp.array([1, 2, 3]), 10000.0)
+    # position 1 computed under either offset must agree
+    np.testing.assert_allclose(r0[1], r1[0], atol=1e-6)
+    assert not np.allclose(r0[0], r0[2])
+
+
+def test_rope_zero_position_identity():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 16))
+    r = M.rope(x, jnp.array([0]), 10000.0)
+    np.testing.assert_allclose(r, x, atol=1e-6)
+
+
+# ----------------------------------------------------------------------------
+# DVI loss + train step
+# ----------------------------------------------------------------------------
+
+TCFG = TrainConfig(batch_size=16)
+
+
+def _batch(n=16, v=512, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        hk=jnp.asarray(rng.normal(size=(n, d)), jnp.float32),
+        actions=jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32),
+        logits_phi=jnp.asarray(rng.normal(size=(n, v)) * 2, jnp.float32),
+        rewards=jnp.asarray(rng.integers(0, 2, size=(n,)), jnp.float32),
+        mask=jnp.ones((n,), jnp.float32),
+    )
+
+
+def test_dvi_loss_matches_oracle(params):
+    b = _batch()
+    lora = M.init_lora(CFG, jax.random.PRNGKey(6))
+    a = lora["A"] + 0.01
+    logits_theta = M.draft_head_logits(params, a, lora["B"], b["hk"], CFG)
+    hyper = jnp.asarray([0.5, 1.0, 0.5, 0.01, 0.5, 0.6, 1e-3, 1.0])
+    total, parts = T.dvi_loss(logits_theta, b["logits_phi"], b["actions"],
+                              b["rewards"], b["mask"], hyper, 1.0)
+    want, want_parts = ref.dvi_loss(
+        logits_theta, b["logits_phi"], b["actions"], b["rewards"], b["mask"],
+        lam_pg=0.5, lam_kl=1.0, w_ce=0.5, w_ent=0.01, tau=1.0, w_rl=0.5,
+        baseline=0.6)
+    np.testing.assert_allclose(total, want, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(parts, want_parts, atol=1e-5, rtol=1e-5)
+
+
+def test_train_step_reduces_kl(params):
+    """A few KL-only steps must reduce KL(p_theta || p_phi) on a fixed
+    batch — the optimizer actually descends."""
+    b = _batch(seed=1)
+    lora = M.init_lora(CFG, jax.random.PRNGKey(7))
+    frozen = {"draft_base": params["draft_base"],
+              "final_norm": params["final_norm"]}
+    a, bb = lora["A"], lora["B"]
+    ma, va = jnp.zeros_like(a), jnp.zeros_like(a)
+    mb, vb = jnp.zeros_like(bb), jnp.zeros_like(bb)
+
+    def kl_now(a, bb):
+        lt = M.draft_head_logits(frozen, a, bb, b["hk"], CFG)
+        _, kl, _, _ = ref.fused_losses(lt, b["logits_phi"], b["actions"], 1.0)
+        return float(kl.mean())
+
+    kl0 = kl_now(a, bb)
+    step = jax.jit(lambda *xs: T.train_step(frozen, *xs, mcfg=CFG, tcfg=TCFG))
+    for t in range(1, 11):
+        hyper = jnp.asarray([0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 5e-3, float(t)])
+        a, bb, ma, va, mb, vb, metrics = step(
+            a, bb, ma, va, mb, vb, b["hk"], b["actions"], b["logits_phi"],
+            b["rewards"], b["mask"], hyper)
+    kl1 = kl_now(a, bb)
+    assert kl1 < kl0 * 0.9, f"KL did not descend: {kl0} -> {kl1}"
+    m = np.asarray(metrics)
+    assert np.isfinite(m).all()
+
+
+def test_train_step_zero_lr_is_identity(params):
+    b = _batch(seed=2)
+    lora = M.init_lora(CFG, jax.random.PRNGKey(8))
+    frozen = {"draft_base": params["draft_base"],
+              "final_norm": params["final_norm"]}
+    a, bb = lora["A"] + 0.05, lora["B"]
+    z = jnp.zeros_like
+    hyper = jnp.asarray([0.5, 1.0, 0.5, 0.01, 0.5, 0.0, 0.0, 1.0])  # lr=0
+    a2, b2, *_rest, metrics = T.train_step(
+        frozen, a, bb, z(a), z(a), z(bb), z(bb),
+        b["hk"], b["actions"], b["logits_phi"], b["rewards"], b["mask"],
+        hyper, CFG, TCFG)
+    np.testing.assert_allclose(a2, a, atol=1e-7)
+    np.testing.assert_allclose(b2, bb, atol=1e-7)
+
+
+def test_train_step_batch_accept_metric(params):
+    b = _batch(seed=3)
+    lora = M.init_lora(CFG, jax.random.PRNGKey(9))
+    frozen = {"draft_base": params["draft_base"],
+              "final_norm": params["final_norm"]}
+    z = jnp.zeros_like
+    hyper = jnp.asarray([0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1e-3, 1.0])
+    *_out, metrics = T.train_step(
+        frozen, lora["A"], lora["B"], z(lora["A"]), z(lora["A"]),
+        z(lora["B"]), z(lora["B"]),
+        b["hk"], b["actions"], b["logits_phi"], b["rewards"], b["mask"],
+        hyper, CFG, TCFG)
+    expect = float(b["rewards"].mean())
+    assert abs(float(metrics[6]) - expect) < 1e-6

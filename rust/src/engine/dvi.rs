@@ -1,0 +1,222 @@
+//! The DVI engine: self-speculative decode over a split backbone with
+//! online tuple logging (paper §3.2–3.3).
+//!
+//! Per round (committed prefix ..x_P at feed point (f, P)):
+//!   1. DRAFT — k_spec calls to `draft_step` (shallow layers + LoRA head),
+//!      feeding f, d_1, .., d_{k-1} at positions P..P+k-1; collects the
+//!      raw h_k rows and greedy drafted tokens d_1..d_k.
+//!   2. VERIFY — one `verify_block` call runs the deep layers over the
+//!      h_k rows (this is where self-speculation amortizes: the deep pass
+//!      re-uses the shallow computation instead of re-embedding tokens).
+//!   3. IMPROVE — the longest-agreeing prefix commits (greedy => lossless;
+//!      `spec::accept` rule); one tuple per drafted position up to and
+//!      including the first reject goes to the replay buffer; positions
+//!      beyond the first reject are counterfactual and are NOT logged.
+//!
+//! When `online` is set, the engine triggers the trainer after each
+//! prompt, so LoRA updates land between requests exactly like the paper's
+//! serving-time adaptation loop.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::learner::{ReplayBuffer, Tuple};
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::spec::{longest_prefix, SeqPos};
+use crate::util::math::argmax;
+
+use super::{truncate_at_eos, Engine, GenResult, StepRecord};
+
+pub struct DviEngine {
+    rt: Arc<Runtime>,
+    prefill_sh: Arc<Artifact>,
+    prefill_dp: Arc<Artifact>,
+    draft: Arc<Artifact>,
+    /// Fused k_spec-step draft loop (one PJRT call instead of k_spec;
+    /// see EXPERIMENTS.md §Perf). Falls back to `draft` when absent.
+    draft_block: Option<Arc<Artifact>>,
+    verify: Arc<Artifact>,
+    pub k_spec: usize,
+    d_model: usize,
+    prefill_seq: usize,
+    max_seq: usize,
+    /// Tuple sink; engine logs accept/reject supervision when present.
+    pub buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+}
+
+impl DviEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<DviEngine> {
+        let k_spec = rt.manifest.spec_usize("k_spec")?;
+        let d_model = rt.manifest.model_usize("d_model")?;
+        let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
+        let max_seq = rt.manifest.model_usize("max_seq")?;
+        Ok(DviEngine {
+            prefill_sh: rt.artifact("prefill_shallow")?,
+            prefill_dp: rt.artifact("prefill_deep")?,
+            draft: rt.artifact("draft_step")?,
+            draft_block: rt.artifact("draft_block").ok(),
+            verify: rt.artifact("verify_block")?,
+            rt,
+            k_spec,
+            d_model,
+            prefill_seq,
+            max_seq,
+            buffer: None,
+        })
+    }
+
+    pub fn with_buffer(mut self, buffer: Arc<Mutex<ReplayBuffer>>) -> Self {
+        self.buffer = Some(buffer);
+        self
+    }
+
+    fn prefill(
+        &self,
+        prompt: &[u32],
+    ) -> Result<(Vec<Arc<PjRtBuffer>>, Vec<Arc<PjRtBuffer>>, u32)> {
+        anyhow::ensure!(
+            prompt.len() <= self.prefill_seq,
+            "prompt length {} exceeds prefill capacity {}",
+            prompt.len(),
+            self.prefill_seq
+        );
+        let kv_sh = self.rt.fresh_kv("prefill_shallow")?;
+        let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        padded.resize(self.prefill_seq, 0);
+        let sh = self.prefill_sh.call(
+            &self.rt.store,
+            &kv_sh,
+            &[Tensor::i32(vec![self.prefill_seq], padded)],
+        )?;
+        // sh.outputs[0] = h_k rows [P, d]; feed them into the deep prefill.
+        let kv_dp = self.rt.fresh_kv("prefill_deep")?;
+        let dp = self.prefill_dp.call(
+            &self.rt.store,
+            &kv_dp,
+            &[
+                sh.outputs[0].clone(),
+                Tensor::scalar_i32(prompt.len() as i32),
+            ],
+        )?;
+        let first = argmax(dp.outputs[0].as_f32()?) as u32;
+        Ok((sh.kv, dp.kv, first))
+    }
+}
+
+impl Engine for DviEngine {
+    fn name(&self) -> &'static str {
+        "dvi"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut kv_sh, mut kv_dp, first) = self.prefill(prompt)?;
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+
+        let mut seq = SeqPos::after_prefill(prompt);
+        seq.push_committed(first);
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && seq.kv_len + k + 1 < self.max_seq
+        {
+            // ---- DRAFT: k shallow steps ----------------------------------
+            // One fused PJRT call when the draft_block artifact exists
+            // (greedy argmax between steps happens in-graph); otherwise
+            // k_spec per-step calls.
+            let tdraft = Instant::now();
+            let (feed_tok, feed_pos) = seq.feed();
+            let mut drafted: Vec<u32> = Vec::with_capacity(k);
+            let mut hk_rows: Vec<f32> = Vec::with_capacity(k * self.d_model);
+            if let Some(block) = &self.draft_block {
+                let out = block.call(
+                    &self.rt.store,
+                    &kv_sh,
+                    &[
+                        Tensor::scalar_i32(feed_tok as i32),
+                        Tensor::scalar_i32(feed_pos as i32),
+                    ],
+                )?;
+                kv_sh = out.kv;
+                drafted.extend(out.outputs[0].as_i32()?.iter().map(|&t| t as u32));
+                hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
+            } else {
+                let mut tok = feed_tok;
+                for i in 0..k {
+                    let out = self.draft.call(
+                        &self.rt.store,
+                        &kv_sh,
+                        &[
+                            Tensor::scalar_i32(tok as i32),
+                            Tensor::scalar_i32((feed_pos + i) as i32),
+                        ],
+                    )?;
+                    kv_sh = out.kv;
+                    let logits_theta = out.outputs[0].as_f32()?;
+                    hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
+                    let d = argmax(logits_theta) as u32;
+                    drafted.push(d);
+                    tok = d;
+                }
+            }
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            // ---- VERIFY: one deep block ----------------------------------
+            let tver = Instant::now();
+            let out = self.verify.call(
+                &self.rt.store,
+                &kv_dp,
+                &[
+                    Tensor::f32(vec![k, self.d_model], hk_rows.clone()),
+                    Tensor::scalar_i32(feed_pos as i32),
+                ],
+            )?;
+            kv_dp = out.kv;
+            let logits_phi = &out.outputs[0];
+            let verifier: Vec<u32> = (0..k)
+                .map(|i| Ok(argmax(logits_phi.row_f32(i)?) as u32))
+                .collect::<Result<_>>()?;
+            let outcome = longest_prefix(&drafted, &verifier);
+            let verify_ns = tver.elapsed().as_nanos() as u64;
+
+            // ---- IMPROVE: log supervision tuples --------------------------
+            if let Some(buf) = &self.buffer {
+                let mut buf = buf.lock().unwrap();
+                let logged = (outcome.accepted + 1).min(k); // incl. first reject
+                for i in 0..logged {
+                    buf.push(Tuple {
+                        hk: hk_rows[i * self.d_model..(i + 1) * self.d_model]
+                            .to_vec(),
+                        action: drafted[i],
+                        logits_phi: logits_phi.row_f32(i)?.to_vec(),
+                        reward: if i < outcome.accepted { 1.0 } else { 0.0 },
+                    });
+                }
+            }
+
+            seq.advance(k, outcome.accepted, &outcome.committed);
+            result.tokens.extend_from_slice(&outcome.committed);
+            result.steps.push(StepRecord {
+                drafted: k,
+                accepted: outcome.accepted,
+                committed: outcome.total_committed(),
+                draft_ns,
+                verify_ns,
+            });
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}

@@ -1,0 +1,106 @@
+//! EAGLE-style feature-level drafting (Li et al. 2024a).
+//!
+//! The drafter autoregresses in *feature space*: from (h_L at position
+//! t, embedding of token t+1) it predicts h_L at t+1, and the frozen
+//! verifier LM head turns predicted features into draft tokens. After
+//! verification the feature state re-roots on the *true* h_L row returned
+//! by the verify block, so drift never compounds past one round.
+//!
+//! The feature predictor is the residual MLP trained offline in
+//! `distill.py` (the original uses a one-layer transformer over features;
+//! see DESIGN.md §Substitutions).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::util::math::argmax;
+
+use super::{truncate_at_eos, Engine, GenResult, StepRecord, TargetSeq};
+
+pub struct EagleEngine {
+    rt: Arc<Runtime>,
+    step: Arc<Artifact>,
+    pub k_spec: usize,
+}
+
+impl EagleEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<EagleEngine> {
+        Ok(EagleEngine {
+            step: rt.artifact("eagle_step")?,
+            k_spec: rt.manifest.spec_usize("k_spec")?,
+            rt,
+        })
+    }
+}
+
+impl Engine for EagleEngine {
+    fn name(&self) -> &'static str {
+        "eagle"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut ts, first, mut feat) = TargetSeq::start(
+            self.rt.clone(),
+            "prefill_full",
+            "target_step",
+            Some("target_verify_block"),
+            prompt,
+        )?;
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let d = feat.len();
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && ts.has_capacity(k + 1)
+        {
+            // ---- DRAFT: autoregressive feature rollout -------------------
+            let tdraft = Instant::now();
+            let (mut tok, _pos) = ts.seq.feed();
+            let mut f = feat.clone();
+            let mut proposals: Vec<u32> = Vec::with_capacity(k);
+            for _ in 0..k {
+                let out = self.step.call(
+                    &self.rt.store,
+                    &[],
+                    &[
+                        Tensor::f32(vec![d], f),
+                        Tensor::scalar_i32(tok as i32),
+                    ],
+                )?;
+                let t = argmax(out.outputs[0].as_f32()?) as u32;
+                f = out.outputs[1].as_f32()?.to_vec();
+                proposals.push(t);
+                tok = t;
+            }
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            // ---- VERIFY + re-root on true features -----------------------
+            let tver = Instant::now();
+            let (outcome, new_feat) = ts.verify_chain(&proposals)?;
+            feat = new_feat;
+            result.tokens.extend_from_slice(&outcome.committed);
+            result.steps.push(StepRecord {
+                drafted: k,
+                accepted: outcome.accepted,
+                committed: outcome.total_committed(),
+                draft_ns,
+                verify_ns: tver.elapsed().as_nanos() as u64,
+            });
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}

@@ -1,0 +1,179 @@
+//! Medusa & Hydra: multi-head drafting over the target's h_L features.
+//!
+//! Medusa (Cai et al.): 4 time-independent MLP heads over h_L propose the
+//! next 4 positions; the chain is verified by the target in one block.
+//! Hydra (Ankner et al.): sequentially-dependent heads — head k consumes
+//! the embedding of the token proposed by head k-1, improving chain
+//! coherence (higher MAT than Medusa at equal budget, as in Table 2).
+//!
+//! Both use *sequence* (chain) verification here — the paper evaluates
+//! DVI under single-sequence verification, and Spec-Bench normalizes
+//! methods into one harness; tree attention is out of scope (DESIGN.md).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::util::math::argmax;
+
+use super::{truncate_at_eos, Engine, GenResult, StepRecord, TargetSeq};
+
+pub struct MedusaEngine {
+    rt: Arc<Runtime>,
+    heads: Arc<Artifact>,
+    pub k_spec: usize,
+}
+
+impl MedusaEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<MedusaEngine> {
+        Ok(MedusaEngine {
+            heads: rt.artifact("medusa_heads")?,
+            k_spec: rt.manifest.spec_usize("k_spec")?,
+            rt,
+        })
+    }
+}
+
+impl Engine for MedusaEngine {
+    fn name(&self) -> &'static str {
+        "medusa"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut ts, first, mut hl) = TargetSeq::start(
+            self.rt.clone(),
+            "prefill_full",
+            "target_step",
+            Some("target_verify_block"),
+            prompt,
+        )?;
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let d = hl.len();
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && ts.has_capacity(k + 1)
+        {
+            let tdraft = Instant::now();
+            let out = self.heads.call(
+                &self.rt.store,
+                &[],
+                &[Tensor::f32(vec![d], hl.clone())],
+            )?;
+            // head i proposes the token i+1 positions after the pending feed
+            let logits = &out.outputs[0];
+            let proposals: Vec<u32> = (0..k)
+                .map(|i| Ok(argmax(logits.row_f32(i)?) as u32))
+                .collect::<Result<_>>()?;
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            let tver = Instant::now();
+            let (outcome, new_hl) = ts.verify_chain(&proposals)?;
+            hl = new_hl;
+            result.tokens.extend_from_slice(&outcome.committed);
+            result.steps.push(StepRecord {
+                drafted: k,
+                accepted: outcome.accepted,
+                committed: outcome.total_committed(),
+                draft_ns,
+                verify_ns: tver.elapsed().as_nanos() as u64,
+            });
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}
+
+pub struct HydraEngine {
+    rt: Arc<Runtime>,
+    chain: Arc<Artifact>,
+    pub k_spec: usize,
+}
+
+impl HydraEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<HydraEngine> {
+        Ok(HydraEngine {
+            chain: rt.artifact("hydra_chain")?,
+            k_spec: rt.manifest.spec_usize("k_spec")?,
+            rt,
+        })
+    }
+}
+
+impl Engine for HydraEngine {
+    fn name(&self) -> &'static str {
+        "hydra"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut ts, first, mut hl) = TargetSeq::start(
+            self.rt.clone(),
+            "prefill_full",
+            "target_step",
+            Some("target_verify_block"),
+            prompt,
+        )?;
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let d = hl.len();
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && ts.has_capacity(k + 1)
+        {
+            let tdraft = Instant::now();
+            // Sequentially-dependent chain: the artifact consumes the
+            // pending feed token and rolls the head state inside HLO.
+            let (feed_tok, _pos) = ts.seq.feed();
+            let out = self.chain.call(
+                &self.rt.store,
+                &[],
+                &[
+                    Tensor::f32(vec![d], hl.clone()),
+                    Tensor::scalar_i32(feed_tok as i32),
+                ],
+            )?;
+            let proposals: Vec<u32> = out.outputs[0]
+                .as_i32()?
+                .iter()
+                .map(|&t| t as u32)
+                .collect();
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            let tver = Instant::now();
+            let (outcome, new_hl) = ts.verify_chain(&proposals[..k])?;
+            hl = new_hl;
+            result.tokens.extend_from_slice(&outcome.committed);
+            result.steps.push(StepRecord {
+                drafted: k,
+                accepted: outcome.accepted,
+                committed: outcome.total_committed(),
+                draft_ns,
+                verify_ns: tver.elapsed().as_nanos() as u64,
+            });
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}

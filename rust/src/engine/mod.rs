@@ -1,0 +1,131 @@
+//! Decoding engines: greedy AR baseline, DVI self-speculation, and the
+//! five reimplemented comparison methods (PLD, SpS, Medusa, Hydra, EAGLE).
+//!
+//! Every engine implements `Engine::generate` and reports per-round
+//! `StepRecord`s, from which the Spec-Bench metrics (MAT, acceptance
+//! rate, wall-time speedup) are derived by `crate::metrics`.
+
+pub mod ar;
+pub mod dvi;
+pub mod eagle;
+pub mod medusa;
+pub mod pld;
+pub mod sps;
+pub mod target_seq;
+
+use anyhow::Result;
+
+pub use target_seq::TargetSeq;
+
+use crate::tokenizer::EOS;
+
+/// One verification round (or one AR step).
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    /// Drafted tokens this round (0 for plain AR steps).
+    pub drafted: usize,
+    /// Drafted tokens accepted by the verifier (m).
+    pub accepted: usize,
+    /// Tokens committed (accepted + bonus, or 1 for AR).
+    pub committed: usize,
+    /// Nanoseconds spent producing proposals.
+    pub draft_ns: u64,
+    /// Nanoseconds spent in the verifier pass.
+    pub verify_ns: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct GenResult {
+    /// Generated tokens (prompt excluded), truncated at EOS if emitted.
+    pub tokens: Vec<u32>,
+    pub steps: Vec<StepRecord>,
+    pub prefill_ns: u64,
+    /// Total decode wall time (draft + verify + coordinator overhead).
+    pub decode_ns: u64,
+}
+
+impl GenResult {
+    /// Mean accepted tokens per *verification step* (Spec-Bench MAT).
+    /// AR steps (drafted == 0) do not count as verification steps.
+    pub fn mat(&self) -> f64 {
+        let vsteps: Vec<_> = self.steps.iter().filter(|s| s.drafted > 0).collect();
+        if vsteps.is_empty() {
+            return 0.0;
+        }
+        vsteps.iter().map(|s| s.accepted as f64).sum::<f64>() / vsteps.len() as f64
+    }
+
+    /// Fraction of drafted tokens accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        let drafted: usize = self.steps.iter().map(|s| s.drafted).sum();
+        if drafted == 0 {
+            return 0.0;
+        }
+        let accepted: usize = self.steps.iter().map(|s| s.accepted).sum();
+        accepted as f64 / drafted as f64
+    }
+
+    /// Tokens committed per verifier call (throughput proxy).
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.tokens.len() as f64 / self.steps.len() as f64
+    }
+}
+
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Greedy generation. Lossless engines must produce *exactly* the
+    /// AR baseline's token sequence (asserted by integration tests).
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult>;
+}
+
+/// Truncate `tokens` at the first EOS (inclusive). Returns true if found.
+pub fn truncate_at_eos(tokens: &mut Vec<u32>) -> bool {
+    if let Some(idx) = tokens.iter().position(|&t| t == EOS) {
+        tokens.truncate(idx + 1);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_ignores_ar_steps() {
+        let r = GenResult {
+            tokens: vec![1, 2, 3],
+            steps: vec![
+                StepRecord { drafted: 4, accepted: 2, committed: 3, ..Default::default() },
+                StepRecord { drafted: 0, accepted: 0, committed: 1, ..Default::default() },
+                StepRecord { drafted: 4, accepted: 4, committed: 4, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.mat(), 3.0);
+        assert!((r.acceptance_rate() - 6.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncation() {
+        let mut t = vec![5, 6, EOS, 9];
+        assert!(truncate_at_eos(&mut t));
+        assert_eq!(t, vec![5, 6, EOS]);
+        let mut u = vec![5, 6];
+        assert!(!truncate_at_eos(&mut u));
+        assert_eq!(u.len(), 2);
+    }
+
+    #[test]
+    fn empty_result_metrics() {
+        let r = GenResult::default();
+        assert_eq!(r.mat(), 0.0);
+        assert_eq!(r.acceptance_rate(), 0.0);
+        assert_eq!(r.tokens_per_step(), 0.0);
+    }
+}

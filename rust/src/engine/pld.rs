@@ -1,0 +1,172 @@
+//! PLD (Prompt Lookup Decoding): training-free drafting by n-gram match.
+//!
+//! Proposals come from the sequence's own history: find the most recent
+//! earlier occurrence of the current suffix n-gram (n = 3 falling back to
+//! 2) and propose the k tokens that followed it. Strong on copy-heavy
+//! workloads (summarization/RAG), useless on novel text — exactly the
+//! per-task profile Table 2 shows for PLD.
+//!
+//! When no match exists the engine takes a plain AR step (no wasted
+//! verifier block on garbage proposals).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+use super::{truncate_at_eos, Engine, GenResult, StepRecord, TargetSeq};
+
+pub struct PldEngine {
+    rt: Arc<Runtime>,
+    pub k_spec: usize,
+}
+
+impl PldEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<PldEngine> {
+        let k_spec = rt.manifest.spec_usize("k_spec")?;
+        Ok(PldEngine { rt, k_spec })
+    }
+}
+
+/// Find a continuation of the token history by suffix n-gram lookup.
+/// Returns exactly `k` proposed tokens, or None if no n-gram matches.
+pub fn lookup_proposal(history: &[u32], k: usize) -> Option<Vec<u32>> {
+    for n in (2..=3.min(history.len())).rev() {
+        let suffix = &history[history.len() - n..];
+        // most recent earlier occurrence
+        let mut best: Option<usize> = None;
+        if history.len() < n + 1 {
+            continue;
+        }
+        for start in 0..history.len() - n {
+            if &history[start..start + n] == suffix {
+                best = Some(start);
+            }
+        }
+        if let Some(start) = best {
+            let cont = start + n;
+            let avail = history.len() - n - start; // tokens after the match
+            if avail == 0 {
+                continue;
+            }
+            let mut prop: Vec<u32> = Vec::with_capacity(k);
+            for i in 0..k {
+                // wrap by repeating the last available token if the match
+                // runs into the suffix itself
+                let idx = cont + i;
+                if idx < history.len() - n {
+                    prop.push(history[idx]);
+                } else {
+                    prop.push(*history.get(idx).unwrap_or(history.last().unwrap()));
+                }
+            }
+            return Some(prop);
+        }
+    }
+    None
+}
+
+impl Engine for PldEngine {
+    fn name(&self) -> &'static str {
+        "pld"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut ts, first, _hl) = TargetSeq::start(
+            self.rt.clone(),
+            "prefill_full",
+            "target_step",
+            Some("target_verify_block"),
+            prompt,
+        )?;
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && ts.has_capacity(k + 1)
+        {
+            let tdraft = Instant::now();
+            // Lookup over the *full* committed history except the pending
+            // feed token (which is the anchor of the suffix).
+            let proposal = lookup_proposal(ts.tokens(), k);
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            match proposal {
+                Some(props) => {
+                    let tver = Instant::now();
+                    let (outcome, _hl) = ts.verify_chain(&props)?;
+                    result.tokens.extend_from_slice(&outcome.committed);
+                    result.steps.push(StepRecord {
+                        drafted: k,
+                        accepted: outcome.accepted,
+                        committed: outcome.total_committed(),
+                        draft_ns,
+                        verify_ns: tver.elapsed().as_nanos() as u64,
+                    });
+                }
+                None => {
+                    let tver = Instant::now();
+                    let (tok, _) = ts.ar_step()?;
+                    result.tokens.push(tok);
+                    result.steps.push(StepRecord {
+                        drafted: 0,
+                        accepted: 0,
+                        committed: 1,
+                        draft_ns,
+                        verify_ns: tver.elapsed().as_nanos() as u64,
+                    });
+                }
+            }
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lookup_proposal;
+
+    #[test]
+    fn finds_repeat() {
+        // history: a b c d a b -> suffix [a b] matched at 0, proposes c d ..
+        let h = [10, 11, 12, 13, 10, 11];
+        let p = lookup_proposal(&h, 2).unwrap();
+        assert_eq!(p, vec![12, 13]);
+    }
+
+    #[test]
+    fn prefers_trigram() {
+        // trigram suffix [b c d] matches earlier; bigram would match elsewhere
+        let h = [11, 12, 13, 99, 12, 13, 50, 11, 12, 13];
+        let p = lookup_proposal(&h, 1).unwrap();
+        // trigram [11 12 13] matched at 0 -> next token 99
+        assert_eq!(p, vec![99]);
+    }
+
+    #[test]
+    fn no_match() {
+        assert!(lookup_proposal(&[1, 2, 3, 4, 5], 2).is_none());
+        assert!(lookup_proposal(&[1], 2).is_none());
+        assert!(lookup_proposal(&[], 2).is_none());
+    }
+
+    #[test]
+    fn most_recent_match_wins() {
+        let h = [7, 8, 100, 7, 8, 200, 7, 8];
+        let p = lookup_proposal(&h, 1).unwrap();
+        assert_eq!(p, vec![200]); // later occurrence preferred
+    }
+}

@@ -1,0 +1,149 @@
+//! SpS: classic two-model speculative sampling (Leviathan et al. /
+//! Chen et al.) — an independent small drafter LM proposes, the full
+//! target model verifies. The drafter here is the 2-layer mini-LM
+//! distilled offline by `python/compile/distill.py` (weights `sps.*`).
+//!
+//! This engine demonstrates the costs DVI's self-speculation removes: a
+//! second KV cache, drafter catch-up feeds, and a second model's weights.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::spec::SeqPos;
+use crate::util::math::argmax;
+
+use super::{truncate_at_eos, Engine, GenResult, StepRecord, TargetSeq};
+
+pub struct SpsEngine {
+    rt: Arc<Runtime>,
+    draft_prefill: Arc<Artifact>,
+    draft_step: Arc<Artifact>,
+    pub k_spec: usize,
+    prefill_seq: usize,
+}
+
+impl SpsEngine {
+    pub fn new(rt: Arc<Runtime>) -> Result<SpsEngine> {
+        Ok(SpsEngine {
+            draft_prefill: rt.artifact("sps_prefill")?,
+            draft_step: rt.artifact("sps_draft_step")?,
+            k_spec: rt.manifest.spec_usize("k_spec")?,
+            prefill_seq: rt.manifest.spec_usize("prefill_seq")?,
+            rt,
+        })
+    }
+}
+
+struct DrafterState {
+    kv: Vec<Arc<PjRtBuffer>>,
+    seq: SeqPos,
+}
+
+impl Engine for SpsEngine {
+    fn name(&self) -> &'static str {
+        "sps"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (mut target, first, _hl) = TargetSeq::start(
+            self.rt.clone(),
+            "prefill_full",
+            "target_step",
+            Some("target_verify_block"),
+            prompt,
+        )?;
+        // Drafter prefills the same prompt on its own weights/cache.
+        let kv = self.rt.fresh_kv("sps_prefill")?;
+        let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        padded.resize(self.prefill_seq, 0);
+        let dout = self.draft_prefill.call(
+            &self.rt.store,
+            &kv,
+            &[
+                Tensor::i32(vec![self.prefill_seq], padded),
+                Tensor::scalar_i32(prompt.len() as i32),
+            ],
+        )?;
+        let mut drafter = DrafterState {
+            kv: dout.kv,
+            seq: SeqPos::after_prefill(prompt),
+        };
+        drafter.seq.push_committed(first); // target's first token
+        let prefill_ns = t0.elapsed().as_nanos() as u64;
+
+        let mut result = GenResult {
+            tokens: vec![first],
+            prefill_ns,
+            ..Default::default()
+        };
+
+        let k = self.k_spec;
+        let td = Instant::now();
+        while result.tokens.len() < max_new
+            && !truncate_at_eos(&mut result.tokens)
+            && target.has_capacity(k + 1)
+        {
+            // ---- DRAFT: catch-up + k greedy steps on the small model ----
+            let tdraft = Instant::now();
+            // Catch-up: feed any committed tokens the drafter's KV has not
+            // ingested yet, except the newest (which seeds drafting).
+            while drafter.seq.kv_len + 1 < drafter.seq.tokens.len() {
+                let (tok, pos) = drafter.seq.feed();
+                let out = self.draft_step.call(
+                    &self.rt.store,
+                    &drafter.kv,
+                    &[Tensor::scalar_i32(tok as i32),
+                      Tensor::scalar_i32(pos as i32)],
+                )?;
+                drafter.kv = out.kv;
+                drafter.seq.kv_len += 1;
+            }
+            let kv_snapshot = drafter.seq.kv_len;
+            let mut drafted: Vec<u32> = Vec::with_capacity(k);
+            let (mut tok, mut pos) = drafter.seq.feed();
+            for _ in 0..k {
+                let out = self.draft_step.call(
+                    &self.rt.store,
+                    &drafter.kv,
+                    &[Tensor::scalar_i32(tok as i32),
+                      Tensor::scalar_i32(pos as i32)],
+                )?;
+                drafter.kv = out.kv;
+                let d = argmax(out.outputs[0].as_f32()?) as u32;
+                drafted.push(d);
+                tok = d;
+                pos += 1;
+            }
+            let draft_ns = tdraft.elapsed().as_nanos() as u64;
+
+            // ---- VERIFY on the target model ------------------------------
+            let tver = Instant::now();
+            let (outcome, _hl) = target.verify_chain(&drafted)?;
+            let verify_ns = tver.elapsed().as_nanos() as u64;
+
+            // Reconcile the drafter with ground truth: tokens come from
+            // the target; drafter KV validity follows the same rule as
+            // any chain (feed + accepted drafted-that-were-fed).
+            drafter.seq.tokens = target.seq.tokens.clone();
+            drafter.seq.kv_len = kv_snapshot + 1 + outcome.accepted.min(k - 1);
+
+            result.tokens.extend_from_slice(&outcome.committed);
+            result.steps.push(StepRecord {
+                drafted: k,
+                accepted: outcome.accepted,
+                committed: outcome.total_committed(),
+                draft_ns,
+                verify_ns,
+            });
+        }
+        truncate_at_eos(&mut result.tokens);
+        result.tokens.truncate(max_new);
+        result.decode_ns = td.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}

@@ -1,0 +1,165 @@
+//! `TargetSeq`: a live full-model sequence (prefill + AR step + chain
+//! verification) over the `prefill_full` / `target_step` /
+//! `target_verify_block` artifacts. This is the verifier substrate shared
+//! by the AR baseline and by every *external-drafter* method (PLD, SpS,
+//! Medusa, Hydra, EAGLE). DVI has its own split-path plumbing.
+//!
+//! The same struct also drives the SpS *drafter* model (same artifact
+//! shapes under the `sps_*` names), so it is generic over artifact names.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::spec::{longest_prefix, SeqPos, VerifyOutcome};
+use crate::util::math::argmax;
+
+pub struct TargetSeq {
+    rt: Arc<Runtime>,
+    prefill: Arc<Artifact>,
+    step: Arc<Artifact>,
+    verify: Option<Arc<Artifact>>,
+    kv: Vec<Arc<PjRtBuffer>>,
+    pub seq: SeqPos,
+    prompt_len: usize,
+    max_seq: usize,
+    vocab: usize,
+}
+
+impl TargetSeq {
+    /// Prefill a prompt. Returns the engine plus the first generated token
+    /// and the h_L feature row that produced it (used by Medusa/EAGLE).
+    pub fn start(
+        rt: Arc<Runtime>,
+        prefill_name: &str,
+        step_name: &str,
+        verify_name: Option<&str>,
+        prompt: &[u32],
+    ) -> Result<(TargetSeq, u32, Vec<f32>)> {
+        let prefill = rt.artifact(prefill_name)?;
+        let step = rt.artifact(step_name)?;
+        let verify = verify_name.map(|n| rt.artifact(n)).transpose()?;
+        let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
+        let max_seq = rt.manifest.model_usize("max_seq")?;
+        let vocab = rt.manifest.model_usize("vocab_size")?;
+        anyhow::ensure!(
+            prompt.len() <= prefill_seq,
+            "prompt length {} exceeds prefill capacity {}",
+            prompt.len(),
+            prefill_seq
+        );
+
+        let kv = rt.fresh_kv(prefill_name)?;
+        let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        padded.resize(prefill_seq, 0);
+        let out = prefill.call(
+            &rt.store,
+            &kv,
+            &[
+                Tensor::i32(vec![prefill_seq], padded),
+                Tensor::scalar_i32(prompt.len() as i32),
+            ],
+        )?;
+        let logits = out.outputs[0].as_f32()?;
+        let hl = out.outputs[1].as_f32()?.to_vec();
+        let first = argmax(logits) as u32;
+        let mut seq = SeqPos::after_prefill(prompt);
+        seq.push_committed(first);
+        Ok((
+            TargetSeq {
+                rt, prefill, step, verify,
+                kv: out.kv,
+                seq,
+                prompt_len: prompt.len(),
+                max_seq, vocab,
+            },
+            first,
+            hl,
+        ))
+    }
+
+    pub fn generated(&self) -> usize {
+        self.seq.generated(self.prompt_len)
+    }
+
+    /// Remaining KV capacity guard: can we run a round writing `k` slots?
+    pub fn has_capacity(&self, k: usize) -> bool {
+        self.seq.kv_len + k < self.max_seq
+    }
+
+    /// Plain AR step: feed the pending token, commit the argmax. Returns
+    /// (new token, h_L feature row of the fed position).
+    pub fn ar_step(&mut self) -> Result<(u32, Vec<f32>)> {
+        let (tok, pos) = self.seq.feed();
+        let out = self.step.call(
+            &self.rt.store,
+            &self.kv,
+            &[Tensor::scalar_i32(tok as i32), Tensor::scalar_i32(pos as i32)],
+        )?;
+        self.kv = out.kv;
+        let logits = out.outputs[0].as_f32()?;
+        let hl = out.outputs[1].as_f32()?.to_vec();
+        let next = argmax(logits) as u32;
+        self.seq.advance_ar(next);
+        Ok((next, hl))
+    }
+
+    /// Verify `proposals` (exactly the artifact's block size k_spec).
+    /// Feeds [pending, proposals[..k-1]] and applies the acceptance rule.
+    /// Returns the outcome plus the h_L row at the last *valid* fed
+    /// position (the re-root feature for Medusa/Hydra/EAGLE).
+    pub fn verify_chain(
+        &mut self,
+        proposals: &[u32],
+    ) -> Result<(VerifyOutcome, Vec<f32>)> {
+        let verify = self.verify.as_ref().context("no verify artifact")?;
+        let k = proposals.len();
+        let (tok, pos) = self.seq.feed();
+        let mut feed: Vec<i32> = Vec::with_capacity(k);
+        feed.push(tok as i32);
+        feed.extend(proposals[..k - 1].iter().map(|&t| t as i32));
+        let out = verify.call(
+            &self.rt.store,
+            &self.kv,
+            &[
+                Tensor::i32(vec![k], feed),
+                Tensor::scalar_i32(pos as i32),
+            ],
+        )?;
+        self.kv = out.kv;
+        let logits = &out.outputs[0];
+        let verifier: Vec<u32> = (0..k)
+            .map(|i| Ok(argmax(logits.row_f32(i)?) as u32))
+            .collect::<Result<_>>()?;
+        let outcome = longest_prefix(proposals, &verifier);
+        self.seq.advance(k, outcome.accepted, &outcome.committed);
+        // h_L row at the last valid fed slot: index min(m, k-1).
+        let root = outcome.accepted.min(k - 1);
+        let hl = out.outputs[1].row_f32(root)?.to_vec();
+        Ok((outcome, hl))
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// All committed tokens (prompt + generated).
+    pub fn tokens(&self) -> &[u32] {
+        &self.seq.tokens
+    }
+
+    /// Re-prefill for a new prompt, reusing the engine's artifacts.
+    pub fn restart(&mut self, prompt: &[u32]) -> Result<(u32, Vec<f32>)> {
+        let (ts, first, hl) = TargetSeq::start(
+            self.rt.clone(),
+            &self.prefill.spec.name,
+            &self.step.spec.name,
+            self.verify.as_ref().map(|v| v.spec.name.as_str()),
+            prompt,
+        )?;
+        *self = ts;
+        Ok((first, hl))
+    }
+}

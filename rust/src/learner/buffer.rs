@@ -1,0 +1,171 @@
+//! Online replay buffer (paper §3.3).
+//!
+//! One tuple per drafted position up to and including the first reject:
+//! (h_k, action, verifier logits, r). Positions past the first reject are
+//! counterfactual — the engine never logs them, and this module's tests
+//! assert the invariant on the engine's behalf (reward pattern 1..1 0?).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Tuple {
+    /// Raw residual stream at the split layer (length d_model).
+    pub hk: Vec<f32>,
+    /// The drafted token id.
+    pub action: u32,
+    /// Frozen verifier logits at the same position (length vocab).
+    pub logits_phi: Vec<f32>,
+    /// 1.0 accepted, 0.0 first reject.
+    pub reward: f32,
+}
+
+/// Fixed-capacity ring buffer with recency-biased sampling: the paper's
+/// update mixes fresh on-policy tuples (the policy-gradient term) with
+/// replayed ones (KD calibration), so minibatches draw half from the
+/// newest entries and half uniformly.
+pub struct ReplayBuffer {
+    data: Vec<Tuple>,
+    capacity: usize,
+    head: usize,
+    /// Monotone count of tuples ever pushed.
+    pub pushed: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> ReplayBuffer {
+        assert!(capacity > 0);
+        ReplayBuffer { data: Vec::with_capacity(capacity), capacity, head: 0, pushed: 0 }
+    }
+
+    pub fn push(&mut self, t: Tuple) {
+        debug_assert!(t.reward == 0.0 || t.reward == 1.0);
+        if self.data.len() < self.capacity {
+            self.data.push(t);
+        } else {
+            self.data[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Index of the i-th most recent tuple (i = 0 -> newest).
+    fn recent_idx(&self, i: usize) -> usize {
+        debug_assert!(i < self.data.len());
+        if self.data.len() < self.capacity {
+            self.data.len() - 1 - i
+        } else {
+            (self.head + self.capacity - 1 - i) % self.capacity
+        }
+    }
+
+    /// Sample a minibatch: ceil(n/2) newest tuples + uniform remainder.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<&Tuple> {
+        assert!(self.len() >= n, "buffer {} < batch {}", self.len(), n);
+        let n_recent = (n + 1) / 2;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n_recent {
+            out.push(&self.data[self.recent_idx(i)]);
+        }
+        for _ in n_recent..n {
+            out.push(&self.data[rng.usize_below(self.data.len())]);
+        }
+        out
+    }
+
+    /// Mean reward currently stored (diagnostic; the EMA baseline uses
+    /// per-batch values from the trainer instead).
+    pub fn mean_reward(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|t| t.reward as f64).sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn tup(action: u32, reward: f32) -> Tuple {
+        Tuple { hk: vec![0.0; 4], action, logits_phi: vec![0.0; 8], reward }
+    }
+
+    #[test]
+    fn push_and_wrap() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(tup(i, 1.0));
+        }
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.pushed, 5);
+        // newest is action 4
+        assert_eq!(b.data[b.recent_idx(0)].action, 4);
+        assert_eq!(b.data[b.recent_idx(2)].action, 2);
+    }
+
+    #[test]
+    fn sample_mixes_recent() {
+        let mut b = ReplayBuffer::new(100);
+        for i in 0..50 {
+            b.push(tup(i, 1.0));
+        }
+        let mut rng = Rng::new(0);
+        let batch = b.sample(8, &mut rng);
+        assert_eq!(batch.len(), 8);
+        // first half must be the newest tuples in order
+        assert_eq!(batch[0].action, 49);
+        assert_eq!(batch[3].action, 46);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_underflow_panics() {
+        let b = ReplayBuffer::new(10);
+        let mut rng = Rng::new(0);
+        b.sample(1, &mut rng);
+    }
+
+    #[test]
+    fn prop_recent_indexing_consistent() {
+        run_prop("buffer-recent", 256, |rng| {
+            let cap = 1 + rng.usize_below(20);
+            let mut b = ReplayBuffer::new(cap);
+            let n = rng.usize_below(60);
+            for i in 0..n {
+                b.push(tup(i as u32, 0.0));
+            }
+            if b.len() > 0 {
+                // newest tuple is always the last pushed
+                assert_eq!(b.data[b.recent_idx(0)].action as usize, n - 1);
+                // oldest stored = n - len
+                assert_eq!(
+                    b.data[b.recent_idx(b.len() - 1)].action as usize,
+                    n - b.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mean_reward() {
+        let mut b = ReplayBuffer::new(4);
+        b.push(tup(0, 1.0));
+        b.push(tup(1, 0.0));
+        assert_eq!(b.mean_reward(), 0.5);
+    }
+}

@@ -1,0 +1,19 @@
+//! Online learner: converts verifier accept/reject feedback into LoRA
+//! draft-head updates (the "Improve" of Draft, Verify, & Improve).
+//!
+//! * `buffer` — the online replay buffer of per-position tuples
+//!   (h_k, action, verifier logits, reward) logged by the DVI engine.
+//! * `schedule` — the KL->RL annealing schedule (paper §3.4) plus the
+//!   single-term ablation variants (KL-only / PG-only / CE-only).
+//! * `trainer` — samples minibatches, assembles the hyper vector, and
+//!   invokes the AOT `train_step` artifact (loss + grads + Adam fused);
+//!   the LoRA/Adam `global` buffers update in place, so the very next
+//!   `draft_step` call decodes with the improved drafter.
+
+pub mod buffer;
+pub mod schedule;
+pub mod trainer;
+
+pub use buffer::{ReplayBuffer, Tuple};
+pub use schedule::{Objective, Schedule};
+pub use trainer::{TrainMetrics, Trainer};

@@ -1,0 +1,162 @@
+//! Trainer: assembles minibatches from the replay buffer and invokes the
+//! AOT `train_step` artifact. The artifact updates the LoRA/Adam `global`
+//! buffers in the shared store, so the DVI engine's next `draft_step`
+//! immediately decodes with the improved drafter — inference and training
+//! interleave exactly as at serve time (minimal train/serve skew, §3.3).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::util::math::Ema;
+use crate::util::rng::Rng;
+
+use super::buffer::ReplayBuffer;
+use super::schedule::Schedule;
+
+/// Metrics vector layout mirrors python/compile/train.py.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub step: u64,
+    pub total: f32,
+    pub l_pg: f32,
+    pub l_kl: f32,
+    pub l_ce: f32,
+    pub l_ent: f32,
+    pub l_rl: f32,
+    /// Fraction of the minibatch's tuples that were accepted (the paper's
+    /// "batch acceptance rate", Fig. 2 y-axis).
+    pub batch_accept: f32,
+    pub grad_norm: f32,
+}
+
+pub struct Trainer {
+    rt: Arc<Runtime>,
+    train_step: Arc<Artifact>,
+    pub buffer: Arc<Mutex<ReplayBuffer>>,
+    pub schedule: Schedule,
+    baseline: Ema,
+    rng: Rng,
+    pub steps_done: u64,
+    pub batch_size: usize,
+    d_model: usize,
+    vocab: usize,
+    /// Learning-curve log: one entry per optimizer step.
+    pub curve: Vec<TrainMetrics>,
+}
+
+impl Trainer {
+    pub fn new(
+        rt: Arc<Runtime>,
+        buffer: Arc<Mutex<ReplayBuffer>>,
+        schedule: Schedule,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let train_step = rt.artifact("train_step")?;
+        let batch_size = rt.manifest.train_f64("batch_size")? as usize;
+        let d_model = rt.manifest.model_usize("d_model")?;
+        let vocab = rt.manifest.model_usize("vocab_size")?;
+        Ok(Trainer {
+            rt,
+            train_step,
+            buffer,
+            schedule,
+            baseline: Ema::new(0.9),
+            rng: Rng::new(seed),
+            steps_done: 0,
+            batch_size,
+            d_model,
+            vocab,
+            curve: Vec::new(),
+        })
+    }
+
+    /// Reset LoRA + Adam global buffers to their initial values (fresh
+    /// drafter) and clear progress. Used between ablation runs.
+    pub fn reset(&mut self) -> Result<()> {
+        for name in ["lora.A", "lora.B", "adam.mA", "adam.vA", "adam.mB", "adam.vB"] {
+            self.rt.reset_global(name)?;
+        }
+        self.steps_done = 0;
+        self.curve.clear();
+        self.baseline = Ema::new(0.9);
+        self.buffer.lock().unwrap().clear();
+        Ok(())
+    }
+
+    pub fn can_train(&self) -> bool {
+        self.buffer.lock().unwrap().len() >= self.batch_size
+    }
+
+    /// One optimizer step if the buffer holds a full batch.
+    pub fn maybe_train(&mut self) -> Result<Option<TrainMetrics>> {
+        if !self.can_train() {
+            return Ok(None);
+        }
+        let n = self.batch_size;
+        let (mut hk, mut actions, mut logits_phi, mut rewards, mask);
+        let batch_reward_mean;
+        {
+            let buf = self.buffer.lock().unwrap();
+            let batch = buf.sample(n, &mut self.rng);
+            hk = Vec::with_capacity(n * self.d_model);
+            actions = Vec::with_capacity(n);
+            logits_phi = Vec::with_capacity(n * self.vocab);
+            rewards = Vec::with_capacity(n);
+            mask = vec![1.0f32; n];
+            for t in &batch {
+                debug_assert_eq!(t.hk.len(), self.d_model);
+                debug_assert_eq!(t.logits_phi.len(), self.vocab);
+                hk.extend_from_slice(&t.hk);
+                actions.push(t.action as i32);
+                logits_phi.extend_from_slice(&t.logits_phi);
+                rewards.push(t.reward);
+            }
+            batch_reward_mean =
+                rewards.iter().map(|&r| r as f64).sum::<f64>() / n as f64;
+        }
+
+        // EMA baseline uses rewards *before* this step (paper: EMA of
+        // recent rewards as the variance-reduction baseline b).
+        let b = self.baseline.value as f32;
+        self.baseline.update(batch_reward_mean);
+
+        let hyper = self.schedule.hyper(self.steps_done, b);
+        let out = self.train_step.call(
+            &self.rt.store,
+            &[],
+            &[
+                Tensor::f32(vec![n, self.d_model], hk),
+                Tensor::i32(vec![n], actions),
+                Tensor::f32(vec![n, self.vocab], logits_phi),
+                Tensor::f32(vec![n], rewards),
+                Tensor::f32(vec![n], mask),
+                Tensor::f32(vec![8], hyper.to_vec()),
+            ],
+        )?;
+        let m = out.outputs[0].as_f32()?;
+        let metrics = TrainMetrics {
+            step: self.steps_done,
+            total: m[0],
+            l_pg: m[1],
+            l_kl: m[2],
+            l_ce: m[3],
+            l_ent: m[4],
+            l_rl: m[5],
+            batch_accept: m[6],
+            grad_norm: m[7],
+        };
+        self.steps_done += 1;
+        self.curve.push(metrics);
+        Ok(Some(metrics))
+    }
+
+    /// Learning curve as (step, batch_accept) points for Fig. 2.
+    pub fn accept_curve(&self) -> Vec<(f64, f64)> {
+        self.curve
+            .iter()
+            .map(|m| (m.step as f64, m.batch_accept as f64))
+            .collect()
+    }
+}

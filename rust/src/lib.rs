@@ -1,0 +1,28 @@
+//! # DVI — Draft, Verify, & Improve
+//!
+//! Production-shaped reproduction of *"Draft, Verify, & Improve: Toward
+//! Training-Aware Speculative Decoding"* (Bhansali & Heck, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — serving coordinator: decode engines (DVI
+//!   self-speculation + AR/PLD/SpS/Medusa/Hydra/EAGLE baselines), the
+//!   online learner (replay buffer + KL→RL schedule), a request
+//!   router/worker pool, workloads, metrics, and the Spec-Bench-style
+//!   benchmark harness.
+//! * **L2/L1 (python/compile, build-time only)** — JAX model + Pallas
+//!   kernels, AOT-lowered to HLO text executed through PJRT
+//!   (`runtime` module). Python never runs on the request path.
+//!
+//! Start with [`runtime::Runtime::load`], then construct engines from
+//! [`engine`], or drive everything through the `dvi` binary.
+
+pub mod engine;
+pub mod harness;
+pub mod learner;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,245 @@
+//! `dvi` — the serving/benchmark launcher.
+//!
+//! Subcommands:
+//!   info                         inspect artifacts/manifest
+//!   run      --method dvi --task qa --n 5 [--online]
+//!   train    --objective dvi --prompts 2000 [--curve out.csv]
+//!   table1                       training-budget comparison (Table 1)
+//!   table2   --n 40 [--methods dvi,ar,...] [--train 2000]
+//!   table3   --train 2000 --n 25  objective ablations (Table 3)
+//!   fig2     --train 2000        ablation learning curves (Figure 2)
+//!   serve    --port 7501 --workers 2 [--no-online]
+//!
+//! Everything reads `--artifacts DIR` (default: ./artifacts).
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dvi::harness;
+use dvi::learner::Objective;
+use dvi::runtime::{log, Runtime};
+use dvi::server::{api, Router, RouterConfig};
+use dvi::tokenizer::Tokenizer;
+use dvi::util::cli::Args;
+use dvi::util::plot::ascii_plot;
+
+const FLAGS: [&str; 4] = ["online", "no-online", "quiet", "verbose"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("quiet") {
+        log::set_level(0);
+    }
+    if args.flag("verbose") {
+        log::set_level(2);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    Ok(Arc::new(Runtime::load(&dir, None)?))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(args),
+        Some("run") => run(args),
+        Some("train") => train(args),
+        Some("table1") => table1(args),
+        Some("table2") => table2(args),
+        Some("table3") => table3(args),
+        Some("fig2") => fig2(args),
+        Some("serve") => serve(args),
+        Some(other) => bail!("unknown subcommand '{other}' (see src/main.rs docs)"),
+        None => bail!(
+            "usage: dvi <info|run|train|table1|table2|table3|fig2|serve> [...]"
+        ),
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    println!("artifacts: {}", rt.manifest.dir.display());
+    println!("model config: {}", rt.manifest.config.get("model"));
+    println!("spec config: {}", rt.manifest.config.get("spec"));
+    for (name, spec) in &rt.manifest.artifacts {
+        println!(
+            "  {name}: {} params, {} outputs",
+            spec.params.len(),
+            spec.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let method = args.get_or("method", "dvi");
+    let task = args.get_or("task", "qa");
+    let n = args.get_usize("n", 5).map_err(anyhow::Error::msg)?;
+    let tok = Tokenizer::load(&rt.manifest.vocab_file)?;
+
+    if args.flag("online") {
+        let prompts = args.get_usize("train", 300).map_err(anyhow::Error::msg)?;
+        log::info(&format!("online pre-training on {prompts} prompts"));
+        harness::online_train(rt.clone(), Objective::Dvi, prompts, false)?;
+    }
+
+    let set = harness::load_prompts(&rt, &task)?;
+    let mut engine = harness::make_engine(rt.clone(), &method)?;
+    for s in set.samples.iter().take(n) {
+        let r = engine.generate(&s.prompt, s.max_new)?;
+        println!(
+            "--- task={task} prompt: {}",
+            tok.decode(&s.prompt[1..s.prompt.len().min(24)])
+        );
+        println!("    output: {}", tok.decode(&r.tokens));
+        println!(
+            "    mat={:.2} accept={:.2} decode={:.1}ms tokens={}",
+            r.mat(),
+            r.acceptance_rate(),
+            r.decode_ns as f64 / 1e6,
+            r.tokens.len()
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let objective = Objective::parse(&args.get_or("objective", "dvi"))
+        .context("bad --objective (dvi|kl|pg|ce)")?;
+    let prompts = args.get_usize("prompts", 2000).map_err(anyhow::Error::msg)?;
+    let report = harness::online_train(rt, objective, prompts, false)?;
+    println!(
+        "trained {} steps over {} prompts",
+        report.trainer_steps, report.prompts_seen
+    );
+    if let Some(path) = args.get("curve") {
+        let mut csv = String::from("step,batch_accept\n");
+        for (s, a) in &report.curve {
+            csv.push_str(&format!("{s},{a:.5}\n"));
+        }
+        std::fs::write(path, csv)?;
+        println!("curve written to {path}");
+    }
+    println!(
+        "{}",
+        ascii_plot(
+            &format!("batch acceptance vs steps [{}]", objective.name()),
+            &[("accept", &report.curve)],
+            70,
+            14
+        )
+    );
+    Ok(())
+}
+
+fn table1(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let prompts = args.get_usize("prompts", 2000).map_err(anyhow::Error::msg)?;
+    println!("{}", harness::table1(&rt, prompts));
+    Ok(())
+}
+
+fn table2(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let n = args.get_usize("n", 40).map_err(anyhow::Error::msg)?;
+    let train = args.get_usize("train", 0).map_err(anyhow::Error::msg)?;
+    let methods_arg = args.get_or("methods", &harness::METHODS.join(","));
+    let methods: Vec<&str> = methods_arg.split(',').collect();
+
+    if train > 0 && methods.contains(&"dvi") {
+        log::info(&format!("online-training DVI on {train} prompts first"));
+        harness::online_train(rt.clone(), Objective::Dvi, train, false)?;
+    }
+    let result = harness::table2(rt, &methods, n)?;
+    println!("{}", result.markdown);
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &result.csv)?;
+        log::info(&format!("csv written to {path}"));
+    }
+    Ok(())
+}
+
+fn table3(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let train = args.get_usize("train", 2000).map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 25).map_err(anyhow::Error::msg)?;
+    let objectives = [Objective::KlOnly, Objective::PgOnly, Objective::CeOnly];
+    let results = harness::ablations(rt, &objectives, train, n)?;
+    println!("{}", harness::table3_markdown(&results));
+    Ok(())
+}
+
+fn fig2(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let train = args.get_usize("train", 2000).map_err(anyhow::Error::msg)?;
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    for obj in [
+        Objective::KlOnly,
+        Objective::PgOnly,
+        Objective::CeOnly,
+        Objective::Dvi,
+    ] {
+        let report = harness::online_train(rt.clone(), obj, train, false)?;
+        let path = out_dir.join(format!("fig2_{}.csv", obj.name()));
+        let mut csv = String::from("step,batch_accept\n");
+        for (s, a) in &report.curve {
+            csv.push_str(&format!("{s},{a:.5}\n"));
+        }
+        std::fs::write(&path, csv)?;
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("Fig2 [{}]: batch acceptance vs steps", obj.name()),
+                &[("accept", &report.curve)],
+                70,
+                12
+            )
+        );
+        println!("written {}", path.display());
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let port = args.get_usize("port", 7501).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+    let method = args.get_or("method", "dvi");
+    let online = !args.flag("no-online");
+    let tok = Arc::new(Tokenizer::load(&rt.manifest.vocab_file)?);
+    let router = Arc::new(Router::start(
+        rt,
+        RouterConfig {
+            workers,
+            method,
+            online,
+            objective: Objective::Dvi,
+            buffer_capacity: 8192,
+        },
+    )?);
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    println!(
+        "serving on 127.0.0.1:{port} ({workers} workers, online={online}); try:\n  \
+         echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}"
+    );
+    api::serve(listener, router, tok, stop)
+}

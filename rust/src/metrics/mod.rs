@@ -1,0 +1,107 @@
+//! Spec-Bench-style metrics aggregation and report rendering.
+
+pub mod report;
+
+use crate::engine::GenResult;
+use crate::util::math::Stats;
+
+/// Aggregated metrics over a set of generations for one (method, task).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub prompts: usize,
+    pub new_tokens: u64,
+    pub decode_ns: u64,
+    pub prefill_ns: u64,
+    pub mat: Stats,
+    pub acceptance: Stats,
+    pub committed_per_step: Stats,
+    pub verify_calls: u64,
+    pub draft_ns: u64,
+    pub verify_ns: u64,
+}
+
+impl RunMetrics {
+    pub fn add(&mut self, r: &GenResult) {
+        self.prompts += 1;
+        self.new_tokens += r.tokens.len() as u64;
+        self.decode_ns += r.decode_ns;
+        self.prefill_ns += r.prefill_ns;
+        if r.steps.iter().any(|s| s.drafted > 0) {
+            self.mat.add(r.mat());
+            self.acceptance.add(r.acceptance_rate());
+        }
+        self.committed_per_step.add(r.tokens_per_step());
+        self.verify_calls += r.steps.len() as u64;
+        self.draft_ns += r.steps.iter().map(|s| s.draft_ns).sum::<u64>();
+        self.verify_ns += r.steps.iter().map(|s| s.verify_ns).sum::<u64>();
+    }
+
+    /// Decode-phase tokens/second (excludes prefill, matching Spec-Bench's
+    /// per-token latency focus).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_ns == 0 {
+            return 0.0;
+        }
+        self.new_tokens as f64 / (self.decode_ns as f64 / 1e9)
+    }
+
+    /// Wall-time speedup vs a baseline run over the same prompts.
+    pub fn speedup_vs(&self, baseline: &RunMetrics) -> f64 {
+        let own = self.tokens_per_sec();
+        let base = baseline.tokens_per_sec();
+        if base == 0.0 {
+            0.0
+        } else {
+            own / base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StepRecord;
+
+    fn gen(tokens: usize, decode_ns: u64, drafted: usize, accepted: usize) -> GenResult {
+        GenResult {
+            tokens: vec![9; tokens],
+            decode_ns,
+            prefill_ns: 1,
+            steps: vec![StepRecord {
+                drafted,
+                accepted,
+                committed: accepted + 1,
+                draft_ns: 10,
+                verify_ns: 20,
+            }],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = RunMetrics::default();
+        m.add(&gen(10, 1_000_000_000, 4, 2));
+        m.add(&gen(10, 1_000_000_000, 4, 4));
+        assert_eq!(m.prompts, 2);
+        assert_eq!(m.new_tokens, 20);
+        assert!((m.mat.mean() - 3.0).abs() < 1e-12);
+        assert!((m.tokens_per_sec() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup() {
+        let mut fast = RunMetrics::default();
+        fast.add(&gen(20, 1_000_000_000, 4, 4));
+        let mut slow = RunMetrics::default();
+        slow.add(&gen(10, 1_000_000_000, 0, 0));
+        assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-9);
+        assert_eq!(fast.speedup_vs(&RunMetrics::default()), 0.0);
+    }
+
+    #[test]
+    fn ar_runs_have_no_mat() {
+        let mut m = RunMetrics::default();
+        m.add(&gen(5, 100, 0, 0));
+        assert_eq!(m.mat.n, 0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Markdown/CSV renderers for the paper's tables.
+
+use std::collections::BTreeMap;
+
+use super::RunMetrics;
+
+/// Render Table-2-shaped results: rows = methods, per-task MAT + speedup
+/// columns + average speedup. `tasks` fixes column order; `baseline` is
+/// the method name speedups are measured against (excluded from rows? no —
+/// shown as 1.00x, like Spec-Bench shows vanilla AR implicitly).
+pub fn render_table2(
+    tasks: &[&str],
+    methods: &[&str],
+    results: &BTreeMap<(String, String), RunMetrics>,
+    baseline: &str,
+) -> String {
+    let mut out = String::new();
+    out.push_str("| Method |");
+    for t in tasks {
+        out.push_str(&format!(" {t} MAT | {t} Speedup |"));
+    }
+    out.push_str(" Avg. |\n|---|");
+    for _ in tasks {
+        out.push_str("---|---|");
+    }
+    out.push_str("---|\n");
+    for m in methods {
+        let mut row = format!("| {m} |");
+        let mut sum = 0.0;
+        let mut cnt = 0;
+        for t in tasks {
+            let key = (m.to_string(), t.to_string());
+            let base_key = (baseline.to_string(), t.to_string());
+            match (results.get(&key), results.get(&base_key)) {
+                (Some(r), Some(b)) => {
+                    let sp = r.speedup_vs(b);
+                    sum += sp;
+                    cnt += 1;
+                    row.push_str(&format!(
+                        " {:.2} | {:.2}x |", r.mat.mean(), sp));
+                }
+                _ => row.push_str(" - | - |"),
+            }
+        }
+        if cnt > 0 {
+            row.push_str(&format!(" {:.2}x |", sum / cnt as f64));
+        } else {
+            row.push_str(" - |");
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV export of the same grid (one row per method x task).
+pub fn csv_table2(
+    tasks: &[&str],
+    methods: &[&str],
+    results: &BTreeMap<(String, String), RunMetrics>,
+    baseline: &str,
+) -> String {
+    let mut out =
+        String::from("method,task,mat,acceptance,tokens_per_sec,speedup,prompts,new_tokens\n");
+    for m in methods {
+        for t in tasks {
+            let key = (m.to_string(), t.to_string());
+            let base_key = (baseline.to_string(), t.to_string());
+            if let Some(r) = results.get(&key) {
+                let sp = results
+                    .get(&base_key)
+                    .map(|b| r.speedup_vs(b))
+                    .unwrap_or(0.0);
+                out.push_str(&format!(
+                    "{m},{t},{:.4},{:.4},{:.2},{:.4},{},{}\n",
+                    r.mat.mean(),
+                    r.acceptance.mean(),
+                    r.tokens_per_sec(),
+                    sp,
+                    r.prompts,
+                    r.new_tokens
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Table 3 (ablations): objective -> (MAT, speedup).
+pub fn render_table3(rows: &[(String, f64, f64)]) -> String {
+    let mut out = String::from(
+        "| Objective | Mean accepted tokens (MAT) | Speedup |\n|---|---|---|\n",
+    );
+    for (name, mat, speedup) in rows {
+        out.push_str(&format!("| {name} | {mat:.3} | {speedup:.3}x |\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{GenResult, StepRecord};
+
+    fn metrics(tokens: usize, ns: u64) -> RunMetrics {
+        let mut m = RunMetrics::default();
+        m.add(&GenResult {
+            tokens: vec![1; tokens],
+            decode_ns: ns,
+            prefill_ns: 0,
+            steps: vec![StepRecord {
+                drafted: 4, accepted: 2, committed: 3,
+                draft_ns: 1, verify_ns: 1,
+            }],
+        });
+        m
+    }
+
+    #[test]
+    fn table2_renders() {
+        let mut results = BTreeMap::new();
+        results.insert(("dvi".into(), "qa".into()), metrics(20, 1_000));
+        results.insert(("ar".into(), "qa".into()), metrics(10, 1_000));
+        let md = render_table2(&["qa"], &["dvi", "ar"], &results, "ar");
+        assert!(md.contains("| dvi |"));
+        assert!(md.contains("2.00x"));
+        let csv = csv_table2(&["qa"], &["dvi"], &results, "ar");
+        assert!(csv.lines().count() == 2);
+    }
+
+    #[test]
+    fn table2_missing_cells() {
+        let results = BTreeMap::new();
+        let md = render_table2(&["qa"], &["dvi"], &results, "ar");
+        assert!(md.contains(" - |"));
+    }
+
+    #[test]
+    fn table3_renders() {
+        let md = render_table3(&[("kl-only".into(), 1.93, 1.43)]);
+        assert!(md.contains("kl-only"));
+        assert!(md.contains("1.930"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Generic manifest-driven artifact executor.
+//!
+//! One `Artifact` = one AOT-compiled HLO module. `call()` assembles the
+//! PJRT argument list from the four parameter roles:
+//!
+//!   weight  -> process-wide immutable buffers (uploaded once at startup)
+//!   global  -> named mutable buffers (LoRA adapters / Adam moments);
+//!              outputs with the same name atomically replace the slot
+//!   kv      -> caller-owned chained buffers (per-sequence KV caches)
+//!   in      -> host tensors uploaded per call
+//!
+//! and distributes the (untupled — see third_party/xla fork) result
+//! buffers back by output role. Everything is shape-checked against the
+//! manifest at call time, so a mismatched artifact fails loudly rather
+//! than corrupting a decode.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, Role};
+use super::tensor::{DType, Tensor, TensorData};
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+/// Result of one artifact call.
+pub struct CallOut {
+    /// Host outputs (role=out), in manifest order.
+    pub outputs: Vec<Tensor>,
+    /// New per-sequence state buffers (role=kv), in manifest order.
+    pub kv: Vec<Arc<PjRtBuffer>>,
+}
+
+/// Process-wide named buffer stores.
+pub struct BufferStore {
+    pub weights: BTreeMap<String, Arc<PjRtBuffer>>,
+    pub globals: RwLock<BTreeMap<String, Arc<PjRtBuffer>>>,
+}
+
+impl BufferStore {
+    pub fn global(&self, name: &str) -> Result<Arc<PjRtBuffer>> {
+        self.globals
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("global buffer '{name}' missing"))
+    }
+
+    pub fn set_global(&self, name: &str, buf: Arc<PjRtBuffer>) {
+        self.globals.write().unwrap().insert(name.to_string(), buf);
+    }
+}
+
+impl Artifact {
+    pub fn new(spec: ArtifactSpec, exe: PjRtLoadedExecutable) -> Artifact {
+        Artifact { spec, exe }
+    }
+
+    /// Execute. `kv` must match the artifact's kv params in order;
+    /// `inputs` must match role=in params in order.
+    pub fn call(
+        &self,
+        store: &BufferStore,
+        kv: &[Arc<PjRtBuffer>],
+        inputs: &[Tensor],
+    ) -> Result<CallOut> {
+        let client = self.exe.client();
+        let n_kv = self.spec.params_with_role(Role::Kv).count();
+        let n_in = self.spec.params_with_role(Role::In).count();
+        if kv.len() != n_kv {
+            bail!("{}: expected {} kv buffers, got {}",
+                  self.spec.name, n_kv, kv.len());
+        }
+        if inputs.len() != n_in {
+            bail!("{}: expected {} inputs, got {}",
+                  self.spec.name, n_in, inputs.len());
+        }
+
+        // Assemble argument list in manifest (= HLO parameter) order.
+        let mut owned: Vec<Arc<PjRtBuffer>> = Vec::with_capacity(self.spec.params.len());
+        let mut kv_it = kv.iter();
+        let mut in_it = inputs.iter();
+        for port in &self.spec.params {
+            let buf = match port.role {
+                Role::Weight => store
+                    .weights
+                    .get(&port.name)
+                    .cloned()
+                    .with_context(|| {
+                        format!("{}: weight '{}' not uploaded",
+                                self.spec.name, port.name)
+                    })?,
+                Role::Global => store.global(&port.name)?,
+                Role::Kv => kv_it.next().unwrap().clone(),
+                Role::In => {
+                    let t = in_it.next().unwrap();
+                    if t.shape != port.shape || t.dtype() != port.dtype {
+                        bail!(
+                            "{}: input '{}' shape/dtype mismatch \
+                             (got {:?}, manifest {:?})",
+                            self.spec.name, port.name, t.shape, port.shape
+                        );
+                    }
+                    Arc::new(upload(client, t)?)
+                }
+                Role::Out => bail!("role=out in params"),
+            };
+            owned.push(buf);
+        }
+        let args: Vec<&PjRtBuffer> = owned.iter().map(|a| a.as_ref()).collect();
+
+        let mut results = self.exe.execute_b(&args)?;
+        if results.len() != 1 {
+            bail!("{}: expected 1 replica, got {}", self.spec.name, results.len());
+        }
+        let bufs = results.pop().unwrap();
+        if bufs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {} \
+                 (untuple_result fork missing?)",
+                self.spec.name, self.spec.outputs.len(), bufs.len()
+            );
+        }
+
+        let mut outputs = Vec::new();
+        let mut kv_out = Vec::new();
+        for (port, buf) in self.spec.outputs.iter().zip(bufs) {
+            match port.role {
+                Role::Out => outputs.push(download(&buf, port.dtype, &port.shape)?),
+                Role::Kv => kv_out.push(Arc::new(buf)),
+                Role::Global => store.set_global(&port.name, Arc::new(buf)),
+                _ => bail!("{}: bad output role", self.spec.name),
+            }
+        }
+        Ok(CallOut { outputs, kv: kv_out })
+    }
+}
+
+pub fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<PjRtBuffer> {
+    let buf = match &t.data {
+        TensorData::F32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+        TensorData::I32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+    };
+    Ok(buf)
+}
+
+pub fn download(buf: &PjRtBuffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+    let lit = buf.to_literal_sync()?;
+    let t = match dtype {
+        DType::F32 => Tensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
+    };
+    Ok(t)
+}

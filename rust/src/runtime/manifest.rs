@@ -1,0 +1,208 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Shapes/roles drive the generic executor; nothing
+//! in Rust hard-codes model dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// Parameter/output role (see aot.py docstring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Immutable tensor from weights.bin, uploaded once per process.
+    Weight,
+    /// Named mutable device buffer shared across artifacts (LoRA, Adam).
+    Global,
+    /// Per-sequence chained device buffer, caller-owned (KV caches).
+    Kv,
+    /// Per-call host input (tokens, positions, training batches).
+    In,
+    /// Per-call host output (logits, metrics).
+    Out,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "weight" => Role::Weight,
+            "global" => Role::Global,
+            "kv" => Role::Kv,
+            "in" => Role::In,
+            "out" => Role::Out,
+            other => bail!("unknown role '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+}
+
+impl Port {
+    fn parse(j: &Json) -> Result<Port> {
+        let name = j.get("name").as_str().context("port name")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("port shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::from_name(j.get("dtype").as_str().context("dtype")?)?;
+        let role = Role::parse(j.get("role").as_str().context("role")?)?;
+        Ok(Port { name, shape, dtype, role })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+impl ArtifactSpec {
+    /// Ports with a given role, in declaration (= HLO parameter) order.
+    pub fn params_with_role(&self, role: Role) -> impl Iterator<Item = &Port> {
+        self.params.iter().filter(move |p| p.role == role)
+    }
+
+    pub fn outputs_with_role(&self, role: Role) -> impl Iterator<Item = &Port> {
+        self.outputs.iter().filter(move |p| p.role == role)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub prompts: BTreeMap<String, PathBuf>,
+    pub weights_file: PathBuf,
+    pub vocab_file: PathBuf,
+    pub config: Json,
+    pub exposures: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j.get("artifacts").as_obj().context("artifacts")? {
+            let file = dir.join(spec.get("file").as_str().context("file")?);
+            let params = spec
+                .get("params")
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(Port::parse)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("artifact {name} params"))?;
+            let outputs = spec
+                .get("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(Port::parse)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("artifact {name} outputs"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, params, outputs },
+            );
+        }
+
+        let mut prompts = BTreeMap::new();
+        if let Some(obj) = j.get("prompts").as_obj() {
+            for (task, rel) in obj {
+                prompts.insert(task.clone(),
+                               dir.join(rel.as_str().context("prompt path")?));
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            prompts,
+            weights_file: dir.join(
+                j.get("weights").as_str().unwrap_or("weights.bin")),
+            vocab_file: dir.join(j.get("vocab").as_str().unwrap_or("vocab.json")),
+            config: j.get("config").clone(),
+            exposures: j.get("exposures").clone(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Model dimension helpers (read from the embedded config).
+    pub fn model_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get("model")
+            .get(key)
+            .as_usize()
+            .with_context(|| format!("config.model.{key}"))
+    }
+
+    pub fn spec_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get("spec")
+            .get(key)
+            .as_usize()
+            .with_context(|| format!("config.spec.{key}"))
+    }
+
+    pub fn train_f64(&self, key: &str) -> Result<f64> {
+        self.config
+            .get("train")
+            .get(key)
+            .as_f64()
+            .with_context(|| format!("config.train.{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_port() {
+        let j = Json::parse(
+            r#"{"name":"kv_sh_k","shape":[2,320,6,32],"dtype":"f32","role":"kv"}"#,
+        )
+        .unwrap();
+        let p = Port::parse(&j).unwrap();
+        assert_eq!(p.name, "kv_sh_k");
+        assert_eq!(p.elem_count(), 2 * 320 * 6 * 32);
+        assert_eq!(p.role, Role::Kv);
+    }
+
+    #[test]
+    fn reject_bad_role() {
+        let j = Json::parse(
+            r#"{"name":"x","shape":[],"dtype":"f32","role":"banana"}"#,
+        )
+        .unwrap();
+        assert!(Port::parse(&j).is_err());
+    }
+}

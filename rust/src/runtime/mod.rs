@@ -1,0 +1,160 @@
+//! PJRT runtime: loads `artifacts/` (manifest + HLO text + weights),
+//! compiles executables on the CPU PJRT client, uploads weights once, and
+//! exposes manifest-driven `Artifact::call`. Python never runs here.
+
+pub mod artifact;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::PjRtClient;
+
+pub use artifact::{Artifact, BufferStore, CallOut};
+pub use manifest::{ArtifactSpec, Manifest, Port, Role};
+pub use tensor::{DType, Tensor, TensorData};
+pub use weights::{load_weights, WeightMap};
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub store: BufferStore,
+    artifacts: BTreeMap<String, Arc<Artifact>>,
+    /// Host copies of weights (for buffer re-init, e.g. LoRA reset).
+    pub host_weights: WeightMap,
+}
+
+impl Runtime {
+    /// Load manifest + weights, compile the requested artifacts (all if
+    /// `names` is None). Compilation is the startup cost; per-request
+    /// paths only execute.
+    pub fn load(dir: &Path, names: Option<&[&str]>) -> Result<Runtime> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let host_weights = weights::load_weights(&manifest.weights_file)?;
+
+        // Upload weight + global tensors referenced by any chosen artifact.
+        let chosen: Vec<ArtifactSpec> = match names {
+            None => manifest.artifacts.values().cloned().collect(),
+            Some(ns) => ns
+                .iter()
+                .map(|n| manifest.artifact(n).cloned())
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let mut weight_bufs = BTreeMap::new();
+        let mut globals = BTreeMap::new();
+        for spec in &chosen {
+            for port in &spec.params {
+                let target = match port.role {
+                    Role::Weight => &mut weight_bufs,
+                    Role::Global => &mut globals,
+                    _ => continue,
+                };
+                if target.contains_key(&port.name) {
+                    continue;
+                }
+                let t = host_weights.get(&port.name).with_context(|| {
+                    format!("weights.bin missing '{}' ({:?})", port.name, port.role)
+                })?;
+                anyhow::ensure!(
+                    t.shape == port.shape,
+                    "weights.bin '{}' shape {:?} != manifest {:?}",
+                    port.name, t.shape, port.shape
+                );
+                target.insert(port.name.clone(),
+                              Arc::new(artifact::upload(&client, t)?));
+            }
+        }
+        let store = BufferStore { weights: weight_bufs, globals: RwLock::new(globals) };
+
+        let mut artifacts = BTreeMap::new();
+        for spec in chosen {
+            let tc = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            log::debug(&format!(
+                "compiled {} in {:.2}s", spec.name, tc.elapsed().as_secs_f64()
+            ));
+            artifacts.insert(spec.name.clone(),
+                             Arc::new(Artifact::new(spec, exe)));
+        }
+        log::info(&format!(
+            "runtime ready: {} artifacts, {} weight tensors in {:.2}s",
+            artifacts.len(),
+            store.weights.len(),
+            t0.elapsed().as_secs_f64()
+        ));
+        Ok(Runtime { client, manifest, store, artifacts, host_weights })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
+        self.artifacts
+            .get(name)
+            .cloned()
+            .with_context(|| format!("artifact '{name}' not loaded"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Reset a global buffer back to its weights.bin initial value
+    /// (used to re-init LoRA/Adam between ablation runs).
+    pub fn reset_global(&self, name: &str) -> Result<()> {
+        let t = self
+            .host_weights
+            .get(name)
+            .with_context(|| format!("no initial value for global '{name}'"))?;
+        self.store
+            .set_global(name, Arc::new(artifact::upload(&self.client, t)?));
+        Ok(())
+    }
+
+    /// Fresh per-sequence KV buffers (zeros) for the given artifact's kv
+    /// params. Slot garbage is fine semantically (masked), but zeros make
+    /// runs reproducible.
+    pub fn fresh_kv(&self, artifact: &str) -> Result<Vec<Arc<xla::PjRtBuffer>>> {
+        let spec = &self.artifact(artifact)?.spec;
+        let mut out = Vec::new();
+        for port in spec.params_with_role(Role::Kv) {
+            let t = Tensor::zeros_f32(port.shape.clone());
+            out.push(Arc::new(artifact::upload(&self.client, &t)?));
+        }
+        Ok(out)
+    }
+}
+
+/// Tiny leveled logger (no `log`/`env_logger` crates offline).
+pub mod log {
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    pub static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+    pub fn set_level(l: u8) {
+        LEVEL.store(l, Ordering::Relaxed);
+    }
+
+    pub fn info(msg: &str) {
+        if LEVEL.load(Ordering::Relaxed) >= 1 {
+            eprintln!("[dvi] {msg}");
+        }
+    }
+
+    pub fn debug(msg: &str) {
+        if LEVEL.load(Ordering::Relaxed) >= 2 {
+            eprintln!("[dvi:debug] {msg}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Host tensor type used at the Rust<->PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_code(code: u8) -> Result<DType> {
+        match code {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            c => bail!("unknown dtype code {c}"),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<DType> {
+        match name {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            n => bail!("unknown dtype name {n}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side dense tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Row `i` of a 2-D f32 tensor.
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        if self.shape.len() != 2 {
+            bail!("row_f32 on non-2D tensor (shape {:?})", self.shape);
+        }
+        let cols = self.shape[1];
+        let data = self.as_f32()?;
+        Ok(&data[i * cols..(i + 1) * cols])
+    }
+
+    /// Max |a - b| for test assertions.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("length mismatch: {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.row_f32(1).unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Tensor::scalar_i32(7).as_i32().unwrap(), &[7]);
+        assert!(Tensor::scalar_f32(1.0).as_i32().is_err());
+    }
+
+    #[test]
+    fn diff() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

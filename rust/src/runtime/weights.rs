@@ -1,0 +1,185 @@
+//! Loader for `artifacts/weights.bin` (and `testvecs.bin` — same format).
+//!
+//! Format (little-endian), written by `python/compile/aot.py`:
+//!   magic  b"DVIW"
+//!   u32    version (1)
+//!   u32    tensor count
+//!   repeated:
+//!     u32        name length, then name bytes (utf-8)
+//!     u8         dtype code (0 = f32, 1 = i32)
+//!     u32        ndim, then ndim x u32 dims
+//!     raw data   (product(dims) * 4 bytes)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor, TensorData};
+
+pub type WeightMap = BTreeMap<String, Tensor>;
+
+pub fn load_weights(path: &Path) -> Result<WeightMap> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_weights(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_weights(bytes: &[u8]) -> Result<WeightMap> {
+    let mut r = Cursor { b: bytes, i: 0 };
+    let magic = r.take(4)?;
+    if magic != b"DVIW" {
+        bail!("bad magic {magic:?}");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported weights version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let dtype = DType::from_code(r.u8()?)?;
+        let ndim = r.u32()? as usize;
+        if ndim > 8 {
+            bail!("implausible ndim {ndim} for '{name}'");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = r.take(n * 4)?;
+        let data = match dtype {
+            DType::F32 => {
+                let mut v = vec![0f32; n];
+                le_copy(raw, &mut v);
+                TensorData::F32(v)
+            }
+            DType::I32 => {
+                let mut v = vec![0i32; n];
+                le_copy_i32(raw, &mut v);
+                TensorData::I32(v)
+            }
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    if r.i != bytes.len() {
+        bail!("trailing bytes after {} tensors", count);
+    }
+    Ok(out)
+}
+
+fn le_copy(src: &[u8], dst: &mut [f32]) {
+    for (i, chunk) in src.chunks_exact(4).enumerate() {
+        dst[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+fn le_copy_i32(src: &[u8], dst: &mut [i32]) {
+    for (i, chunk) in src.chunks_exact(4).enumerate() {
+        dst[i] = i32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file (wanted {n} bytes at {})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Writer (used by tests and by state snapshots of the online learner).
+pub fn serialize_weights(map: &WeightMap) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"DVIW");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(map.len() as u32).to_le_bytes());
+    for (name, t) in map {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        let code = match t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1u8,
+        };
+        out.push(code);
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightMap {
+        let mut m = BTreeMap::new();
+        m.insert("a.w".into(), Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        m.insert("b".into(), Tensor::i32(vec![3], vec![-1, 0, 7]));
+        m.insert("scalar".into(), Tensor::scalar_f32(0.5));
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        let bytes = serialize_weights(&m);
+        let back = parse_weights(&bytes).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = serialize_weights(&sample());
+        bytes[0] = b'X';
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = serialize_weights(&sample());
+        assert!(parse_weights(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut bytes = serialize_weights(&sample());
+        bytes.push(0);
+        assert!(parse_weights(&bytes).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! JSON-lines TCP API: one request per line in, one response per line out.
+//!
+//!   -> {"prompt": "question : what owns ent01 ? <sep>", "max_new": 32}
+//!   -> {"prompt_ids": [1, 340, 28], "max_new": 32}
+//!   <- {"id": 0, "text": "...", "tokens": [..], "mat": 3.2,
+//!       "acceptance": 0.81, "decode_ms": 12.4}
+//!
+//! Designed for the `dvi serve` subcommand and the serving example; the
+//! protocol stays trivially scriptable (`nc localhost 7501`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::log;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{escape, Json};
+
+use super::router::Router;
+
+pub struct ApiServer {
+    pub addr: String,
+}
+
+/// Parse one request line. Returns (prompt ids, max_new).
+pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<(Vec<u32>, usize)> {
+    let j = Json::parse(line).context("request is not valid JSON")?;
+    let max_new = j.get("max_new").as_usize().unwrap_or(64);
+    if let Some(ids) = j.get("prompt_ids").as_arr() {
+        let prompt: Vec<u32> = ids
+            .iter()
+            .map(|v| v.as_usize().map(|x| x as u32).context("prompt id"))
+            .collect::<Result<_>>()?;
+        return Ok((prompt, max_new));
+    }
+    let text = j
+        .get("prompt")
+        .as_str()
+        .context("need 'prompt' or 'prompt_ids'")?;
+    let mut prompt = vec![crate::tokenizer::BOS];
+    prompt.extend(tok.encode(text)?);
+    Ok((prompt, max_new))
+}
+
+pub fn format_response(
+    id: u64,
+    tokens: &[u32],
+    tok: &Tokenizer,
+    mat: f64,
+    acceptance: f64,
+    decode_ns: u64,
+) -> String {
+    let ids = tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\":{id},\"text\":{},\"tokens\":[{ids}],\"mat\":{mat:.3},\
+         \"acceptance\":{acceptance:.3},\"decode_ms\":{:.2}}}",
+        escape(&tok.decode(tokens)),
+        decode_ns as f64 / 1e6
+    )
+}
+
+/// Serve until `stop` is set. Each connection handles requests serially;
+/// concurrency comes from multiple connections + the router's worker pool.
+pub fn serve(
+    listener: TcpListener,
+    router: Arc<Router>,
+    tok: Arc<Tokenizer>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    log::info(&format!("listening on {}", listener.local_addr()?));
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug(&format!("connection from {peer}"));
+                let router = router.clone();
+                let tok = tok.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &router, &tok) {
+                        log::debug(&format!("connection closed: {e}"));
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router, tok: &Tokenizer) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line, tok) {
+            Ok((prompt, max_new)) => {
+                let resp = router.generate(prompt, max_new)?;
+                let out = format_response(
+                    resp.id, &resp.tokens, tok, resp.mat,
+                    resp.acceptance, resp.decode_ns,
+                );
+                writeln!(writer, "{out}")?;
+            }
+            Err(e) => {
+                writeln!(writer, "{{\"error\":{}}}", escape(&e.to_string()))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tok() -> Tokenizer {
+        let p = std::env::temp_dir().join(format!(
+            "dvi_api_vocab_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut f = std::fs::File::create(&p).unwrap();
+        write!(f, r#"["<pad>","<bos>","<eos>","<sep>","what","owns"]"#).unwrap();
+        Tokenizer::load(&p).unwrap()
+    }
+
+    #[test]
+    fn parse_text_request() {
+        let t = tok();
+        let (p, n) = parse_request(
+            r#"{"prompt": "what owns", "max_new": 8}"#, &t).unwrap();
+        assert_eq!(p, vec![1, 4, 5]); // BOS + words
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn parse_ids_request() {
+        let t = tok();
+        let (p, n) = parse_request(r#"{"prompt_ids": [1, 4], "max_new": 3}"#, &t)
+            .unwrap();
+        assert_eq!(p, vec![1, 4]);
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        let t = tok();
+        assert!(parse_request("not json", &t).is_err());
+        assert!(parse_request(r#"{"max_new": 5}"#, &t).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let t = tok();
+        let s = format_response(3, &[4, 5, 2], &t, 2.5, 0.8, 1_500_000);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("id").as_usize(), Some(3));
+        assert_eq!(j.get("text").as_str(), Some("what owns <eos>"));
+        assert_eq!(j.get("tokens").as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,15 @@
+//! Serving layer: a request router with a worker pool, plus a JSON-lines
+//! TCP front end. This is the deployment shape the paper assumes — a
+//! single model serving live traffic while the drafter adapts online.
+//!
+//! Topology: one shared [`Runtime`] (weights + compiled executables +
+//! LoRA globals), N worker threads each owning a [`DviEngine`] (per-worker
+//! KV state), one shared replay buffer, and a dedicated learner thread
+//! running optimizer steps whenever a batch of fresh tuples is available.
+//! LoRA buffer swaps are atomic (the store's RwLock), so workers pick up
+//! improved adapters on their next draft call without pausing.
+
+pub mod api;
+pub mod router;
+
+pub use router::{Router, RouterConfig, RouterStats, Request, Response};

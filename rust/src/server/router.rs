@@ -1,0 +1,239 @@
+//! Request router + worker pool (std threads & channels; no tokio in the
+//! offline environment — and the workload is compute-bound PJRT calls, so
+//! a thread pool is the right shape anyway).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::dvi::DviEngine;
+use crate::engine::Engine;
+use crate::harness::make_engine;
+use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
+use crate::runtime::{log, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub workers: usize,
+    /// Engine used by workers ("dvi", "ar", ...).
+    pub method: String,
+    /// Run the online learner thread (DVI only).
+    pub online: bool,
+    pub objective: Objective,
+    pub buffer_capacity: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            workers: 2,
+            method: "dvi".into(),
+            online: true,
+            objective: Objective::Dvi,
+            buffer_capacity: 8192,
+        }
+    }
+}
+
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub respond: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub mat: f64,
+    pub acceptance: f64,
+    pub decode_ns: u64,
+    pub prefill_ns: u64,
+    pub worker: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    pub served: AtomicU64,
+    pub tokens: AtomicU64,
+    pub decode_ns: AtomicU64,
+    pub train_steps: AtomicU64,
+}
+
+pub struct Router {
+    tx: Sender<Request>,
+    pub stats: Arc<RouterStats>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+    learner: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn start(rt: Arc<Runtime>, cfg: RouterConfig) -> Result<Router> {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(RouterStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let buffer = Arc::new(Mutex::new(ReplayBuffer::new(cfg.buffer_capacity)));
+
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers {
+            let rx = rx.clone();
+            let rt = rt.clone();
+            let stats = stats.clone();
+            let buffer = buffer.clone();
+            let method = cfg.method.clone();
+            let online = cfg.online;
+            workers.push(std::thread::Builder::new()
+                .name(format!("dvi-worker-{w}"))
+                .spawn(move || {
+                    let mut engine: Box<dyn Engine> = if method == "dvi" && online {
+                        match DviEngine::new(rt.clone()) {
+                            Ok(e) => Box::new(e.with_buffer(buffer)),
+                            Err(e) => {
+                                log::info(&format!("worker {w} init failed: {e}"));
+                                return;
+                            }
+                        }
+                    } else {
+                        match make_engine(rt.clone(), &method) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                log::info(&format!("worker {w} init failed: {e}"));
+                                return;
+                            }
+                        }
+                    };
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(req) = req else { break };
+                        match engine.generate(&req.prompt, req.max_new) {
+                            Ok(r) => {
+                                stats.served.fetch_add(1, Ordering::Relaxed);
+                                stats
+                                    .tokens
+                                    .fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
+                                stats.decode_ns.fetch_add(r.decode_ns, Ordering::Relaxed);
+                                let resp = Response {
+                                    id: req.id,
+                                    mat: r.mat(),
+                                    acceptance: r.acceptance_rate(),
+                                    decode_ns: r.decode_ns,
+                                    prefill_ns: r.prefill_ns,
+                                    tokens: r.tokens,
+                                    worker: w,
+                                };
+                                let _ = req.respond.send(resp);
+                            }
+                            Err(e) => {
+                                log::info(&format!("worker {w} generate failed: {e}"));
+                            }
+                        }
+                    }
+                })?);
+        }
+
+        // Learner thread: drains fresh tuples into optimizer steps.
+        let learner = if cfg.online && cfg.method == "dvi" {
+            let rt = rt.clone();
+            let stop2 = stop.clone();
+            let stats2 = stats.clone();
+            let objective = cfg.objective;
+            Some(std::thread::Builder::new()
+                .name("dvi-learner".into())
+                .spawn(move || {
+                    let mut trainer = match Trainer::new(
+                        rt, buffer, Schedule::new(objective), 0x1EA2) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            log::info(&format!("learner init failed: {e}"));
+                            return;
+                        }
+                    };
+                    // "Small, frequent updates" (paper §3.3): one optimizer
+                    // step per fresh quarter-batch of tuples — the learner
+                    // must not free-run on stale buffer content (it would
+                    // both overfit the replay and steal decode CPU).
+                    let mut last_pushed = 0u64;
+                    let fresh_quantum =
+                        (trainer.batch_size as u64 / 4).max(1);
+                    while !stop2.load(Ordering::Relaxed) {
+                        let pushed =
+                            trainer.buffer.lock().unwrap().pushed;
+                        if pushed < last_pushed + fresh_quantum {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(5));
+                            continue;
+                        }
+                        match trainer.maybe_train() {
+                            Ok(Some(_)) => {
+                                last_pushed = pushed;
+                                stats2.train_steps.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(None) => {
+                                std::thread::sleep(
+                                    std::time::Duration::from_millis(5));
+                            }
+                            Err(e) => {
+                                log::info(&format!("learner step failed: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                })?)
+        } else {
+            None
+        };
+
+        Ok(Router {
+            tx,
+            stats,
+            stop,
+            workers,
+            learner,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit a prompt; returns a receiver for the response.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Request { id, prompt, max_new, respond: tx });
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn generate(&self, prompt: Vec<u32>, max_new: usize) -> Result<Response> {
+        let started = Instant::now();
+        let rx = self.submit(prompt, max_new);
+        let resp = rx.recv()?;
+        log::debug(&format!(
+            "request {} served in {:.1}ms by worker {}",
+            resp.id,
+            started.elapsed().as_secs_f64() * 1e3,
+            resp.worker
+        ));
+        Ok(resp)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(l) = self.learner.take() {
+            let _ = l.join();
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! The canonical longest-prefix verification rule (paper §3.1/§3.3).
+//!
+//! Given drafted tokens d_1..d_k and the verifier's greedy tokens
+//! y*_1..y*_k (row i of the verify block = the verifier's choice for the
+//! position d_{i+1} occupies):
+//!
+//!   m = max { i : d_j == y*_j for all j <= i }
+//!
+//! Commit d_1..d_m. If m < k, additionally emit the verifier's token
+//! y*_{m+1} ("bonus" / correction token — the standard lossless-SD move:
+//! the verifier already computed the right continuation at the first
+//! mismatch). If m == k there is no extra row to harvest.
+
+/// Result of verifying one drafted block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Number of drafted tokens accepted (m).
+    pub accepted: usize,
+    /// Tokens to append to the sequence: d_1..d_m (+ bonus if any).
+    pub committed: Vec<u32>,
+    /// The verifier correction token, present iff m < k.
+    pub bonus: Option<u32>,
+}
+
+impl VerifyOutcome {
+    /// Tokens committed this round (accepted + bonus).
+    pub fn total_committed(&self) -> usize {
+        self.committed.len()
+    }
+}
+
+/// Apply the rule. `drafted.len() == verifier.len()` is required.
+pub fn longest_prefix(drafted: &[u32], verifier: &[u32]) -> VerifyOutcome {
+    assert_eq!(
+        drafted.len(),
+        verifier.len(),
+        "verify block must cover every drafted token"
+    );
+    let mut m = 0;
+    while m < drafted.len() && drafted[m] == verifier[m] {
+        m += 1;
+    }
+    let mut committed: Vec<u32> = drafted[..m].to_vec();
+    let bonus = if m < drafted.len() {
+        committed.push(verifier[m]);
+        Some(verifier[m])
+    } else {
+        None
+    };
+    VerifyOutcome { accepted: m, committed, bonus }
+}
+
+/// Losslessness check used by tests and debug assertions: replaying the
+/// committed tokens must equal what greedy AR decoding of the verifier
+/// would have produced for the same positions.
+pub fn is_lossless(outcome: &VerifyOutcome, verifier: &[u32]) -> bool {
+    // Every committed token at index i must equal verifier[i]: accepted
+    // tokens agreed by definition, and the bonus IS verifier[m].
+    outcome
+        .committed
+        .iter()
+        .zip(verifier)
+        .all(|(c, v)| c == v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, vec_u32_below};
+
+    #[test]
+    fn all_accepted() {
+        let o = longest_prefix(&[1, 2, 3, 4], &[1, 2, 3, 4]);
+        assert_eq!(o.accepted, 4);
+        assert_eq!(o.committed, vec![1, 2, 3, 4]);
+        assert_eq!(o.bonus, None);
+    }
+
+    #[test]
+    fn first_rejected() {
+        let o = longest_prefix(&[9, 2, 3, 4], &[1, 2, 3, 4]);
+        assert_eq!(o.accepted, 0);
+        assert_eq!(o.committed, vec![1]); // bonus only
+        assert_eq!(o.bonus, Some(1));
+    }
+
+    #[test]
+    fn middle_rejected() {
+        let o = longest_prefix(&[1, 2, 9, 9], &[1, 2, 3, 4]);
+        assert_eq!(o.accepted, 2);
+        assert_eq!(o.committed, vec![1, 2, 3]);
+        assert_eq!(o.bonus, Some(3));
+    }
+
+    #[test]
+    fn later_agreement_does_not_resurrect() {
+        // d_3 "agrees" with y*_3 but sits after a mismatch: must not count.
+        let o = longest_prefix(&[1, 9, 3, 4], &[1, 2, 3, 4]);
+        assert_eq!(o.accepted, 1);
+        assert_eq!(o.committed, vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_block() {
+        let o = longest_prefix(&[], &[]);
+        assert_eq!(o.accepted, 0);
+        assert!(o.committed.is_empty());
+        assert_eq!(o.bonus, None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        longest_prefix(&[1, 2], &[1]);
+    }
+
+    #[test]
+    fn prop_always_lossless() {
+        run_prop("accept-lossless", 512, |rng| {
+            let k = 1 + rng.usize_below(8);
+            let drafted = vec_u32_below(rng, k, 4); // small vocab => collisions
+            let verifier = vec_u32_below(rng, k, 4);
+            let o = longest_prefix(&drafted, &verifier);
+            assert!(is_lossless(&o, &verifier));
+        });
+    }
+
+    #[test]
+    fn prop_commit_count() {
+        run_prop("accept-count", 512, |rng| {
+            let k = 1 + rng.usize_below(8);
+            let drafted = vec_u32_below(rng, k, 3);
+            let verifier = vec_u32_below(rng, k, 3);
+            let o = longest_prefix(&drafted, &verifier);
+            // always commits at least 1 token, at most k
+            assert!(1 <= o.total_committed() && o.total_committed() <= k);
+            // bonus iff not all accepted
+            assert_eq!(o.bonus.is_some(), o.accepted < k);
+            assert_eq!(o.total_committed(),
+                       o.accepted + o.bonus.is_some() as usize);
+        });
+    }
+
+    #[test]
+    fn prop_progress_guarantee() {
+        // Speculative decoding's liveness property: every round commits
+        // >= 1 token, so generation always terminates.
+        run_prop("accept-progress", 256, |rng| {
+            let k = 1 + rng.usize_below(6);
+            let drafted = vec_u32_below(rng, k, 2);
+            let verifier = vec_u32_below(rng, k, 2);
+            assert!(longest_prefix(&drafted, &verifier).total_committed() >= 1);
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Pure speculation logic: the longest-agreeing-prefix acceptance rule and
+//! per-sequence position/KV bookkeeping. No PJRT types here — this module
+//! is exhaustively unit- and property-tested in isolation, because every
+//! engine (DVI, SpS, PLD, Medusa, Hydra, EAGLE) routes its commit
+//! decisions through it.
+
+pub mod accept;
+pub mod seq;
+
+pub use accept::{longest_prefix, VerifyOutcome};
+pub use seq::SeqPos;

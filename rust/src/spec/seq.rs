@@ -1,0 +1,166 @@
+//! Per-sequence position bookkeeping for speculative decoding.
+//!
+//! Invariant (mirrors `python/compile/model.py` conventions):
+//!   * KV slot j holds state for sequence position j;
+//!   * a step at position p writes slot p before attending (query i of a
+//!     block: slots j <= p+i are visible);
+//!   * slots > the current feed position may hold stale speculative
+//!     garbage; they are always overwritten before becoming attendable.
+//!
+//! `SeqPos` tracks the *feed point*: the (token, position) pair to feed
+//! next. Rollback after a partial accept is just arithmetic on these —
+//! O(1), no cache clearing (the whole point of position-masked caches).
+
+/// Feed-point state for one decoding sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeqPos {
+    /// All committed tokens (prompt + generated).
+    pub tokens: Vec<u32>,
+    /// Number of positions whose KV is valid-and-committed. The next feed
+    /// writes KV at this position.
+    pub kv_len: usize,
+}
+
+impl SeqPos {
+    /// After prefill of an n-token prompt: KV covers 0..n-1.
+    pub fn after_prefill(prompt: &[u32]) -> SeqPos {
+        SeqPos { tokens: prompt.to_vec(), kv_len: prompt.len() }
+    }
+
+    /// The token that must be fed next (the newest token whose KV has not
+    /// been written yet), and the position it occupies.
+    pub fn feed(&self) -> (u32, usize) {
+        debug_assert!(self.kv_len < self.tokens.len(),
+                      "nothing to feed: kv covers all tokens");
+        (self.tokens[self.kv_len], self.kv_len)
+    }
+
+    /// Number of generated tokens given the original prompt length.
+    pub fn generated(&self, prompt_len: usize) -> usize {
+        self.tokens.len() - prompt_len
+    }
+
+    /// Record the first verifier token after prefill (prefill's logits
+    /// already give the continuation "for free").
+    pub fn push_committed(&mut self, tok: u32) {
+        self.tokens.push(tok);
+    }
+
+    /// Apply a verified round: `drafted_fed` = number of draft-path steps
+    /// that wrote KV this round (k_spec), `committed` = tokens to append
+    /// (accepted + optional bonus), `accepted` = m.
+    ///
+    /// KV validity advances by m + 1 *wait* — by the number of fed
+    /// positions whose context turned out to be committed: the feed at
+    /// round start (1) plus the accepted drafted tokens fed after it...
+    /// Draft feeds occupy positions kv_len..kv_len+k-1 with tokens
+    /// [t_feed, d_1.. d_{k-1}]; positions kv_len..kv_len+m hold committed
+    /// context (t_feed plus d_1..d_m each fed at the position it
+    /// occupies); the first m+1 fed slots are valid. But slot kv_len+m
+    /// holds d_m's KV ONLY if m < k... see `advance` body for exact rule.
+    pub fn advance(&mut self, k_spec: usize, accepted: usize,
+                   committed: &[u32]) {
+        debug_assert!(accepted <= k_spec);
+        debug_assert!(!committed.is_empty());
+        // Positions fed this round: kv_len .. kv_len + k_spec - 1, holding
+        // tokens [feed, d_1, .., d_{k_spec-1}]. Token d_i occupies
+        // position kv_len + i. Valid slots = those whose token is now
+        // committed AND whose context was committed:
+        //   feed (always) + d_1..d_min(accepted, k_spec-1).
+        let valid_fed = 1 + accepted.min(k_spec - 1);
+        self.tokens.extend_from_slice(committed);
+        self.kv_len += valid_fed;
+        debug_assert!(self.kv_len < self.tokens.len(),
+                      "feed point must stay behind committed tokens");
+    }
+
+    /// Apply a plain AR step: fed one token at kv_len, got one new token.
+    pub fn advance_ar(&mut self, new_tok: u32) {
+        self.kv_len += 1;
+        self.tokens.push(new_tok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn setup() -> SeqPos {
+        let mut s = SeqPos::after_prefill(&[10, 11, 12]);
+        s.push_committed(20); // first token from prefill logits
+        s
+    }
+
+    #[test]
+    fn prefill_state() {
+        let s = setup();
+        assert_eq!(s.kv_len, 3);
+        assert_eq!(s.feed(), (20, 3));
+        assert_eq!(s.generated(3), 1);
+    }
+
+    #[test]
+    fn full_accept_round() {
+        let mut s = setup();
+        // k_spec=4: feed 20@3, draft d1..d4 = 21,22,23,24 (d1..d3 fed @4,5,6)
+        s.advance(4, 4, &[21, 22, 23, 24]);
+        assert_eq!(s.kv_len, 3 + 4); // feed + d1..d3
+        assert_eq!(s.feed(), (24, 7)); // d4 next to feed
+        assert_eq!(s.generated(3), 5);
+    }
+
+    #[test]
+    fn partial_accept_round() {
+        let mut s = setup();
+        // accepted=1 (d1), bonus=30
+        s.advance(4, 1, &[21, 30]);
+        // valid slots: feed(3) + d1(4) => kv_len 5
+        assert_eq!(s.kv_len, 5);
+        assert_eq!(s.feed(), (30, 5)); // bonus next
+    }
+
+    #[test]
+    fn zero_accept_round() {
+        let mut s = setup();
+        s.advance(4, 0, &[30]);
+        assert_eq!(s.kv_len, 4); // only the feed slot
+        assert_eq!(s.feed(), (30, 4));
+    }
+
+    #[test]
+    fn ar_step() {
+        let mut s = setup();
+        s.advance_ar(25);
+        assert_eq!(s.kv_len, 4);
+        assert_eq!(s.feed(), (25, 4));
+    }
+
+    #[test]
+    fn prop_feed_point_always_behind() {
+        // Liveness/sanity: after any sequence of rounds the feed point is
+        // exactly one batch of unwritten tokens behind the committed set,
+        // and positions grow monotonically.
+        run_prop("seq-invariants", 512, |rng: &mut Rng| {
+            let mut s = setup();
+            let mut last_kv = s.kv_len;
+            for _ in 0..rng.usize_below(20) {
+                let k = 1 + rng.usize_below(6);
+                let m = rng.usize_below(k + 1);
+                let mut committed: Vec<u32> =
+                    (0..m as u32).map(|i| 100 + i).collect();
+                if m < k {
+                    committed.push(999); // bonus
+                }
+                s.advance(k, m, &committed);
+                assert!(s.kv_len > last_kv, "progress in kv");
+                assert!(s.kv_len < s.tokens.len(), "feed exists");
+                // unwritten suffix = tokens not yet in kv; bounded by the
+                // tokens committed this round (+1 carry).
+                assert!(s.tokens.len() - s.kv_len <= k + 2);
+                last_kv = s.kv_len;
+            }
+        });
+    }
+}

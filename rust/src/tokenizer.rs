@@ -1,0 +1,120 @@
+//! Word-level tokenizer over the synthetic vocabulary
+//! (`artifacts/vocab.json`, emitted by `python/compile/corpus.py`).
+//!
+//! The language is whitespace-tokenized with a closed 512-word vocabulary,
+//! so encode/decode are exact inverses; benchmarks ship token ids directly
+//! (`prompts/*.bin`) and this type mostly serves examples/debug output.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    id_to_word: Vec<String>,
+    word_to_id: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    pub fn load(path: &Path) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("vocab.json")?;
+        let arr = j.as_arr().context("vocab.json must be an array")?;
+        let id_to_word: Vec<String> = arr
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()).context("vocab entry"))
+            .collect::<Result<_>>()?;
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Ok(Tokenizer { id_to_word, word_to_id })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.split_whitespace()
+            .map(|w| {
+                self.word_to_id
+                    .get(w)
+                    .copied()
+                    .with_context(|| format!("unknown word '{w}'"))
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn id(&self, word: &str) -> Result<u32> {
+        match self.word_to_id.get(word) {
+            Some(&i) => Ok(i),
+            None => bail!("unknown word '{word}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tiny() -> Tokenizer {
+        let mut f = tempfile();
+        write!(f.1, r#"["<pad>","<bos>","<eos>","<sep>","hello","world"]"#)
+            .unwrap();
+        Tokenizer::load(&f.0).unwrap()
+    }
+
+    fn tempfile() -> (std::path::PathBuf, std::fs::File) {
+        let p = std::env::temp_dir().join(format!(
+            "dvi_vocab_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let f = std::fs::File::create(&p).unwrap();
+        (p, f)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tiny();
+        let ids = t.encode("hello world hello").unwrap();
+        assert_eq!(ids, vec![4, 5, 4]);
+        assert_eq!(t.decode(&ids), "hello world hello");
+    }
+
+    #[test]
+    fn unknown_word_errors() {
+        assert!(tiny().encode("nope").is_err());
+    }
+
+    #[test]
+    fn specials() {
+        let t = tiny();
+        assert_eq!(t.id("<eos>").unwrap(), EOS);
+        assert_eq!(t.vocab_size(), 6);
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (offline environment: no `clap`).
+//!
+//! Grammar: `dvi <subcommand> [--flag] [--key value] [positional ...]`.
+//! `--key=value` is also accepted. Unknown keys are an error (listed
+//! against the declared option set) so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without argv[0]). `flag_names` lists valueless flags;
+    /// everything else starting with `--` expects a value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn basic() {
+        let a = Args::parse(&argv("serve --port 8000 --verbose x y"),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8000"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = Args::parse(&argv("bench --steps=100"), &[]).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn missing_value() {
+        assert!(Args::parse(&argv("run --port"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = Args::parse(&argv("run --n xyz"), &[]).unwrap();
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("run"), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("name", "x"), "x");
+        assert!(!a.flag("v"));
+    }
+}

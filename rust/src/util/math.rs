@@ -1,0 +1,149 @@
+//! Small f32 vector helpers used on the coordinator hot path
+//! (argmax/softmax over the 512-entry vocabulary, reward baselines).
+
+/// Index of the maximum element; first occurrence wins on ties (matches
+/// XLA/jnp argmax semantics so Rust-side greedy == artifact-side greedy).
+pub fn argmax(xs: &[f32]) -> usize {
+    debug_assert!(!xs.is_empty());
+    let mut best = 0;
+    let mut best_v = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// log-sum-exp of a slice.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Exponential moving average tracker (the PG baseline `b` in §3.4).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub value: f64,
+    pub alpha: f64,
+    initialized: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { value: 0.0, alpha, initialized: false }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        if self.initialized {
+            self.value = self.alpha * self.value + (1.0 - self.alpha) * x;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+        self.value
+    }
+}
+
+/// Online mean/min/max/count accumulator for metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_tie() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut v);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(v[3] > v[2] && v[2] > v[1]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut v = vec![1000.0f32, 1000.0, 999.0];
+        softmax_inplace(&mut v);
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn lse_matches_naive() {
+        let v = [0.1f32, 0.2, 0.3];
+        let naive = v.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&v) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_tracks() {
+        let mut e = Ema::new(0.9);
+        assert_eq!(e.update(1.0), 1.0); // first sample initializes
+        let v = e.update(0.0);
+        assert!((v - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utility layer. The offline build environment carries no
+//! third-party crates beyond `xla`/`anyhow`, so JSON, PRNG, CLI parsing,
+//! property testing, plotting, and math helpers live here.
+
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod plot;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,84 @@
+//! ASCII line plots for terminal reports (Figure 2 learning curves).
+
+/// Render series of (x, y) points as a fixed-size ASCII chart.
+pub fn ascii_plot(title: &str, series: &[(&str, &[(f64, f64)])],
+                  width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("  {title}\n"));
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .collect();
+    if pts.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in s.iter() {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{y1:8.3}")
+        } else if r == height - 1 {
+            format!("{y0:8.3}")
+        } else {
+            " ".repeat(8)
+        };
+        out.push_str(&format!("{label} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>8}  {x0:<12.1}{:>w$.1}\n",
+        "", x1, w = width.saturating_sub(12)
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("    {} = {name}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic() {
+        let s1: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64).sin())).collect();
+        let s2: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 0.5)).collect();
+        let out = ascii_plot("test", &[("sin", &s1), ("flat", &s2)], 60, 12);
+        assert!(out.contains("test"));
+        assert!(out.lines().count() > 12);
+    }
+
+    #[test]
+    fn empty_series() {
+        let out = ascii_plot("empty", &[("none", &[])], 40, 8);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_div_by_zero() {
+        let s: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, 1.0)).collect();
+        let _ = ascii_plot("const", &[("c", &s)], 40, 8);
+    }
+}

@@ -1,0 +1,82 @@
+//! Mini property-based testing harness (offline environment: no proptest).
+//!
+//! `run_prop(name, cases, |rng| { ... })` executes the closure `cases`
+//! times with independent deterministic RNG streams. On failure the seed
+//! is printed so the case can be replayed with `replay_prop`.
+//!
+//! This intentionally skips shrinking — generators below are built to
+//! produce small cases with reasonable probability instead (the standard
+//! trade-off for a shrinking-free harness).
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run a property. Panics (with the failing seed) on the first failure.
+pub fn run_prop<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xD5_1000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay_prop<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+// ----------------------------------------------------------------------------
+// Generators
+// ----------------------------------------------------------------------------
+
+/// Small usize, biased toward tiny values (p(0) ~ 1/4).
+pub fn small_usize(rng: &mut Rng, max: usize) -> usize {
+    let shaped = rng.f64().powi(2); // bias low
+    (shaped * (max as f64 + 1.0)) as usize
+}
+
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+pub fn vec_u32_below(rng: &mut Rng, len: usize, bound: u32) -> Vec<u32> {
+    (0..len).map(|_| rng.below(bound as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_run_all_cases() {
+        let mut count = 0;
+        run_prop("counter", 100, |_| count += 1);
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn props_report_failure() {
+        run_prop("fails", 50, |rng| {
+            let x = rng.usize_below(100);
+            assert!(x < 95, "found {x}");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run_prop("gen-bounds", 100, |rng| {
+            assert!(small_usize(rng, 10) <= 10);
+            let v = vec_u32_below(rng, 8, 5);
+            assert!(v.iter().all(|&x| x < 5));
+        });
+    }
+}

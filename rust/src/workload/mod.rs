@@ -1,0 +1,161 @@
+//! Workloads: the Spec-Bench-analogue evaluation prompt sets plus the
+//! ShareGPT-analogue online training stream, both generated at build time
+//! by `python/compile/corpus.py` and shipped as token-id binaries.
+//!
+//! Binary format (little-endian), written by `aot.py::write_prompts_bin`:
+//!   magic b"DVIP", u32 version (1), u32 count, then per record:
+//!   u32 task_id, u32 max_new, u32 prompt_len, u32 answer_len,
+//!   prompt_len x u32 ids, answer_len x u32 ids.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Task ids match `corpus.TASK_IDS` ordering.
+pub const TASK_NAMES: [&str; 6] =
+    ["mt", "translation", "summarization", "qa", "math", "rag"];
+
+#[derive(Debug, Clone)]
+pub struct PromptSample {
+    pub task: u32,
+    pub max_new: usize,
+    pub prompt: Vec<u32>,
+    /// Reference continuation (for optional output-quality checks).
+    pub answer: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PromptSet {
+    pub samples: Vec<PromptSample>,
+}
+
+impl PromptSet {
+    pub fn load(path: &Path) -> Result<PromptSet> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<PromptSet> {
+        let take_u32 = |i: &mut usize| -> Result<u32> {
+            if *i + 4 > bytes.len() {
+                bail!("truncated prompt file at byte {}", *i);
+            }
+            let v = u32::from_le_bytes(bytes[*i..*i + 4].try_into().unwrap());
+            *i += 4;
+            Ok(v)
+        };
+        if bytes.len() < 4 || &bytes[..4] != b"DVIP" {
+            bail!("bad prompt-file magic");
+        }
+        let mut i = 4usize;
+        let version = take_u32(&mut i)?;
+        if version != 1 {
+            bail!("unsupported prompt-file version {version}");
+        }
+        let count = take_u32(&mut i)? as usize;
+        let mut samples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let task = take_u32(&mut i)?;
+            let max_new = take_u32(&mut i)? as usize;
+            let plen = take_u32(&mut i)? as usize;
+            let alen = take_u32(&mut i)? as usize;
+            if plen + alen > 1 << 20 {
+                bail!("implausible record lengths");
+            }
+            let mut prompt = Vec::with_capacity(plen);
+            for _ in 0..plen {
+                prompt.push(take_u32(&mut i)?);
+            }
+            let mut answer = Vec::with_capacity(alen);
+            for _ in 0..alen {
+                answer.push(take_u32(&mut i)?);
+            }
+            samples.push(PromptSample { task, max_new, prompt, answer });
+        }
+        if i != bytes.len() {
+            bail!("trailing bytes after {count} records");
+        }
+        Ok(PromptSet { samples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// First `n` samples (benchmarks use deterministic prefixes).
+    pub fn take(&self, n: usize) -> PromptSet {
+        PromptSet { samples: self.samples.iter().take(n).cloned().collect() }
+    }
+}
+
+/// Serialize (round-trip tests + synthetic workload construction in Rust).
+pub fn serialize_prompts(set: &PromptSet) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"DVIP");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(set.samples.len() as u32).to_le_bytes());
+    for s in &set.samples {
+        out.extend_from_slice(&s.task.to_le_bytes());
+        out.extend_from_slice(&(s.max_new as u32).to_le_bytes());
+        out.extend_from_slice(&(s.prompt.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(s.answer.len() as u32).to_le_bytes());
+        for t in &s.prompt {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        for t in &s.answer {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_set() -> PromptSet {
+        PromptSet {
+            samples: vec![
+                PromptSample { task: 1, max_new: 32,
+                               prompt: vec![1, 5, 9], answer: vec![7, 2] },
+                PromptSample { task: 0, max_new: 96,
+                               prompt: vec![1], answer: vec![] },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let set = sample_set();
+        let bytes = serialize_prompts(&set);
+        let back = PromptSet::parse(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.samples[0].prompt, vec![1, 5, 9]);
+        assert_eq!(back.samples[0].answer, vec![7, 2]);
+        assert_eq!(back.samples[1].max_new, 96);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bytes = serialize_prompts(&sample_set());
+        assert!(PromptSet::parse(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = serialize_prompts(&sample_set());
+        bytes[1] = b'X';
+        assert!(PromptSet::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn take_prefix() {
+        assert_eq!(sample_set().take(1).len(), 1);
+        assert_eq!(sample_set().take(99).len(), 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end coordinator tests: router + worker pool + online learner +
+//! TCP API over real artifacts (skipped until `make artifacts`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dvi::harness::load_prompts;
+use dvi::learner::Objective;
+use dvi::runtime::Runtime;
+use dvi::server::{api, Router, RouterConfig};
+use dvi::tokenizer::Tokenizer;
+use dvi::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn router_serves_concurrent_requests() {
+    if !have_artifacts() {
+        eprintln!("SKIP router_serves_concurrent_requests");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(&artifacts_dir(), None).unwrap());
+    let stream = load_prompts(&rt, "qa").unwrap();
+    let router = Router::start(
+        rt,
+        RouterConfig {
+            workers: 2,
+            method: "dvi".into(),
+            online: true,
+            objective: Objective::Dvi,
+            buffer_capacity: 1024,
+        },
+    )
+    .unwrap();
+
+    // Submit a burst of requests, then collect them all.
+    let receivers: Vec<_> = stream
+        .samples
+        .iter()
+        .take(6)
+        .map(|s| router.submit(s.prompt.clone(), s.max_new.min(24)))
+        .collect();
+    let mut workers_seen = std::collections::BTreeSet::new();
+    for rx in receivers {
+        let resp = rx.recv().unwrap();
+        assert!(!resp.tokens.is_empty());
+        workers_seen.insert(resp.worker);
+    }
+    assert_eq!(router.stats.served.load(Ordering::Relaxed), 6);
+    assert!(router.stats.tokens.load(Ordering::Relaxed) > 0);
+    // With 2 workers and 6 queued requests both should have participated
+    // (not guaranteed in theory, overwhelmingly likely; tolerate 1).
+    assert!(!workers_seen.is_empty());
+    router.shutdown();
+}
+
+#[test]
+fn tcp_api_round_trip() {
+    if !have_artifacts() {
+        eprintln!("SKIP tcp_api_round_trip");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(&artifacts_dir(), None).unwrap());
+    let tok = Arc::new(Tokenizer::load(&rt.manifest.vocab_file).unwrap());
+    let router = Arc::new(
+        Router::start(
+            rt,
+            RouterConfig {
+                workers: 1,
+                method: "dvi".into(),
+                online: false,
+                objective: Objective::Dvi,
+                buffer_capacity: 64,
+            },
+        )
+        .unwrap(),
+    );
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = api::serve(listener, router, tok, stop2);
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"prompt": "question : what owns ent01 ? <sep>", "max_new": 16}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("error").is_null(), "API error: {line}");
+    assert!(!j.get("tokens").as_arr().unwrap().is_empty());
+    assert!(j.get("text").as_str().is_some());
+
+    // malformed request -> error object, connection stays up
+    writeln!(conn, "this is not json").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(!Json::parse(&line).unwrap().get("error").is_null());
+
+    stop.store(true, Ordering::Relaxed);
+    drop(conn);
+    let _ = handle.join();
+}

@@ -1,0 +1,196 @@
+//! Rust <-> Python numerics parity over the AOT bridge.
+//!
+//! `python/compile/testvec.py` ran every core artifact in JAX on
+//! deterministic inputs and dumped inputs + expected outputs into
+//! `artifacts/testvecs.bin`. Here we execute the *compiled HLO* through
+//! PJRT with the same inputs and assert allclose — covering lowering, the
+//! HLO-text round-trip, compilation, manifest ordering, buffer roles, and
+//! the Pallas-interpret kernels, end to end.
+//!
+//! Requires `make artifacts` (skipped, with a loud marker, otherwise).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dvi::runtime::{load_weights, Role, Runtime, Tensor, WeightMap};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("DVI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+        && artifacts_dir().join("testvecs.bin").exists()
+}
+
+struct Harness {
+    rt: Arc<Runtime>,
+    vecs: WeightMap,
+}
+
+fn harness(names: &[&str]) -> Harness {
+    let dir = artifacts_dir();
+    let rt = Runtime::load(&dir, Some(names)).expect("runtime load");
+    let vecs = load_weights(&dir.join("testvecs.bin")).expect("testvecs");
+    Harness { rt: Arc::new(rt), vecs }
+}
+
+/// Execute one artifact with its golden inputs; compare every output.
+fn check_artifact(h: &Harness, name: &str, atol: f32) {
+    let art = h.rt.artifact(name).expect("artifact");
+    let spec = art.spec.clone();
+
+    // Globals in the testvec override the store's initial values.
+    for port in spec.params_with_role(Role::Global) {
+        let key = format!("{name}.in.{}", port.name);
+        let t = h.vecs.get(&key).expect(&key);
+        let buf = dvi::runtime::artifact::upload(&h.rt.client, t).unwrap();
+        h.rt.store.set_global(&port.name, Arc::new(buf));
+    }
+    let kv: Vec<_> = spec
+        .params_with_role(Role::Kv)
+        .map(|port| {
+            let key = format!("{name}.in.{}", port.name);
+            let t = h.vecs.get(&key).expect(&key);
+            Arc::new(dvi::runtime::artifact::upload(&h.rt.client, t).unwrap())
+        })
+        .collect();
+    let inputs: Vec<Tensor> = spec
+        .params_with_role(Role::In)
+        .map(|port| h.vecs.get(&format!("{name}.in.{}", port.name))
+             .expect(&port.name).clone())
+        .collect();
+
+    let out = art.call(&h.rt.store, &kv, &inputs).expect("call");
+
+    let mut host_iter = out.outputs.iter();
+    let mut kv_iter = out.kv.iter();
+    let mut checked = 0;
+    for port in &spec.outputs {
+        let key = format!("{name}.out.{}", port.name);
+        let want = h.vecs.get(&key).expect(&key);
+        let got: Tensor = match port.role {
+            Role::Out => host_iter.next().unwrap().clone(),
+            Role::Kv => dvi::runtime::artifact::download(
+                kv_iter.next().unwrap(), port.dtype, &port.shape)
+                .unwrap(),
+            Role::Global => {
+                let buf = h.rt.store.global(&port.name).unwrap();
+                dvi::runtime::artifact::download(&buf, port.dtype, &port.shape)
+                    .unwrap()
+            }
+            _ => unreachable!(),
+        };
+        match want.dtype() {
+            dvi::runtime::DType::F32 => {
+                let diff = got.max_abs_diff(want).unwrap();
+                assert!(
+                    diff <= atol,
+                    "{name}.{}: max|diff| = {diff} > {atol}",
+                    port.name
+                );
+            }
+            dvi::runtime::DType::I32 => {
+                assert_eq!(got.as_i32().unwrap(), want.as_i32().unwrap(),
+                           "{name}.{}", port.name);
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked > 0);
+    // Restore globals for subsequent artifacts.
+    for port in spec.params_with_role(Role::Global) {
+        h.rt.reset_global(&port.name).unwrap();
+    }
+}
+
+fn artifact_exported(name: &str) -> bool {
+    dvi::runtime::Manifest::load(&artifacts_dir())
+        .map(|m| m.artifacts.contains_key(name))
+        .unwrap_or(false)
+}
+
+macro_rules! parity_test {
+    ($fn_name:ident, $artifact:literal, $atol:expr) => {
+        #[test]
+        fn $fn_name() {
+            if !have_artifacts() || !artifact_exported($artifact) {
+                eprintln!("SKIP {}: run `make artifacts` first", $artifact);
+                return;
+            }
+            let h = harness(&[$artifact]);
+            check_artifact(&h, $artifact, $atol);
+        }
+    };
+}
+
+parity_test!(parity_draft_step, "draft_step", 5e-4);
+parity_test!(parity_verify_block, "verify_block", 5e-4);
+parity_test!(parity_train_step, "train_step", 5e-4);
+parity_test!(parity_prefill_shallow, "prefill_shallow", 5e-4);
+parity_test!(parity_prefill_deep, "prefill_deep", 5e-4);
+parity_test!(parity_prefill_full, "prefill_full", 5e-4);
+parity_test!(parity_target_step, "target_step", 5e-4);
+parity_test!(parity_target_verify_block, "target_verify_block", 5e-4);
+parity_test!(parity_medusa_heads, "medusa_heads", 5e-4);
+parity_test!(parity_hydra_chain, "hydra_chain", 5e-4);
+parity_test!(parity_eagle_step, "eagle_step", 5e-4);
+
+/// BufferStore globals must survive a round-trip through train_step: the
+/// updated LoRA buffers feed the next draft_step (the online-learning
+/// contract). We run train_step twice and check the global *changed*.
+#[test]
+fn train_step_updates_globals() {
+    if !have_artifacts() {
+        eprintln!("SKIP train_step_updates_globals");
+        return;
+    }
+    let h = harness(&["train_step"]);
+    let art = h.rt.artifact("train_step").unwrap();
+    let spec = art.spec.clone();
+    let inputs: Vec<Tensor> = spec
+        .params_with_role(Role::In)
+        .map(|port| h.vecs.get(&format!("train_step.in.{}", port.name))
+             .unwrap().clone())
+        .collect();
+
+    let before = {
+        let buf = h.rt.store.global("lora.A").unwrap();
+        let port = spec.params.iter().find(|p| p.name == "lora.A").unwrap();
+        dvi::runtime::artifact::download(&buf, port.dtype, &port.shape).unwrap()
+    };
+    art.call(&h.rt.store, &[], &inputs).unwrap();
+    let after = {
+        let buf = h.rt.store.global("lora.A").unwrap();
+        let port = spec.params.iter().find(|p| p.name == "lora.A").unwrap();
+        dvi::runtime::artifact::download(&buf, port.dtype, &port.shape).unwrap()
+    };
+    let diff = before.max_abs_diff(&after).unwrap();
+    assert!(diff > 0.0, "train_step left lora.A unchanged");
+
+    // And reset_global restores the initial value.
+    h.rt.reset_global("lora.A").unwrap();
+    let reset = {
+        let buf = h.rt.store.global("lora.A").unwrap();
+        let port = spec.params.iter().find(|p| p.name == "lora.A").unwrap();
+        dvi::runtime::artifact::download(&buf, port.dtype, &port.shape).unwrap()
+    };
+    assert_eq!(reset.max_abs_diff(&before).unwrap(), 0.0);
+}
+
+/// Shape mismatches must fail loudly, not corrupt a decode.
+#[test]
+fn call_rejects_bad_input_shape() {
+    if !have_artifacts() {
+        eprintln!("SKIP call_rejects_bad_input_shape");
+        return;
+    }
+    let h = harness(&["train_step"]);
+    let art = h.rt.artifact("train_step").unwrap();
+    let bad = Tensor::zeros_f32(vec![7]); // hk must be [N, d_model]
+    let err = art.call(&h.rt.store, &[], &[bad]);
+    assert!(err.is_err());
+}
