@@ -1,5 +1,9 @@
-//! Micro-benchmarks: per-artifact PJRT call latency. The L3 perf pass
-//! reads these to find the hot path (EXPERIMENTS.md §Perf).
+//! Micro-benchmarks: per-artifact call latency. The L3 perf pass reads
+//! these to find the hot path (EXPERIMENTS.md §Perf).
+//!
+//! Runs on whichever backend `Runtime::load_auto` picks: PJRT when the
+//! feature is compiled in and artifacts exist, the pure-Rust reference
+//! backend otherwise — so the bench always produces numbers.
 //!
 //!   cargo bench --bench micro
 
@@ -22,7 +26,18 @@ fn bench_artifact(rt: &Arc<Runtime>, name: &str, iters: usize) {
     let inputs: Vec<Tensor> = spec
         .params_with_role(Role::In)
         .map(|p| match p.dtype {
-            dvi::runtime::DType::F32 => Tensor::zeros_f32(p.shape.clone()),
+            dvi::runtime::DType::F32 => {
+                if p.name == "hyper" {
+                    // A sane hyper vector (KL-only, step 1) so the
+                    // train_step bench doesn't poison the LoRA globals.
+                    Tensor::f32(
+                        p.shape.clone(),
+                        vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3e-3, 1.0],
+                    )
+                } else {
+                    Tensor::zeros_f32(p.shape.clone())
+                }
+            }
             dvi::runtime::DType::I32 => {
                 let n: usize = p.shape.iter().product();
                 Tensor::i32(p.shape.clone(), vec![1; n.max(1)][..n].to_vec())
@@ -33,14 +48,14 @@ fn bench_artifact(rt: &Arc<Runtime>, name: &str, iters: usize) {
     // warmup (chain kv state only when the artifact takes kv inputs —
     // prefill artifacts *emit* kv without consuming it)
     for _ in 0..3 {
-        let out = art.call(&rt.store, &kv, &inputs).unwrap();
+        let out = art.call(&kv, &inputs).unwrap();
         if out.kv.len() == kv.len() {
             kv = out.kv;
         }
     }
     let t0 = Instant::now();
     for _ in 0..iters {
-        let out = art.call(&rt.store, &kv, &inputs).unwrap();
+        let out = art.call(&kv, &inputs).unwrap();
         if out.kv.len() == kv.len() {
             kv = out.kv;
         }
@@ -50,13 +65,8 @@ fn bench_artifact(rt: &Arc<Runtime>, name: &str, iters: usize) {
 }
 
 fn main() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP micro bench: run `make artifacts` first");
-        return;
-    }
-    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
-    println!("== per-artifact PJRT call latency ==");
+    let rt = Arc::new(Runtime::load_auto(&artifacts_dir()).unwrap());
+    println!("== per-artifact call latency [{} backend] ==", rt.backend_name());
     let iters = std::env::var("DVI_BENCH_ITERS")
         .ok()
         .and_then(|s| s.parse().ok())

@@ -17,11 +17,7 @@ fn artifacts_dir() -> PathBuf {
 
 fn main() {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP table1 bench: run `make artifacts` first");
-        return;
-    }
-    let rt = Runtime::load(&dir, Some(&[])).unwrap();
+    let rt = Runtime::load_auto(&dir).unwrap();
     let prompts: usize = std::env::var("DVI_BENCH_TRAIN")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
     println!("\n== Table 1 (training budgets) ==\n");

@@ -22,10 +22,6 @@ fn artifacts_dir() -> PathBuf {
 
 fn main() {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP table2 bench: run `make artifacts` first");
-        return;
-    }
     let n: usize = std::env::var("DVI_BENCH_N")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(6);
     let train: usize = std::env::var("DVI_BENCH_TRAIN")
@@ -34,7 +30,7 @@ fn main() {
         .unwrap_or_else(|_| harness::METHODS.join(","));
     let methods: Vec<&str> = methods_env.split(',').collect();
 
-    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
+    let rt = Arc::new(Runtime::load_auto(&dir).unwrap());
     if train > 0 && methods.contains(&"dvi") {
         eprintln!("[table2] online-training DVI on {train} prompts");
         harness::online_train(rt.clone(), Objective::Dvi, train, true).unwrap();

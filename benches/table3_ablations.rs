@@ -23,10 +23,6 @@ fn artifacts_dir() -> PathBuf {
 
 fn main() {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP table3 bench: run `make artifacts` first");
-        return;
-    }
     let train: usize = std::env::var("DVI_BENCH_TRAIN")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(150);
     let n: usize = std::env::var("DVI_BENCH_N")
@@ -35,7 +31,7 @@ fn main() {
         std::env::var("DVI_BENCH_OUT").unwrap_or_else(|_| "results".into()));
     std::fs::create_dir_all(&out_dir).unwrap();
 
-    let rt = Arc::new(Runtime::load(&dir, None).unwrap());
+    let rt = Arc::new(Runtime::load_auto(&dir).unwrap());
     let objectives = [Objective::KlOnly, Objective::PgOnly, Objective::CeOnly,
                       Objective::Dvi];
     let results = harness::ablations(rt, &objectives, train, n).unwrap();

@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     let dir = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
-    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
+    let rt = Arc::new(Runtime::load_auto(dir.as_ref())?);
 
     let buffer = Arc::new(Mutex::new(ReplayBuffer::new(8192)));
     let mut trainer = Trainer::new(

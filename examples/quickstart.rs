@@ -7,16 +7,16 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use dvi::engine::Engine;
 use dvi::harness::{load_prompts, make_engine};
 use dvi::runtime::Runtime;
-use dvi::tokenizer::Tokenizer;
 
 fn main() -> Result<()> {
     let dir = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
-    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
-    let tok = Tokenizer::load(&rt.manifest.vocab_file)?;
+    let rt = Arc::new(Runtime::load_auto(dir.as_ref())?);
+    let tok = rt.tokenizer()?;
 
     let set = load_prompts(&rt, "qa")?;
     let mut ar = make_engine(rt.clone(), "ar")?;

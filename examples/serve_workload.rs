@@ -29,7 +29,7 @@ fn main() -> Result<()> {
     let dir = args.next().unwrap_or_else(|| "artifacts".into());
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let rt = Arc::new(Runtime::load(dir.as_ref(), None)?);
+    let rt = Arc::new(Runtime::load_auto(dir.as_ref())?);
     let stream = load_prompts(&rt, "stream")?;
     let router = Router::start(
         rt,

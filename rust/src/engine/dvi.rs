@@ -21,10 +21,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use crate::learner::{ReplayBuffer, Tuple};
-use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::runtime::{Artifact, Buffer, Runtime, Tensor};
 use crate::spec::{longest_prefix, SeqPos};
 use crate::util::math::argmax;
 
@@ -73,10 +72,17 @@ impl DviEngine {
         self
     }
 
+    /// Force the k_spec per-step draft path even when the fused
+    /// `draft_block` artifact is exported (parity testing / ablation).
+    pub fn without_draft_block(mut self) -> Self {
+        self.draft_block = None;
+        self
+    }
+
     fn prefill(
         &self,
         prompt: &[u32],
-    ) -> Result<(Vec<Arc<PjRtBuffer>>, Vec<Arc<PjRtBuffer>>, u32)> {
+    ) -> Result<(Vec<Buffer>, Vec<Buffer>, u32)> {
         anyhow::ensure!(
             prompt.len() <= self.prefill_seq,
             "prompt length {} exceeds prefill capacity {}",
@@ -87,14 +93,12 @@ impl DviEngine {
         let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
         padded.resize(self.prefill_seq, 0);
         let sh = self.prefill_sh.call(
-            &self.rt.store,
             &kv_sh,
             &[Tensor::i32(vec![self.prefill_seq], padded)],
         )?;
         // sh.outputs[0] = h_k rows [P, d]; feed them into the deep prefill.
         let kv_dp = self.rt.fresh_kv("prefill_deep")?;
         let dp = self.prefill_dp.call(
-            &self.rt.store,
             &kv_dp,
             &[
                 sh.outputs[0].clone(),
@@ -140,7 +144,6 @@ impl Engine for DviEngine {
             let mut hk_rows: Vec<f32> = Vec::with_capacity(k * self.d_model);
             if let Some(block) = &self.draft_block {
                 let out = block.call(
-                    &self.rt.store,
                     &kv_sh,
                     &[
                         Tensor::scalar_i32(feed_tok as i32),
@@ -154,7 +157,6 @@ impl Engine for DviEngine {
                 let mut tok = feed_tok;
                 for i in 0..k {
                     let out = self.draft.call(
-                        &self.rt.store,
                         &kv_sh,
                         &[
                             Tensor::scalar_i32(tok as i32),
@@ -174,7 +176,6 @@ impl Engine for DviEngine {
             // ---- VERIFY: one deep block ----------------------------------
             let tver = Instant::now();
             let out = self.verify.call(
-                &self.rt.store,
                 &kv_dp,
                 &[
                     Tensor::f32(vec![k, self.d_model], hk_rows.clone()),

@@ -71,7 +71,6 @@ impl Engine for EagleEngine {
             let mut proposals: Vec<u32> = Vec::with_capacity(k);
             for _ in 0..k {
                 let out = self.step.call(
-                    &self.rt.store,
                     &[],
                     &[
                         Tensor::f32(vec![d], f),

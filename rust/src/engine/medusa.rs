@@ -66,7 +66,6 @@ impl Engine for MedusaEngine {
         {
             let tdraft = Instant::now();
             let out = self.heads.call(
-                &self.rt.store,
                 &[],
                 &[Tensor::f32(vec![d], hl.clone())],
             )?;
@@ -145,7 +144,6 @@ impl Engine for HydraEngine {
             // pending feed token and rolls the head state inside HLO.
             let (feed_tok, _pos) = ts.seq.feed();
             let out = self.chain.call(
-                &self.rt.store,
                 &[],
                 &[
                     Tensor::f32(vec![d], hl.clone()),

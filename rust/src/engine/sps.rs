@@ -10,9 +10,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
-use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::runtime::{Artifact, Buffer, Runtime, Tensor};
 use crate::spec::SeqPos;
 use crate::util::math::argmax;
 
@@ -39,7 +38,7 @@ impl SpsEngine {
 }
 
 struct DrafterState {
-    kv: Vec<Arc<PjRtBuffer>>,
+    kv: Vec<Buffer>,
     seq: SeqPos,
 }
 
@@ -62,7 +61,6 @@ impl Engine for SpsEngine {
         let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
         padded.resize(self.prefill_seq, 0);
         let dout = self.draft_prefill.call(
-            &self.rt.store,
             &kv,
             &[
                 Tensor::i32(vec![self.prefill_seq], padded),
@@ -95,7 +93,6 @@ impl Engine for SpsEngine {
             while drafter.seq.kv_len + 1 < drafter.seq.tokens.len() {
                 let (tok, pos) = drafter.seq.feed();
                 let out = self.draft_step.call(
-                    &self.rt.store,
                     &drafter.kv,
                     &[Tensor::scalar_i32(tok as i32),
                       Tensor::scalar_i32(pos as i32)],
@@ -108,7 +105,6 @@ impl Engine for SpsEngine {
             let (mut tok, mut pos) = drafter.seq.feed();
             for _ in 0..k {
                 let out = self.draft_step.call(
-                    &self.rt.store,
                     &drafter.kv,
                     &[Tensor::scalar_i32(tok as i32),
                       Tensor::scalar_i32(pos as i32)],

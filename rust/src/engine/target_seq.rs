@@ -10,9 +10,8 @@
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
-use xla::PjRtBuffer;
 
-use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::runtime::{Artifact, Buffer, Runtime, Tensor};
 use crate::spec::{longest_prefix, SeqPos, VerifyOutcome};
 use crate::util::math::argmax;
 
@@ -21,7 +20,7 @@ pub struct TargetSeq {
     prefill: Arc<Artifact>,
     step: Arc<Artifact>,
     verify: Option<Arc<Artifact>>,
-    kv: Vec<Arc<PjRtBuffer>>,
+    kv: Vec<Buffer>,
     pub seq: SeqPos,
     prompt_len: usize,
     max_seq: usize,
@@ -55,7 +54,6 @@ impl TargetSeq {
         let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
         padded.resize(prefill_seq, 0);
         let out = prefill.call(
-            &rt.store,
             &kv,
             &[
                 Tensor::i32(vec![prefill_seq], padded),
@@ -94,7 +92,6 @@ impl TargetSeq {
     pub fn ar_step(&mut self) -> Result<(u32, Vec<f32>)> {
         let (tok, pos) = self.seq.feed();
         let out = self.step.call(
-            &self.rt.store,
             &self.kv,
             &[Tensor::scalar_i32(tok as i32), Tensor::scalar_i32(pos as i32)],
         )?;
@@ -121,7 +118,6 @@ impl TargetSeq {
         feed.push(tok as i32);
         feed.extend(proposals[..k - 1].iter().map(|&t| t as i32));
         let out = verify.call(
-            &self.rt.store,
             &self.kv,
             &[
                 Tensor::i32(vec![k], feed),

@@ -54,8 +54,12 @@ pub fn run_task(
     Ok(m)
 }
 
-/// Load the prompt set for a task name.
+/// Load the prompt set for a task name: synthesized in-memory sets on
+/// the reference backend, `prompts/*.bin` files on PJRT artifact dirs.
 pub fn load_prompts(rt: &Runtime, task: &str) -> Result<PromptSet> {
+    if let Some(set) = rt.synthetic_prompts(task) {
+        return Ok(set.clone());
+    }
     let path = rt
         .manifest
         .prompts

@@ -168,4 +168,71 @@ mod tests {
         b.push(tup(1, 0.0));
         assert_eq!(b.mean_reward(), 0.5);
     }
+
+    #[test]
+    fn capacity_eviction_drops_oldest_only() {
+        let mut b = ReplayBuffer::new(4);
+        for i in 0..7 {
+            b.push(tup(i, 1.0));
+        }
+        assert_eq!(b.len(), 4);
+        // Survivors are exactly the 4 newest, in recency order 6,5,4,3.
+        let actions: Vec<u32> =
+            (0..4).map(|i| b.data[b.recent_idx(i)].action).collect();
+        assert_eq!(actions, vec![6, 5, 4, 3]);
+    }
+
+    #[test]
+    fn pushed_is_monotone_and_survives_clear() {
+        let mut b = ReplayBuffer::new(3);
+        let mut prev = b.pushed;
+        for i in 0..10 {
+            b.push(tup(i, 0.0));
+            assert!(b.pushed > prev, "pushed must strictly increase");
+            prev = b.pushed;
+        }
+        assert_eq!(b.pushed, 10);
+        // clear() empties storage but keeps the monotone counter: the
+        // learner's freshness gate depends on it never going backwards.
+        b.clear();
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.pushed, 10);
+        b.push(tup(99, 1.0));
+        assert_eq!(b.pushed, 11);
+    }
+
+    #[test]
+    fn prop_pushed_monotone_under_any_op_sequence() {
+        run_prop("buffer-pushed-monotone", 128, |rng| {
+            let mut b = ReplayBuffer::new(1 + rng.usize_below(8));
+            let mut prev = 0u64;
+            for i in 0..rng.usize_below(40) {
+                if rng.bool(0.2) {
+                    b.clear();
+                } else {
+                    b.push(tup(i as u32, if rng.bool(0.5) { 1.0 } else { 0.0 }));
+                }
+                assert!(b.pushed >= prev);
+                assert!(b.len() <= b.capacity);
+                prev = b.pushed;
+            }
+        });
+    }
+
+    #[test]
+    fn mean_reward_on_mixed_batches() {
+        let mut b = ReplayBuffer::new(8);
+        assert_eq!(b.mean_reward(), 0.0); // empty buffer is defined as 0
+        for i in 0..6 {
+            b.push(tup(i, if i % 3 == 0 { 1.0 } else { 0.0 }));
+        }
+        // rewards: 1,0,0,1,0,0 -> mean 2/6
+        assert!((b.mean_reward() - 2.0 / 6.0).abs() < 1e-12);
+        // Eviction shifts the mean to the surviving window.
+        for i in 6..10 {
+            b.push(tup(i, 1.0)); // evicts 0,1 (rewards 1,0)
+        }
+        // survivors: 2..9 -> rewards 0,1,0,0,1,1,1,1 -> 5/8
+        assert!((b.mean_reward() - 5.0 / 8.0).abs() < 1e-12);
+    }
 }

@@ -201,4 +201,44 @@ mod tests {
         let s = Schedule::new(Objective::Dvi);
         assert_eq!(s.hyper(0, 0.0).step, 1.0);
     }
+
+    #[test]
+    fn transition_fires_at_configured_step() {
+        // The KL->RL phase transition must track the *configured*
+        // t_warmup/t_ramp, not the defaults.
+        let mut s = Schedule::new(Objective::Dvi);
+        s.t_warmup = 10;
+        s.t_ramp = 20;
+
+        // Through the whole warmup (t < t_warmup) AND at exactly
+        // t_warmup (ramp fraction 0): pure KL, no PG/RL/CE.
+        for t in 0..=s.t_warmup {
+            let h = s.hyper(t, 0.0);
+            assert_eq!(h.lam_pg, 0.0, "PG leaked into warmup at t={t}");
+            assert_eq!(h.w_rl, 0.0, "RL leaked into warmup at t={t}");
+            assert_eq!(h.w_ce, 0.0, "CE leaked into warmup at t={t}");
+            assert_eq!(h.lam_kl, s.lam0, "KL decayed during warmup at t={t}");
+        }
+        // The very next step the ramp engages: PG/RL become positive
+        // and KL starts decaying.
+        let h = s.hyper(s.t_warmup + 1, 0.0);
+        assert!(h.lam_pg > 0.0, "PG did not fire after warmup");
+        assert!(h.w_rl > 0.0, "RL did not fire after warmup");
+        assert!(h.lam_kl < s.lam0, "KL did not start decaying");
+        // And saturation happens exactly at t_warmup + t_ramp.
+        let end = s.hyper(s.t_warmup + s.t_ramp, 0.0);
+        assert_eq!(end.lam_pg, s.lam_pg_max);
+        assert!((end.lam_kl - s.lam_kl_min).abs() < 1e-6);
+        let before_end = s.hyper(s.t_warmup + s.t_ramp - 1, 0.0);
+        assert!(before_end.lam_pg < s.lam_pg_max);
+    }
+
+    #[test]
+    fn baseline_and_lr_pass_through() {
+        let s = Schedule::new(Objective::Dvi);
+        let h = s.hyper(123, 0.73);
+        assert_eq!(h.baseline, 0.73);
+        assert_eq!(h.lr, s.lr);
+        assert_eq!(h.step, 124.0);
+    }
 }

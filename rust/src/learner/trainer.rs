@@ -124,7 +124,6 @@ impl Trainer {
 
         let hyper = self.schedule.hyper(self.steps_done, b);
         let out = self.train_step.call(
-            &self.rt.store,
             &[],
             &[
                 Tensor::f32(vec![n, self.d_model], hk),

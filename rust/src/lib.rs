@@ -11,9 +11,15 @@
 //!   benchmark harness.
 //! * **L2/L1 (python/compile, build-time only)** — JAX model + Pallas
 //!   kernels, AOT-lowered to HLO text executed through PJRT
-//!   (`runtime` module). Python never runs on the request path.
+//!   (`runtime` module, cargo feature `pjrt`). Python never runs on
+//!   the request path.
 //!
-//! Start with [`runtime::Runtime::load`], then construct engines from
+//! The runtime is multi-backend behind [`runtime::Backend`]: the
+//! hermetic pure-Rust reference interpreter
+//! ([`runtime::Runtime::load_reference`] — no artifacts, no Python, no
+//! XLA; the invariant test suite runs on it unconditionally) and the
+//! PJRT path ([`runtime::Runtime::load`]). Start with
+//! [`runtime::Runtime::load_auto`], then construct engines from
 //! [`engine`], or drive everything through the `dvi` binary.
 
 pub mod engine;

@@ -18,11 +18,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use dvi::engine::Engine;
 use dvi::harness;
 use dvi::learner::Objective;
 use dvi::runtime::{log, Runtime};
 use dvi::server::{api, Router, RouterConfig};
-use dvi::tokenizer::Tokenizer;
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
@@ -49,9 +49,24 @@ fn main() {
     }
 }
 
+/// Backend selection: `--backend reference` forces the hermetic
+/// pure-Rust backend; `--backend pjrt` requires compiled artifacts (and
+/// the `pjrt` cargo feature); the default `auto` uses PJRT when
+/// available and falls back to the reference backend.
 fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    Ok(Arc::new(Runtime::load(&dir, None)?))
+    let rt = match args.get_or("backend", "auto").as_str() {
+        "reference" => {
+            let seed = args
+                .get_usize("seed", dvi::runtime::REFERENCE_SEED as usize)
+                .map_err(anyhow::Error::msg)? as u64;
+            Runtime::load_reference(seed)?
+        }
+        "pjrt" => Runtime::load(&dir, None)?,
+        "auto" => Runtime::load_auto(&dir)?,
+        other => bail!("unknown --backend '{other}' (auto|reference|pjrt)"),
+    };
+    Ok(Arc::new(rt))
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -73,6 +88,7 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn info(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
+    println!("backend: {}", rt.backend_name());
     println!("artifacts: {}", rt.manifest.dir.display());
     println!("model config: {}", rt.manifest.config.get("model"));
     println!("spec config: {}", rt.manifest.config.get("spec"));
@@ -91,7 +107,7 @@ fn run(args: &Args) -> Result<()> {
     let method = args.get_or("method", "dvi");
     let task = args.get_or("task", "qa");
     let n = args.get_usize("n", 5).map_err(anyhow::Error::msg)?;
-    let tok = Tokenizer::load(&rt.manifest.vocab_file)?;
+    let tok = rt.tokenizer()?;
 
     if args.flag("online") {
         let prompts = args.get_usize("train", 300).map_err(anyhow::Error::msg)?;
@@ -224,7 +240,7 @@ fn serve(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let method = args.get_or("method", "dvi");
     let online = !args.flag("no-online");
-    let tok = Arc::new(Tokenizer::load(&rt.manifest.vocab_file)?);
+    let tok = Arc::new(rt.tokenizer()?);
     let router = Arc::new(Router::start(
         rt,
         RouterConfig {

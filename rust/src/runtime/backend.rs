@@ -1,0 +1,110 @@
+//! The execution seam: everything an engine, the learner, or the router
+//! needs from "the thing that runs artifacts" — buffer upload/download,
+//! per-sequence KV state, named mutable globals, and artifact execution.
+//!
+//! Two implementations exist:
+//!
+//!   * [`crate::runtime::reference::ReferenceBackend`] — a deterministic,
+//!     pure-Rust split-transformer interpreter driven by a generated
+//!     in-memory manifest + seeded synthetic weights. Always available;
+//!     the hermetic test suite runs against it unconditionally.
+//!   * `crate::runtime::pjrt::PjrtBackend` (cargo feature `pjrt`) — the
+//!     AOT-compiled HLO path through the PJRT CPU client.
+//!
+//! Engines never see backend-specific buffer types: opaque [`Buffer`]
+//! handles flow through [`CallOut`] exactly like the chained PJRT
+//! buffers did, so per-sequence KV ownership semantics are unchanged.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::manifest::ArtifactSpec;
+use super::tensor::{DType, Tensor};
+
+/// Opaque device-buffer handle. Cheap to clone (Arc either way).
+#[derive(Clone)]
+pub enum Buffer {
+    /// Host-resident tensor (reference backend).
+    Host(Arc<Tensor>),
+    /// PJRT device buffer.
+    #[cfg(feature = "pjrt")]
+    Pjrt(Arc<xla::PjRtBuffer>),
+}
+
+impl Buffer {
+    pub fn host(t: Tensor) -> Buffer {
+        Buffer::Host(Arc::new(t))
+    }
+
+    /// The host tensor behind this handle; errors on a device buffer.
+    pub fn as_host(&self) -> Result<&Tensor> {
+        match self {
+            Buffer::Host(t) => Ok(t),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => {
+                Err(anyhow::anyhow!("buffer is device-resident, not host"))
+            }
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn as_pjrt(&self) -> Result<&Arc<xla::PjRtBuffer>> {
+        match self {
+            Buffer::Pjrt(b) => Ok(b),
+            Buffer::Host(_) => {
+                Err(anyhow::anyhow!("buffer is host-resident, not PJRT"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Buffer::Host(t) => write!(f, "Buffer::Host{:?}", t.shape),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => write!(f, "Buffer::Pjrt"),
+        }
+    }
+}
+
+/// Result of one artifact call.
+pub struct CallOut {
+    /// Host outputs (role=out), in manifest order.
+    pub outputs: Vec<Tensor>,
+    /// New per-sequence state buffers (role=kv), in manifest order.
+    pub kv: Vec<Buffer>,
+}
+
+/// Backend abstraction over artifact execution and buffer management.
+///
+/// `call` receives the artifact's manifest spec (already shape-checked
+/// by [`crate::runtime::Artifact::call`]) plus the caller-owned KV
+/// buffers and per-call host inputs; it returns host outputs, new KV
+/// buffers, and applies any `global`-role output updates internally.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Execute one artifact.
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>;
+
+    /// Fresh zeroed per-sequence KV buffers for an artifact's kv params.
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>>;
+
+    /// Upload a host tensor (used by tests to stage KV/global inputs).
+    fn upload(&self, t: &Tensor) -> Result<Buffer>;
+
+    /// Download a buffer back to the host.
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor>;
+
+    /// Replace a named mutable global buffer (LoRA adapters, Adam moments).
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()>;
+
+    /// Read back a named global buffer.
+    fn read_global(&self, name: &str) -> Result<Tensor>;
+
+    /// Reset a global buffer to its initial (weights-file) value.
+    fn reset_global(&self, name: &str) -> Result<()>;
+}

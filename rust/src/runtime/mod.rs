@@ -1,102 +1,190 @@
-//! PJRT runtime: loads `artifacts/` (manifest + HLO text + weights),
-//! compiles executables on the CPU PJRT client, uploads weights once, and
-//! exposes manifest-driven `Artifact::call`. Python never runs here.
+//! Runtime layer: a [`Manifest`]-driven artifact executor over a
+//! pluggable [`Backend`].
+//!
+//! Two backends implement the seam:
+//!
+//!   * [`reference::ReferenceBackend`] — deterministic pure-Rust
+//!     split-transformer interpreter with synthetic weights, prompts,
+//!     and vocabulary, created by [`Runtime::load_reference`]. Always
+//!     available; the hermetic test suite runs on it unconditionally.
+//!   * `pjrt::PjrtBackend` (cargo feature `pjrt`) — compiles the AOT
+//!     HLO in `artifacts/` on the PJRT CPU client, created by
+//!     [`Runtime::load`]. Used when `DVI_ARTIFACTS` points at a real
+//!     export.
+//!
+//! [`Runtime::load_auto`] picks PJRT when the feature is on and a
+//! manifest exists, and falls back to the reference backend otherwise,
+//! so every binary in the repo runs out of the box.
 
-pub mod artifact;
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 pub mod weights;
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::{Arc, RwLock};
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
-use xla::PjRtClient;
+use anyhow::{bail, Context, Result};
 
-pub use artifact::{Artifact, BufferStore, CallOut};
+pub use backend::{Backend, Buffer, CallOut};
 pub use manifest::{ArtifactSpec, Manifest, Port, Role};
+pub use reference::{ReferenceBackend, ReferenceConfig};
 pub use tensor::{DType, Tensor, TensorData};
 pub use weights::{load_weights, WeightMap};
 
+use crate::tokenizer::Tokenizer;
+use crate::workload::PromptSet;
+
+/// Default seed for [`Runtime::load_reference`] fallbacks.
+pub const REFERENCE_SEED: u64 = 0xD5EED;
+
+/// One executable artifact: the manifest spec plus a backend handle.
+/// `call` shape-checks against the manifest at call time, so a
+/// mismatched artifact fails loudly rather than corrupting a decode.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    backend: Arc<dyn Backend>,
+}
+
+impl Artifact {
+    /// Execute. `kv` must match the artifact's kv params in order;
+    /// `inputs` must match role=in params in order.
+    pub fn call(&self, kv: &[Buffer], inputs: &[Tensor]) -> Result<CallOut> {
+        let n_kv = self.spec.params_with_role(Role::Kv).count();
+        if kv.len() != n_kv {
+            bail!("{}: expected {} kv buffers, got {}",
+                  self.spec.name, n_kv, kv.len());
+        }
+        let in_ports: Vec<&Port> = self.spec.params_with_role(Role::In).collect();
+        if inputs.len() != in_ports.len() {
+            bail!("{}: expected {} inputs, got {}",
+                  self.spec.name, in_ports.len(), inputs.len());
+        }
+        for (t, port) in inputs.iter().zip(&in_ports) {
+            if t.shape != port.shape || t.dtype() != port.dtype {
+                bail!(
+                    "{}: input '{}' shape/dtype mismatch (got {:?}, manifest {:?})",
+                    self.spec.name, port.name, t.shape, port.shape
+                );
+            }
+        }
+        let out = self.backend.call(&self.spec, kv, inputs)?;
+        let n_out = self.spec.outputs_with_role(Role::Out).count();
+        let n_kv_out = self.spec.outputs_with_role(Role::Kv).count();
+        if out.outputs.len() != n_out || out.kv.len() != n_kv_out {
+            bail!(
+                "{}: backend returned {} outputs / {} kv, manifest says {} / {}",
+                self.spec.name, out.outputs.len(), out.kv.len(), n_out, n_kv_out
+            );
+        }
+        Ok(out)
+    }
+}
+
 pub struct Runtime {
-    pub client: PjRtClient,
     pub manifest: Manifest,
-    pub store: BufferStore,
+    backend: Arc<dyn Backend>,
     artifacts: BTreeMap<String, Arc<Artifact>>,
-    /// Host copies of weights (for buffer re-init, e.g. LoRA reset).
-    pub host_weights: WeightMap,
+    /// In-memory prompt sets (reference backend); empty for PJRT, whose
+    /// prompts live in `manifest.prompts` files.
+    prompts: BTreeMap<String, PromptSet>,
+    /// In-memory vocabulary (reference backend).
+    vocab: Option<Vec<String>>,
 }
 
 impl Runtime {
-    /// Load manifest + weights, compile the requested artifacts (all if
-    /// `names` is None). Compilation is the startup cost; per-request
-    /// paths only execute.
+    /// Fully hermetic runtime: generated manifest, seeded synthetic
+    /// weights, in-memory prompts and vocabulary. Zero files on disk.
+    pub fn load_reference(seed: u64) -> Result<Runtime> {
+        Runtime::load_reference_with(ReferenceConfig { seed, ..Default::default() })
+    }
+
+    pub fn load_reference_with(cfg: ReferenceConfig) -> Result<Runtime> {
+        let manifest = reference::synth::manifest(&cfg);
+        let prompts = reference::synth::prompt_sets(&cfg);
+        let vocab = reference::synth::vocab(&cfg);
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend::new(cfg)?);
+        let artifacts = manifest
+            .artifacts
+            .values()
+            .map(|spec| {
+                (
+                    spec.name.clone(),
+                    Arc::new(Artifact { spec: spec.clone(), backend: backend.clone() }),
+                )
+            })
+            .collect();
+        log::debug("reference runtime ready (hermetic, no artifacts on disk)");
+        Ok(Runtime { manifest, backend, artifacts, prompts, vocab: Some(vocab) })
+    }
+
+    /// Load compiled artifacts from `dir` on the PJRT backend (all if
+    /// `names` is None). Requires the `pjrt` cargo feature; without it
+    /// this returns an error directing callers at the reference backend.
     pub fn load(dir: &Path, names: Option<&[&str]>) -> Result<Runtime> {
-        let t0 = Instant::now();
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu()?;
-        let host_weights = weights::load_weights(&manifest.weights_file)?;
+        #[cfg(feature = "pjrt")]
+        {
+            let (manifest, chosen, be) = pjrt::PjrtBackend::load(dir, names)?;
+            let backend: Arc<dyn Backend> = Arc::new(be);
+            let artifacts = chosen
+                .into_iter()
+                .map(|spec| {
+                    (
+                        spec.name.clone(),
+                        Arc::new(Artifact { spec, backend: backend.clone() }),
+                    )
+                })
+                .collect();
+            Ok(Runtime {
+                manifest,
+                backend,
+                artifacts,
+                prompts: BTreeMap::new(),
+                vocab: None,
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = names;
+            bail!(
+                "cannot load artifacts from {}: this build has no PJRT backend \
+                 (rebuild with --features pjrt, or use Runtime::load_reference)",
+                dir.display()
+            )
+        }
+    }
 
-        // Upload weight + global tensors referenced by any chosen artifact.
-        let chosen: Vec<ArtifactSpec> = match names {
-            None => manifest.artifacts.values().cloned().collect(),
-            Some(ns) => ns
-                .iter()
-                .map(|n| manifest.artifact(n).cloned())
-                .collect::<Result<Vec<_>>>()?,
-        };
-
-        let mut weight_bufs = BTreeMap::new();
-        let mut globals = BTreeMap::new();
-        for spec in &chosen {
-            for port in &spec.params {
-                let target = match port.role {
-                    Role::Weight => &mut weight_bufs,
-                    Role::Global => &mut globals,
-                    _ => continue,
-                };
-                if target.contains_key(&port.name) {
-                    continue;
-                }
-                let t = host_weights.get(&port.name).with_context(|| {
-                    format!("weights.bin missing '{}' ({:?})", port.name, port.role)
-                })?;
-                anyhow::ensure!(
-                    t.shape == port.shape,
-                    "weights.bin '{}' shape {:?} != manifest {:?}",
-                    port.name, t.shape, port.shape
-                );
-                target.insert(port.name.clone(),
-                              Arc::new(artifact::upload(&client, t)?));
+    /// PJRT when compiled in and `dir` holds a manifest; otherwise the
+    /// hermetic reference backend. Every binary stays runnable with no
+    /// artifacts, no Python, and no XLA.
+    pub fn load_auto(dir: &Path) -> Result<Runtime> {
+        let have_manifest = dir.join("manifest.json").exists();
+        if cfg!(feature = "pjrt") && have_manifest {
+            Runtime::load(dir, None)
+        } else {
+            if have_manifest {
+                log::info(&format!(
+                    "artifacts found at {} but this build has no `pjrt` \
+                     feature — using the reference backend (rebuild with \
+                     --features pjrt to use them)",
+                    dir.display()
+                ));
+            } else {
+                log::info(&format!(
+                    "no PJRT artifacts at {} — using the reference backend",
+                    dir.display()
+                ));
             }
+            Runtime::load_reference(REFERENCE_SEED)
         }
-        let store = BufferStore { weights: weight_bufs, globals: RwLock::new(globals) };
+    }
 
-        let mut artifacts = BTreeMap::new();
-        for spec in chosen {
-            let tc = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.file.to_str().context("artifact path not utf-8")?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", spec.name))?;
-            log::debug(&format!(
-                "compiled {} in {:.2}s", spec.name, tc.elapsed().as_secs_f64()
-            ));
-            artifacts.insert(spec.name.clone(),
-                             Arc::new(Artifact::new(spec, exe)));
-        }
-        log::info(&format!(
-            "runtime ready: {} artifacts, {} weight tensors in {:.2}s",
-            artifacts.len(),
-            store.weights.len(),
-            t0.elapsed().as_secs_f64()
-        ));
-        Ok(Runtime { client, manifest, store, artifacts, host_weights })
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
@@ -110,29 +198,53 @@ impl Runtime {
         self.artifacts.contains_key(name)
     }
 
-    /// Reset a global buffer back to its weights.bin initial value
-    /// (used to re-init LoRA/Adam between ablation runs).
-    pub fn reset_global(&self, name: &str) -> Result<()> {
-        let t = self
-            .host_weights
-            .get(name)
-            .with_context(|| format!("no initial value for global '{name}'"))?;
-        self.store
-            .set_global(name, Arc::new(artifact::upload(&self.client, t)?));
-        Ok(())
+    /// Fresh per-sequence KV buffers (zeros) for the given artifact's kv
+    /// params.
+    pub fn fresh_kv(&self, artifact: &str) -> Result<Vec<Buffer>> {
+        self.backend.fresh_kv(&self.artifact(artifact)?.spec)
     }
 
-    /// Fresh per-sequence KV buffers (zeros) for the given artifact's kv
-    /// params. Slot garbage is fine semantically (masked), but zeros make
-    /// runs reproducible.
-    pub fn fresh_kv(&self, artifact: &str) -> Result<Vec<Arc<xla::PjRtBuffer>>> {
-        let spec = &self.artifact(artifact)?.spec;
-        let mut out = Vec::new();
-        for port in spec.params_with_role(Role::Kv) {
-            let t = Tensor::zeros_f32(port.shape.clone());
-            out.push(Arc::new(artifact::upload(&self.client, &t)?));
+    /// Reset a global buffer back to its initial value (used to re-init
+    /// LoRA/Adam between ablation runs).
+    pub fn reset_global(&self, name: &str) -> Result<()> {
+        self.backend.reset_global(name)
+    }
+
+    /// Read back a named global buffer (LoRA adapters, Adam moments).
+    pub fn read_global(&self, name: &str) -> Result<Tensor> {
+        self.backend.read_global(name)
+    }
+
+    /// Replace a named global buffer (parity tests stage golden inputs).
+    pub fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        self.backend.set_global(name, t)
+    }
+
+    /// Upload a host tensor to a backend buffer (tests stage KV inputs).
+    pub fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        self.backend.upload(t)
+    }
+
+    /// Download a buffer back to the host.
+    pub fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize])
+        -> Result<Tensor>
+    {
+        self.backend.to_host(b, dtype, shape)
+    }
+
+    /// In-memory prompt set for `task`, if this runtime synthesizes its
+    /// own workloads (reference backend).
+    pub fn synthetic_prompts(&self, task: &str) -> Option<&PromptSet> {
+        self.prompts.get(task)
+    }
+
+    /// The runtime's tokenizer: in-memory for the reference backend,
+    /// `vocab.json` for PJRT artifact dirs.
+    pub fn tokenizer(&self) -> Result<Tokenizer> {
+        match &self.vocab {
+            Some(words) => Ok(Tokenizer::from_words(words.clone())),
+            None => Tokenizer::load(&self.manifest.vocab_file),
         }
-        Ok(out)
     }
 }
 
@@ -156,5 +268,77 @@ pub mod log {
         if LEVEL.load(Ordering::Relaxed) >= 2 {
             eprintln!("[dvi:debug] {msg}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_runtime_loads_all_artifacts() {
+        let rt = Runtime::load_reference(1).unwrap();
+        assert_eq!(rt.backend_name(), "reference");
+        for name in [
+            "draft_step", "draft_block", "verify_block", "prefill_shallow",
+            "prefill_deep", "prefill_full", "target_step",
+            "target_verify_block", "sps_prefill", "sps_draft_step",
+            "medusa_heads", "hydra_chain", "eagle_step", "train_step",
+        ] {
+            assert!(rt.has_artifact(name), "missing artifact {name}");
+            assert!(rt.artifact(name).is_ok());
+        }
+        assert!(rt.artifact("nope").is_err());
+        assert!(rt.synthetic_prompts("qa").is_some());
+        assert!(rt.synthetic_prompts("banana").is_none());
+        let tok = rt.tokenizer().unwrap();
+        assert_eq!(tok.vocab_size(), rt.manifest.model_usize("vocab_size").unwrap());
+    }
+
+    #[test]
+    fn artifact_call_validates_shapes() {
+        let rt = Runtime::load_reference(2).unwrap();
+        let art = rt.artifact("target_step").unwrap();
+        let kv = rt.fresh_kv("target_step").unwrap();
+        // Wrong input count.
+        assert!(art.call(&kv, &[Tensor::scalar_i32(1)]).is_err());
+        // Wrong kv count.
+        assert!(art
+            .call(&kv[..1], &[Tensor::scalar_i32(1), Tensor::scalar_i32(0)])
+            .is_err());
+        // Wrong dtype.
+        assert!(art
+            .call(&kv, &[Tensor::scalar_f32(1.0), Tensor::scalar_i32(0)])
+            .is_err());
+        // Correct call succeeds and chains kv.
+        let out = art
+            .call(&kv, &[Tensor::scalar_i32(5), Tensor::scalar_i32(0)])
+            .unwrap();
+        assert_eq!(out.kv.len(), kv.len());
+        assert_eq!(out.outputs.len(), 2);
+    }
+
+    #[test]
+    fn globals_roundtrip_through_runtime() {
+        let rt = Runtime::load_reference(3).unwrap();
+        let a0 = rt.read_global("lora.A").unwrap();
+        let zero = Tensor::zeros_f32(a0.shape.clone());
+        rt.set_global("lora.A", &zero).unwrap();
+        assert_eq!(rt.read_global("lora.A").unwrap(), zero);
+        rt.reset_global("lora.A").unwrap();
+        assert_eq!(rt.read_global("lora.A").unwrap(), a0);
+    }
+
+    #[test]
+    fn load_auto_falls_back_to_reference() {
+        let rt = Runtime::load_auto(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(rt.backend_name(), "reference");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn load_without_pjrt_errors_helpfully() {
+        let err = Runtime::load(Path::new("artifacts"), None).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
     }
 }

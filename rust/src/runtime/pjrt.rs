@@ -1,0 +1,284 @@
+//! The PJRT backend (cargo feature `pjrt`): loads `artifacts/`
+//! (manifest + HLO text + weights), compiles executables on the CPU
+//! PJRT client, uploads weights once, and executes manifest-driven
+//! artifact calls. Python never runs here.
+//!
+//! Buffer roles (see `python/compile/aot.py`):
+//!
+//!   weight  -> process-wide immutable buffers (uploaded once at startup)
+//!   global  -> named mutable buffers (LoRA adapters / Adam moments);
+//!              outputs with the same name atomically replace the slot
+//!   kv      -> caller-owned chained buffers (per-sequence KV caches)
+//!   in/out  -> per-call host tensors
+//!
+//! In hermetic builds the `xla` dependency is the in-tree API stub
+//! (`rust/vendor/xla-stub`): this module still compiles, and every load
+//! attempt reports that the real PJRT fork is absent.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::backend::{Backend, Buffer, CallOut};
+use super::log;
+use super::manifest::{ArtifactSpec, Manifest, Role};
+use super::tensor::{DType, Tensor, TensorData};
+use super::weights::{self, WeightMap};
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    exes: BTreeMap<String, PjRtLoadedExecutable>,
+    weights: BTreeMap<String, Arc<PjRtBuffer>>,
+    /// Named mutable buffers plus the metadata needed to download them.
+    globals: RwLock<BTreeMap<String, (Arc<PjRtBuffer>, DType, Vec<usize>)>>,
+    /// Host copies of weights (for buffer re-init, e.g. LoRA reset).
+    pub host_weights: WeightMap,
+}
+
+impl PjrtBackend {
+    /// Load manifest + weights from `dir`, compile the requested
+    /// artifacts (all if `names` is None). Compilation is the startup
+    /// cost; per-request paths only execute. Returns the manifest and
+    /// the specs that were actually compiled.
+    pub fn load(dir: &Path, names: Option<&[&str]>)
+        -> Result<(Manifest, Vec<ArtifactSpec>, PjrtBackend)>
+    {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let host_weights = weights::load_weights(&manifest.weights_file)?;
+
+        let chosen: Vec<ArtifactSpec> = match names {
+            None => manifest.artifacts.values().cloned().collect(),
+            Some(ns) => ns
+                .iter()
+                .map(|n| manifest.artifact(n).cloned())
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        // Upload weight + global tensors referenced by any chosen artifact.
+        let mut weight_bufs = BTreeMap::new();
+        let mut globals = BTreeMap::new();
+        for spec in &chosen {
+            for port in &spec.params {
+                if !matches!(port.role, Role::Weight | Role::Global) {
+                    continue;
+                }
+                let present = match port.role {
+                    Role::Weight => weight_bufs.contains_key(&port.name),
+                    _ => globals.contains_key(&port.name),
+                };
+                if present {
+                    continue;
+                }
+                let t = host_weights.get(&port.name).with_context(|| {
+                    format!("weights.bin missing '{}' ({:?})", port.name, port.role)
+                })?;
+                anyhow::ensure!(
+                    t.shape == port.shape,
+                    "weights.bin '{}' shape {:?} != manifest {:?}",
+                    port.name, t.shape, port.shape
+                );
+                let buf = Arc::new(upload(&client, t)?);
+                match port.role {
+                    Role::Weight => {
+                        weight_bufs.insert(port.name.clone(), buf);
+                    }
+                    _ => {
+                        globals.insert(
+                            port.name.clone(),
+                            (buf, port.dtype, port.shape.clone()),
+                        );
+                    }
+                }
+            }
+        }
+
+        let mut exes = BTreeMap::new();
+        for spec in &chosen {
+            let tc = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            log::debug(&format!(
+                "compiled {} in {:.2}s", spec.name, tc.elapsed().as_secs_f64()
+            ));
+            exes.insert(spec.name.clone(), exe);
+        }
+        log::info(&format!(
+            "pjrt runtime ready: {} artifacts, {} weight tensors in {:.2}s",
+            exes.len(),
+            weight_bufs.len(),
+            t0.elapsed().as_secs_f64()
+        ));
+        Ok((
+            manifest,
+            chosen,
+            PjrtBackend {
+                client,
+                exes,
+                weights: weight_bufs,
+                globals: RwLock::new(globals),
+                host_weights,
+            },
+        ))
+    }
+
+    fn global_buf(&self, name: &str) -> Result<Arc<PjRtBuffer>> {
+        self.globals
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|(b, _, _)| b.clone())
+            .with_context(|| format!("global buffer '{name}' missing"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Assemble the PJRT argument list in manifest (= HLO parameter)
+    /// order, execute, and distribute the (untupled — see the
+    /// third_party/xla fork) result buffers back by output role.
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>
+    {
+        let exe = self
+            .exes
+            .get(&spec.name)
+            .with_context(|| format!("artifact '{}' not compiled", spec.name))?;
+
+        let mut owned: Vec<Arc<PjRtBuffer>> = Vec::with_capacity(spec.params.len());
+        let mut kv_it = kv.iter();
+        let mut in_it = inputs.iter();
+        for port in &spec.params {
+            let buf = match port.role {
+                Role::Weight => self
+                    .weights
+                    .get(&port.name)
+                    .cloned()
+                    .with_context(|| {
+                        format!("{}: weight '{}' not uploaded",
+                                spec.name, port.name)
+                    })?,
+                Role::Global => self.global_buf(&port.name)?,
+                Role::Kv => kv_it
+                    .next()
+                    .context("kv buffer count mismatch")?
+                    .as_pjrt()?
+                    .clone(),
+                Role::In => {
+                    let t = in_it.next().context("input count mismatch")?;
+                    Arc::new(upload(&self.client, t)?)
+                }
+                Role::Out => bail!("{}: role=out in params", spec.name),
+            };
+            owned.push(buf);
+        }
+        let args: Vec<&PjRtBuffer> = owned.iter().map(|a| a.as_ref()).collect();
+
+        let mut results = exe.execute_b(&args)?;
+        if results.len() != 1 {
+            bail!("{}: expected 1 replica, got {}", spec.name, results.len());
+        }
+        let bufs = results.pop().unwrap();
+        if bufs.len() != spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {} (untuple_result fork missing?)",
+                spec.name, spec.outputs.len(), bufs.len()
+            );
+        }
+
+        let mut outputs = Vec::new();
+        let mut kv_out = Vec::new();
+        for (port, buf) in spec.outputs.iter().zip(bufs) {
+            match port.role {
+                Role::Out => outputs.push(download(&buf, port.dtype, &port.shape)?),
+                Role::Kv => kv_out.push(Buffer::Pjrt(Arc::new(buf))),
+                Role::Global => {
+                    self.globals.write().unwrap().insert(
+                        port.name.clone(),
+                        (Arc::new(buf), port.dtype, port.shape.clone()),
+                    );
+                }
+                _ => bail!("{}: bad output role", spec.name),
+            }
+        }
+        Ok(CallOut { outputs, kv: kv_out })
+    }
+
+    /// Fresh per-sequence KV buffers (zeros). Slot garbage is fine
+    /// semantically (masked), but zeros make runs reproducible.
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
+        let mut out = Vec::new();
+        for port in spec.params_with_role(Role::Kv) {
+            let t = Tensor::zeros_f32(port.shape.clone());
+            out.push(Buffer::Pjrt(Arc::new(upload(&self.client, &t)?)));
+        }
+        Ok(out)
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        Ok(Buffer::Pjrt(Arc::new(upload(&self.client, t)?)))
+    }
+
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        download(b.as_pjrt()?, dtype, shape)
+    }
+
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        let buf = Arc::new(upload(&self.client, t)?);
+        self.globals.write().unwrap().insert(
+            name.to_string(),
+            (buf, t.dtype(), t.shape.clone()),
+        );
+        Ok(())
+    }
+
+    fn read_global(&self, name: &str) -> Result<Tensor> {
+        let (buf, dtype, shape) = self
+            .globals
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("global buffer '{name}' missing"))?;
+        download(&buf, dtype, &shape)
+    }
+
+    fn reset_global(&self, name: &str) -> Result<()> {
+        let t = self
+            .host_weights
+            .get(name)
+            .with_context(|| format!("no initial value for global '{name}'"))?
+            .clone();
+        self.set_global(name, &t)
+    }
+}
+
+pub fn upload(client: &PjRtClient, t: &Tensor) -> Result<PjRtBuffer> {
+    let buf = match &t.data {
+        TensorData::F32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+        TensorData::I32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+    };
+    Ok(buf)
+}
+
+pub fn download(buf: &PjRtBuffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+    let lit = buf.to_literal_sync()?;
+    let t = match dtype {
+        DType::F32 => Tensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
+    };
+    Ok(t)
+}

@@ -1,0 +1,860 @@
+//! The hermetic reference backend: a deterministic, pure-Rust
+//! implementation of every artifact the PJRT exporter produces, driven
+//! by a generated in-memory manifest ([`synth`]) and seeded synthetic
+//! weights ([`model`]). `Runtime::load_reference(seed)` yields a fully
+//! functional runtime with zero files on disk, so the lossless /
+//! tuple-logging / online-learning invariant suite runs on every commit
+//! with no Python, no XLA, and no artifacts directory.
+//!
+//! The split-transformer geometry mirrors `python/compile/config.py` at
+//! CPU-trivial scale: shallow layers + LoRA draft head feed a deep
+//! verify stack over shared layer weights, so DVI's self-speculation is
+//! exactly lossless against the full-model AR baseline (bitwise — see
+//! `model.rs` for why). The `train_step` artifact reimplements the §3.4
+//! composite objective (KL / reward-masked CE / REINFORCE / entropy)
+//! with hand-derived gradients through the LoRA factors and a fused
+//! bias-corrected Adam update, matching `python/compile/train.py`.
+
+pub mod model;
+pub mod synth;
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::backend::{Backend, Buffer, CallOut};
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::math::logsumexp;
+use crate::util::rng::Rng;
+
+use model::{dot, matvec, ModelW};
+
+/// Geometry of the synthetic split backbone + heads. Defaults are small
+/// enough that the full integration suite runs in seconds under
+/// `cargo test` (debug profile), yet structured enough that acceptance,
+/// tuple logging, and online-KD dynamics are non-degenerate.
+#[derive(Debug, Clone)]
+pub struct ReferenceConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub split_layer: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub max_new_tokens: usize,
+    pub k_spec: usize,
+    pub lora_rank: usize,
+    pub lora_gamma: f32,
+    pub batch_size: usize,
+    pub sps_layers: usize,
+    pub medusa_hidden: usize,
+    pub hydra_hidden: usize,
+    pub eagle_hidden: usize,
+    pub norm_eps: f32,
+    pub adam_b1: f32,
+    pub adam_b2: f32,
+    pub adam_eps: f32,
+    pub seed: u64,
+    pub prompts_per_task: usize,
+    pub stream_prompts: usize,
+}
+
+impl Default for ReferenceConfig {
+    fn default() -> ReferenceConfig {
+        ReferenceConfig {
+            vocab_size: 64,
+            d_model: 16,
+            n_layers: 4,
+            split_layer: 2,
+            d_ff: 32,
+            max_seq: 160,
+            prefill_seq: 48,
+            max_new_tokens: 32,
+            k_spec: 4,
+            lora_rank: 4,
+            lora_gamma: 2.0,
+            batch_size: 16,
+            sps_layers: 2,
+            medusa_hidden: 16,
+            hydra_hidden: 16,
+            eagle_hidden: 32,
+            norm_eps: 1e-5,
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1e-8,
+            seed: 0xD5EED,
+            prompts_per_task: 32,
+            stream_prompts: 512,
+        }
+    }
+}
+
+struct MedusaHead {
+    u: Vec<f32>, // [d, hidden]
+    w: Vec<f32>, // [hidden, vocab]
+}
+
+struct HydraW {
+    w0: Vec<f32>, // [d, hidden]
+    ws: Vec<f32>, // [hidden, hidden]
+    we: Vec<f32>, // [d, hidden]
+    w: Vec<f32>,  // [hidden, vocab]
+}
+
+struct EagleW {
+    w1: Vec<f32>, // [2d, hidden]
+    w2: Vec<f32>, // [hidden, d]
+}
+
+pub struct ReferenceBackend {
+    pub cfg: ReferenceConfig,
+    /// The split backbone: `layers[..split]` = shallow/draft stack,
+    /// `layers[split..]` = deep/verify stack, shared embedding + head.
+    target: ModelW,
+    /// Independent small drafter LM for the SpS baseline.
+    drafter: ModelW,
+    medusa: Vec<MedusaHead>,
+    hydra: HydraW,
+    eagle: EagleW,
+    globals: RwLock<BTreeMap<String, Tensor>>,
+    init_globals: BTreeMap<String, Tensor>,
+}
+
+impl ReferenceBackend {
+    pub fn new(cfg: ReferenceConfig) -> Result<ReferenceBackend> {
+        ensure!(
+            cfg.split_layer >= 1 && cfg.split_layer < cfg.n_layers,
+            "split_layer {} must be inside 1..{}",
+            cfg.split_layer,
+            cfg.n_layers
+        );
+        ensure!(
+            cfg.prefill_seq < cfg.max_seq,
+            "prefill_seq must leave decode headroom"
+        );
+        let (d, v) = (cfg.d_model, cfg.vocab_size);
+        let mut rng = Rng::new(cfg.seed);
+        let target = ModelW::init(
+            &mut rng.fork(1), d, cfg.d_ff, v, cfg.n_layers, cfg.max_seq,
+            cfg.norm_eps,
+        );
+        let drafter = ModelW::init(
+            &mut rng.fork(2), d, cfg.d_ff, v, cfg.sps_layers, cfg.max_seq,
+            cfg.norm_eps,
+        );
+        let g = |rng: &mut Rng, n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+        let mut hrng = rng.fork(3);
+        let medusa = (0..cfg.k_spec)
+            .map(|_| MedusaHead {
+                u: g(&mut hrng, d * cfg.medusa_hidden, 0.3),
+                w: g(&mut hrng, cfg.medusa_hidden * v, 0.3),
+            })
+            .collect();
+        let hydra = HydraW {
+            w0: g(&mut hrng, d * cfg.hydra_hidden, 0.3),
+            ws: g(&mut hrng, cfg.hydra_hidden * cfg.hydra_hidden, 0.3),
+            we: g(&mut hrng, d * cfg.hydra_hidden, 0.3),
+            w: g(&mut hrng, cfg.hydra_hidden * v, 0.3),
+        };
+        let eagle = EagleW {
+            w1: g(&mut hrng, 2 * d * cfg.eagle_hidden, 0.2),
+            w2: g(&mut hrng, cfg.eagle_hidden * d, 0.2),
+        };
+
+        // LoRA starts at zero delta (B = 0): the draft head initially
+        // equals the transplanted base head, and online KD moves it.
+        let mut grng = rng.fork(4);
+        let r = cfg.lora_rank;
+        let mut init_globals = BTreeMap::new();
+        init_globals.insert(
+            "lora.A".to_string(),
+            Tensor::f32(vec![v, r], g(&mut grng, v * r, 0.02)),
+        );
+        init_globals.insert(
+            "lora.B".to_string(),
+            Tensor::zeros_f32(vec![r, d]),
+        );
+        for name in ["adam.mA", "adam.vA"] {
+            init_globals.insert(name.to_string(), Tensor::zeros_f32(vec![v, r]));
+        }
+        for name in ["adam.mB", "adam.vB"] {
+            init_globals.insert(name.to_string(), Tensor::zeros_f32(vec![r, d]));
+        }
+        let globals = RwLock::new(init_globals.clone());
+
+        Ok(ReferenceBackend {
+            cfg,
+            target,
+            drafter,
+            medusa,
+            hydra,
+            eagle,
+            globals,
+            init_globals,
+        })
+    }
+
+    fn global(&self, name: &str) -> Result<Tensor> {
+        self.globals
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("global buffer '{name}' missing"))
+    }
+
+    /// Clone the (k, v) cache pair into mutable vectors, shape-checked
+    /// against the artifact's kv ports.
+    fn kv_clone(&self, spec: &ArtifactSpec, kv: &[Buffer])
+        -> Result<(Vec<f32>, Vec<f32>, Vec<usize>)>
+    {
+        let ports: Vec<_> = spec.params_with_role(Role::Kv).collect();
+        ensure!(
+            ports.len() == 2 && kv.len() == 2,
+            "{}: expected a k/v cache pair, got {}",
+            spec.name,
+            kv.len()
+        );
+        let kt = kv[0].as_host()?;
+        let vt = kv[1].as_host()?;
+        for (t, port) in [(kt, ports[0]), (vt, ports[1])] {
+            ensure!(
+                t.shape == port.shape,
+                "{}: kv '{}' shape {:?} != manifest {:?}",
+                spec.name, port.name, t.shape, port.shape
+            );
+        }
+        Ok((kt.as_f32()?.to_vec(), vt.as_f32()?.to_vec(), kt.shape.clone()))
+    }
+
+    fn kv_wrap(shape: &[usize], kc: Vec<f32>, vc: Vec<f32>) -> Vec<Buffer> {
+        vec![
+            Buffer::host(Tensor::f32(shape.to_vec(), kc)),
+            Buffer::host(Tensor::f32(shape.to_vec(), vc)),
+        ]
+    }
+
+    fn lora(&self) -> Result<(Tensor, Tensor)> {
+        Ok((self.global("lora.A")?, self.global("lora.B")?))
+    }
+
+    // ---- artifact implementations ------------------------------------
+
+    fn prefill_shallow(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                       inputs: &[Tensor]) -> Result<CallOut> {
+        let toks = inputs[0].as_i32()?;
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let split = self.cfg.split_layer;
+        let mut rows = Vec::with_capacity(toks.len() * m.d);
+        for (pos, &t) in toks.iter().enumerate() {
+            let mut h = m.embed_row(t as usize)?;
+            m.step_layers(0, split, &mut h, &mut kc, &mut vc, pos)?;
+            rows.extend_from_slice(&h);
+        }
+        Ok(CallOut {
+            outputs: vec![Tensor::f32(vec![toks.len(), m.d], rows)],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    fn prefill_deep(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                    inputs: &[Tensor]) -> Result<CallOut> {
+        let hk = &inputs[0];
+        let len = inputs[1].as_i32()?[0] as usize;
+        let p = hk.shape[0];
+        ensure!(len >= 1 && len <= p, "prefill length {len} out of 1..={p}");
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);
+        let mut last = Vec::new();
+        for pos in 0..p {
+            let mut h = hk.row_f32(pos)?.to_vec();
+            m.step_layers(split, l, &mut h, &mut kc, &mut vc, pos)?;
+            if pos == len - 1 {
+                last = h.clone();
+            }
+        }
+        Ok(CallOut {
+            outputs: vec![Tensor::f32(vec![m.vocab], m.logits(&last))],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    /// `prefill_full` / `sps_prefill`: a complete model over a padded
+    /// prompt; returns last-position logits + hidden state.
+    fn full_prefill(&self, m: &ModelW, spec: &ArtifactSpec, kv: &[Buffer],
+                    inputs: &[Tensor]) -> Result<CallOut> {
+        let toks = inputs[0].as_i32()?;
+        let len = inputs[1].as_i32()?[0] as usize;
+        ensure!(len >= 1 && len <= toks.len(), "prefill length {len} bad");
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let nl = m.layers.len();
+        let mut last = Vec::new();
+        for (pos, &t) in toks.iter().enumerate() {
+            let mut h = m.embed_row(t as usize)?;
+            m.step_layers(0, nl, &mut h, &mut kc, &mut vc, pos)?;
+            if pos == len - 1 {
+                last = h.clone();
+            }
+        }
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::f32(vec![m.vocab], m.logits(&last)),
+                Tensor::f32(vec![m.d], last),
+            ],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    /// `target_step` / `sps_draft_step`: one full-model decode step.
+    fn full_step(&self, m: &ModelW, spec: &ArtifactSpec, kv: &[Buffer],
+                 inputs: &[Tensor]) -> Result<CallOut> {
+        let tok = inputs[0].as_i32()?[0];
+        let pos = inputs[1].as_i32()?[0] as usize;
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let nl = m.layers.len();
+        let mut h = m.embed_row(tok as usize)?;
+        m.step_layers(0, nl, &mut h, &mut kc, &mut vc, pos)?;
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::f32(vec![m.vocab], m.logits(&h)),
+                Tensor::f32(vec![m.d], h),
+            ],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    fn target_verify_block(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                           inputs: &[Tensor]) -> Result<CallOut> {
+        let toks = inputs[0].as_i32()?;
+        let pos = inputs[1].as_i32()?[0] as usize;
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let nl = m.layers.len();
+        let b = toks.len();
+        let mut logits = Vec::with_capacity(b * m.vocab);
+        let mut hl = Vec::with_capacity(b * m.d);
+        for (i, &t) in toks.iter().enumerate() {
+            let mut h = m.embed_row(t as usize)?;
+            m.step_layers(0, nl, &mut h, &mut kc, &mut vc, pos + i)?;
+            logits.extend_from_slice(&m.logits(&h));
+            hl.extend_from_slice(&h);
+        }
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::f32(vec![b, m.vocab], logits),
+                Tensor::f32(vec![b, m.d], hl),
+            ],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    fn draft_step(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                  inputs: &[Tensor]) -> Result<CallOut> {
+        let tok = inputs[0].as_i32()?[0];
+        let pos = inputs[1].as_i32()?[0] as usize;
+        let (a, b) = self.lora()?;
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let split = self.cfg.split_layer;
+        let mut h = m.embed_row(tok as usize)?;
+        m.step_layers(0, split, &mut h, &mut kc, &mut vc, pos)?;
+        let logits = m.draft_logits(
+            &h, a.as_f32()?, b.as_f32()?, self.cfg.lora_rank,
+            self.cfg.lora_gamma,
+        );
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::f32(vec![m.vocab], logits),
+                Tensor::f32(vec![m.d], h),
+            ],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    /// Fused k_spec-step draft loop: greedy argmax between steps happens
+    /// "in-graph" (here: in the interpreter), one call instead of k.
+    fn draft_block(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                   inputs: &[Tensor]) -> Result<CallOut> {
+        let mut tok = inputs[0].as_i32()?[0];
+        let pos = inputs[1].as_i32()?[0] as usize;
+        let (a, b) = self.lora()?;
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let (split, k) = (self.cfg.split_layer, self.cfg.k_spec);
+        let mut drafted = Vec::with_capacity(k);
+        let mut rows = Vec::with_capacity(k * m.d);
+        for i in 0..k {
+            let mut h = m.embed_row(tok as usize)?;
+            m.step_layers(0, split, &mut h, &mut kc, &mut vc, pos + i)?;
+            let logits = m.draft_logits(
+                &h, a.as_f32()?, b.as_f32()?, self.cfg.lora_rank,
+                self.cfg.lora_gamma,
+            );
+            let t = ModelW::greedy(&logits);
+            rows.extend_from_slice(&h);
+            drafted.push(t as i32);
+            tok = t as i32;
+        }
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::i32(vec![k], drafted),
+                Tensor::f32(vec![k, m.d], rows),
+            ],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    fn verify_block(&self, spec: &ArtifactSpec, kv: &[Buffer],
+                    inputs: &[Tensor]) -> Result<CallOut> {
+        let hk = &inputs[0];
+        let pos = inputs[1].as_i32()?[0] as usize;
+        let b = hk.shape[0];
+        let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
+        let m = &self.target;
+        let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);
+        let mut logits = Vec::with_capacity(b * m.vocab);
+        for i in 0..b {
+            let mut h = hk.row_f32(i)?.to_vec();
+            m.step_layers(split, l, &mut h, &mut kc, &mut vc, pos + i)?;
+            logits.extend_from_slice(&m.logits(&h));
+        }
+        Ok(CallOut {
+            outputs: vec![Tensor::f32(vec![b, m.vocab], logits)],
+            kv: Self::kv_wrap(&shape, kc, vc),
+        })
+    }
+
+    fn medusa_heads(&self, inputs: &[Tensor]) -> Result<CallOut> {
+        let m = &self.target;
+        let hn = model::rmsnorm(inputs[0].as_f32()?, &m.final_norm, m.eps);
+        let mut logits = Vec::with_capacity(self.medusa.len() * m.vocab);
+        for head in &self.medusa {
+            let mut a = matvec(&hn, &head.u, self.cfg.medusa_hidden);
+            for x in a.iter_mut() {
+                *x = *x / (1.0 + (-*x).exp());
+            }
+            logits.extend_from_slice(&matvec(&a, &head.w, m.vocab));
+        }
+        Ok(CallOut {
+            outputs: vec![Tensor::f32(vec![self.medusa.len(), m.vocab], logits)],
+            kv: Vec::new(),
+        })
+    }
+
+    fn hydra_chain(&self, inputs: &[Tensor]) -> Result<CallOut> {
+        let m = &self.target;
+        let hh = self.cfg.hydra_hidden;
+        let hn = model::rmsnorm(inputs[0].as_f32()?, &m.final_norm, m.eps);
+        let mut tok = inputs[1].as_i32()?[0];
+        let silu = |v: &mut Vec<f32>| {
+            for x in v.iter_mut() {
+                *x = *x / (1.0 + (-*x).exp());
+            }
+        };
+        let mut s = matvec(&hn, &self.hydra.w0, hh);
+        silu(&mut s);
+        let k = self.cfg.k_spec;
+        let mut toks = Vec::with_capacity(k);
+        let mut logits = Vec::with_capacity(k * m.vocab);
+        for _ in 0..k {
+            let e = m.embed_row(tok as usize)?;
+            let mut pre = matvec(&s, &self.hydra.ws, hh);
+            let ee = matvec(&e, &self.hydra.we, hh);
+            for j in 0..hh {
+                pre[j] += ee[j];
+            }
+            silu(&mut pre);
+            s = pre;
+            let lg = matvec(&s, &self.hydra.w, m.vocab);
+            let t = ModelW::greedy(&lg);
+            toks.push(t as i32);
+            logits.extend_from_slice(&lg);
+            tok = t as i32;
+        }
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::i32(vec![k], toks),
+                Tensor::f32(vec![k, m.vocab], logits),
+            ],
+            kv: Vec::new(),
+        })
+    }
+
+    fn eagle_step(&self, inputs: &[Tensor]) -> Result<CallOut> {
+        let m = &self.target;
+        let feat = inputs[0].as_f32()?;
+        let tok = inputs[1].as_i32()?[0];
+        let e = m.embed_row(tok as usize)?;
+        let mut cat = Vec::with_capacity(2 * m.d);
+        cat.extend_from_slice(feat);
+        cat.extend_from_slice(&e);
+        let mut mid = matvec(&cat, &self.eagle.w1, self.cfg.eagle_hidden);
+        for x in mid.iter_mut() {
+            *x = *x / (1.0 + (-*x).exp());
+        }
+        let delta = matvec(&mid, &self.eagle.w2, m.d);
+        let f: Vec<f32> = feat.iter().zip(&delta).map(|(a, b)| a + b).collect();
+        Ok(CallOut {
+            outputs: vec![
+                Tensor::f32(vec![m.vocab], m.logits(&f)),
+                Tensor::f32(vec![m.d], f),
+            ],
+            kv: Vec::new(),
+        })
+    }
+
+    /// The §3.4 composite objective with hand-derived LoRA gradients and
+    /// a fused bias-corrected Adam step. Hyper/metrics layouts match
+    /// `python/compile/train.py` exactly.
+    fn train_step(&self, inputs: &[Tensor]) -> Result<CallOut> {
+        let m = &self.target;
+        let (d, v, r) = (m.d, m.vocab, self.cfg.lora_rank);
+        let gamma = self.cfg.lora_gamma;
+        let hk = &inputs[0];
+        let actions = inputs[1].as_i32()?;
+        let logits_phi = &inputs[2];
+        let rewards = inputs[3].as_f32()?;
+        let mask = inputs[4].as_f32()?;
+        let hyper = inputs[5].as_f32()?;
+        ensure!(hyper.len() == 8, "hyper vector must be f32[8]");
+        let n = actions.len();
+        ensure!(hk.shape == vec![n, d], "hk must be [N, d_model]");
+        ensure!(logits_phi.shape == vec![n, v], "logits_phi must be [N, vocab]");
+        let (lam_pg, lam_kl, w_ce, w_ent, w_rl, baseline, lr, t) = (
+            hyper[0], hyper[1], hyper[2], hyper[3], hyper[4], hyper[5],
+            hyper[6], hyper[7],
+        );
+
+        let (a_t, b_t) = self.lora()?;
+        let mut a = a_t.as_f32()?.to_vec();
+        let mut b = b_t.as_f32()?.to_vec();
+
+        let mut n_acc = 0.0f32;
+        let mut n_all = 0.0f32;
+        for i in 0..n {
+            n_acc += mask[i] * rewards[i];
+            n_all += mask[i];
+        }
+        let n_acc = n_acc.max(1.0);
+        let n_all = n_all.max(1.0);
+
+        let mut ga = vec![0.0f32; v * r];
+        let mut gb = vec![0.0f32; r * d];
+        let (mut s_pg, mut s_kl, mut s_ent, mut s_rl, mut s_acc) =
+            (0.0f32, 0.0f32, 0.0f32, 0.0f32, 0.0f32);
+
+        for i in 0..n {
+            let h = hk.row_f32(i)?;
+            let hn = model::rmsnorm(h, &m.final_norm, m.eps);
+            let u: Vec<f32> = (0..r)
+                .map(|rr| dot(&b[rr * d..(rr + 1) * d], &hn))
+                .collect();
+            let z: Vec<f32> = (0..v)
+                .map(|vi| {
+                    dot(&m.lm_head[vi * d..(vi + 1) * d], &hn)
+                        + gamma * dot(&a[vi * r..(vi + 1) * r], &u)
+                })
+                .collect();
+            let lse = logsumexp(&z);
+            let logp: Vec<f32> = z.iter().map(|zi| zi - lse).collect();
+            let p: Vec<f32> = logp.iter().map(|lp| lp.exp()).collect();
+            let phi = logits_phi.row_f32(i)?;
+            let lse_q = logsumexp(phi);
+            let logq: Vec<f32> = phi.iter().map(|qi| qi - lse_q).collect();
+
+            let act = actions[i] as usize;
+            ensure!(act < v, "action {act} >= vocab {v}");
+            let ce = -logp[act];
+            let mut kl = 0.0f32;
+            let mut ent = 0.0f32;
+            for vi in 0..v {
+                kl += p[vi] * (logp[vi] - logq[vi]);
+                ent -= p[vi] * logp[vi];
+            }
+            let acc = mask[i] * rewards[i];
+            let adv = rewards[i] - baseline;
+            s_pg += acc * ce;
+            s_kl += mask[i] * kl;
+            s_ent += mask[i] * ent;
+            s_rl += -mask[i] * adv * logp[act];
+            s_acc += acc;
+
+            // dL/dz for this example (see train.py's dvi_loss):
+            //   (lam_pg + w_ce) * acc/n_acc        * (p - onehot)
+            //   + lam_kl * mask/n_all              * p .* (s - KL),  s = logp - logq
+            //   + w_ent * mask/n_all               * p .* (logp + H)
+            //   + w_rl  * mask/n_all * adv         * (p - onehot)
+            let c_ce = (lam_pg + w_ce) * acc / n_acc;
+            let c_kl = lam_kl * mask[i] / n_all;
+            let c_ent = w_ent * mask[i] / n_all;
+            let c_rl = w_rl * mask[i] * adv / n_all;
+            let mut gz = vec![0.0f32; v];
+            for vi in 0..v {
+                let one = if vi == act { 1.0 } else { 0.0 };
+                gz[vi] = (c_ce + c_rl) * (p[vi] - one)
+                    + c_kl * p[vi] * ((logp[vi] - logq[vi]) - kl)
+                    + c_ent * p[vi] * (logp[vi] + ent);
+            }
+            // z = W·hn + γ A (B·hn):
+            //   dz/dA[vi][rr] = γ gz[vi] u[rr]
+            //   dz/dB[rr][dd] = γ (Aᵀ gz)[rr] hn[dd]
+            for vi in 0..v {
+                if gz[vi] == 0.0 {
+                    continue;
+                }
+                let garow = &mut ga[vi * r..(vi + 1) * r];
+                for rr in 0..r {
+                    garow[rr] += gamma * gz[vi] * u[rr];
+                }
+            }
+            let mut at_gz = vec![0.0f32; r];
+            for vi in 0..v {
+                let arow = &a[vi * r..(vi + 1) * r];
+                for rr in 0..r {
+                    at_gz[rr] += arow[rr] * gz[vi];
+                }
+            }
+            for rr in 0..r {
+                let coeff = gamma * at_gz[rr];
+                if coeff == 0.0 {
+                    continue;
+                }
+                let gbrow = &mut gb[rr * d..(rr + 1) * d];
+                for dd in 0..d {
+                    gbrow[dd] += coeff * hn[dd];
+                }
+            }
+        }
+
+        let l_pg = s_pg / n_acc;
+        let l_kl = s_kl / n_all;
+        let l_ce = l_pg;
+        let l_ent = s_ent / n_all;
+        let l_rl = s_rl / n_all;
+        let total = lam_pg * l_pg + lam_kl * l_kl + w_ce * l_ce
+            - w_ent * l_ent + w_rl * l_rl;
+        let batch_accept = s_acc / n_all;
+
+        let gnorm = (dot(&ga, &ga) + dot(&gb, &gb)).sqrt();
+
+        // Bias-corrected Adam on A and B (t >= 1 per the hyper contract).
+        let (b1, b2, eps) = (self.cfg.adam_b1, self.cfg.adam_b2, self.cfg.adam_eps);
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        let mut m_a = self.global("adam.mA")?.as_f32()?.to_vec();
+        let mut v_a = self.global("adam.vA")?.as_f32()?.to_vec();
+        let mut m_b = self.global("adam.mB")?.as_f32()?.to_vec();
+        let mut v_b = self.global("adam.vB")?.as_f32()?.to_vec();
+        let adam = |p: &mut [f32], g: &[f32], mm: &mut [f32], vv: &mut [f32]| {
+            for i in 0..p.len() {
+                mm[i] = b1 * mm[i] + (1.0 - b1) * g[i];
+                vv[i] = b2 * vv[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = mm[i] / bc1;
+                let vhat = vv[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        };
+        adam(&mut a, &ga, &mut m_a, &mut v_a);
+        adam(&mut b, &gb, &mut m_b, &mut v_b);
+
+        {
+            let mut g = self.globals.write().unwrap();
+            g.insert("lora.A".to_string(), Tensor::f32(vec![v, r], a));
+            g.insert("lora.B".to_string(), Tensor::f32(vec![r, d], b));
+            g.insert("adam.mA".to_string(), Tensor::f32(vec![v, r], m_a));
+            g.insert("adam.vA".to_string(), Tensor::f32(vec![v, r], v_a));
+            g.insert("adam.mB".to_string(), Tensor::f32(vec![r, d], m_b));
+            g.insert("adam.vB".to_string(), Tensor::f32(vec![r, d], v_b));
+        }
+
+        let metrics = vec![total, l_pg, l_kl, l_ce, l_ent, l_rl, batch_accept, gnorm];
+        Ok(CallOut {
+            outputs: vec![Tensor::f32(vec![8], metrics)],
+            kv: Vec::new(),
+        })
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>
+    {
+        match spec.name.as_str() {
+            "prefill_shallow" => self.prefill_shallow(spec, kv, inputs),
+            "prefill_deep" => self.prefill_deep(spec, kv, inputs),
+            "draft_step" => self.draft_step(spec, kv, inputs),
+            "draft_block" => self.draft_block(spec, kv, inputs),
+            "verify_block" => self.verify_block(spec, kv, inputs),
+            "prefill_full" => self.full_prefill(&self.target, spec, kv, inputs),
+            "target_step" => self.full_step(&self.target, spec, kv, inputs),
+            "target_verify_block" => self.target_verify_block(spec, kv, inputs),
+            "sps_prefill" => self.full_prefill(&self.drafter, spec, kv, inputs),
+            "sps_draft_step" => self.full_step(&self.drafter, spec, kv, inputs),
+            "medusa_heads" => self.medusa_heads(inputs),
+            "hydra_chain" => self.hydra_chain(inputs),
+            "eagle_step" => self.eagle_step(inputs),
+            "train_step" => self.train_step(inputs),
+            other => bail!("reference backend: unknown artifact '{other}'"),
+        }
+    }
+
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
+        Ok(spec
+            .params_with_role(Role::Kv)
+            .map(|port| Buffer::host(Tensor::zeros_f32(port.shape.clone())))
+            .collect())
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        Ok(Buffer::host(t.clone()))
+    }
+
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        let t = b.as_host()?;
+        ensure!(
+            t.dtype() == dtype && t.shape == shape,
+            "to_host: buffer is {:?}{:?}, wanted {:?}{:?}",
+            t.dtype(), t.shape, dtype, shape
+        );
+        Ok(t.clone())
+    }
+
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        self.globals
+            .write()
+            .unwrap()
+            .insert(name.to_string(), t.clone());
+        Ok(())
+    }
+
+    fn read_global(&self, name: &str) -> Result<Tensor> {
+        self.global(name)
+    }
+
+    fn reset_global(&self, name: &str) -> Result<()> {
+        let init = self
+            .init_globals
+            .get(name)
+            .with_context(|| format!("no initial value for global '{name}'"))?
+            .clone();
+        self.globals.write().unwrap().insert(name.to_string(), init);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new(ReferenceConfig::default()).unwrap()
+    }
+
+    fn train_inputs(be: &ReferenceBackend, reward: f32) -> Vec<Tensor> {
+        let cfg = &be.cfg;
+        let (n, d, v) = (cfg.batch_size, cfg.d_model, cfg.vocab_size);
+        let mut rng = Rng::new(9);
+        let hk: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let actions: Vec<i32> =
+            (0..n).map(|_| rng.usize_below(v) as i32).collect();
+        let phi: Vec<f32> =
+            (0..n * v).map(|_| rng.normal() as f32 * 2.0).collect();
+        vec![
+            Tensor::f32(vec![n, d], hk),
+            Tensor::i32(vec![n], actions),
+            Tensor::f32(vec![n, v], phi),
+            Tensor::f32(vec![n], vec![reward; n]),
+            Tensor::f32(vec![n], vec![1.0; n]),
+            // hyper: KL-only with lr 3e-3, step 1
+            Tensor::f32(vec![8], vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3e-3, 1.0]),
+        ]
+    }
+
+    #[test]
+    fn train_step_updates_lora_and_reset_restores() {
+        let be = backend();
+        let spec = synth::manifest(&be.cfg).artifact("train_step").unwrap().clone();
+        let before_a = be.read_global("lora.A").unwrap();
+        let before_b = be.read_global("lora.B").unwrap();
+        let out = be.call(&spec, &[], &train_inputs(&be, 1.0)).unwrap();
+        let m = out.outputs[0].as_f32().unwrap();
+        assert!(m.iter().all(|x| x.is_finite()), "metrics {m:?}");
+        assert!(m[7] > 0.0, "grad norm must be positive");
+        assert!((m[6] - 1.0).abs() < 1e-6, "batch accept with all-1 rewards");
+        // B starts at zero, so the KL gradient flows into B first.
+        let after_b = be.read_global("lora.B").unwrap();
+        assert!(
+            after_b.max_abs_diff(&before_b).unwrap() > 0.0,
+            "train_step left lora.B unchanged"
+        );
+        be.reset_global("lora.A").unwrap();
+        be.reset_global("lora.B").unwrap();
+        assert_eq!(
+            be.read_global("lora.A").unwrap().max_abs_diff(&before_a).unwrap(),
+            0.0
+        );
+    }
+
+    #[test]
+    fn repeated_kl_steps_reduce_kl() {
+        let be = backend();
+        let spec = synth::manifest(&be.cfg).artifact("train_step").unwrap().clone();
+        let inputs = train_inputs(&be, 1.0);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..60 {
+            let mut inp = inputs.clone();
+            // keep Adam bias correction honest: step index advances
+            inp[5] = Tensor::f32(
+                vec![8],
+                vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3e-3, (step + 1) as f32],
+            );
+            let out = be.call(&spec, &[], &inp).unwrap();
+            let kl = out.outputs[0].as_f32().unwrap()[2];
+            if step == 0 {
+                first = kl;
+            }
+            last = kl;
+        }
+        assert!(
+            last < first,
+            "KL-only training failed to reduce KL: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = backend();
+        let b = backend();
+        let spec = synth::manifest(&a.cfg).artifact("target_step").unwrap().clone();
+        let kv_a = a.fresh_kv(&spec).unwrap();
+        let kv_b = b.fresh_kv(&spec).unwrap();
+        let inputs = vec![Tensor::scalar_i32(5), Tensor::scalar_i32(0)];
+        let oa = a.call(&spec, &kv_a, &inputs).unwrap();
+        let ob = b.call(&spec, &kv_b, &inputs).unwrap();
+        assert_eq!(oa.outputs[0], ob.outputs[0]);
+    }
+
+    #[test]
+    fn unknown_artifact_fails_loudly() {
+        let be = backend();
+        let spec = ArtifactSpec {
+            name: "banana".into(),
+            file: std::path::PathBuf::from(""),
+            params: vec![],
+            outputs: vec![],
+        };
+        assert!(be.call(&spec, &[], &[]).is_err());
+    }
+}

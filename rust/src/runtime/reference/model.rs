@@ -1,0 +1,331 @@
+//! The pure-Rust split-transformer interpreter behind
+//! [`super::ReferenceBackend`].
+//!
+//! A deliberately tiny llama-shaped model (single attention head,
+//! RMSNorm, SiLU MLP) evaluated strictly **one position at a time**:
+//! prefill is a loop over the same per-position step the decode path
+//! uses, and the full model is the shallow stack composed with the deep
+//! stack over the *same* layer weights. That makes the losslessness
+//! contract hold bitwise by construction:
+//!
+//!   * prefill vs. step-by-step decode produce identical hidden states
+//!     (same f32 ops in the same order per (layer, position) cell);
+//!   * `prefill_full`/`target_step` equal `prefill_shallow→prefill_deep`
+//!     and `draft path→verify_block` (the deep stack consumes exactly
+//!     the shallow stack's output rows).
+//!
+//! KV caches are position-indexed `[n_layers, max_seq, d]` tensors; a
+//! step at position p writes slot p before attending, and queries only
+//! attend slots j <= p — stale speculative slots are never visible,
+//! mirroring `spec::seq`'s invariants.
+
+use anyhow::{ensure, Result};
+
+use crate::util::math::argmax;
+use crate::util::rng::Rng;
+
+/// One transformer layer's weights. Matrices are row-major `[in, out]`
+/// (`y[o] = Σ_i x[i] * w[i*out + o]`), norm gains are `[d]`.
+pub struct LayerW {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub rms_attn: Vec<f32>,
+    pub rms_mlp: Vec<f32>,
+}
+
+/// A complete model: embedding, `n_layers` layers, final norm, LM head.
+/// The DVI split views `layers[..split]` as the shallow (draft) stack
+/// and `layers[split..]` as the deep (verify) stack.
+pub struct ModelW {
+    pub d: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub eps: f32,
+    /// `[vocab, d]`, row per token id.
+    pub embed: Vec<f32>,
+    pub layers: Vec<LayerW>,
+    /// `[d]` gain of the pre-head RMSNorm.
+    pub final_norm: Vec<f32>,
+    /// `[vocab, d]`, row per vocab entry: `logits[v] = head[v] · hn`.
+    pub lm_head: Vec<f32>,
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y = x @ W` with `W` row-major `[in, out]`.
+pub fn matvec(x: &[f32], w: &[f32], n_out: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len() * n_out, w.len());
+    let mut y = vec![0.0f32; n_out];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n_out..(i + 1) * n_out];
+        for o in 0..n_out {
+            y[o] += xi * row[o];
+        }
+    }
+    y
+}
+
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32) -> Vec<f32> {
+    let ms = dot(x, x) / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    x.iter().zip(gain).map(|(&xi, &g)| xi * inv * g).collect()
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl ModelW {
+    /// Seeded random init. Residual-branch output projections get a
+    /// smaller scale so deep layers perturb rather than scramble the
+    /// shallow representation — the drafter starts plausibly aligned
+    /// with the verifier, like a trained split backbone would.
+    pub fn init(rng: &mut Rng, d: usize, ff: usize, vocab: usize,
+                n_layers: usize, max_seq: usize, eps: f32) -> ModelW {
+        let g = |rng: &mut Rng, n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+        let proj = 1.0 / (d as f32).sqrt();
+        let layers = (0..n_layers)
+            .map(|_| LayerW {
+                wq: g(rng, d * d, proj),
+                wk: g(rng, d * d, proj),
+                wv: g(rng, d * d, proj),
+                wo: g(rng, d * d, 0.1),
+                w1: g(rng, d * ff, proj),
+                w2: g(rng, ff * d, 0.1),
+                rms_attn: vec![1.0; d],
+                rms_mlp: vec![1.0; d],
+            })
+            .collect();
+        ModelW {
+            d,
+            ff,
+            vocab,
+            max_seq,
+            eps,
+            embed: g(rng, vocab * d, 1.0),
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: g(rng, vocab * d, 0.7),
+        }
+    }
+
+    pub fn embed_row(&self, tok: usize) -> Result<Vec<f32>> {
+        ensure!(tok < self.vocab, "token id {tok} >= vocab {}", self.vocab);
+        Ok(self.embed[tok * self.d..(tok + 1) * self.d].to_vec())
+    }
+
+    /// Run layers `lo..hi` for one position. `kc`/`vc` are the caches
+    /// for exactly those layers, `[(hi-lo), max_seq, d]` flattened;
+    /// slot `pos` is written before attending and queries see slots
+    /// `0..=pos` only.
+    pub fn step_layers(
+        &self,
+        lo: usize,
+        hi: usize,
+        h: &mut Vec<f32>,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        pos: usize,
+    ) -> Result<()> {
+        let d = self.d;
+        ensure!(pos < self.max_seq, "position {pos} >= max_seq {}", self.max_seq);
+        ensure!(hi <= self.layers.len() && lo <= hi, "bad layer range {lo}..{hi}");
+        ensure!(kc.len() == (hi - lo) * self.max_seq * d, "kv cache size mismatch");
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        for (row, layer) in self.layers[lo..hi].iter().enumerate() {
+            let base = row * self.max_seq * d;
+            let xn = rmsnorm(h, &layer.rms_attn, self.eps);
+            let q = matvec(&xn, &layer.wq, d);
+            let k = matvec(&xn, &layer.wk, d);
+            let v = matvec(&xn, &layer.wv, d);
+            kc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&k);
+            vc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&v);
+
+            // Causal single-head attention over slots 0..=pos.
+            let mut scores = Vec::with_capacity(pos + 1);
+            let mut max_s = f32::NEG_INFINITY;
+            for j in 0..=pos {
+                let s = dot(&q, &kc[base + j * d..base + (j + 1) * d]) * inv_sqrt_d;
+                max_s = max_s.max(s);
+                scores.push(s);
+            }
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max_s).exp();
+                denom += *s;
+            }
+            let mut attn = vec![0.0f32; d];
+            for (j, &w) in scores.iter().enumerate() {
+                let vrow = &vc[base + j * d..base + (j + 1) * d];
+                let wn = w / denom;
+                for di in 0..d {
+                    attn[di] += wn * vrow[di];
+                }
+            }
+            let o = matvec(&attn, &layer.wo, d);
+            for di in 0..d {
+                h[di] += o[di];
+            }
+
+            let xm = rmsnorm(h, &layer.rms_mlp, self.eps);
+            let mut a = matvec(&xm, &layer.w1, self.ff);
+            for x in a.iter_mut() {
+                *x = silu(*x);
+            }
+            let m = matvec(&a, &layer.w2, d);
+            for di in 0..d {
+                h[di] += m[di];
+            }
+        }
+        Ok(())
+    }
+
+    /// Verifier logits: `lm_head @ rmsnorm(h, final_norm)`.
+    pub fn logits(&self, h: &[f32]) -> Vec<f32> {
+        let hn = rmsnorm(h, &self.final_norm, self.eps);
+        (0..self.vocab)
+            .map(|v| dot(&self.lm_head[v * self.d..(v + 1) * self.d], &hn))
+            .collect()
+    }
+
+    /// Draft-head logits (paper §3.1): `(W_S + γ·A@B) @ rmsnorm(h)` with
+    /// `A: [vocab, r]`, `B: [r, d]`. Factored as `u = B·hn`,
+    /// `logits[v] = W_S[v]·hn + γ·A[v]·u` — the exact formula the
+    /// reference `train_step` differentiates.
+    pub fn draft_logits(&self, h: &[f32], a: &[f32], b: &[f32], rank: usize,
+                        gamma: f32) -> Vec<f32> {
+        let hn = rmsnorm(h, &self.final_norm, self.eps);
+        let u: Vec<f32> = (0..rank)
+            .map(|r| dot(&b[r * self.d..(r + 1) * self.d], &hn))
+            .collect();
+        (0..self.vocab)
+            .map(|v| {
+                dot(&self.lm_head[v * self.d..(v + 1) * self.d], &hn)
+                    + gamma * dot(&a[v * rank..(v + 1) * rank], &u)
+            })
+            .collect()
+    }
+
+    /// Greedy token from logits — must match `util::math::argmax`
+    /// semantics (first max wins) so in-graph and coordinator-side
+    /// greedy agree.
+    pub fn greedy(logits: &[f32]) -> u32 {
+        argmax(logits) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelW {
+        let mut rng = Rng::new(11);
+        ModelW::init(&mut rng, 8, 16, 32, 3, 24, 1e-5)
+    }
+
+    #[test]
+    fn step_is_deterministic() {
+        let m = tiny();
+        let run = || -> Vec<f32> {
+            let mut h = m.embed_row(5).unwrap();
+            let mut kc = vec![0.0; 3 * 24 * 8];
+            let mut vc = vec![0.0; 3 * 24 * 8];
+            m.step_layers(0, 3, &mut h, &mut kc, &mut vc, 0).unwrap();
+            h
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// The core split-model identity: shallow-then-deep equals full.
+    #[test]
+    fn split_composes_to_full() {
+        let m = tiny();
+        let toks = [5usize, 9, 1, 30, 2];
+        let split = 1;
+
+        // Full stack, position by position.
+        let mut kc_f = vec![0.0; 3 * 24 * 8];
+        let mut vc_f = vec![0.0; 3 * 24 * 8];
+        let mut full_h = Vec::new();
+        for (pos, &t) in toks.iter().enumerate() {
+            let mut h = m.embed_row(t).unwrap();
+            m.step_layers(0, 3, &mut h, &mut kc_f, &mut vc_f, pos).unwrap();
+            full_h.push(h);
+        }
+
+        // Shallow stack then deep stack on the shallow outputs.
+        let mut kc_s = vec![0.0; split * 24 * 8];
+        let mut vc_s = vec![0.0; split * 24 * 8];
+        let mut mids = Vec::new();
+        for (pos, &t) in toks.iter().enumerate() {
+            let mut h = m.embed_row(t).unwrap();
+            m.step_layers(0, split, &mut h, &mut kc_s, &mut vc_s, pos).unwrap();
+            mids.push(h);
+        }
+        let deep = 3 - split;
+        let mut kc_d = vec![0.0; deep * 24 * 8];
+        let mut vc_d = vec![0.0; deep * 24 * 8];
+        for (pos, mid) in mids.into_iter().enumerate() {
+            let mut h = mid;
+            m.step_layers(split, 3, &mut h, &mut kc_d, &mut vc_d, pos).unwrap();
+            assert_eq!(h, full_h[pos], "split != full at position {pos}");
+        }
+    }
+
+    /// Speculative slots are invisible: writing garbage at positions
+    /// beyond the current feed then overwriting it must reproduce the
+    /// clean run bitwise (the lossless-rollback property).
+    #[test]
+    fn stale_slots_are_masked() {
+        let m = tiny();
+        let mut kc_a = vec![0.0; 3 * 24 * 8];
+        let mut vc_a = vec![0.0; 3 * 24 * 8];
+        let mut kc_b = vec![7.5; 3 * 24 * 8]; // garbage everywhere
+        let mut vc_b = vec![-3.25; 3 * 24 * 8];
+        for (pos, t) in [4usize, 8, 15].into_iter().enumerate() {
+            let mut ha = m.embed_row(t).unwrap();
+            m.step_layers(0, 3, &mut ha, &mut kc_a, &mut vc_a, pos).unwrap();
+            let mut hb = m.embed_row(t).unwrap();
+            m.step_layers(0, 3, &mut hb, &mut kc_b, &mut vc_b, pos).unwrap();
+            assert_eq!(ha, hb, "stale cache slots leaked at position {pos}");
+        }
+    }
+
+    #[test]
+    fn draft_head_matches_verifier_at_zero_lora() {
+        let m = tiny();
+        let h = m.embed_row(3).unwrap();
+        let a = vec![0.3; 32 * 2];
+        let b = vec![0.0; 2 * 8]; // B = 0 => delta = 0
+        let base = m.logits(&h);
+        let draft = m.draft_logits(&h, &a, &b, 2, 2.0);
+        assert_eq!(base, draft);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let m = tiny();
+        let mut h = vec![0.0; 8];
+        let mut kc = vec![0.0; 3 * 24 * 8];
+        let mut vc = vec![0.0; 3 * 24 * 8];
+        assert!(m.step_layers(0, 3, &mut h, &mut kc, &mut vc, 24).is_err());
+        assert!(m.embed_row(32).is_err());
+    }
+}

@@ -1,0 +1,399 @@
+//! In-memory manifest, vocabulary, and prompt-set synthesis for the
+//! reference backend. Mirrors what `python/compile/aot.py` writes to
+//! `artifacts/` — same artifact names, same port roles and ordering,
+//! same config keys — but generated from a [`super::ReferenceConfig`]
+//! with zero files on disk.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest, Port, Role};
+use crate::runtime::tensor::DType;
+use crate::tokenizer::{BOS, SEP};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{PromptSample, PromptSet, TASK_NAMES};
+
+use super::ReferenceConfig;
+
+fn port(name: &str, shape: Vec<usize>, dtype: DType, role: Role) -> Port {
+    Port { name: name.to_string(), shape, dtype, role }
+}
+
+/// Build the full manifest: every artifact the PJRT exporter would
+/// produce, with shapes taken from the reference config.
+pub fn manifest(cfg: &ReferenceConfig) -> Manifest {
+    let (d, v, p, b, r, n) = (
+        cfg.d_model,
+        cfg.vocab_size,
+        cfg.prefill_seq,
+        cfg.k_spec,
+        cfg.lora_rank,
+        cfg.batch_size,
+    );
+    let sh_kv = vec![cfg.split_layer, cfg.max_seq, d];
+    let dp_kv = vec![cfg.n_layers - cfg.split_layer, cfg.max_seq, d];
+    let fl_kv = vec![cfg.n_layers, cfg.max_seq, d];
+    let sps_kv = vec![cfg.sps_layers, cfg.max_seq, d];
+    let f = DType::F32;
+    let i = DType::I32;
+
+    let mut artifacts = BTreeMap::new();
+    let mut add = |name: &str, params: Vec<Port>, outputs: Vec<Port>| {
+        artifacts.insert(
+            name.to_string(),
+            ArtifactSpec {
+                name: name.to_string(),
+                file: PathBuf::from("<reference>"),
+                params,
+                outputs,
+            },
+        );
+    };
+
+    add(
+        "prefill_shallow",
+        vec![
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
+            port("tokens", vec![p], i, Role::In),
+        ],
+        vec![
+            port("hk_seq", vec![p, d], f, Role::Out),
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
+        ],
+    );
+    add(
+        "prefill_deep",
+        vec![
+            port("kv_dp_k", dp_kv.clone(), f, Role::Kv),
+            port("kv_dp_v", dp_kv.clone(), f, Role::Kv),
+            port("hk_seq", vec![p, d], f, Role::In),
+            port("length", vec![], i, Role::In),
+        ],
+        vec![
+            port("logits_last", vec![v], f, Role::Out),
+            port("kv_dp_k", dp_kv.clone(), f, Role::Kv),
+            port("kv_dp_v", dp_kv.clone(), f, Role::Kv),
+        ],
+    );
+    add(
+        "draft_step",
+        vec![
+            port("lora.A", vec![v, r], f, Role::Global),
+            port("lora.B", vec![r, d], f, Role::Global),
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
+            port("tok", vec![], i, Role::In),
+            port("pos", vec![], i, Role::In),
+        ],
+        vec![
+            port("logits_theta", vec![v], f, Role::Out),
+            port("hk", vec![d], f, Role::Out),
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
+        ],
+    );
+    add(
+        "draft_block",
+        vec![
+            port("lora.A", vec![v, r], f, Role::Global),
+            port("lora.B", vec![r, d], f, Role::Global),
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
+            port("tok", vec![], i, Role::In),
+            port("pos", vec![], i, Role::In),
+        ],
+        vec![
+            port("drafted", vec![b], i, Role::Out),
+            port("hk_rows", vec![b, d], f, Role::Out),
+            port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
+            port("kv_sh_v", sh_kv, f, Role::Kv),
+        ],
+    );
+    add(
+        "verify_block",
+        vec![
+            port("kv_dp_k", dp_kv.clone(), f, Role::Kv),
+            port("kv_dp_v", dp_kv.clone(), f, Role::Kv),
+            port("hk_block", vec![b, d], f, Role::In),
+            port("pos", vec![], i, Role::In),
+        ],
+        vec![
+            port("logits_phi", vec![b, v], f, Role::Out),
+            port("kv_dp_k", dp_kv.clone(), f, Role::Kv),
+            port("kv_dp_v", dp_kv, f, Role::Kv),
+        ],
+    );
+    // Full-model artifacts (the AR/verifier substrate) and the SpS
+    // drafter share a shape family.
+    for (prefix, kv_name, kv_shape) in [
+        ("", "kv_fl", fl_kv),
+        ("sps_", "kv_sps", sps_kv),
+    ] {
+        let pre = |s: &str| -> String {
+            if prefix.is_empty() {
+                s.to_string()
+            } else {
+                format!("{prefix}{s}")
+            }
+        };
+        let (prefill_name, step_name) = if prefix.is_empty() {
+            ("prefill_full".to_string(), "target_step".to_string())
+        } else {
+            (pre("prefill"), pre("draft_step"))
+        };
+        add(
+            &prefill_name,
+            vec![
+                port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+                port("tokens", vec![p], i, Role::In),
+                port("length", vec![], i, Role::In),
+            ],
+            vec![
+                port("logits_last", vec![v], f, Role::Out),
+                port("hl_last", vec![d], f, Role::Out),
+                port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+            ],
+        );
+        add(
+            &step_name,
+            vec![
+                port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+                port("tok", vec![], i, Role::In),
+                port("pos", vec![], i, Role::In),
+            ],
+            vec![
+                port("logits", vec![v], f, Role::Out),
+                port("hl", vec![d], f, Role::Out),
+                port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+            ],
+        );
+        if prefix.is_empty() {
+            add(
+                "target_verify_block",
+                vec![
+                    port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                    port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+                    port("toks", vec![b], i, Role::In),
+                    port("pos", vec![], i, Role::In),
+                ],
+                vec![
+                    port("logits", vec![b, v], f, Role::Out),
+                    port("hl_block", vec![b, d], f, Role::Out),
+                    port(&format!("{kv_name}_k"), kv_shape.clone(), f, Role::Kv),
+                    port(&format!("{kv_name}_v"), kv_shape.clone(), f, Role::Kv),
+                ],
+            );
+        }
+    }
+    add(
+        "medusa_heads",
+        vec![port("hl", vec![d], f, Role::In)],
+        vec![port("logits", vec![b, v], f, Role::Out)],
+    );
+    add(
+        "hydra_chain",
+        vec![
+            port("hl", vec![d], f, Role::In),
+            port("tok0", vec![], i, Role::In),
+        ],
+        vec![
+            port("toks", vec![b], i, Role::Out),
+            port("logits", vec![b, v], f, Role::Out),
+        ],
+    );
+    add(
+        "eagle_step",
+        vec![
+            port("feat", vec![d], f, Role::In),
+            port("tok", vec![], i, Role::In),
+        ],
+        vec![
+            port("logits", vec![v], f, Role::Out),
+            port("feat_next", vec![d], f, Role::Out),
+        ],
+    );
+    add(
+        "train_step",
+        vec![
+            port("lora.A", vec![v, r], f, Role::Global),
+            port("lora.B", vec![r, d], f, Role::Global),
+            port("adam.mA", vec![v, r], f, Role::Global),
+            port("adam.vA", vec![v, r], f, Role::Global),
+            port("adam.mB", vec![r, d], f, Role::Global),
+            port("adam.vB", vec![r, d], f, Role::Global),
+            port("hk", vec![n, d], f, Role::In),
+            port("actions", vec![n], i, Role::In),
+            port("logits_phi", vec![n, v], f, Role::In),
+            port("rewards", vec![n], f, Role::In),
+            port("mask", vec![n], f, Role::In),
+            port("hyper", vec![8], f, Role::In),
+        ],
+        vec![
+            port("metrics", vec![8], f, Role::Out),
+            port("lora.A", vec![v, r], f, Role::Global),
+            port("lora.B", vec![r, d], f, Role::Global),
+            port("adam.mA", vec![v, r], f, Role::Global),
+            port("adam.vA", vec![v, r], f, Role::Global),
+            port("adam.mB", vec![r, d], f, Role::Global),
+            port("adam.vB", vec![r, d], f, Role::Global),
+        ],
+    );
+
+    let config_text = format!(
+        r#"{{"model":{{"vocab_size":{v},"d_model":{d},"n_layers":{nl},"split_layer":{sl},"max_seq":{ms}}},"spec":{{"k_spec":{b},"prefill_seq":{p},"max_new_tokens":{mn}}},"train":{{"batch_size":{n}}}}}"#,
+        nl = cfg.n_layers,
+        sl = cfg.split_layer,
+        ms = cfg.max_seq,
+        mn = cfg.max_new_tokens,
+    );
+    let config = Json::parse(&config_text).expect("reference config json");
+
+    Manifest {
+        dir: PathBuf::from("<reference>"),
+        artifacts,
+        prompts: BTreeMap::new(),
+        weights_file: PathBuf::from("<reference:weights>"),
+        vocab_file: PathBuf::from("<reference:vocab>"),
+        config,
+        exposures: Json::Null,
+    }
+}
+
+/// Closed synthetic vocabulary: the four specials then `wNNN` words.
+pub fn vocab(cfg: &ReferenceConfig) -> Vec<String> {
+    let mut words = vec![
+        "<pad>".to_string(),
+        "<bos>".to_string(),
+        "<eos>".to_string(),
+        "<sep>".to_string(),
+    ];
+    for i in words.len()..cfg.vocab_size {
+        words.push(format!("w{i:03}"));
+    }
+    words
+}
+
+/// Synthetic prompt sets for the six Spec-Bench-analogue tasks plus the
+/// online "stream". Copy-heavy tasks (mt / summarization / rag) embed a
+/// repeated span so n-gram drafters (PLD) get real matches.
+pub fn prompt_sets(cfg: &ReferenceConfig) -> BTreeMap<String, PromptSet> {
+    let mut out = BTreeMap::new();
+    for (ti, task) in TASK_NAMES.iter().enumerate() {
+        let mut rng = Rng::new(cfg.seed ^ (0xBEEF00 + ti as u64));
+        out.insert(
+            task.to_string(),
+            gen_set(cfg, &mut rng, ti as u32, cfg.prompts_per_task),
+        );
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x57AE_A11);
+    let mut stream = Vec::with_capacity(cfg.stream_prompts);
+    for i in 0..cfg.stream_prompts {
+        let task = (i % TASK_NAMES.len()) as u32;
+        stream.push(gen_sample(cfg, &mut rng, task));
+    }
+    out.insert("stream".to_string(), PromptSet { samples: stream });
+    out
+}
+
+fn gen_set(cfg: &ReferenceConfig, rng: &mut Rng, task: u32, count: usize)
+    -> PromptSet
+{
+    let samples = (0..count).map(|_| gen_sample(cfg, rng, task)).collect();
+    PromptSet { samples }
+}
+
+fn gen_sample(cfg: &ReferenceConfig, rng: &mut Rng, task: u32) -> PromptSample {
+    let word = |rng: &mut Rng| -> u32 {
+        4 + rng.usize_below(cfg.vocab_size - 4) as u32
+    };
+    let mut prompt = vec![BOS];
+    // Copy-heavy tasks: span + <sep> + span, like a document + query.
+    let copyish = matches!(task, 0 | 2 | 5); // mt, summarization, rag
+    if copyish {
+        let span: Vec<u32> = (0..3 + rng.usize_below(3))
+            .map(|_| word(rng))
+            .collect();
+        prompt.extend_from_slice(&span);
+        for _ in 0..rng.usize_below(3) {
+            prompt.push(word(rng));
+        }
+        prompt.push(SEP);
+        prompt.extend_from_slice(&span);
+    } else {
+        let len = 5 + rng.usize_below(10);
+        for _ in 0..len {
+            prompt.push(word(rng));
+        }
+        prompt.push(SEP);
+    }
+    debug_assert!(prompt.len() <= cfg.prefill_seq);
+    PromptSample {
+        task,
+        max_new: cfg.max_new_tokens,
+        prompt,
+        answer: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_has_all_artifacts() {
+        let cfg = ReferenceConfig::default();
+        let m = manifest(&cfg);
+        for name in [
+            "prefill_shallow", "prefill_deep", "draft_step", "draft_block",
+            "verify_block", "prefill_full", "target_step",
+            "target_verify_block", "sps_prefill", "sps_draft_step",
+            "medusa_heads", "hydra_chain", "eagle_step", "train_step",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.spec_usize("k_spec").unwrap(), cfg.k_spec);
+        assert_eq!(m.model_usize("d_model").unwrap(), cfg.d_model);
+        assert_eq!(m.model_usize("max_seq").unwrap(), cfg.max_seq);
+        assert_eq!(m.train_f64("batch_size").unwrap() as usize, cfg.batch_size);
+    }
+
+    #[test]
+    fn prompts_cover_tasks_and_fit_prefill() {
+        let cfg = ReferenceConfig::default();
+        let sets = prompt_sets(&cfg);
+        for task in TASK_NAMES {
+            let set = &sets[task];
+            assert_eq!(set.len(), cfg.prompts_per_task);
+            for s in &set.samples {
+                assert!(s.prompt.len() <= cfg.prefill_seq);
+                assert_eq!(s.prompt[0], BOS);
+                assert!(s.prompt.iter().all(|&t| (t as usize) < cfg.vocab_size));
+            }
+        }
+        assert_eq!(sets["stream"].len(), cfg.stream_prompts);
+    }
+
+    #[test]
+    fn vocab_is_closed_and_sized() {
+        let cfg = ReferenceConfig::default();
+        let v = vocab(&cfg);
+        assert_eq!(v.len(), cfg.vocab_size);
+        assert_eq!(v[1], "<bos>");
+        assert_eq!(v[2], "<eos>");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = ReferenceConfig::default();
+        let a = prompt_sets(&cfg);
+        let b = prompt_sets(&cfg);
+        assert_eq!(a["qa"].samples[0].prompt, b["qa"].samples[0].prompt);
+    }
+}

@@ -142,6 +142,48 @@ mod tests {
     }
 
     #[test]
+    fn prop_accepted_prefix_matches_both_sides() {
+        // The accepted prefix must equal BOTH the drafted and the
+        // verifier prefix (that is what "accepted" means), and it must
+        // be maximal: if m < k the next pair disagrees.
+        run_prop("accept-prefix", 512, |rng| {
+            let k = 1 + rng.usize_below(8);
+            let drafted = vec_u32_below(rng, k, 3);
+            let verifier = vec_u32_below(rng, k, 3);
+            let o = longest_prefix(&drafted, &verifier);
+            let m = o.accepted;
+            assert!(m <= k, "accepted count exceeds k");
+            assert_eq!(&o.committed[..m], &drafted[..m]);
+            assert_eq!(&o.committed[..m], &verifier[..m]);
+            if m < k {
+                assert_ne!(drafted[m], verifier[m], "prefix not maximal");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_committed_is_accepted_plus_one_bonus() {
+        // committed = accepted + exactly one bonus token iff m < k;
+        // total never exceeds k (full accept) / k+1 is impossible
+        // because the bonus replaces the first reject.
+        run_prop("accept-committed-len", 512, |rng| {
+            let k = 1 + rng.usize_below(8);
+            let drafted = vec_u32_below(rng, k, 2);
+            let verifier = vec_u32_below(rng, k, 2);
+            let o = longest_prefix(&drafted, &verifier);
+            if o.accepted == k {
+                assert_eq!(o.bonus, None);
+                assert_eq!(o.total_committed(), k);
+            } else {
+                assert_eq!(o.bonus, Some(verifier[o.accepted]));
+                assert_eq!(o.total_committed(), o.accepted + 1);
+                assert_eq!(o.committed.last().copied(), o.bonus);
+            }
+            assert!(o.total_committed() <= k);
+        });
+    }
+
+    #[test]
     fn prop_progress_guarantee() {
         // Speculative decoding's liveness property: every round commits
         // >= 1 token, so generation always terminates.

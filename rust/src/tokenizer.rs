@@ -24,6 +24,17 @@ pub struct Tokenizer {
 }
 
 impl Tokenizer {
+    /// Build directly from an id-ordered word list (the reference
+    /// backend's synthetic vocabulary lives in memory, not on disk).
+    pub fn from_words(id_to_word: Vec<String>) -> Tokenizer {
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Tokenizer { id_to_word, word_to_id }
+    }
+
     pub fn load(path: &Path) -> Result<Tokenizer> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;

@@ -96,12 +96,48 @@ impl Stats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::run_prop;
 
     #[test]
     fn argmax_first_tie() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
         assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn prop_argmax_is_maximal_and_first() {
+        // argmax returns an index holding the maximum, and on ties the
+        // FIRST such index — the XLA/jnp convention the engines rely on
+        // for coordinator-side greedy == in-graph greedy.
+        run_prop("argmax-first-max", 512, |rng| {
+            let n = 1 + rng.usize_below(12);
+            // Tiny value set forces frequent ties.
+            let xs: Vec<f32> = (0..n)
+                .map(|_| rng.usize_below(3) as f32)
+                .collect();
+            let i = argmax(&xs);
+            assert!(xs.iter().all(|&x| x <= xs[i]), "not maximal: {xs:?}");
+            assert!(
+                xs[..i].iter().all(|&x| x < xs[i]),
+                "tie not broken toward first index: {xs:?} -> {i}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_argmax_invariant_under_positive_shift() {
+        // Shifting all logits by a constant never changes the winner
+        // (softmax/greedy equivalence used throughout the engines).
+        run_prop("argmax-shift", 256, |rng| {
+            let n = 1 + rng.usize_below(10);
+            let xs: Vec<f32> = (0..n)
+                .map(|_| (rng.normal() as f32 * 2.0 * 8.0).round() / 8.0)
+                .collect();
+            let shift = rng.normal() as f32;
+            let shifted: Vec<f32> = xs.iter().map(|x| x + shift).collect();
+            assert_eq!(argmax(&xs), argmax(&shifted));
+        });
     }
 
     #[test]

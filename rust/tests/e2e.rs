@@ -1,9 +1,8 @@
 //! End-to-end coordinator tests: router + worker pool + online learner +
-//! TCP API over real artifacts (skipped until `make artifacts`).
+//! TCP API — hermetic on the reference backend, always on.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -11,27 +10,20 @@ use dvi::harness::load_prompts;
 use dvi::learner::Objective;
 use dvi::runtime::Runtime;
 use dvi::server::{api, Router, RouterConfig};
-use dvi::tokenizer::Tokenizer;
 use dvi::util::json::Json;
 
-fn artifacts_dir() -> PathBuf {
-    std::env::var("DVI_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_reference(0xE2E).expect("reference runtime"))
 }
 
-fn have_artifacts() -> bool {
-    artifacts_dir().join("manifest.json").exists()
-}
-
+/// Start the router with 2 workers, submit a burst of concurrent
+/// requests, and check: every response arrives, stats counters are
+/// consistent with the responses, and shutdown joins cleanly.
 #[test]
 fn router_serves_concurrent_requests() {
-    if !have_artifacts() {
-        eprintln!("SKIP router_serves_concurrent_requests");
-        return;
-    }
-    let rt = Arc::new(Runtime::load(&artifacts_dir(), None).unwrap());
-    let stream = load_prompts(&rt, "qa").unwrap();
+    let rt = runtime();
+    let qa = load_prompts(&rt, "qa").unwrap();
+    let stream = load_prompts(&rt, "stream").unwrap();
     let router = Router::start(
         rt,
         RouterConfig {
@@ -44,35 +36,51 @@ fn router_serves_concurrent_requests() {
     )
     .unwrap();
 
-    // Submit a burst of requests, then collect them all.
-    let receivers: Vec<_> = stream
+    // >= 16 in-flight requests across a mixed workload.
+    let samples: Vec<_> = qa
         .samples
         .iter()
-        .take(6)
+        .chain(stream.samples.iter())
+        .take(18)
+        .collect();
+    assert!(samples.len() >= 16, "need at least 16 requests");
+    let receivers: Vec<_> = samples
+        .iter()
         .map(|s| router.submit(s.prompt.clone(), s.max_new.min(24)))
         .collect();
+
     let mut workers_seen = std::collections::BTreeSet::new();
+    let mut ids = std::collections::BTreeSet::new();
+    let mut token_total = 0u64;
     for rx in receivers {
-        let resp = rx.recv().unwrap();
-        assert!(!resp.tokens.is_empty());
+        let resp = rx.recv().expect("response must arrive");
+        assert!(!resp.tokens.is_empty(), "empty generation");
+        assert!(resp.acceptance >= 0.0 && resp.acceptance <= 1.0);
+        token_total += resp.tokens.len() as u64;
         workers_seen.insert(resp.worker);
+        ids.insert(resp.id);
     }
-    assert_eq!(router.stats.served.load(Ordering::Relaxed), 6);
-    assert!(router.stats.tokens.load(Ordering::Relaxed) > 0);
-    // With 2 workers and 6 queued requests both should have participated
-    // (not guaranteed in theory, overwhelmingly likely; tolerate 1).
+    assert_eq!(ids.len(), samples.len(), "duplicate or missing request ids");
+    assert_eq!(
+        router.stats.served.load(Ordering::Relaxed),
+        samples.len() as u64
+    );
+    assert_eq!(
+        router.stats.tokens.load(Ordering::Relaxed),
+        token_total,
+        "stats token counter inconsistent with responses"
+    );
+    assert!(router.stats.decode_ns.load(Ordering::Relaxed) > 0);
+    // With 2 workers and a large queued burst both should have
+    // participated (not guaranteed in theory; tolerate 1).
     assert!(!workers_seen.is_empty());
-    router.shutdown();
+    router.shutdown(); // must join workers + learner without hanging
 }
 
 #[test]
 fn tcp_api_round_trip() {
-    if !have_artifacts() {
-        eprintln!("SKIP tcp_api_round_trip");
-        return;
-    }
-    let rt = Arc::new(Runtime::load(&artifacts_dir(), None).unwrap());
-    let tok = Arc::new(Tokenizer::load(&rt.manifest.vocab_file).unwrap());
+    let rt = runtime();
+    let tok = Arc::new(rt.tokenizer().unwrap());
     let router = Arc::new(
         Router::start(
             rt,
@@ -95,11 +103,10 @@ fn tcp_api_round_trip() {
     });
 
     let mut conn = TcpStream::connect(addr).unwrap();
-    writeln!(
-        conn,
-        r#"{{"prompt": "question : what owns ent01 ? <sep>", "max_new": 16}}"#
-    )
-    .unwrap();
+
+    // Token-id request (works on any vocabulary).
+    writeln!(conn, r#"{{"prompt_ids": [1, 10, 11, 12, 3], "max_new": 16}}"#)
+        .unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
@@ -107,6 +114,15 @@ fn tcp_api_round_trip() {
     assert!(j.get("error").is_null(), "API error: {line}");
     assert!(!j.get("tokens").as_arr().unwrap().is_empty());
     assert!(j.get("text").as_str().is_some());
+
+    // Text request over the synthetic vocabulary.
+    writeln!(conn, r#"{{"prompt": "w004 w010 w020 <sep>", "max_new": 8}}"#)
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("error").is_null(), "API error: {line}");
+    assert!(!j.get("tokens").as_arr().unwrap().is_empty());
 
     // malformed request -> error object, connection stays up
     writeln!(conn, "this is not json").unwrap();

@@ -1,0 +1,202 @@
+//! Hermetic in-tree subset of the `anyhow` API.
+//!
+//! The offline build environment has no registry access, so the crate
+//! graph must close over path dependencies only. This shim provides the
+//! slice of `anyhow` the workspace actually uses:
+//!
+//!   * `anyhow::Error` — a context-chain error (no backtraces),
+//!   * `anyhow::Result<T>`,
+//!   * the `Context` extension trait (`.context`, `.with_context`) on
+//!     `Result<_, E: std::error::Error>`, `Result<_, anyhow::Error>`,
+//!     and `Option<T>`,
+//!   * the `anyhow!`, `bail!`, and `ensure!` macros,
+//!   * `Error::msg` and `From<E: std::error::Error + Send + Sync>`.
+//!
+//! Display prints the outermost message; `{:#}` prints the whole chain
+//! separated by `: `, matching anyhow's alternate formatting. Like the
+//! real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` (the blanket `From` impl would conflict).
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// Extension trait adding `.context` / `.with_context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err()).context("reading weights");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: disk on fire");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.with_context(|| format!("missing {}", 7));
+        assert_eq!(format!("{}", r.unwrap_err()), "missing 7");
+        let ok: Result<i32> = Some(3).context("unused");
+        assert_eq!(ok.unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big");
+        let e = anyhow!("standalone {}", 9);
+        assert_eq!(format!("{e}"), "standalone 9");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn nested_anyhow_context() {
+        let inner: Result<()> = Err(Error::msg("inner"));
+        let e = inner.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}
