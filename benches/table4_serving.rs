@@ -1,0 +1,177 @@
+//! Table 4 (serving): per-thread router vs continuous-batching scheduler
+//! at several offered loads, equal worker budget. The per-thread router
+//! dedicates one OS thread + one batch-size-1 call stream per request;
+//! the batched router multiplexes every request through one scheduler
+//! thread issuing lane-blocked batched backend calls, so weight
+//! streaming amortizes across resident sequences.
+//!
+//!   cargo bench --bench table4_serving
+//!
+//! Knobs: DVI_BENCH_LOADS   offered loads, comma list (default 4,8,16)
+//!        DVI_BENCH_WORKERS per-thread worker budget   (default 1)
+//!        DVI_BENCH_MAX_BATCH  lanes per batched call  (default 8)
+//!        DVI_BENCH_METHOD  dvi | ar                   (default dvi)
+//!        DVI_BENCH_TINY=1  CI smoke scale (default model, tiny load)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dvi::harness::load_prompts;
+use dvi::learner::Objective;
+use dvi::runtime::{ReferenceConfig, Runtime};
+use dvi::server::{Router, RouterConfig};
+
+struct RunStats {
+    tokens: u64,
+    wall_s: f64,
+    occupancy: f64,
+    queue_wait_ms: f64,
+    committed_per_tick: f64,
+}
+
+impl RunStats {
+    fn tok_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Serve one closed batch of requests through a router, wall-clocked
+/// from first submit to last response.
+fn run_mode(
+    rt: Arc<Runtime>,
+    cfg: RouterConfig,
+    reqs: &[(Vec<u32>, usize)],
+) -> RunStats {
+    let router = Router::start(rt, cfg).expect("router start");
+    let t0 = Instant::now();
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|(p, n)| router.submit(p.clone(), *n))
+        .collect();
+    let mut tokens = 0u64;
+    for rx in receivers {
+        tokens += rx.recv().expect("response").tokens.len() as u64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (occupancy, queue_wait_ms, committed_per_tick) = match &router.sched_stats
+    {
+        Some(s) => (s.occupancy(), s.mean_queue_wait_ms(), s.committed_per_tick()),
+        None => (1.0, 0.0, 0.0),
+    };
+    router.shutdown();
+    RunStats { tokens, wall_s, occupancy, queue_wait_ms, committed_per_tick }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let tiny = std::env::var("DVI_BENCH_TINY").is_ok();
+    let loads_env = std::env::var("DVI_BENCH_LOADS").unwrap_or_else(|_| {
+        if tiny { "4".to_string() } else { "4,8,16".to_string() }
+    });
+    let loads: Vec<usize> = loads_env
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let workers = env_usize("DVI_BENCH_WORKERS", 1);
+    let max_batch = env_usize("DVI_BENCH_MAX_BATCH", 8);
+    let method =
+        std::env::var("DVI_BENCH_METHOD").unwrap_or_else(|_| "dvi".to_string());
+
+    // Serving-scale geometry: large enough that per-call weight
+    // streaming dominates, which is what lane-blocked batched execution
+    // amortizes. Tiny (CI smoke) keeps the default test-scale model and
+    // just exercises the full path.
+    let ref_cfg = if tiny {
+        ReferenceConfig::default()
+    } else {
+        // ~2 MB of weights: larger than a typical per-core L2, so the
+        // per-sequence path re-streams every layer from L3 on every
+        // call while the batched path reuses each layer across lanes.
+        ReferenceConfig {
+            vocab_size: 256,
+            d_model: 96,
+            d_ff: 192,
+            n_layers: 6,
+            split_layer: 2,
+            max_seq: 192,
+            prefill_seq: 48,
+            max_new_tokens: 40,
+            ..ReferenceConfig::default()
+        }
+    };
+    let rt = Arc::new(Runtime::load_reference_with(ref_cfg).unwrap());
+
+    // Mixed-task offered load: the online stream, deterministically
+    // shuffled (PromptSet::shuffled), with per-request budget variety so
+    // completion times are heterogeneous like live traffic.
+    let stream = load_prompts(&rt, "stream").unwrap().shuffled(0x7AB1E4);
+
+    println!(
+        "\n== Table 4 (serving): per-thread vs batched, method={method}, \
+         worker budget={workers}, max_batch={max_batch} =="
+    );
+    println!();
+    println!(
+        "| mode | load | tokens | wall s | tok/s | occupancy | \
+         queue wait ms | tok/tick |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    let mut speedups = Vec::new();
+    for &load in &loads {
+        let reqs: Vec<(Vec<u32>, usize)> = stream
+            .samples
+            .iter()
+            .take(load)
+            .enumerate()
+            .map(|(i, s)| (s.prompt.clone(), s.max_new.min(16 + (i % 3) * 12)))
+            .collect();
+        let per_thread = run_mode(
+            rt.clone(),
+            RouterConfig {
+                workers,
+                method: method.clone(),
+                online: false,
+                objective: Objective::Dvi,
+                buffer_capacity: 4096,
+                ..RouterConfig::default()
+            },
+            &reqs,
+        );
+        let batched = run_mode(
+            rt.clone(),
+            RouterConfig {
+                method: method.clone(),
+                online: false,
+                objective: Objective::Dvi,
+                buffer_capacity: 4096,
+                batched: true,
+                max_batch,
+                max_slots: load.max(1),
+                ..RouterConfig::default()
+            },
+            &reqs,
+        );
+        for (name, s) in [("threads", &per_thread), ("batched", &batched)] {
+            println!(
+                "| {name} | {load} | {} | {:.3} | {:.0} | {:.2} | {:.2} | {:.2} |",
+                s.tokens,
+                s.wall_s,
+                s.tok_per_sec(),
+                s.occupancy,
+                s.queue_wait_ms,
+                s.committed_per_tick
+            );
+        }
+        speedups.push((load, batched.tok_per_sec() / per_thread.tok_per_sec().max(1e-9), batched.occupancy));
+    }
+    println!();
+    for (load, speedup, occ) in speedups {
+        println!(
+            "[table4] load {load}: batched/per-thread throughput {speedup:.2}x, \
+             mean batch occupancy {occ:.2}"
+        );
+    }
+}

@@ -39,6 +39,7 @@ fn main() -> Result<()> {
             online: true,
             objective: Objective::Dvi,
             buffer_capacity: 8192,
+            ..RouterConfig::default()
         },
     )?;
 

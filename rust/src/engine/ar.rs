@@ -1,23 +1,27 @@
 //! Greedy autoregressive baseline — the reference point every speedup in
 //! Table 2 is measured against, and the losslessness oracle for the
 //! speculative engines (they must emit byte-identical token streams).
+//!
+//! The prefill/step loop lives in [`crate::sched::seq::ArSeq`], the same
+//! resumable state machine the continuous-batching scheduler multiplexes;
+//! this engine just drives one sequence serially.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::Runtime;
+use crate::sched::seq::{ArCtx, ArSeq};
 
-use super::{truncate_at_eos, Engine, GenResult, StepRecord, TargetSeq};
+use super::{Engine, GenResult};
 
 pub struct ArEngine {
-    rt: Arc<Runtime>,
+    ctx: Arc<ArCtx>,
 }
 
 impl ArEngine {
-    pub fn new(rt: Arc<Runtime>) -> ArEngine {
-        ArEngine { rt }
+    pub fn new(rt: Arc<Runtime>) -> Result<ArEngine> {
+        Ok(ArEngine { ctx: Arc::new(ArCtx::new(rt)?) })
     }
 }
 
@@ -27,34 +31,12 @@ impl Engine for ArEngine {
     }
 
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
-        let t0 = Instant::now();
-        let (mut ts, first, _hl) = TargetSeq::start(
-            self.rt.clone(), "prefill_full", "target_step", None, prompt)?;
-        let prefill_ns = t0.elapsed().as_nanos() as u64;
-
-        let mut result = GenResult {
-            tokens: vec![first],
-            prefill_ns,
-            ..Default::default()
-        };
-        let td = Instant::now();
-        while result.tokens.len() < max_new
-            && !truncate_at_eos(&mut result.tokens)
-            && ts.has_capacity(1)
-        {
-            let ts0 = Instant::now();
-            let (tok, _hl) = ts.ar_step()?;
-            result.tokens.push(tok);
-            result.steps.push(StepRecord {
-                drafted: 0,
-                accepted: 0,
-                committed: 1,
-                draft_ns: 0,
-                verify_ns: ts0.elapsed().as_nanos() as u64,
-            });
+        let mut seq = ArSeq::new(self.ctx.clone(), prompt, max_new)?;
+        while !seq.is_done() {
+            let call = seq.next_call()?;
+            let out = call.artifact.call(&call.kv, &call.inputs)?;
+            seq.apply(out)?;
         }
-        truncate_at_eos(&mut result.tokens);
-        result.decode_ns = td.elapsed().as_nanos() as u64;
-        Ok(result)
+        Ok(seq.into_result())
     }
 }

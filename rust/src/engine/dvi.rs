@@ -13,58 +13,33 @@
 //!      including the first reject goes to the replay buffer; positions
 //!      beyond the first reject are counterfactual and are NOT logged.
 //!
-//! When `online` is set, the engine triggers the trainer after each
-//! prompt, so LoRA updates land between requests exactly like the paper's
-//! serving-time adaptation loop.
+//! The round structure lives in [`crate::sched::seq::DviSeq`], a
+//! resumable state machine this engine drives one call at a time; the
+//! continuous-batching scheduler drives the same machine through batched
+//! backend calls, which is why batched serving stays bitwise-lossless
+//! against this engine.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::learner::{ReplayBuffer, Tuple};
-use crate::runtime::{Artifact, Buffer, Runtime, Tensor};
-use crate::spec::{longest_prefix, SeqPos};
-use crate::util::math::argmax;
+use crate::learner::ReplayBuffer;
+use crate::runtime::Runtime;
+use crate::sched::seq::{DviCtx, DviSeq};
 
-use super::{truncate_at_eos, Engine, GenResult, StepRecord};
+use super::{Engine, GenResult};
 
 pub struct DviEngine {
-    rt: Arc<Runtime>,
-    prefill_sh: Arc<Artifact>,
-    prefill_dp: Arc<Artifact>,
-    draft: Arc<Artifact>,
-    /// Fused k_spec-step draft loop (one PJRT call instead of k_spec;
-    /// see EXPERIMENTS.md §Perf). Falls back to `draft` when absent.
-    draft_block: Option<Arc<Artifact>>,
-    verify: Arc<Artifact>,
+    ctx: Arc<DviCtx>,
     pub k_spec: usize,
-    d_model: usize,
-    prefill_seq: usize,
-    max_seq: usize,
     /// Tuple sink; engine logs accept/reject supervision when present.
     pub buffer: Option<Arc<Mutex<ReplayBuffer>>>,
 }
 
 impl DviEngine {
     pub fn new(rt: Arc<Runtime>) -> Result<DviEngine> {
-        let k_spec = rt.manifest.spec_usize("k_spec")?;
-        let d_model = rt.manifest.model_usize("d_model")?;
-        let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
-        let max_seq = rt.manifest.model_usize("max_seq")?;
-        Ok(DviEngine {
-            prefill_sh: rt.artifact("prefill_shallow")?,
-            prefill_dp: rt.artifact("prefill_deep")?,
-            draft: rt.artifact("draft_step")?,
-            draft_block: rt.artifact("draft_block").ok(),
-            verify: rt.artifact("verify_block")?,
-            rt,
-            k_spec,
-            d_model,
-            prefill_seq,
-            max_seq,
-            buffer: None,
-        })
+        let ctx = DviCtx::new(rt)?;
+        Ok(DviEngine { k_spec: ctx.k_spec, ctx: Arc::new(ctx), buffer: None })
     }
 
     pub fn with_buffer(mut self, buffer: Arc<Mutex<ReplayBuffer>>) -> Self {
@@ -75,38 +50,10 @@ impl DviEngine {
     /// Force the k_spec per-step draft path even when the fused
     /// `draft_block` artifact is exported (parity testing / ablation).
     pub fn without_draft_block(mut self) -> Self {
-        self.draft_block = None;
+        let mut ctx = (*self.ctx).clone();
+        ctx.draft_block = None;
+        self.ctx = Arc::new(ctx);
         self
-    }
-
-    fn prefill(
-        &self,
-        prompt: &[u32],
-    ) -> Result<(Vec<Buffer>, Vec<Buffer>, u32)> {
-        anyhow::ensure!(
-            prompt.len() <= self.prefill_seq,
-            "prompt length {} exceeds prefill capacity {}",
-            prompt.len(),
-            self.prefill_seq
-        );
-        let kv_sh = self.rt.fresh_kv("prefill_shallow")?;
-        let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
-        padded.resize(self.prefill_seq, 0);
-        let sh = self.prefill_sh.call(
-            &kv_sh,
-            &[Tensor::i32(vec![self.prefill_seq], padded)],
-        )?;
-        // sh.outputs[0] = h_k rows [P, d]; feed them into the deep prefill.
-        let kv_dp = self.rt.fresh_kv("prefill_deep")?;
-        let dp = self.prefill_dp.call(
-            &kv_dp,
-            &[
-                sh.outputs[0].clone(),
-                Tensor::scalar_i32(prompt.len() as i32),
-            ],
-        )?;
-        let first = argmax(dp.outputs[0].as_f32()?) as u32;
-        Ok((sh.kv, dp.kv, first))
     }
 }
 
@@ -116,108 +63,13 @@ impl Engine for DviEngine {
     }
 
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
-        let t0 = Instant::now();
-        let (mut kv_sh, mut kv_dp, first) = self.prefill(prompt)?;
-        let prefill_ns = t0.elapsed().as_nanos() as u64;
-
-        let mut seq = SeqPos::after_prefill(prompt);
-        seq.push_committed(first);
-        let mut result = GenResult {
-            tokens: vec![first],
-            prefill_ns,
-            ..Default::default()
-        };
-
-        let k = self.k_spec;
-        let td = Instant::now();
-        while result.tokens.len() < max_new
-            && !truncate_at_eos(&mut result.tokens)
-            && seq.kv_len + k + 1 < self.max_seq
-        {
-            // ---- DRAFT: k shallow steps ----------------------------------
-            // One fused PJRT call when the draft_block artifact exists
-            // (greedy argmax between steps happens in-graph); otherwise
-            // k_spec per-step calls.
-            let tdraft = Instant::now();
-            let (feed_tok, feed_pos) = seq.feed();
-            let mut drafted: Vec<u32> = Vec::with_capacity(k);
-            let mut hk_rows: Vec<f32> = Vec::with_capacity(k * self.d_model);
-            if let Some(block) = &self.draft_block {
-                let out = block.call(
-                    &kv_sh,
-                    &[
-                        Tensor::scalar_i32(feed_tok as i32),
-                        Tensor::scalar_i32(feed_pos as i32),
-                    ],
-                )?;
-                kv_sh = out.kv;
-                drafted.extend(out.outputs[0].as_i32()?.iter().map(|&t| t as u32));
-                hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
-            } else {
-                let mut tok = feed_tok;
-                for i in 0..k {
-                    let out = self.draft.call(
-                        &kv_sh,
-                        &[
-                            Tensor::scalar_i32(tok as i32),
-                            Tensor::scalar_i32((feed_pos + i) as i32),
-                        ],
-                    )?;
-                    kv_sh = out.kv;
-                    let logits_theta = out.outputs[0].as_f32()?;
-                    hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
-                    let d = argmax(logits_theta) as u32;
-                    drafted.push(d);
-                    tok = d;
-                }
-            }
-            let draft_ns = tdraft.elapsed().as_nanos() as u64;
-
-            // ---- VERIFY: one deep block ----------------------------------
-            let tver = Instant::now();
-            let out = self.verify.call(
-                &kv_dp,
-                &[
-                    Tensor::f32(vec![k, self.d_model], hk_rows.clone()),
-                    Tensor::scalar_i32(feed_pos as i32),
-                ],
-            )?;
-            kv_dp = out.kv;
-            let logits_phi = &out.outputs[0];
-            let verifier: Vec<u32> = (0..k)
-                .map(|i| Ok(argmax(logits_phi.row_f32(i)?) as u32))
-                .collect::<Result<_>>()?;
-            let outcome = longest_prefix(&drafted, &verifier);
-            let verify_ns = tver.elapsed().as_nanos() as u64;
-
-            // ---- IMPROVE: log supervision tuples --------------------------
-            if let Some(buf) = &self.buffer {
-                let mut buf = buf.lock().unwrap();
-                let logged = (outcome.accepted + 1).min(k); // incl. first reject
-                for i in 0..logged {
-                    buf.push(Tuple {
-                        hk: hk_rows[i * self.d_model..(i + 1) * self.d_model]
-                            .to_vec(),
-                        action: drafted[i],
-                        logits_phi: logits_phi.row_f32(i)?.to_vec(),
-                        reward: if i < outcome.accepted { 1.0 } else { 0.0 },
-                    });
-                }
-            }
-
-            seq.advance(k, outcome.accepted, &outcome.committed);
-            result.tokens.extend_from_slice(&outcome.committed);
-            result.steps.push(StepRecord {
-                drafted: k,
-                accepted: outcome.accepted,
-                committed: outcome.total_committed(),
-                draft_ns,
-                verify_ns,
-            });
+        let mut seq =
+            DviSeq::new(self.ctx.clone(), self.buffer.clone(), prompt, max_new)?;
+        while !seq.is_done() {
+            let call = seq.next_call()?;
+            let out = call.artifact.call(&call.kv, &call.inputs)?;
+            seq.apply(out)?;
         }
-        truncate_at_eos(&mut result.tokens);
-        result.tokens.truncate(max_new);
-        result.decode_ns = td.elapsed().as_nanos() as u64;
-        Ok(result)
+        Ok(seq.into_result())
     }
 }

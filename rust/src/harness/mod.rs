@@ -27,9 +27,9 @@ use crate::workload::{PromptSet, TASK_NAMES};
 pub const METHODS: [&str; 7] =
     ["eagle", "hydra", "medusa", "pld", "sps", "dvi", "ar"];
 
-pub fn make_engine(rt: Arc<Runtime>, name: &str) -> Result<Box<dyn Engine>> {
+pub fn make_engine(rt: Arc<Runtime>, name: &str) -> Result<Box<dyn Engine + Send>> {
     Ok(match name {
-        "ar" => Box::new(ArEngine::new(rt)),
+        "ar" => Box::new(ArEngine::new(rt)?),
         "dvi" => Box::new(DviEngine::new(rt)?),
         "pld" => Box::new(PldEngine::new(rt)?),
         "sps" => Box::new(SpsEngine::new(rt)?),

@@ -7,7 +7,8 @@
 //! * **L3 (this crate)** — serving coordinator: decode engines (DVI
 //!   self-speculation + AR/PLD/SpS/Medusa/Hydra/EAGLE baselines), the
 //!   online learner (replay buffer + KL→RL schedule), a request
-//!   router/worker pool, workloads, metrics, and the Spec-Bench-style
+//!   router with per-thread workers or a continuous-batching scheduler
+//!   ([`sched`]), workloads, metrics, and the Spec-Bench-style
 //!   benchmark harness.
 //! * **L2/L1 (python/compile, build-time only)** — JAX model + Pallas
 //!   kernels, AOT-lowered to HLO text executed through PJRT
@@ -27,6 +28,7 @@ pub mod harness;
 pub mod learner;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod spec;
 pub mod tokenizer;

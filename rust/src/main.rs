@@ -9,6 +9,7 @@
 //!   table3   --train 2000 --n 25  objective ablations (Table 3)
 //!   fig2     --train 2000        ablation learning curves (Figure 2)
 //!   serve    --port 7501 --workers 2 [--no-online]
+//!            [--batched --max-batch 8 --slots 16]   continuous batching
 //!
 //! Everything reads `--artifacts DIR` (default: ./artifacts).
 
@@ -26,7 +27,7 @@ use dvi::server::{api, Router, RouterConfig};
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
-const FLAGS: [&str; 4] = ["online", "no-online", "quiet", "verbose"];
+const FLAGS: [&str; 5] = ["online", "no-online", "quiet", "verbose", "batched"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -240,6 +241,9 @@ fn serve(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let method = args.get_or("method", "dvi");
     let online = !args.flag("no-online");
+    let batched = args.flag("batched");
+    let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
+    let max_slots = args.get_usize("slots", 16).map_err(anyhow::Error::msg)?;
     let tok = Arc::new(rt.tokenizer()?);
     let router = Arc::new(Router::start(
         rt,
@@ -249,12 +253,20 @@ fn serve(args: &Args) -> Result<()> {
             online,
             objective: Objective::Dvi,
             buffer_capacity: 8192,
+            batched,
+            max_batch,
+            max_slots,
         },
     )?);
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     let stop = Arc::new(AtomicBool::new(false));
+    let mode = if batched {
+        format!("batched scheduler, max_batch={max_batch}, slots={max_slots}")
+    } else {
+        format!("{workers} workers")
+    };
     println!(
-        "serving on 127.0.0.1:{port} ({workers} workers, online={online}); try:\n  \
+        "serving on 127.0.0.1:{port} ({mode}, online={online}); try:\n  \
          echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}"
     );
     api::serve(listener, router, tok, stop)

@@ -77,6 +77,14 @@ pub struct CallOut {
     pub kv: Vec<Buffer>,
 }
 
+/// One lane of a batched artifact call: an independent sequence's KV set
+/// plus its per-call host inputs. Lanes never share state — batching is
+/// purely an execution-efficiency contract.
+pub struct BatchItem<'a> {
+    pub kv: &'a [Buffer],
+    pub inputs: &'a [Tensor],
+}
+
 /// Backend abstraction over artifact execution and buffer management.
 ///
 /// `call` receives the artifact's manifest spec (already shape-checked
@@ -89,6 +97,24 @@ pub trait Backend: Send + Sync {
     /// Execute one artifact.
     fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
         -> Result<CallOut>;
+
+    /// Execute one artifact over many independent sequences in a single
+    /// backend call. Lane i's result must be bitwise identical to what a
+    /// standalone `call(spec, batch[i].kv, batch[i].inputs)` would
+    /// return — batching is an execution strategy, never a semantic
+    /// change. The default implementation is a serial per-lane loop
+    /// (what the PJRT backend uses until a true batched export lands);
+    /// the reference backend overrides it with lane-blocked kernels.
+    fn call_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        batch
+            .iter()
+            .map(|item| self.call(spec, item.kv, item.inputs))
+            .collect()
+    }
 
     /// Fresh zeroed per-sequence KV buffers for an artifact's kv params.
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>>;

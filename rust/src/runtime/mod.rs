@@ -30,7 +30,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-pub use backend::{Backend, Buffer, CallOut};
+pub use backend::{Backend, BatchItem, Buffer, CallOut};
 pub use manifest::{ArtifactSpec, Manifest, Port, Role};
 pub use reference::{ReferenceBackend, ReferenceConfig};
 pub use tensor::{DType, Tensor, TensorData};
@@ -51,9 +51,8 @@ pub struct Artifact {
 }
 
 impl Artifact {
-    /// Execute. `kv` must match the artifact's kv params in order;
-    /// `inputs` must match role=in params in order.
-    pub fn call(&self, kv: &[Buffer], inputs: &[Tensor]) -> Result<CallOut> {
+    /// Shape/dtype-check one lane's kv + inputs against the manifest.
+    fn check_lane(&self, kv: &[Buffer], inputs: &[Tensor]) -> Result<()> {
         let n_kv = self.spec.params_with_role(Role::Kv).count();
         if kv.len() != n_kv {
             bail!("{}: expected {} kv buffers, got {}",
@@ -72,7 +71,11 @@ impl Artifact {
                 );
             }
         }
-        let out = self.backend.call(&self.spec, kv, inputs)?;
+        Ok(())
+    }
+
+    /// Check a backend result against the manifest's output ports.
+    fn check_out(&self, out: &CallOut) -> Result<()> {
         let n_out = self.spec.outputs_with_role(Role::Out).count();
         let n_kv_out = self.spec.outputs_with_role(Role::Kv).count();
         if out.outputs.len() != n_out || out.kv.len() != n_kv_out {
@@ -81,7 +84,37 @@ impl Artifact {
                 self.spec.name, out.outputs.len(), out.kv.len(), n_out, n_kv_out
             );
         }
+        Ok(())
+    }
+
+    /// Execute. `kv` must match the artifact's kv params in order;
+    /// `inputs` must match role=in params in order.
+    pub fn call(&self, kv: &[Buffer], inputs: &[Tensor]) -> Result<CallOut> {
+        self.check_lane(kv, inputs)?;
+        let out = self.backend.call(&self.spec, kv, inputs)?;
+        self.check_out(&out)?;
         Ok(out)
+    }
+
+    /// Execute one artifact over many independent sequences in a single
+    /// backend call (the continuous-batching hot path). Every lane is
+    /// shape-checked like [`Artifact::call`]; lane i's result is bitwise
+    /// identical to a standalone call with the same kv/inputs.
+    pub fn call_batched(&self, batch: &[BatchItem<'_>]) -> Result<Vec<CallOut>> {
+        for item in batch {
+            self.check_lane(item.kv, item.inputs)?;
+        }
+        let outs = self.backend.call_batched(&self.spec, batch)?;
+        if outs.len() != batch.len() {
+            bail!(
+                "{}: batched backend returned {} results for {} lanes",
+                self.spec.name, outs.len(), batch.len()
+            );
+        }
+        for out in &outs {
+            self.check_out(out)?;
+        }
+        Ok(outs)
     }
 }
 

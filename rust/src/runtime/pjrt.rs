@@ -14,6 +14,13 @@
 //! In hermetic builds the `xla` dependency is the in-tree API stub
 //! (`rust/vendor/xla-stub`): this module still compiles, and every load
 //! attempt reports that the real PJRT fork is absent.
+//!
+//! Batched execution (`Backend::call_batched`, used by the
+//! continuous-batching scheduler) is inherited as the trait's default
+//! serial per-lane loop: the exported HLO is batch-size-1, so until a
+//! true batched export lands this backend loops lanes — semantically
+//! identical, just without the lane-blocked locality win the reference
+//! backend gets.
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -1,0 +1,482 @@
+//! Lane-blocked batched execution of the reference artifacts
+//! (`Backend::call_batched`). Each batched implementation restructures
+//! the serial per-sequence loop so the *layer* loop is outermost and the
+//! lane loop innermost ([`ModelW::step_layers_lanes`]): weight matrices
+//! stream through the cache hierarchy once per batch instead of once per
+//! sequence — the CPU interpreter's analogue of fusing per-sequence
+//! GEMVs into one batched GEMM, and where continuous batching gets its
+//! throughput. Per-lane op order is untouched, so every lane's outputs
+//! and KV are bitwise identical to a standalone serial call (asserted by
+//! the tests below and by the scheduler's losslessness suite).
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::backend::{BatchItem, CallOut};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::Tensor;
+
+use super::model::{ModelW, StepLane};
+use super::ReferenceBackend;
+
+impl ReferenceBackend {
+    /// Clone every lane's (k, v) cache pair into mutable lane state,
+    /// shape-checked against the artifact's kv ports.
+    fn lanes_kv(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<(Vec<StepLane>, Vec<Vec<usize>>)> {
+        let mut lanes = Vec::with_capacity(batch.len());
+        let mut shapes = Vec::with_capacity(batch.len());
+        for item in batch {
+            let (kc, vc, shape) = self.kv_clone(spec, item.kv)?;
+            lanes.push(StepLane { h: Vec::new(), kc, vc, pos: 0 });
+            shapes.push(shape);
+        }
+        Ok((lanes, shapes))
+    }
+
+    /// Rewrap every lane's final state + host outputs into `CallOut`s.
+    fn wrap_lanes(
+        lanes: Vec<StepLane>,
+        shapes: Vec<Vec<usize>>,
+        outputs: Vec<Vec<Tensor>>,
+    ) -> Vec<CallOut> {
+        lanes
+            .into_iter()
+            .zip(shapes)
+            .zip(outputs)
+            .map(|((lane, shape), outputs)| CallOut {
+                outputs,
+                kv: Self::kv_wrap(&shape, lane.kc, lane.vc),
+            })
+            .collect()
+    }
+
+    pub(super) fn prefill_shallow_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let m = &self.target;
+        let split = self.cfg.split_layer;
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        let toks: Vec<&[i32]> = batch
+            .iter()
+            .map(|item| item.inputs[0].as_i32())
+            .collect::<Result<Vec<_>>>()?;
+        let p = toks.first().map_or(0, |t| t.len());
+        for t in &toks {
+            ensure!(t.len() == p, "ragged prefill batch");
+        }
+        let mut rows: Vec<Vec<f32>> =
+            (0..batch.len()).map(|_| Vec::with_capacity(p * m.d)).collect();
+        for pos in 0..p {
+            for (lane, t) in lanes.iter_mut().zip(&toks) {
+                lane.h = m.embed_row(t[pos] as usize)?;
+                lane.pos = pos;
+            }
+            m.step_layers_lanes(0, split, &mut lanes)?;
+            for (row, lane) in rows.iter_mut().zip(&lanes) {
+                row.extend_from_slice(&lane.h);
+            }
+        }
+        let outputs = rows
+            .into_iter()
+            .map(|r| vec![Tensor::f32(vec![p, m.d], r)])
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn prefill_deep_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let m = &self.target;
+        let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        let hks: Vec<&Tensor> = batch.iter().map(|item| &item.inputs[0]).collect();
+        let lens: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[1].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        let p = hks.first().map_or(0, |t| t.shape[0]);
+        for hk in &hks {
+            ensure!(hk.shape[0] == p, "ragged prefill batch");
+        }
+        for &len in &lens {
+            ensure!(len >= 1 && len <= p, "prefill length {len} out of 1..={p}");
+        }
+        let mut lasts: Vec<Vec<f32>> = vec![Vec::new(); batch.len()];
+        for pos in 0..p {
+            for (lane, hk) in lanes.iter_mut().zip(&hks) {
+                lane.h = hk.row_f32(pos)?.to_vec();
+                lane.pos = pos;
+            }
+            m.step_layers_lanes(split, l, &mut lanes)?;
+            for ((last, lane), &len) in lasts.iter_mut().zip(&lanes).zip(&lens) {
+                if pos == len - 1 {
+                    *last = lane.h.clone();
+                }
+            }
+        }
+        let outputs = lasts
+            .into_iter()
+            .map(|last| vec![Tensor::f32(vec![m.vocab], m.logits(&last))])
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn draft_step_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let m = &self.target;
+        let split = self.cfg.split_layer;
+        let (a, b) = self.lora()?;
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        for (lane, item) in lanes.iter_mut().zip(batch) {
+            lane.h = m.embed_row(item.inputs[0].as_i32()?[0] as usize)?;
+            lane.pos = item.inputs[1].as_i32()?[0] as usize;
+        }
+        m.step_layers_lanes(0, split, &mut lanes)?;
+        let mut outputs = Vec::with_capacity(batch.len());
+        for lane in &lanes {
+            let logits = m.draft_logits(
+                &lane.h, a.as_f32()?, b.as_f32()?, self.cfg.lora_rank,
+                self.cfg.lora_gamma,
+            );
+            outputs.push(vec![
+                Tensor::f32(vec![m.vocab], logits),
+                Tensor::f32(vec![m.d], lane.h.clone()),
+            ]);
+        }
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn draft_block_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let m = &self.target;
+        let (split, k) = (self.cfg.split_layer, self.cfg.k_spec);
+        let (a, b) = self.lora()?;
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        let mut toks: Vec<i32> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[0].as_i32()?[0]))
+            .collect::<Result<Vec<_>>>()?;
+        let poss: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[1].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        let n = batch.len();
+        let mut drafted: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut rows: Vec<Vec<f32>> =
+            (0..n).map(|_| Vec::with_capacity(k * m.d)).collect();
+        for i in 0..k {
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                lane.h = m.embed_row(toks[li] as usize)?;
+                lane.pos = poss[li] + i;
+            }
+            m.step_layers_lanes(0, split, &mut lanes)?;
+            for (li, lane) in lanes.iter().enumerate() {
+                let logits = m.draft_logits(
+                    &lane.h, a.as_f32()?, b.as_f32()?, self.cfg.lora_rank,
+                    self.cfg.lora_gamma,
+                );
+                let t = ModelW::greedy(&logits);
+                rows[li].extend_from_slice(&lane.h);
+                drafted[li].push(t as i32);
+                toks[li] = t as i32;
+            }
+        }
+        let outputs = drafted
+            .into_iter()
+            .zip(rows)
+            .map(|(dr, r)| {
+                vec![Tensor::i32(vec![k], dr), Tensor::f32(vec![k, m.d], r)]
+            })
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn verify_block_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let m = &self.target;
+        let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        let hks: Vec<&Tensor> = batch.iter().map(|item| &item.inputs[0]).collect();
+        let poss: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[1].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        let bsz = hks.first().map_or(0, |t| t.shape[0]);
+        for hk in &hks {
+            ensure!(hk.shape[0] == bsz, "ragged verify batch");
+        }
+        let mut logits: Vec<Vec<f32>> = (0..batch.len())
+            .map(|_| Vec::with_capacity(bsz * m.vocab))
+            .collect();
+        for i in 0..bsz {
+            for ((lane, hk), &pos) in lanes.iter_mut().zip(&hks).zip(&poss) {
+                lane.h = hk.row_f32(i)?.to_vec();
+                lane.pos = pos + i;
+            }
+            m.step_layers_lanes(split, l, &mut lanes)?;
+            for (lg, lane) in logits.iter_mut().zip(&lanes) {
+                lg.extend_from_slice(&m.logits(&lane.h));
+            }
+        }
+        let outputs = logits
+            .into_iter()
+            .map(|lg| vec![Tensor::f32(vec![bsz, m.vocab], lg)])
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn full_prefill_batched(
+        &self,
+        m: &ModelW,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let nl = m.layers.len();
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        let toks: Vec<&[i32]> = batch
+            .iter()
+            .map(|item| item.inputs[0].as_i32())
+            .collect::<Result<Vec<_>>>()?;
+        let lens: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[1].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        let p = toks.first().map_or(0, |t| t.len());
+        for t in &toks {
+            ensure!(t.len() == p, "ragged prefill batch");
+        }
+        for &len in &lens {
+            ensure!(len >= 1 && len <= p, "prefill length {len} bad");
+        }
+        let mut lasts: Vec<Vec<f32>> = vec![Vec::new(); batch.len()];
+        for pos in 0..p {
+            for (lane, t) in lanes.iter_mut().zip(&toks) {
+                lane.h = m.embed_row(t[pos] as usize)?;
+                lane.pos = pos;
+            }
+            m.step_layers_lanes(0, nl, &mut lanes)?;
+            for ((last, lane), &len) in lasts.iter_mut().zip(&lanes).zip(&lens) {
+                if pos == len - 1 {
+                    *last = lane.h.clone();
+                }
+            }
+        }
+        let outputs = lasts
+            .into_iter()
+            .map(|last| {
+                vec![
+                    Tensor::f32(vec![m.vocab], m.logits(&last)),
+                    Tensor::f32(vec![m.d], last),
+                ]
+            })
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+
+    pub(super) fn full_step_batched(
+        &self,
+        m: &ModelW,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let nl = m.layers.len();
+        let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
+        for (lane, item) in lanes.iter_mut().zip(batch) {
+            lane.h = m.embed_row(item.inputs[0].as_i32()?[0] as usize)?;
+            lane.pos = item.inputs[1].as_i32()?[0] as usize;
+        }
+        m.step_layers_lanes(0, nl, &mut lanes)?;
+        let outputs = lanes
+            .iter()
+            .map(|lane| {
+                vec![
+                    Tensor::f32(vec![m.vocab], m.logits(&lane.h)),
+                    Tensor::f32(vec![m.d], lane.h.clone()),
+                ]
+            })
+            .collect();
+        Ok(Self::wrap_lanes(lanes, shapes, outputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{Backend, Buffer};
+    use crate::runtime::reference::{synth, ReferenceConfig};
+
+    fn be() -> ReferenceBackend {
+        ReferenceBackend::new(ReferenceConfig::default()).unwrap()
+    }
+
+    /// Run `lanes` through `name` serially (one call per lane) and as one
+    /// batched call; assert bitwise-identical outputs and KV, and return
+    /// the batched results for chaining.
+    fn assert_batched_matches(
+        be: &ReferenceBackend,
+        name: &str,
+        lanes: &[(Vec<Buffer>, Vec<Tensor>)],
+    ) -> Vec<CallOut> {
+        let manifest = synth::manifest(&be.cfg);
+        let spec = manifest.artifact(name).unwrap();
+        let serial: Vec<CallOut> = lanes
+            .iter()
+            .map(|(kv, inp)| be.call(spec, kv, inp).unwrap())
+            .collect();
+        let items: Vec<BatchItem<'_>> = lanes
+            .iter()
+            .map(|(kv, inp)| BatchItem { kv, inputs: inp })
+            .collect();
+        let batched = be.call_batched(spec, &items).unwrap();
+        assert_eq!(batched.len(), lanes.len());
+        for (lane_i, (s, bo)) in serial.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                s.outputs, bo.outputs,
+                "{name} lane {lane_i}: outputs diverged under batching"
+            );
+            assert_eq!(s.kv.len(), bo.kv.len());
+            for (sk, bk) in s.kv.iter().zip(&bo.kv) {
+                assert_eq!(
+                    sk.as_host().unwrap(),
+                    bk.as_host().unwrap(),
+                    "{name} lane {lane_i}: kv diverged under batching"
+                );
+            }
+        }
+        batched
+    }
+
+    /// Three sequences of different lengths through the whole DVI and AR
+    /// artifact chains: every batched kernel must match per-lane serial
+    /// calls bitwise at every stage.
+    #[test]
+    fn batched_matches_serial_across_artifacts() {
+        let be = be();
+        let manifest = synth::manifest(&be.cfg);
+        let p = be.cfg.prefill_seq;
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![1, 10, 11, 3],
+            vec![1, 20, 21, 22, 3],
+            vec![1, 30, 31, 32, 33, 3],
+        ];
+        let padded: Vec<Tensor> = prompts
+            .iter()
+            .map(|pr| {
+                let mut t = pr.clone();
+                t.resize(p, 0);
+                Tensor::i32(vec![p], t)
+            })
+            .collect();
+
+        let sh_spec = manifest.artifact("prefill_shallow").unwrap();
+        let sh_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = padded
+            .iter()
+            .map(|t| (be.fresh_kv(sh_spec).unwrap(), vec![t.clone()]))
+            .collect();
+        let sh_out = assert_batched_matches(&be, "prefill_shallow", &sh_lanes);
+
+        let dp_spec = manifest.artifact("prefill_deep").unwrap();
+        let dp_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = sh_out
+            .iter()
+            .zip(&prompts)
+            .map(|(o, pr)| {
+                (
+                    be.fresh_kv(dp_spec).unwrap(),
+                    vec![
+                        o.outputs[0].clone(),
+                        Tensor::scalar_i32(pr.len() as i32),
+                    ],
+                )
+            })
+            .collect();
+        let dp_out = assert_batched_matches(&be, "prefill_deep", &dp_lanes);
+
+        // Draft from each lane's feed point (position = prompt length).
+        let draft_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = sh_out
+            .iter()
+            .zip(&prompts)
+            .map(|(o, pr)| {
+                (
+                    o.kv.clone(),
+                    vec![
+                        Tensor::scalar_i32(7),
+                        Tensor::scalar_i32(pr.len() as i32),
+                    ],
+                )
+            })
+            .collect();
+        assert_batched_matches(&be, "draft_step", &draft_lanes);
+        let block_out = assert_batched_matches(&be, "draft_block", &draft_lanes);
+
+        let verify_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = dp_out
+            .iter()
+            .zip(&block_out)
+            .zip(&prompts)
+            .map(|((dpo, blo), pr)| {
+                (
+                    dpo.kv.clone(),
+                    vec![
+                        blo.outputs[1].clone(),
+                        Tensor::scalar_i32(pr.len() as i32),
+                    ],
+                )
+            })
+            .collect();
+        assert_batched_matches(&be, "verify_block", &verify_lanes);
+
+        let fl_spec = manifest.artifact("prefill_full").unwrap();
+        let fl_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = padded
+            .iter()
+            .zip(&prompts)
+            .map(|(t, pr)| {
+                (
+                    be.fresh_kv(fl_spec).unwrap(),
+                    vec![t.clone(), Tensor::scalar_i32(pr.len() as i32)],
+                )
+            })
+            .collect();
+        let fl_out = assert_batched_matches(&be, "prefill_full", &fl_lanes);
+        let step_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = fl_out
+            .iter()
+            .zip(&prompts)
+            .map(|(o, pr)| {
+                (
+                    o.kv.clone(),
+                    vec![
+                        Tensor::scalar_i32(9),
+                        Tensor::scalar_i32(pr.len() as i32),
+                    ],
+                )
+            })
+            .collect();
+        assert_batched_matches(&be, "target_step", &step_lanes);
+    }
+
+    /// Artifacts without a lane-blocked kernel fall back to the serial
+    /// loop — still one `call_batched`, still bitwise identical.
+    #[test]
+    fn batched_fallback_for_headless_artifacts() {
+        let be = be();
+        let d = be.cfg.d_model;
+        let hl = Tensor::f32(vec![d], vec![0.1; d]);
+        let lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> =
+            (0..3).map(|_| (Vec::new(), vec![hl.clone()])).collect();
+        assert_batched_matches(&be, "medusa_heads", &lanes);
+    }
+}

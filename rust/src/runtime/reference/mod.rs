@@ -15,6 +15,7 @@
 //! with hand-derived gradients through the LoRA factors and a fused
 //! bias-corrected Adam update, matching `python/compile/train.py`.
 
+mod batched;
 pub mod model;
 pub mod synth;
 
@@ -23,7 +24,7 @@ use std::sync::RwLock;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::runtime::backend::{Backend, Buffer, CallOut};
+use crate::runtime::backend::{Backend, BatchItem, Buffer, CallOut};
 use crate::runtime::manifest::{ArtifactSpec, Role};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::util::math::logsumexp;
@@ -706,6 +707,44 @@ impl Backend for ReferenceBackend {
             "eagle_step" => self.eagle_step(inputs),
             "train_step" => self.train_step(inputs),
             other => bail!("reference backend: unknown artifact '{other}'"),
+        }
+    }
+
+    /// Lane-blocked batched execution (see `batched.rs`): the hot
+    /// per-sequence artifacts run with the layer loop outermost and the
+    /// lane loop innermost, everything else falls back to a serial
+    /// per-lane loop. Per-lane results are bitwise identical to `call`.
+    fn call_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        if batch.len() <= 1 {
+            return batch
+                .iter()
+                .map(|item| self.call(spec, item.kv, item.inputs))
+                .collect();
+        }
+        match spec.name.as_str() {
+            "prefill_shallow" => self.prefill_shallow_batched(spec, batch),
+            "prefill_deep" => self.prefill_deep_batched(spec, batch),
+            "draft_step" => self.draft_step_batched(spec, batch),
+            "draft_block" => self.draft_block_batched(spec, batch),
+            "verify_block" => self.verify_block_batched(spec, batch),
+            "prefill_full" => {
+                self.full_prefill_batched(&self.target, spec, batch)
+            }
+            "target_step" => self.full_step_batched(&self.target, spec, batch),
+            "sps_prefill" => {
+                self.full_prefill_batched(&self.drafter, spec, batch)
+            }
+            "sps_draft_step" => {
+                self.full_step_batched(&self.drafter, spec, batch)
+            }
+            _ => batch
+                .iter()
+                .map(|item| self.call(spec, item.kv, item.inputs))
+                .collect(),
         }
     }
 

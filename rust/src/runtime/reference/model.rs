@@ -55,6 +55,16 @@ pub struct ModelW {
     pub lm_head: Vec<f32>,
 }
 
+/// One sequence's slice of a lane-blocked batched step: its current
+/// hidden state, its own KV cache pair, and the position it occupies.
+/// See [`ModelW::step_layers_lanes`].
+pub struct StepLane {
+    pub h: Vec<f32>,
+    pub kc: Vec<f32>,
+    pub vc: Vec<f32>,
+    pub pos: usize,
+}
+
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut s = 0.0f32;
@@ -131,6 +141,65 @@ impl ModelW {
         Ok(self.embed[tok * self.d..(tok + 1) * self.d].to_vec())
     }
 
+    /// The per-(layer, position) update — the shared body of
+    /// [`Self::step_layers`] and [`Self::step_layers_lanes`]. Keeping one
+    /// body is what makes lane-blocked batched execution bitwise-lossless:
+    /// both paths run exactly this op sequence per lane.
+    fn layer_pos_step(
+        &self,
+        layer: &LayerW,
+        base: usize,
+        h: &mut [f32],
+        kc: &mut [f32],
+        vc: &mut [f32],
+        pos: usize,
+        inv_sqrt_d: f32,
+    ) {
+        let d = self.d;
+        let xn = rmsnorm(h, &layer.rms_attn, self.eps);
+        let q = matvec(&xn, &layer.wq, d);
+        let k = matvec(&xn, &layer.wk, d);
+        let v = matvec(&xn, &layer.wv, d);
+        kc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&k);
+        vc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&v);
+
+        // Causal single-head attention over slots 0..=pos.
+        let mut scores = Vec::with_capacity(pos + 1);
+        let mut max_s = f32::NEG_INFINITY;
+        for j in 0..=pos {
+            let s = dot(&q, &kc[base + j * d..base + (j + 1) * d]) * inv_sqrt_d;
+            max_s = max_s.max(s);
+            scores.push(s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max_s).exp();
+            denom += *s;
+        }
+        let mut attn = vec![0.0f32; d];
+        for (j, &w) in scores.iter().enumerate() {
+            let vrow = &vc[base + j * d..base + (j + 1) * d];
+            let wn = w / denom;
+            for di in 0..d {
+                attn[di] += wn * vrow[di];
+            }
+        }
+        let o = matvec(&attn, &layer.wo, d);
+        for di in 0..d {
+            h[di] += o[di];
+        }
+
+        let xm = rmsnorm(h, &layer.rms_mlp, self.eps);
+        let mut a = matvec(&xm, &layer.w1, self.ff);
+        for x in a.iter_mut() {
+            *x = silu(*x);
+        }
+        let m = matvec(&a, &layer.w2, d);
+        for di in 0..d {
+            h[di] += m[di];
+        }
+    }
+
     /// Run layers `lo..hi` for one position. `kc`/`vc` are the caches
     /// for exactly those layers, `[(hi-lo), max_seq, d]` flattened;
     /// slot `pos` is written before attending and queries see slots
@@ -151,47 +220,47 @@ impl ModelW {
         let inv_sqrt_d = 1.0 / (d as f32).sqrt();
         for (row, layer) in self.layers[lo..hi].iter().enumerate() {
             let base = row * self.max_seq * d;
-            let xn = rmsnorm(h, &layer.rms_attn, self.eps);
-            let q = matvec(&xn, &layer.wq, d);
-            let k = matvec(&xn, &layer.wk, d);
-            let v = matvec(&xn, &layer.wv, d);
-            kc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&k);
-            vc[base + pos * d..base + (pos + 1) * d].copy_from_slice(&v);
+            self.layer_pos_step(layer, base, h, kc, vc, pos, inv_sqrt_d);
+        }
+        Ok(())
+    }
 
-            // Causal single-head attention over slots 0..=pos.
-            let mut scores = Vec::with_capacity(pos + 1);
-            let mut max_s = f32::NEG_INFINITY;
-            for j in 0..=pos {
-                let s = dot(&q, &kc[base + j * d..base + (j + 1) * d]) * inv_sqrt_d;
-                max_s = max_s.max(s);
-                scores.push(s);
-            }
-            let mut denom = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - max_s).exp();
-                denom += *s;
-            }
-            let mut attn = vec![0.0f32; d];
-            for (j, &w) in scores.iter().enumerate() {
-                let vrow = &vc[base + j * d..base + (j + 1) * d];
-                let wn = w / denom;
-                for di in 0..d {
-                    attn[di] += wn * vrow[di];
-                }
-            }
-            let o = matvec(&attn, &layer.wo, d);
-            for di in 0..d {
-                h[di] += o[di];
-            }
-
-            let xm = rmsnorm(h, &layer.rms_mlp, self.eps);
-            let mut a = matvec(&xm, &layer.w1, self.ff);
-            for x in a.iter_mut() {
-                *x = silu(*x);
-            }
-            let m = matvec(&a, &layer.w2, d);
-            for di in 0..d {
-                h[di] += m[di];
+    /// Lane-blocked variant of [`Self::step_layers`]: layers outer, lanes
+    /// inner, so each layer's weight matrices stream through the cache
+    /// hierarchy once per batch instead of once per sequence (the CPU
+    /// interpreter's analogue of turning per-sequence GEMVs into a
+    /// batched GEMM). Lanes are fully independent — each has its own
+    /// hidden state, KV cache, and position — and each lane runs the
+    /// exact [`Self::layer_pos_step`] op sequence, so per-lane results
+    /// are bitwise identical to unbatched calls.
+    pub fn step_layers_lanes(
+        &self,
+        lo: usize,
+        hi: usize,
+        lanes: &mut [StepLane],
+    ) -> Result<()> {
+        let d = self.d;
+        ensure!(hi <= self.layers.len() && lo <= hi, "bad layer range {lo}..{hi}");
+        for lane in lanes.iter() {
+            ensure!(
+                lane.pos < self.max_seq,
+                "position {} >= max_seq {}",
+                lane.pos,
+                self.max_seq
+            );
+            ensure!(
+                lane.kc.len() == (hi - lo) * self.max_seq * d,
+                "kv cache size mismatch"
+            );
+        }
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        for (row, layer) in self.layers[lo..hi].iter().enumerate() {
+            let base = row * self.max_seq * d;
+            for lane in lanes.iter_mut() {
+                self.layer_pos_step(
+                    layer, base, &mut lane.h, &mut lane.kc, &mut lane.vc,
+                    lane.pos, inv_sqrt_d,
+                );
             }
         }
         Ok(())
@@ -317,6 +386,46 @@ mod tests {
         let base = m.logits(&h);
         let draft = m.draft_logits(&h, &a, &b, 2, 2.0);
         assert_eq!(base, draft);
+    }
+
+    /// Lane-blocked stepping must be bitwise identical to stepping each
+    /// lane alone — the contract batched serving losslessness rests on.
+    #[test]
+    fn lane_blocked_step_matches_serial() {
+        let m = tiny();
+        // Per-lane histories of different lengths -> different positions.
+        let hist: [&[usize]; 3] = [&[5, 9], &[1], &[30, 2, 7]];
+        let mk_lane = |toks: &[usize]| {
+            let mut kc = vec![0.0; 3 * 24 * 8];
+            let mut vc = vec![0.0; 3 * 24 * 8];
+            for (pos, &t) in toks.iter().enumerate() {
+                let mut h = m.embed_row(t).unwrap();
+                m.step_layers(0, 3, &mut h, &mut kc, &mut vc, pos).unwrap();
+            }
+            (kc, vc, toks.len())
+        };
+        // Serial: one more step per lane, each lane alone.
+        let mut serial = Vec::new();
+        for toks in hist {
+            let (mut kc, mut vc, pos) = mk_lane(toks);
+            let mut h = m.embed_row(3).unwrap();
+            m.step_layers(0, 3, &mut h, &mut kc, &mut vc, pos).unwrap();
+            serial.push((h, kc, vc));
+        }
+        // Lane-blocked: the same step for all three lanes at once.
+        let mut lanes: Vec<StepLane> = hist
+            .iter()
+            .map(|toks| {
+                let (kc, vc, pos) = mk_lane(toks);
+                StepLane { h: m.embed_row(3).unwrap(), kc, vc, pos }
+            })
+            .collect();
+        m.step_layers_lanes(0, 3, &mut lanes).unwrap();
+        for (lane, (h, kc, vc)) in lanes.iter().zip(&serial) {
+            assert_eq!(&lane.h, h, "hidden state diverged under lane blocking");
+            assert_eq!(&lane.kc, kc, "k cache diverged under lane blocking");
+            assert_eq!(&lane.vc, vc, "v cache diverged under lane blocking");
+        }
     }
 
     #[test]

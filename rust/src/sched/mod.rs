@@ -1,0 +1,462 @@
+//! Continuous-batching scheduler: step-level multiplexing of many
+//! in-flight sequences through **batched** backend calls.
+//!
+//! The per-thread router dedicates one worker thread (and one
+//! batch-size-1 backend call stream) to each request. This scheduler
+//! instead keeps up to `max_slots` sequences resident as
+//! [`seq::SeqState`] machines and, each [`Scheduler::tick`]:
+//!
+//!   1. admits queued requests FIFO into free KV slots,
+//!   2. groups every active sequence by the artifact it needs next
+//!      (prefill / draft / verify) and advances each by exactly one call
+//!      via [`crate::runtime::Artifact::call_batched`], at most
+//!      `max_batch` lanes per call,
+//!   3. drains completed sequences (preemption-free: an admitted
+//!      sequence always runs to completion).
+//!
+//! Fairness falls out of the tick structure: admission is strictly FIFO
+//! and every active lane advances once per tick, so no sequence can be
+//! starved by co-resident traffic. Losslessness falls out of the batched
+//! backend contract: lane results are bitwise identical to per-sequence
+//! calls, so the committed token streams equal the per-sequence engines'
+//! (asserted by `tests/sched.rs`).
+//!
+//! DVI sequences log accept/reject tuples into the shared
+//! [`ReplayBuffer`] exactly like the per-thread engines do, so the
+//! online learner thread needs no changes to ride on batched serving.
+
+pub mod seq;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::engine::GenResult;
+use crate::learner::ReplayBuffer;
+use crate::runtime::{log, BatchItem, Runtime};
+
+use self::seq::{MethodCtx, SeqState};
+
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Sequence engine: "dvi" or "ar".
+    pub method: String,
+    /// Max lanes per batched backend call.
+    pub max_batch: usize,
+    /// KV slot pool size = max concurrently resident sequences.
+    pub max_slots: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { method: "dvi".into(), max_batch: 8, max_slots: 16 }
+    }
+}
+
+/// Serving metrics, updated inside the tick loop and readable from any
+/// thread (the router exposes them alongside its own counters).
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    pub ticks: AtomicU64,
+    /// Batched backend calls issued.
+    pub calls: AtomicU64,
+    /// Lanes carried by those calls (occupancy numerator).
+    pub lanes: AtomicU64,
+    /// Tokens committed across all sequences.
+    pub committed_tokens: AtomicU64,
+    /// Sequences completed (served + failed).
+    pub served: AtomicU64,
+    /// Total submit→admission wait.
+    pub queue_wait_ns: AtomicU64,
+    /// Most slots ever occupied at once (must stay <= max_slots).
+    pub slot_high_water: AtomicU64,
+}
+
+impl SchedStats {
+    /// Mean lanes per batched backend call. > 1 means batching is real.
+    pub fn occupancy(&self) -> f64 {
+        let calls = self.calls.load(Ordering::Relaxed);
+        if calls == 0 {
+            0.0
+        } else {
+            self.lanes.load(Ordering::Relaxed) as f64 / calls as f64
+        }
+    }
+
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        let served = self.served.load(Ordering::Relaxed);
+        if served == 0 {
+            0.0
+        } else {
+            self.queue_wait_ns.load(Ordering::Relaxed) as f64
+                / served as f64
+                / 1e6
+        }
+    }
+
+    pub fn committed_per_tick(&self) -> f64 {
+        let ticks = self.ticks.load(Ordering::Relaxed);
+        if ticks == 0 {
+            0.0
+        } else {
+            self.committed_tokens.load(Ordering::Relaxed) as f64 / ticks as f64
+        }
+    }
+}
+
+struct Pending {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    submitted: Instant,
+}
+
+struct Lane {
+    id: u64,
+    state: SeqState,
+    queue_wait_ns: u64,
+}
+
+/// A completed sequence, in completion order.
+pub struct SchedResult {
+    pub id: u64,
+    pub queue_wait_ns: u64,
+    pub result: Result<GenResult>,
+}
+
+pub struct Scheduler {
+    ctx: MethodCtx,
+    cfg: SchedConfig,
+    queue: VecDeque<Pending>,
+    slots: Vec<Option<Lane>>,
+    done: Vec<SchedResult>,
+    pub stats: Arc<SchedStats>,
+    next_id: u64,
+}
+
+impl Scheduler {
+    /// Construction resolves the method's artifacts up front, so a bad
+    /// method or missing artifact fails here — not inside a serving
+    /// thread with requests already queued.
+    pub fn new(
+        rt: Arc<Runtime>,
+        cfg: SchedConfig,
+        buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+    ) -> Result<Scheduler> {
+        ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        ensure!(cfg.max_slots >= 1, "max_slots must be >= 1");
+        let ctx = MethodCtx::new(rt, &cfg.method, buffer)?;
+        let slots = (0..cfg.max_slots).map(|_| None).collect();
+        Ok(Scheduler {
+            ctx,
+            cfg,
+            queue: VecDeque::new(),
+            slots,
+            done: Vec::new(),
+            stats: Arc::new(SchedStats::default()),
+            next_id: 0,
+        })
+    }
+
+    /// Enqueue a request; returns its scheduler-local id (also carried
+    /// by the matching [`SchedResult`]).
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+        self.submit_at(prompt, max_new, Instant::now())
+    }
+
+    /// Enqueue with an externally stamped submit time, so callers that
+    /// relay requests through a channel (the batched router) can count
+    /// channel residency toward the queue-wait metric.
+    pub fn submit_at(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        submitted: Instant,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending { id, prompt, max_new, submitted });
+        id
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active() == 0
+    }
+
+    /// Take all results completed since the last drain.
+    pub fn drain_completed(&mut self) -> Vec<SchedResult> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Complete a lane with an error, freeing its slot.
+    fn fail_lane(&mut self, slot: usize, err: anyhow::Error) {
+        if let Some(lane) = self.slots[slot].take() {
+            log::info(&format!("scheduled sequence {} failed: {err}", lane.id));
+            self.stats.served.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .queue_wait_ns
+                .fetch_add(lane.queue_wait_ns, Ordering::Relaxed);
+            self.done.push(SchedResult {
+                id: lane.id,
+                queue_wait_ns: lane.queue_wait_ns,
+                result: Err(err),
+            });
+        }
+    }
+
+    /// One scheduling step: admit, advance every active lane by exactly
+    /// one batched backend call, drain completions. Returns the number
+    /// of lanes advanced (0 with an empty queue means idle).
+    pub fn tick(&mut self) -> Result<usize> {
+        self.stats.ticks.fetch_add(1, Ordering::Relaxed);
+
+        // ---- admission: FIFO into free slots ---------------------------
+        while !self.queue.is_empty() {
+            let Some(free) = self.slots.iter().position(|s| s.is_none()) else {
+                break;
+            };
+            let p = self.queue.pop_front().expect("queue checked non-empty");
+            let queue_wait_ns = p.submitted.elapsed().as_nanos() as u64;
+            match self.ctx.new_seq(&p.prompt, p.max_new) {
+                Ok(state) => {
+                    self.slots[free] = Some(Lane { id: p.id, state, queue_wait_ns });
+                }
+                Err(e) => {
+                    // Bad request (e.g. oversized prompt): fail fast, keep
+                    // the slot for the next queued request.
+                    self.stats.served.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .queue_wait_ns
+                        .fetch_add(queue_wait_ns, Ordering::Relaxed);
+                    self.done.push(SchedResult {
+                        id: p.id,
+                        queue_wait_ns,
+                        result: Err(e),
+                    });
+                }
+            }
+        }
+        self.stats
+            .slot_high_water
+            .fetch_max(self.active() as u64, Ordering::Relaxed);
+
+        // ---- group active lanes by the artifact they need next ---------
+        let mut groups: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(lane) = slot {
+                if let Some(name) = lane.state.pending_artifact() {
+                    groups.entry(name).or_default().push(i);
+                }
+            }
+        }
+
+        // ---- one batched backend call per (artifact, chunk) ------------
+        let mut advanced = 0usize;
+        for (_, idxs) in groups {
+            for chunk in idxs.chunks(self.cfg.max_batch) {
+                let mut specs = Vec::with_capacity(chunk.len());
+                let mut chunk_ok = true;
+                for &i in chunk {
+                    let call = self.slots[i]
+                        .as_mut()
+                        .expect("grouped lane is live")
+                        .state
+                        .next_call();
+                    match call {
+                        Ok(s) => specs.push(s),
+                        Err(e) => {
+                            // next_call is re-invocable, so the chunk's
+                            // other lanes simply retry next tick.
+                            self.fail_lane(i, e);
+                            chunk_ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !chunk_ok {
+                    continue;
+                }
+                let items: Vec<BatchItem<'_>> = specs
+                    .iter()
+                    .map(|s| BatchItem { kv: &s.kv, inputs: &s.inputs })
+                    .collect();
+                let outs = specs[0].artifact.call_batched(&items);
+                drop(items);
+                match outs {
+                    Ok(outs) => {
+                        // Only successful calls count toward progress and
+                        // the occupancy stats — a failing backend must not
+                        // report healthy batching.
+                        advanced += chunk.len();
+                        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+                        self.stats
+                            .lanes
+                            .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                        for (&i, out) in chunk.iter().zip(outs) {
+                            let applied = self.slots[i]
+                                .as_mut()
+                                .expect("grouped lane is live")
+                                .state
+                                .apply(out);
+                            match applied {
+                                Ok(committed) => {
+                                    self.stats.committed_tokens.fetch_add(
+                                        committed as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                                Err(e) => self.fail_lane(i, e),
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let name = specs[0].artifact.spec.name.clone();
+                        for &i in chunk {
+                            self.fail_lane(
+                                i,
+                                anyhow!("batched {name} call failed: {e}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- drain completed sequences ---------------------------------
+        for i in 0..self.slots.len() {
+            let finished =
+                matches!(&self.slots[i], Some(l) if l.state.is_done());
+            if finished {
+                let lane = self.slots[i].take().expect("finished lane");
+                self.stats.served.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .queue_wait_ns
+                    .fetch_add(lane.queue_wait_ns, Ordering::Relaxed);
+                self.done.push(SchedResult {
+                    id: lane.id,
+                    queue_wait_ns: lane.queue_wait_ns,
+                    result: Ok(lane.state.into_result()),
+                });
+            }
+        }
+        Ok(advanced)
+    }
+
+    /// Drive until every queued and resident sequence completes.
+    /// `max_ticks` bounds runaway loops; a healthy run needs roughly
+    /// ceil(sequences / max_slots) x calls-per-sequence ticks.
+    pub fn run_until_idle(&mut self, max_ticks: usize) -> Result<()> {
+        for _ in 0..max_ticks {
+            if self.is_idle() {
+                return Ok(());
+            }
+            self.tick()?;
+        }
+        if self.is_idle() {
+            Ok(())
+        } else {
+            bail!(
+                "scheduler not idle after {max_ticks} ticks \
+                 ({} active, {} queued)",
+                self.active(),
+                self.queued()
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Arc<Runtime> {
+        Arc::new(Runtime::load_reference(0x5C4ED).expect("reference runtime"))
+    }
+
+    fn prompts(rt: &Runtime, n: usize) -> Vec<Vec<u32>> {
+        let set = rt.synthetic_prompts("qa").expect("qa prompts");
+        set.samples.iter().take(n).map(|s| s.prompt.clone()).collect()
+    }
+
+    /// 9 sequences through 3 slots: slots must be recycled (high-water
+    /// stays at the configured max), everything completes, and batched
+    /// occupancy is real (> 1 lane per call).
+    #[test]
+    fn slots_are_recycled_and_all_complete() {
+        let rt = runtime();
+        let cfg = SchedConfig {
+            method: "ar".into(),
+            max_batch: 4,
+            max_slots: 3,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let mut ids = Vec::new();
+        for p in prompts(&rt, 9) {
+            ids.push(sched.submit(p, 6));
+        }
+        sched.run_until_idle(10_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), 9);
+        let mut seen: Vec<u64> = done.iter().map(|r| r.id).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, ids, "every submitted id completes exactly once");
+        let mut tokens = 0u64;
+        for r in done {
+            tokens += r.result.expect("generation succeeds").tokens.len() as u64;
+        }
+        let stats = &sched.stats;
+        assert_eq!(stats.committed_tokens.load(Ordering::Relaxed), tokens);
+        assert!(
+            stats.slot_high_water.load(Ordering::Relaxed) <= 3,
+            "slot pool exceeded its configured max"
+        );
+        assert!(stats.occupancy() > 1.0, "batching never exceeded one lane");
+        assert_eq!(stats.served.load(Ordering::Relaxed), 9);
+    }
+
+    /// Oversized prompts are rejected at admission with an Err result;
+    /// the remaining traffic is unaffected.
+    #[test]
+    fn bad_request_fails_fast_without_wedging() {
+        let rt = runtime();
+        let prefill_seq = rt.manifest.spec_usize("prefill_seq").unwrap();
+        let cfg = SchedConfig {
+            method: "dvi".into(),
+            max_batch: 4,
+            max_slots: 2,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let bad = sched.submit(vec![1u32; prefill_seq + 5], 8);
+        let good = sched.submit(prompts(&rt, 1).remove(0), 8);
+        sched.run_until_idle(10_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), 2);
+        for r in done {
+            if r.id == bad {
+                assert!(r.result.is_err());
+            } else {
+                assert_eq!(r.id, good);
+                assert!(!r.result.unwrap().tokens.is_empty());
+            }
+        }
+    }
+
+    /// Unknown methods fail at construction, before any thread spawns.
+    #[test]
+    fn unknown_method_fails_at_construction() {
+        let rt = runtime();
+        let cfg = SchedConfig { method: "banana".into(), ..Default::default() };
+        assert!(Scheduler::new(rt, cfg, None).is_err());
+    }
+}

@@ -1,0 +1,707 @@
+//! Resumable per-sequence decode state machines.
+//!
+//! [`DviSeq`] and [`ArSeq`] are the DVI and AR engines' generate loops
+//! unrolled into poll-able state machines: `pending_artifact` names the
+//! backend call the sequence needs next, `next_call` materialises it,
+//! `apply` consumes the result and advances the phase
+//! (Prefilling → Drafting → Verifying → Done). A single sequence driven
+//! call-by-call reproduces the old engine loops exactly — the engines
+//! themselves now run on these machines — and the continuous-batching
+//! scheduler ([`crate::sched::Scheduler`]) drives many of them through
+//! batched backend calls. Because both paths execute the identical
+//! per-sequence op sequence, batched serving is bitwise-lossless against
+//! per-sequence decoding (asserted by `tests/sched.rs`).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::{truncate_at_eos, GenResult, StepRecord};
+use crate::learner::{ReplayBuffer, Tuple};
+use crate::runtime::{Artifact, Buffer, CallOut, Runtime, Tensor};
+use crate::spec::{longest_prefix, SeqPos};
+use crate::util::math::argmax;
+
+/// Coarse phase of a sequence, shared by both machines. AR sequences
+/// have no draft stage; their decode steps count as Verifying (each is
+/// one target-model call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    Prefilling,
+    Drafting,
+    Verifying,
+    Done,
+}
+
+/// One materialised backend call: the artifact plus this sequence's KV
+/// handles (cheap `Arc` clones) and host inputs. Owned, so the scheduler
+/// can collect a batch of these without borrow entanglement.
+pub struct CallSpec {
+    pub artifact: Arc<Artifact>,
+    pub kv: Vec<Buffer>,
+    pub inputs: Vec<Tensor>,
+}
+
+/// Shared immutable context for DVI sequences: artifact handles and
+/// model dimensions, resolved once per engine/scheduler.
+#[derive(Clone)]
+pub struct DviCtx {
+    pub rt: Arc<Runtime>,
+    pub prefill_sh: Arc<Artifact>,
+    pub prefill_dp: Arc<Artifact>,
+    pub draft: Arc<Artifact>,
+    /// Fused k_spec-step draft loop; `None` forces the per-step path.
+    pub draft_block: Option<Arc<Artifact>>,
+    pub verify: Arc<Artifact>,
+    pub k_spec: usize,
+    pub d_model: usize,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+}
+
+impl DviCtx {
+    pub fn new(rt: Arc<Runtime>) -> Result<DviCtx> {
+        let k_spec = rt.manifest.spec_usize("k_spec")?;
+        let d_model = rt.manifest.model_usize("d_model")?;
+        let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
+        let max_seq = rt.manifest.model_usize("max_seq")?;
+        Ok(DviCtx {
+            prefill_sh: rt.artifact("prefill_shallow")?,
+            prefill_dp: rt.artifact("prefill_deep")?,
+            draft: rt.artifact("draft_step")?,
+            draft_block: rt.artifact("draft_block").ok(),
+            verify: rt.artifact("verify_block")?,
+            rt,
+            k_spec,
+            d_model,
+            prefill_seq,
+            max_seq,
+        })
+    }
+}
+
+/// Shared immutable context for AR sequences.
+#[derive(Clone)]
+pub struct ArCtx {
+    pub rt: Arc<Runtime>,
+    pub prefill: Arc<Artifact>,
+    pub step: Arc<Artifact>,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+}
+
+impl ArCtx {
+    pub fn new(rt: Arc<Runtime>) -> Result<ArCtx> {
+        let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
+        let max_seq = rt.manifest.model_usize("max_seq")?;
+        Ok(ArCtx {
+            prefill: rt.artifact("prefill_full")?,
+            step: rt.artifact("target_step")?,
+            rt,
+            prefill_seq,
+            max_seq,
+        })
+    }
+}
+
+// ----------------------------------------------------------------------------
+// DVI sequence
+// ----------------------------------------------------------------------------
+
+enum DviStep {
+    PrefillShallow,
+    PrefillDeep,
+    /// Draft sub-step index: always 0 on the fused draft_block path,
+    /// 0..k_spec on the per-step path.
+    Draft(usize),
+    Verify,
+    Done,
+}
+
+/// One in-flight DVI sequence (paper §3.2–3.3 round structure, unrolled).
+pub struct DviSeq {
+    ctx: Arc<DviCtx>,
+    /// Tuple sink; accept/reject supervision is logged when present.
+    buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+    step: DviStep,
+    seq: SeqPos,
+    prompt_len: usize,
+    max_new: usize,
+    kv_sh: Vec<Buffer>,
+    kv_dp: Vec<Buffer>,
+    /// Shallow prefill rows awaiting the deep prefill call.
+    hk_seq: Option<Tensor>,
+    /// Feed point at the start of the current round.
+    round_feed: (u32, usize),
+    drafted: Vec<u32>,
+    hk_rows: Vec<f32>,
+    result: GenResult,
+    started: Instant,
+    round_t0: Instant,
+    call_t0: Instant,
+    decode_t0: Instant,
+    draft_ns: u64,
+}
+
+impl DviSeq {
+    pub fn new(
+        ctx: Arc<DviCtx>,
+        buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<DviSeq> {
+        ensure!(
+            prompt.len() <= ctx.prefill_seq,
+            "prompt length {} exceeds prefill capacity {}",
+            prompt.len(),
+            ctx.prefill_seq
+        );
+        let kv_sh = ctx.rt.fresh_kv("prefill_shallow")?;
+        let kv_dp = ctx.rt.fresh_kv("prefill_deep")?;
+        let now = Instant::now();
+        Ok(DviSeq {
+            buffer,
+            step: DviStep::PrefillShallow,
+            seq: SeqPos::after_prefill(prompt),
+            prompt_len: prompt.len(),
+            max_new,
+            kv_sh,
+            kv_dp,
+            hk_seq: None,
+            round_feed: (0, 0),
+            drafted: Vec::with_capacity(ctx.k_spec),
+            hk_rows: Vec::with_capacity(ctx.k_spec * ctx.d_model),
+            result: GenResult::default(),
+            started: now,
+            round_t0: now,
+            call_t0: now,
+            decode_t0: now,
+            draft_ns: 0,
+            ctx,
+        })
+    }
+
+    pub fn pending_artifact(&self) -> Option<&'static str> {
+        match self.step {
+            DviStep::PrefillShallow => Some("prefill_shallow"),
+            DviStep::PrefillDeep => Some("prefill_deep"),
+            DviStep::Draft(_) => Some(if self.ctx.draft_block.is_some() {
+                "draft_block"
+            } else {
+                "draft_step"
+            }),
+            DviStep::Verify => Some("verify_block"),
+            DviStep::Done => None,
+        }
+    }
+
+    pub fn phase(&self) -> SeqPhase {
+        match self.step {
+            DviStep::PrefillShallow | DviStep::PrefillDeep => SeqPhase::Prefilling,
+            DviStep::Draft(_) => SeqPhase::Drafting,
+            DviStep::Verify => SeqPhase::Verifying,
+            DviStep::Done => SeqPhase::Done,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.step, DviStep::Done)
+    }
+
+    pub fn into_result(self) -> GenResult {
+        self.result
+    }
+
+    /// Materialise the next backend call for this sequence.
+    pub fn next_call(&mut self) -> Result<CallSpec> {
+        let now = Instant::now();
+        match self.step {
+            DviStep::PrefillShallow => {
+                let mut padded: Vec<i32> = self.seq.tokens[..self.prompt_len]
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect();
+                padded.resize(self.ctx.prefill_seq, 0);
+                Ok(CallSpec {
+                    artifact: self.ctx.prefill_sh.clone(),
+                    kv: self.kv_sh.clone(),
+                    inputs: vec![Tensor::i32(vec![self.ctx.prefill_seq], padded)],
+                })
+            }
+            DviStep::PrefillDeep => {
+                let hk = match &self.hk_seq {
+                    Some(t) => t.clone(),
+                    None => bail!("deep prefill without shallow prefill rows"),
+                };
+                Ok(CallSpec {
+                    artifact: self.ctx.prefill_dp.clone(),
+                    kv: self.kv_dp.clone(),
+                    inputs: vec![hk, Tensor::scalar_i32(self.prompt_len as i32)],
+                })
+            }
+            DviStep::Draft(i) => {
+                if i == 0 {
+                    self.round_t0 = now;
+                    self.round_feed = self.seq.feed();
+                    self.drafted.clear();
+                    self.hk_rows.clear();
+                }
+                if let Some(block) = &self.ctx.draft_block {
+                    Ok(CallSpec {
+                        artifact: block.clone(),
+                        kv: self.kv_sh.clone(),
+                        inputs: vec![
+                            Tensor::scalar_i32(self.round_feed.0 as i32),
+                            Tensor::scalar_i32(self.round_feed.1 as i32),
+                        ],
+                    })
+                } else {
+                    let tok = if i == 0 {
+                        self.round_feed.0
+                    } else {
+                        *self.drafted.last().expect("draft sub-step without prior")
+                    };
+                    Ok(CallSpec {
+                        artifact: self.ctx.draft.clone(),
+                        kv: self.kv_sh.clone(),
+                        inputs: vec![
+                            Tensor::scalar_i32(tok as i32),
+                            Tensor::scalar_i32((self.round_feed.1 + i) as i32),
+                        ],
+                    })
+                }
+            }
+            DviStep::Verify => {
+                self.call_t0 = now;
+                self.draft_ns = self.round_t0.elapsed().as_nanos() as u64;
+                Ok(CallSpec {
+                    artifact: self.ctx.verify.clone(),
+                    kv: self.kv_dp.clone(),
+                    inputs: vec![
+                        Tensor::f32(
+                            vec![self.ctx.k_spec, self.ctx.d_model],
+                            self.hk_rows.clone(),
+                        ),
+                        Tensor::scalar_i32(self.round_feed.1 as i32),
+                    ],
+                })
+            }
+            DviStep::Done => bail!("sequence already complete"),
+        }
+    }
+
+    /// Consume the result of the call [`Self::next_call`] described.
+    /// Returns the number of tokens committed by this call.
+    pub fn apply(&mut self, out: CallOut) -> Result<usize> {
+        match self.step {
+            DviStep::PrefillShallow => {
+                self.kv_sh = out.kv;
+                self.hk_seq = Some(out.outputs[0].clone());
+                self.step = DviStep::PrefillDeep;
+                Ok(0)
+            }
+            DviStep::PrefillDeep => {
+                self.kv_dp = out.kv;
+                self.hk_seq = None; // consumed; don't pin [P, d] per slot
+                let first = argmax(out.outputs[0].as_f32()?) as u32;
+                self.seq.push_committed(first);
+                self.result.tokens.push(first);
+                self.result.prefill_ns = self.started.elapsed().as_nanos() as u64;
+                self.decode_t0 = Instant::now();
+                self.roll_or_finish();
+                // Delivered delta (post-truncation), so scheduler token
+                // accounting matches what the caller receives.
+                Ok(self.result.tokens.len())
+            }
+            DviStep::Draft(i) => {
+                self.kv_sh = out.kv;
+                if self.ctx.draft_block.is_some() {
+                    self.drafted = out.outputs[0]
+                        .as_i32()?
+                        .iter()
+                        .map(|&t| t as u32)
+                        .collect();
+                    self.hk_rows = out.outputs[1].as_f32()?.to_vec();
+                    self.step = DviStep::Verify;
+                } else {
+                    let d = argmax(out.outputs[0].as_f32()?) as u32;
+                    self.hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
+                    self.drafted.push(d);
+                    self.step = if i + 1 < self.ctx.k_spec {
+                        DviStep::Draft(i + 1)
+                    } else {
+                        DviStep::Verify
+                    };
+                }
+                Ok(0)
+            }
+            DviStep::Verify => {
+                self.kv_dp = out.kv;
+                let k = self.ctx.k_spec;
+                let logits_phi = &out.outputs[0];
+                let verifier: Vec<u32> = (0..k)
+                    .map(|i| Ok(argmax(logits_phi.row_f32(i)?) as u32))
+                    .collect::<Result<_>>()?;
+                let outcome = longest_prefix(&self.drafted, &verifier);
+                let verify_ns = self.call_t0.elapsed().as_nanos() as u64;
+
+                // IMPROVE: one tuple per drafted position up to and
+                // including the first reject (counterfactual positions
+                // beyond it are never logged).
+                if let Some(buf) = &self.buffer {
+                    let mut buf = buf.lock().unwrap();
+                    let logged = (outcome.accepted + 1).min(k);
+                    let d = self.ctx.d_model;
+                    for i in 0..logged {
+                        buf.push(Tuple {
+                            hk: self.hk_rows[i * d..(i + 1) * d].to_vec(),
+                            action: self.drafted[i],
+                            logits_phi: logits_phi.row_f32(i)?.to_vec(),
+                            reward: if i < outcome.accepted { 1.0 } else { 0.0 },
+                        });
+                    }
+                }
+
+                let before = self.result.tokens.len();
+                self.seq.advance(k, outcome.accepted, &outcome.committed);
+                self.result.tokens.extend_from_slice(&outcome.committed);
+                self.result.steps.push(StepRecord {
+                    drafted: k,
+                    accepted: outcome.accepted,
+                    committed: outcome.total_committed(),
+                    draft_ns: self.draft_ns,
+                    verify_ns,
+                });
+                self.roll_or_finish();
+                // Delivered delta: EOS/max_new truncation in
+                // roll_or_finish never cuts below `before` (earlier
+                // rounds already survived it), so this is what the
+                // caller actually gains from the round.
+                Ok(self.result.tokens.len().saturating_sub(before))
+            }
+            DviStep::Done => bail!("sequence already complete"),
+        }
+    }
+
+    /// The engine loop's continuation condition, verbatim: under max_new,
+    /// no EOS emitted (with its truncation side effect), and KV headroom
+    /// for one more round. Anything else finalises the result.
+    fn roll_or_finish(&mut self) {
+        let k = self.ctx.k_spec;
+        if self.result.tokens.len() < self.max_new
+            && !truncate_at_eos(&mut self.result.tokens)
+            && self.seq.kv_len + k + 1 < self.ctx.max_seq
+        {
+            self.step = DviStep::Draft(0);
+        } else {
+            truncate_at_eos(&mut self.result.tokens);
+            self.result.tokens.truncate(self.max_new);
+            self.result.decode_ns = self.decode_t0.elapsed().as_nanos() as u64;
+            self.step = DviStep::Done;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------------
+// AR sequence
+// ----------------------------------------------------------------------------
+
+enum ArStep {
+    Prefill,
+    Step,
+    Done,
+}
+
+/// One in-flight greedy-AR sequence over the full-model artifacts.
+pub struct ArSeq {
+    ctx: Arc<ArCtx>,
+    step: ArStep,
+    seq: SeqPos,
+    prompt_len: usize,
+    max_new: usize,
+    kv: Vec<Buffer>,
+    result: GenResult,
+    started: Instant,
+    call_t0: Instant,
+    decode_t0: Instant,
+}
+
+impl ArSeq {
+    pub fn new(ctx: Arc<ArCtx>, prompt: &[u32], max_new: usize) -> Result<ArSeq> {
+        ensure!(
+            prompt.len() <= ctx.prefill_seq,
+            "prompt length {} exceeds prefill capacity {}",
+            prompt.len(),
+            ctx.prefill_seq
+        );
+        let kv = ctx.rt.fresh_kv("prefill_full")?;
+        let now = Instant::now();
+        Ok(ArSeq {
+            step: ArStep::Prefill,
+            seq: SeqPos::after_prefill(prompt),
+            prompt_len: prompt.len(),
+            max_new,
+            kv,
+            result: GenResult::default(),
+            started: now,
+            call_t0: now,
+            decode_t0: now,
+            ctx,
+        })
+    }
+
+    pub fn pending_artifact(&self) -> Option<&'static str> {
+        match self.step {
+            ArStep::Prefill => Some("prefill_full"),
+            ArStep::Step => Some("target_step"),
+            ArStep::Done => None,
+        }
+    }
+
+    pub fn phase(&self) -> SeqPhase {
+        match self.step {
+            ArStep::Prefill => SeqPhase::Prefilling,
+            ArStep::Step => SeqPhase::Verifying,
+            ArStep::Done => SeqPhase::Done,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.step, ArStep::Done)
+    }
+
+    pub fn into_result(self) -> GenResult {
+        self.result
+    }
+
+    pub fn next_call(&mut self) -> Result<CallSpec> {
+        let now = Instant::now();
+        match self.step {
+            ArStep::Prefill => {
+                let mut padded: Vec<i32> = self.seq.tokens[..self.prompt_len]
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect();
+                padded.resize(self.ctx.prefill_seq, 0);
+                Ok(CallSpec {
+                    artifact: self.ctx.prefill.clone(),
+                    kv: self.kv.clone(),
+                    inputs: vec![
+                        Tensor::i32(vec![self.ctx.prefill_seq], padded),
+                        Tensor::scalar_i32(self.prompt_len as i32),
+                    ],
+                })
+            }
+            ArStep::Step => {
+                self.call_t0 = now;
+                let (tok, pos) = self.seq.feed();
+                Ok(CallSpec {
+                    artifact: self.ctx.step.clone(),
+                    kv: self.kv.clone(),
+                    inputs: vec![
+                        Tensor::scalar_i32(tok as i32),
+                        Tensor::scalar_i32(pos as i32),
+                    ],
+                })
+            }
+            ArStep::Done => bail!("sequence already complete"),
+        }
+    }
+
+    pub fn apply(&mut self, out: CallOut) -> Result<usize> {
+        match self.step {
+            ArStep::Prefill => {
+                self.kv = out.kv;
+                let first = argmax(out.outputs[0].as_f32()?) as u32;
+                self.seq.push_committed(first);
+                self.result.tokens.push(first);
+                self.result.prefill_ns = self.started.elapsed().as_nanos() as u64;
+                self.decode_t0 = Instant::now();
+                self.roll_or_finish();
+                Ok(1)
+            }
+            ArStep::Step => {
+                self.kv = out.kv;
+                let tok = argmax(out.outputs[0].as_f32()?) as u32;
+                self.seq.advance_ar(tok);
+                self.result.tokens.push(tok);
+                self.result.steps.push(StepRecord {
+                    drafted: 0,
+                    accepted: 0,
+                    committed: 1,
+                    draft_ns: 0,
+                    verify_ns: self.call_t0.elapsed().as_nanos() as u64,
+                });
+                self.roll_or_finish();
+                Ok(1)
+            }
+            ArStep::Done => bail!("sequence already complete"),
+        }
+    }
+
+    fn roll_or_finish(&mut self) {
+        if self.result.tokens.len() < self.max_new
+            && !truncate_at_eos(&mut self.result.tokens)
+            && self.seq.kv_len + 1 < self.ctx.max_seq
+        {
+            self.step = ArStep::Step;
+        } else {
+            truncate_at_eos(&mut self.result.tokens);
+            self.result.decode_ns = self.decode_t0.elapsed().as_nanos() as u64;
+            self.step = ArStep::Done;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------------
+// Method-indexed wrappers
+// ----------------------------------------------------------------------------
+
+/// A sequence of either method, behind one poll/apply interface.
+pub enum SeqState {
+    Dvi(Box<DviSeq>),
+    Ar(Box<ArSeq>),
+}
+
+impl SeqState {
+    pub fn pending_artifact(&self) -> Option<&'static str> {
+        match self {
+            SeqState::Dvi(s) => s.pending_artifact(),
+            SeqState::Ar(s) => s.pending_artifact(),
+        }
+    }
+
+    pub fn next_call(&mut self) -> Result<CallSpec> {
+        match self {
+            SeqState::Dvi(s) => s.next_call(),
+            SeqState::Ar(s) => s.next_call(),
+        }
+    }
+
+    pub fn apply(&mut self, out: CallOut) -> Result<usize> {
+        match self {
+            SeqState::Dvi(s) => s.apply(out),
+            SeqState::Ar(s) => s.apply(out),
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        match self {
+            SeqState::Dvi(s) => s.is_done(),
+            SeqState::Ar(s) => s.is_done(),
+        }
+    }
+
+    pub fn phase(&self) -> SeqPhase {
+        match self {
+            SeqState::Dvi(s) => s.phase(),
+            SeqState::Ar(s) => s.phase(),
+        }
+    }
+
+    pub fn into_result(self) -> GenResult {
+        match self {
+            SeqState::Dvi(s) => s.into_result(),
+            SeqState::Ar(s) => s.into_result(),
+        }
+    }
+}
+
+/// Per-method shared context: what the scheduler needs to mint fresh
+/// sequences.
+pub enum MethodCtx {
+    Dvi {
+        ctx: Arc<DviCtx>,
+        buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+    },
+    Ar {
+        ctx: Arc<ArCtx>,
+    },
+}
+
+impl MethodCtx {
+    pub fn new(
+        rt: Arc<Runtime>,
+        method: &str,
+        buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+    ) -> Result<MethodCtx> {
+        match method {
+            "dvi" => Ok(MethodCtx::Dvi {
+                ctx: Arc::new(DviCtx::new(rt)?),
+                buffer,
+            }),
+            "ar" => Ok(MethodCtx::Ar {
+                ctx: Arc::new(ArCtx::new(rt)?),
+            }),
+            other => bail!("scheduler supports methods dvi|ar, got '{other}'"),
+        }
+    }
+
+    pub fn new_seq(&self, prompt: &[u32], max_new: usize) -> Result<SeqState> {
+        match self {
+            MethodCtx::Dvi { ctx, buffer } => Ok(SeqState::Dvi(Box::new(
+                DviSeq::new(ctx.clone(), buffer.clone(), prompt, max_new)?,
+            ))),
+            MethodCtx::Ar { ctx } => Ok(SeqState::Ar(Box::new(ArSeq::new(
+                ctx.clone(),
+                prompt,
+                max_new,
+            )?))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Arc<Runtime> {
+        Arc::new(Runtime::load_reference(0x5E9).expect("reference runtime"))
+    }
+
+    /// Drive a DviSeq call-by-call: phases must progress Prefilling →
+    /// Drafting → Verifying rounds → Done, and the result must be a
+    /// plausible generation.
+    #[test]
+    fn dvi_seq_phases_progress() {
+        let rt = runtime();
+        let ctx = Arc::new(DviCtx::new(rt.clone()).unwrap());
+        let prompt: Vec<u32> = vec![1, 10, 11, 3];
+        let mut s = DviSeq::new(ctx, None, &prompt, 12).unwrap();
+        assert_eq!(s.phase(), SeqPhase::Prefilling);
+        let mut seen_draft = false;
+        let mut seen_verify = false;
+        let mut calls = 0;
+        while !s.is_done() {
+            calls += 1;
+            assert!(calls < 500, "sequence did not terminate");
+            let call = s.next_call().unwrap();
+            let out = call.artifact.call(&call.kv, &call.inputs).unwrap();
+            s.apply(out).unwrap();
+            match s.phase() {
+                SeqPhase::Drafting => seen_draft = true,
+                SeqPhase::Verifying => seen_verify = true,
+                _ => {}
+            }
+        }
+        assert!(seen_draft && seen_verify, "phases skipped");
+        assert!(s.pending_artifact().is_none());
+        let r = s.into_result();
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 12);
+        assert!(r.steps.iter().all(|st| st.drafted > 0));
+    }
+
+    /// Prompts longer than the prefill window must be rejected at
+    /// construction, not mid-flight.
+    #[test]
+    fn oversized_prompt_rejected_at_admission() {
+        let rt = runtime();
+        let ctx = Arc::new(ArCtx::new(rt.clone()).unwrap());
+        let long = vec![1u32; ctx.prefill_seq + 1];
+        assert!(ArSeq::new(ctx, &long, 8).is_err());
+        let dctx = Arc::new(DviCtx::new(rt).unwrap());
+        let long = vec![1u32; dctx.prefill_seq + 1];
+        assert!(DviSeq::new(dctx, None, &long, 8).is_err());
+    }
+}

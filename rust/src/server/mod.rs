@@ -1,13 +1,17 @@
-//! Serving layer: a request router with a worker pool, plus a JSON-lines
-//! TCP front end. This is the deployment shape the paper assumes — a
-//! single model serving live traffic while the drafter adapts online.
+//! Serving layer: a request router plus a JSON-lines TCP front end.
+//! This is the deployment shape the paper assumes — a single model
+//! serving live traffic while the drafter adapts online.
 //!
 //! Topology: one shared [`Runtime`] (weights + compiled executables +
-//! LoRA globals), N worker threads each owning a [`DviEngine`] (per-worker
-//! KV state), one shared replay buffer, and a dedicated learner thread
-//! running optimizer steps whenever a batch of fresh tuples is available.
-//! LoRA buffer swaps are atomic (the store's RwLock), so workers pick up
-//! improved adapters on their next draft call without pausing.
+//! LoRA globals), one shared replay buffer, a dedicated learner thread
+//! running optimizer steps whenever a batch of fresh tuples is
+//! available, and one of two serving shapes: N worker threads each
+//! owning a [`DviEngine`] (per-worker KV state), or — with
+//! `RouterConfig::batched` — a single continuous-batching scheduler
+//! thread multiplexing every request through batched backend calls
+//! ([`crate::sched`]). LoRA buffer swaps are atomic (the store's
+//! RwLock), so either serving shape picks up improved adapters on its
+//! next draft call without pausing.
 
 pub mod api;
 pub mod router;

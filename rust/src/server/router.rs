@@ -1,30 +1,54 @@
-//! Request router + worker pool (std threads & channels; no tokio in the
-//! offline environment — and the workload is compute-bound PJRT calls, so
-//! a thread pool is the right shape anyway).
+//! Request router (std threads & channels; no tokio in the offline
+//! environment — and the workload is compute-bound backend calls, so
+//! threads are the right shape anyway). Two serving modes:
+//!
+//!   * **per-thread** (default): N worker threads, each owning one
+//!     engine; every request monopolizes a worker for its whole
+//!     generation and runs batch-size-1 backend calls.
+//!   * **batched** (`RouterConfig::batched`): one scheduler thread
+//!     multiplexes every request through step-level batched backend
+//!     calls ([`crate::sched::Scheduler`]) — many resident sequences,
+//!     one call per sequence per tick, `max_batch` lanes per call.
+//!
+//! Both modes share the replay buffer with the online learner thread, so
+//! DVI keeps improving from live traffic either way. Engine, scheduler,
+//! and trainer construction all happen *before* any thread spawns:
+//! an init failure is an `Err` from [`Router::start`], never a dead pool
+//! that silently hangs submitted requests.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::engine::dvi::DviEngine;
 use crate::engine::Engine;
 use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
 use crate::runtime::{log, Runtime};
+use crate::sched::{SchedConfig, SchedStats, Scheduler};
 
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
+    /// Worker threads (per-thread mode; ignored when `batched`).
     pub workers: usize,
-    /// Engine used by workers ("dvi", "ar", ...).
+    /// Engine used to serve ("dvi", "ar", ...).
     pub method: String,
     /// Run the online learner thread (DVI only).
     pub online: bool,
     pub objective: Objective,
     pub buffer_capacity: usize,
+    /// Continuous-batching mode: replace the worker pool with one
+    /// scheduler thread driving batched backend calls. Methods: dvi|ar.
+    pub batched: bool,
+    /// Batched mode: max lanes per batched backend call.
+    pub max_batch: usize,
+    /// Batched mode: KV slot pool size (max resident sequences).
+    pub max_slots: usize,
 }
 
 impl Default for RouterConfig {
@@ -35,6 +59,9 @@ impl Default for RouterConfig {
             online: true,
             objective: Objective::Dvi,
             buffer_capacity: 8192,
+            batched: false,
+            max_batch: 8,
+            max_slots: 16,
         }
     }
 }
@@ -44,6 +71,9 @@ pub struct Request {
     pub prompt: Vec<u32>,
     pub max_new: usize,
     pub respond: Sender<Response>,
+    /// Stamped at [`Router::submit`]; channel residency counts toward
+    /// the batched scheduler's queue-wait metric.
+    pub submitted: Instant,
 }
 
 #[derive(Debug, Clone)]
@@ -54,6 +84,7 @@ pub struct Response {
     pub acceptance: f64,
     pub decode_ns: u64,
     pub prefill_ns: u64,
+    /// Serving worker index (always 0 in batched mode).
     pub worker: usize,
 }
 
@@ -68,128 +99,211 @@ pub struct RouterStats {
 pub struct Router {
     tx: Sender<Request>,
     pub stats: Arc<RouterStats>,
+    /// Scheduler metrics (batch occupancy, queue wait, committed tokens
+    /// per tick); `Some` only in batched mode.
+    pub sched_stats: Option<Arc<SchedStats>>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     learner: Option<JoinHandle<()>>,
     next_id: AtomicU64,
 }
 
+/// Per-thread worker body: pull requests, generate, respond.
+fn worker_loop(
+    w: usize,
+    mut engine: Box<dyn Engine + Send>,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    stats: Arc<RouterStats>,
+) {
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(req) = req else { break };
+        match engine.generate(&req.prompt, req.max_new) {
+            Ok(r) => {
+                stats.served.fetch_add(1, Ordering::Relaxed);
+                stats.tokens.fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
+                stats.decode_ns.fetch_add(r.decode_ns, Ordering::Relaxed);
+                let resp = Response {
+                    id: req.id,
+                    mat: r.mat(),
+                    acceptance: r.acceptance_rate(),
+                    decode_ns: r.decode_ns,
+                    prefill_ns: r.prefill_ns,
+                    tokens: r.tokens,
+                    worker: w,
+                };
+                let _ = req.respond.send(resp);
+            }
+            Err(e) => {
+                log::info(&format!("worker {w} generate failed: {e}"));
+            }
+        }
+    }
+}
+
+/// Batched-mode serving thread: one scheduler owns every in-flight
+/// sequence; requests enqueue FIFO, ticks advance all of them through
+/// batched backend calls, completions are answered as they drain.
+fn scheduler_loop(
+    mut sched: Scheduler,
+    rx: Receiver<Request>,
+    stats: Arc<RouterStats>,
+) {
+    // scheduler-local id -> (request id, response channel)
+    let mut waiting: BTreeMap<u64, (u64, Sender<Response>)> = BTreeMap::new();
+    fn enqueue(
+        sched: &mut Scheduler,
+        waiting: &mut BTreeMap<u64, (u64, Sender<Response>)>,
+        req: Request,
+    ) {
+        let sid = sched.submit_at(req.prompt, req.max_new, req.submitted);
+        waiting.insert(sid, (req.id, req.respond));
+    }
+    loop {
+        if sched.is_idle() {
+            // Nothing in flight: block for work. A closed channel while
+            // idle is a clean shutdown (all accepted work is done —
+            // completion draining is preemption-free).
+            match rx.recv() {
+                Ok(req) => enqueue(&mut sched, &mut waiting, req),
+                Err(_) => break,
+            }
+        }
+        while let Ok(req) = rx.try_recv() {
+            enqueue(&mut sched, &mut waiting, req);
+        }
+        if let Err(e) = sched.tick() {
+            log::info(&format!("scheduler tick failed: {e}"));
+            break;
+        }
+        for done in sched.drain_completed() {
+            let Some((req_id, respond)) = waiting.remove(&done.id) else {
+                continue;
+            };
+            match done.result {
+                Ok(r) => {
+                    stats.served.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .tokens
+                        .fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
+                    stats.decode_ns.fetch_add(r.decode_ns, Ordering::Relaxed);
+                    let resp = Response {
+                        id: req_id,
+                        mat: r.mat(),
+                        acceptance: r.acceptance_rate(),
+                        decode_ns: r.decode_ns,
+                        prefill_ns: r.prefill_ns,
+                        tokens: r.tokens,
+                        worker: 0,
+                    };
+                    let _ = respond.send(resp);
+                }
+                Err(e) => {
+                    // Dropping `respond` signals the failure to the
+                    // caller (their recv() errors), matching per-thread
+                    // mode's behavior.
+                    log::info(&format!("request {req_id} failed: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// Online learner body: drains fresh tuples into optimizer steps.
+/// "Small, frequent updates" (paper §3.3): one optimizer step per fresh
+/// quarter-batch of tuples — the learner must not free-run on stale
+/// buffer content (it would both overfit the replay and steal decode
+/// CPU).
+fn learner_loop(mut trainer: Trainer, stop: Arc<AtomicBool>, stats: Arc<RouterStats>) {
+    let mut last_pushed = 0u64;
+    let fresh_quantum = (trainer.batch_size as u64 / 4).max(1);
+    while !stop.load(Ordering::Relaxed) {
+        let pushed = trainer.buffer.lock().unwrap().pushed;
+        if pushed < last_pushed + fresh_quantum {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            continue;
+        }
+        match trainer.maybe_train() {
+            Ok(Some(_)) => {
+                last_pushed = pushed;
+                stats.train_steps.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(None) => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::info(&format!("learner step failed: {e}"));
+                break;
+            }
+        }
+    }
+}
+
 impl Router {
     pub fn start(rt: Arc<Runtime>, cfg: RouterConfig) -> Result<Router> {
         let (tx, rx) = channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(RouterStats::default());
         let stop = Arc::new(AtomicBool::new(false));
         let buffer = Arc::new(Mutex::new(ReplayBuffer::new(cfg.buffer_capacity)));
+        let online_dvi = cfg.online && cfg.method == "dvi";
 
-        let mut workers = Vec::new();
-        for w in 0..cfg.workers {
-            let rx = rx.clone();
-            let rt = rt.clone();
-            let stats = stats.clone();
-            let buffer = buffer.clone();
-            let method = cfg.method.clone();
-            let online = cfg.online;
-            workers.push(std::thread::Builder::new()
-                .name(format!("dvi-worker-{w}"))
-                .spawn(move || {
-                    let mut engine: Box<dyn Engine> = if method == "dvi" && online {
-                        match DviEngine::new(rt.clone()) {
-                            Ok(e) => Box::new(e.with_buffer(buffer)),
-                            Err(e) => {
-                                log::info(&format!("worker {w} init failed: {e}"));
-                                return;
-                            }
-                        }
-                    } else {
-                        match make_engine(rt.clone(), &method) {
-                            Ok(e) => e,
-                            Err(e) => {
-                                log::info(&format!("worker {w} init failed: {e}"));
-                                return;
-                            }
-                        }
-                    };
-                    loop {
-                        let req = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        let Ok(req) = req else { break };
-                        match engine.generate(&req.prompt, req.max_new) {
-                            Ok(r) => {
-                                stats.served.fetch_add(1, Ordering::Relaxed);
-                                stats
-                                    .tokens
-                                    .fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
-                                stats.decode_ns.fetch_add(r.decode_ns, Ordering::Relaxed);
-                                let resp = Response {
-                                    id: req.id,
-                                    mat: r.mat(),
-                                    acceptance: r.acceptance_rate(),
-                                    decode_ns: r.decode_ns,
-                                    prefill_ns: r.prefill_ns,
-                                    tokens: r.tokens,
-                                    worker: w,
-                                };
-                                let _ = req.respond.send(resp);
-                            }
-                            Err(e) => {
-                                log::info(&format!("worker {w} generate failed: {e}"));
-                            }
-                        }
-                    }
-                })?);
-        }
+        let (workers, sched_stats) = if cfg.batched {
+            let sched = Scheduler::new(
+                rt.clone(),
+                SchedConfig {
+                    method: cfg.method.clone(),
+                    max_batch: cfg.max_batch,
+                    max_slots: cfg.max_slots,
+                },
+                if online_dvi { Some(buffer.clone()) } else { None },
+            )?;
+            let sched_stats = sched.stats.clone();
+            let stats2 = stats.clone();
+            let handle = std::thread::Builder::new()
+                .name("dvi-sched".into())
+                .spawn(move || scheduler_loop(sched, rx, stats2))?;
+            (vec![handle], Some(sched_stats))
+        } else {
+            ensure!(cfg.workers >= 1, "router needs at least one worker");
+            // Construct every engine before spawning anything: a failed
+            // init returns Err instead of leaving a dead pool behind.
+            let mut engines: Vec<Box<dyn Engine + Send>> = Vec::new();
+            for _ in 0..cfg.workers {
+                engines.push(if online_dvi {
+                    Box::new(DviEngine::new(rt.clone())?.with_buffer(buffer.clone()))
+                } else {
+                    make_engine(rt.clone(), &cfg.method)?
+                });
+            }
+            let rx = Arc::new(Mutex::new(rx));
+            let mut workers = Vec::new();
+            for (w, engine) in engines.into_iter().enumerate() {
+                let rx = rx.clone();
+                let stats = stats.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("dvi-worker-{w}"))
+                        .spawn(move || worker_loop(w, engine, rx, stats))?,
+                );
+            }
+            (workers, None)
+        };
 
-        // Learner thread: drains fresh tuples into optimizer steps.
-        let learner = if cfg.online && cfg.method == "dvi" {
-            let rt = rt.clone();
+        // Learner thread: constructed here for the same reason — a bad
+        // train_step artifact fails start() instead of dying silently.
+        let learner = if online_dvi {
+            let trainer =
+                Trainer::new(rt, buffer, Schedule::new(cfg.objective), 0x1EA2)?;
             let stop2 = stop.clone();
             let stats2 = stats.clone();
-            let objective = cfg.objective;
-            Some(std::thread::Builder::new()
-                .name("dvi-learner".into())
-                .spawn(move || {
-                    let mut trainer = match Trainer::new(
-                        rt, buffer, Schedule::new(objective), 0x1EA2) {
-                        Ok(t) => t,
-                        Err(e) => {
-                            log::info(&format!("learner init failed: {e}"));
-                            return;
-                        }
-                    };
-                    // "Small, frequent updates" (paper §3.3): one optimizer
-                    // step per fresh quarter-batch of tuples — the learner
-                    // must not free-run on stale buffer content (it would
-                    // both overfit the replay and steal decode CPU).
-                    let mut last_pushed = 0u64;
-                    let fresh_quantum =
-                        (trainer.batch_size as u64 / 4).max(1);
-                    while !stop2.load(Ordering::Relaxed) {
-                        let pushed =
-                            trainer.buffer.lock().unwrap().pushed;
-                        if pushed < last_pushed + fresh_quantum {
-                            std::thread::sleep(
-                                std::time::Duration::from_millis(5));
-                            continue;
-                        }
-                        match trainer.maybe_train() {
-                            Ok(Some(_)) => {
-                                last_pushed = pushed;
-                                stats2.train_steps.fetch_add(1, Ordering::Relaxed);
-                            }
-                            Ok(None) => {
-                                std::thread::sleep(
-                                    std::time::Duration::from_millis(5));
-                            }
-                            Err(e) => {
-                                log::info(&format!("learner step failed: {e}"));
-                                break;
-                            }
-                        }
-                    }
-                })?)
+            Some(
+                std::thread::Builder::new()
+                    .name("dvi-learner".into())
+                    .spawn(move || learner_loop(trainer, stop2, stats2))?,
+            )
         } else {
             None
         };
@@ -197,6 +311,7 @@ impl Router {
         Ok(Router {
             tx,
             stats,
+            sched_stats,
             stop,
             workers,
             learner,
@@ -208,7 +323,13 @@ impl Router {
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Receiver<Response> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(Request { id, prompt, max_new, respond: tx });
+        let _ = self.tx.send(Request {
+            id,
+            prompt,
+            max_new,
+            respond: tx,
+            submitted: Instant::now(),
+        });
         rx
     }
 

@@ -11,6 +11,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::rng::Rng;
+
 /// Task ids match `corpus.TASK_IDS` ordering.
 pub const TASK_NAMES: [&str; 6] =
     ["mt", "translation", "summarization", "qa", "math", "rag"];
@@ -91,6 +93,29 @@ impl PromptSet {
     pub fn take(&self, n: usize) -> PromptSet {
         PromptSet { samples: self.samples.iter().take(n).cloned().collect() }
     }
+
+    /// Seeded deterministic permutation (Fisher–Yates over
+    /// [`crate::util::rng::Rng`]): the same seed always yields the same
+    /// order, so benches and the serving workload can mix task types
+    /// without giving up reproducibility.
+    pub fn shuffled(&self, seed: u64) -> PromptSet {
+        let mut samples = self.samples.clone();
+        Rng::new(seed).shuffle(&mut samples);
+        PromptSet { samples }
+    }
+
+    /// Only the samples of one task (id per [`TASK_NAMES`] ordering),
+    /// original order preserved.
+    pub fn filter_task(&self, task: u32) -> PromptSet {
+        PromptSet {
+            samples: self
+                .samples
+                .iter()
+                .filter(|s| s.task == task)
+                .cloned()
+                .collect(),
+        }
+    }
 }
 
 /// Serialize (round-trip tests + synthetic workload construction in Rust).
@@ -157,5 +182,50 @@ mod tests {
     fn take_prefix() {
         assert_eq!(sample_set().take(1).len(), 1);
         assert_eq!(sample_set().take(99).len(), 2);
+    }
+
+    fn numbered_set(n: usize) -> PromptSet {
+        PromptSet {
+            samples: (0..n as u32)
+                .map(|i| PromptSample {
+                    task: i % 3,
+                    max_new: 8,
+                    prompt: vec![i],
+                    answer: Vec::new(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_per_seed() {
+        let set = numbered_set(40);
+        let a = set.shuffled(7);
+        let b = set.shuffled(7);
+        let ids = |s: &PromptSet| -> Vec<u32> {
+            s.samples.iter().map(|x| x.prompt[0]).collect()
+        };
+        assert_eq!(ids(&a), ids(&b), "same seed must give the same order");
+        // A permutation, not a filter.
+        let mut sorted = ids(&a);
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..40).collect::<Vec<_>>());
+        // Different seeds disagree (overwhelmingly) and the source set
+        // is untouched.
+        assert_ne!(ids(&a), ids(&set.shuffled(8)));
+        assert_eq!(ids(&set), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn filter_task_keeps_order_and_task() {
+        let set = numbered_set(10);
+        let t1 = set.filter_task(1);
+        assert!(!t1.is_empty());
+        assert!(t1.samples.iter().all(|s| s.task == 1));
+        let ids: Vec<u32> = t1.samples.iter().map(|s| s.prompt[0]).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "filter must preserve source order");
+        assert!(set.filter_task(99).is_empty());
     }
 }

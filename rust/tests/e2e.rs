@@ -32,6 +32,7 @@ fn router_serves_concurrent_requests() {
             online: true,
             objective: Objective::Dvi,
             buffer_capacity: 1024,
+            ..RouterConfig::default()
         },
     )
     .unwrap();
@@ -77,6 +78,94 @@ fn router_serves_concurrent_requests() {
     router.shutdown(); // must join workers + learner without hanging
 }
 
+/// Batched mode: the same burst through one continuous-batching
+/// scheduler thread — every response arrives, stats agree, occupancy
+/// shows real multiplexing, and shutdown drains cleanly.
+#[test]
+fn batched_router_serves_concurrent_requests() {
+    let rt = runtime();
+    let qa = load_prompts(&rt, "qa").unwrap();
+    let router = Router::start(
+        rt,
+        RouterConfig {
+            method: "dvi".into(),
+            online: true,
+            objective: Objective::Dvi,
+            buffer_capacity: 1024,
+            batched: true,
+            max_batch: 4,
+            max_slots: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+
+    let samples: Vec<_> = qa.samples.iter().take(12).collect();
+    let receivers: Vec<_> = samples
+        .iter()
+        .map(|s| router.submit(s.prompt.clone(), s.max_new.min(16)))
+        .collect();
+    let mut ids = std::collections::BTreeSet::new();
+    let mut token_total = 0u64;
+    for rx in receivers {
+        let resp = rx.recv().expect("response must arrive");
+        assert!(!resp.tokens.is_empty(), "empty generation");
+        token_total += resp.tokens.len() as u64;
+        ids.insert(resp.id);
+    }
+    assert_eq!(ids.len(), samples.len(), "duplicate or missing request ids");
+    assert_eq!(
+        router.stats.served.load(Ordering::Relaxed),
+        samples.len() as u64
+    );
+    assert_eq!(router.stats.tokens.load(Ordering::Relaxed), token_total);
+    let sched = router
+        .sched_stats
+        .clone()
+        .expect("batched mode exposes scheduler stats");
+    assert!(
+        sched.occupancy() > 1.0,
+        "batched router never multiplexed (occupancy {})",
+        sched.occupancy()
+    );
+    assert!(sched.slot_high_water.load(Ordering::Relaxed) <= 8);
+    router.shutdown();
+}
+
+/// Init failures must surface as an Err from Router::start — never a
+/// dead worker pool that hangs submitted requests.
+#[test]
+fn router_init_failure_propagates() {
+    let rt = runtime();
+    // Unknown engine.
+    assert!(Router::start(
+        rt.clone(),
+        RouterConfig {
+            method: "nope".into(),
+            online: false,
+            ..RouterConfig::default()
+        },
+    )
+    .is_err());
+    // Zero workers can never serve.
+    assert!(Router::start(
+        rt.clone(),
+        RouterConfig { workers: 0, online: false, ..RouterConfig::default() },
+    )
+    .is_err());
+    // Batched mode supports only the state-machine methods (dvi | ar).
+    assert!(Router::start(
+        rt,
+        RouterConfig {
+            method: "medusa".into(),
+            online: false,
+            batched: true,
+            ..RouterConfig::default()
+        },
+    )
+    .is_err());
+}
+
 #[test]
 fn tcp_api_round_trip() {
     let rt = runtime();
@@ -90,6 +179,7 @@ fn tcp_api_round_trip() {
                 online: false,
                 objective: Objective::Dvi,
                 buffer_capacity: 64,
+                ..RouterConfig::default()
             },
         )
         .unwrap(),

@@ -1,0 +1,172 @@
+//! Continuous-batching scheduler integration tests — hermetic on the
+//! reference backend, always on.
+//!
+//! Headline invariant (losslessness under batching): for a fixed seed
+//! and prompt set, the batched scheduler commits **bitwise-identical**
+//! token streams to the per-sequence `DviEngine` / `ArEngine` paths,
+//! with >= 8 concurrent sequences actually multiplexed (mean batch
+//! occupancy > 1) through a recycled KV slot pool. Plus: a property test
+//! that interleaved admission never starves a sequence.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dvi::engine::Engine;
+use dvi::harness::{load_prompts, make_engine};
+use dvi::runtime::Runtime;
+use dvi::sched::{SchedConfig, SchedStats, Scheduler};
+use dvi::util::prop::run_prop;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_reference(0xBA7C4).expect("reference runtime"))
+}
+
+/// Mixed-task workload via the seeded deterministic shuffle.
+fn mixed_prompts(
+    rt: &Runtime,
+    n: usize,
+    max_new: usize,
+) -> Vec<(Vec<u32>, usize)> {
+    let stream = load_prompts(rt, "stream").unwrap();
+    stream
+        .shuffled(0x5EED)
+        .take(n)
+        .samples
+        .iter()
+        .map(|s| (s.prompt.clone(), s.max_new.min(max_new)))
+        .collect()
+}
+
+/// Run `cases` through a batched scheduler; return per-case token
+/// streams (in submission order) plus the stats handle.
+fn scheduler_tokens(
+    rt: &Arc<Runtime>,
+    method: &str,
+    cases: &[(Vec<u32>, usize)],
+    max_batch: usize,
+    max_slots: usize,
+) -> (Vec<Vec<u32>>, Arc<SchedStats>) {
+    let cfg = SchedConfig { method: method.into(), max_batch, max_slots };
+    let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+    let ids: Vec<u64> = cases
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    sched.run_until_idle(100_000).unwrap();
+    let stats = sched.stats.clone();
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "every sequence must complete");
+    done.sort_by_key(|r| r.id);
+    let tokens = ids
+        .iter()
+        .zip(done)
+        .map(|(&id, r)| {
+            assert_eq!(id, r.id);
+            r.result.expect("scheduled generation failed").tokens
+        })
+        .collect();
+    (tokens, stats)
+}
+
+#[test]
+fn batched_dvi_is_bitwise_lossless_vs_engine() {
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 10, 24);
+    assert!(cases.len() >= 8, "need >= 8 concurrent sequences");
+    let mut engine = make_engine(rt.clone(), "dvi").unwrap();
+    let golden: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
+        .collect();
+    let (got, stats) = scheduler_tokens(&rt, "dvi", &cases, 4, cases.len());
+    assert_eq!(got, golden, "batched DVI diverged from per-sequence engine");
+    assert!(
+        stats.occupancy() > 1.0,
+        "scheduler never actually batched (occupancy {})",
+        stats.occupancy()
+    );
+    assert!(
+        stats.slot_high_water.load(Ordering::Relaxed) <= cases.len() as u64
+    );
+    assert!(stats.committed_per_tick() > 0.0);
+}
+
+#[test]
+fn batched_ar_is_bitwise_lossless_vs_engine() {
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 8, 16);
+    let mut engine = make_engine(rt.clone(), "ar").unwrap();
+    let golden: Vec<Vec<u32>> = cases
+        .iter()
+        .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
+        .collect();
+    let (got, stats) = scheduler_tokens(&rt, "ar", &cases, 8, 8);
+    assert_eq!(got, golden, "batched AR diverged from per-sequence engine");
+    assert!(stats.occupancy() > 1.0);
+}
+
+/// Batch-boundary sweep: the committed streams must not depend on how
+/// lanes are chunked into batched calls.
+#[test]
+fn token_streams_invariant_to_max_batch() {
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 8, 12);
+    let (a, _) = scheduler_tokens(&rt, "dvi", &cases, 1, 8);
+    let (b, _) = scheduler_tokens(&rt, "dvi", &cases, 3, 8);
+    let (c, _) = scheduler_tokens(&rt, "dvi", &cases, 8, 4);
+    assert_eq!(a, b, "max_batch changed the committed tokens");
+    assert_eq!(b, c, "slot pressure changed the committed tokens");
+}
+
+/// Fairness: under randomly interleaved admission and any (max_batch,
+/// max_slots) in range, every admitted sequence completes within a
+/// tick budget linear in the offered work — no sequence is starved by
+/// co-resident traffic.
+#[test]
+fn prop_interleaved_admission_never_starves() {
+    let rt = runtime();
+    let qa = load_prompts(&rt, "qa").unwrap();
+    run_prop("sched-no-starvation", 8, |rng| {
+        let max_slots = 1 + rng.usize_below(3);
+        let cfg = SchedConfig {
+            method: "ar".into(),
+            max_batch: 1 + rng.usize_below(4),
+            max_slots,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let total = 4 + rng.usize_below(5);
+        let max_ticks = 64 * total + 64;
+        let mut submitted = 0usize;
+        let mut ticks = 0usize;
+        while submitted < total || !sched.is_idle() {
+            // Admission arrives in random bursts, racing the tick loop.
+            if submitted < total {
+                for _ in 0..rng.usize_below(3) {
+                    if submitted < total {
+                        let s = &qa.samples[submitted % qa.len()];
+                        sched.submit(s.prompt.clone(), s.max_new.min(10));
+                        submitted += 1;
+                    }
+                }
+            }
+            sched.tick().unwrap();
+            ticks += 1;
+            assert!(
+                ticks <= max_ticks,
+                "starvation: {ticks} ticks, {submitted}/{total} submitted, \
+                 {} active, {} queued",
+                sched.active(),
+                sched.queued()
+            );
+        }
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), total, "every admitted sequence completes");
+        for r in &done {
+            assert!(r.result.is_ok());
+        }
+        assert!(
+            sched.stats.slot_high_water.load(Ordering::Relaxed)
+                <= max_slots as u64
+        );
+    });
+}
