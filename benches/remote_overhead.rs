@@ -1,0 +1,132 @@
+//! Remote-executor overhead: `call_batched` on the local reference
+//! backend vs the same backend behind the loopback remote transport
+//! (full framing + binary codec + server dispatch + buffer table, no
+//! sockets) — the per-call cost a deployment pays to move batched
+//! execution out of process, before network latency.
+//!
+//!   cargo bench --bench remote_overhead
+//!
+//! Knobs: DVI_BENCH_LANES  lanes per batched call    (default 8)
+//!        DVI_BENCH_ITERS  batched calls per artifact (default 200)
+//!        DVI_BENCH_TINY=1 CI smoke scale (20 iters)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dvi::runtime::{BatchItem, Buffer, Runtime, Tensor};
+
+const SEED: u64 = 0xBE7C4;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Run {
+    calls: usize,
+    lanes: usize,
+    wall_s: f64,
+}
+
+impl Run {
+    fn us_per_call(&self) -> f64 {
+        self.wall_s * 1e6 / self.calls as f64
+    }
+
+    fn us_per_lane_step(&self) -> f64 {
+        self.us_per_call() / self.lanes as f64
+    }
+}
+
+/// Drive `iters` batched decode-step calls with `lanes` independent
+/// KV-chained sequences through one artifact. Positions cycle inside
+/// the KV window; overwritten cache rows keep the computation
+/// deterministic, which is all an overhead measurement needs.
+fn drive(rt: &Runtime, artifact: &str, lanes: usize, iters: usize) -> Run {
+    let art = rt.artifact(artifact).expect("artifact");
+    let max_seq = rt.manifest.model_usize("max_seq").expect("max_seq");
+    let k_spec = rt.manifest.spec_usize("k_spec").expect("k_spec");
+    let mut kvs: Vec<Vec<Buffer>> = (0..lanes)
+        .map(|_| rt.fresh_kv(artifact).expect("fresh kv"))
+        .collect();
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let pos = (i % (max_seq.saturating_sub(k_spec + 1))) as i32;
+        let inputs: Vec<Vec<Tensor>> = (0..lanes)
+            .map(|l| {
+                vec![
+                    Tensor::scalar_i32((5 + l as i32) % 32),
+                    Tensor::scalar_i32(pos),
+                ]
+            })
+            .collect();
+        let items: Vec<BatchItem<'_>> = kvs
+            .iter()
+            .zip(&inputs)
+            .map(|(kv, inp)| BatchItem { kv, inputs: inp })
+            .collect();
+        let outs = art.call_batched(&items).expect("batched call");
+        for (kv, out) in kvs.iter_mut().zip(outs) {
+            *kv = out.kv;
+        }
+    }
+    Run { calls: iters, lanes, wall_s: t0.elapsed().as_secs_f64() }
+}
+
+/// Bitwise sanity: the first batched call must agree exactly between
+/// the two runtimes before any timing is trusted.
+fn parity_check(local: &Runtime, remote: &Runtime, artifact: &str) {
+    let inputs = [Tensor::scalar_i32(7), Tensor::scalar_i32(0)];
+    let a = local
+        .artifact(artifact)
+        .unwrap()
+        .call(&local.fresh_kv(artifact).unwrap(), &inputs)
+        .unwrap();
+    let b = remote
+        .artifact(artifact)
+        .unwrap()
+        .call(&remote.fresh_kv(artifact).unwrap(), &inputs)
+        .unwrap();
+    assert_eq!(
+        a.outputs[0], b.outputs[0],
+        "local vs remote parity broken for {artifact}"
+    );
+}
+
+fn main() {
+    let tiny = std::env::var("DVI_BENCH_TINY").is_ok();
+    let lanes = env_usize("DVI_BENCH_LANES", 8);
+    let iters = env_usize("DVI_BENCH_ITERS", if tiny { 20 } else { 200 });
+
+    let local = Arc::new(Runtime::load_reference(SEED).expect("local runtime"));
+    let remote =
+        Arc::new(Runtime::load_remote_loopback(SEED).expect("remote runtime"));
+    parity_check(&local, &remote, "target_step");
+
+    println!(
+        "\n== Remote executor overhead: local vs loopback-remote \
+         call_batched, lanes={lanes}, iters={iters} =="
+    );
+    println!();
+    println!("| backend | artifact | lanes | calls | wall ms | us/call | us/lane-step |");
+    println!("|---|---|---|---|---|---|---|");
+    for artifact in ["target_step", "draft_step"] {
+        let l = drive(&local, artifact, lanes, iters);
+        let r = drive(&remote, artifact, lanes, iters);
+        for (name, s) in [("local", &l), ("remote", &r)] {
+            println!(
+                "| {name} | {artifact} | {} | {} | {:.2} | {:.1} | {:.2} |",
+                s.lanes,
+                s.calls,
+                s.wall_s * 1e3,
+                s.us_per_call(),
+                s.us_per_lane_step()
+            );
+        }
+        println!(
+            "[remote_overhead] {artifact}: {:.1} us/call added by the wire \
+             ({:.2}x local)",
+            r.us_per_call() - l.us_per_call(),
+            r.us_per_call() / l.us_per_call().max(1e-9)
+        );
+    }
+}

@@ -27,14 +27,28 @@ pub struct ReplayBuffer {
     data: Vec<Tuple>,
     capacity: usize,
     head: usize,
-    /// Monotone count of tuples ever pushed.
+    /// **Lifetime** count of tuples ever pushed — deliberately monotone
+    /// across [`ReplayBuffer::clear`], because the online learner's
+    /// freshness gate compares successive readings and must never see
+    /// the counter go backwards. Per-epoch diagnostics should read
+    /// [`ReplayBuffer::pushed_since_clear`] instead.
     pub pushed: u64,
+    /// Tuples pushed since the last [`ReplayBuffer::clear`] (or
+    /// construction). Reset by `clear`, so post-clear diagnostics don't
+    /// over-report by the pre-clear lifetime total.
+    pub pushed_since_clear: u64,
 }
 
 impl ReplayBuffer {
     pub fn new(capacity: usize) -> ReplayBuffer {
         assert!(capacity > 0);
-        ReplayBuffer { data: Vec::with_capacity(capacity), capacity, head: 0, pushed: 0 }
+        ReplayBuffer {
+            data: Vec::with_capacity(capacity),
+            capacity,
+            head: 0,
+            pushed: 0,
+            pushed_since_clear: 0,
+        }
     }
 
     pub fn push(&mut self, t: Tuple) {
@@ -46,6 +60,7 @@ impl ReplayBuffer {
             self.head = (self.head + 1) % self.capacity;
         }
         self.pushed += 1;
+        self.pushed_since_clear += 1;
     }
 
     pub fn len(&self) -> usize {
@@ -66,7 +81,12 @@ impl ReplayBuffer {
         }
     }
 
-    /// Sample a minibatch: ceil(n/2) newest tuples + uniform remainder.
+    /// Sample a minibatch: the ceil(n/2) newest tuples, plus a uniform
+    /// remainder drawn **without replacement from outside the recency
+    /// half**. Drawing the remainder from the whole buffer would let
+    /// the newest tuples appear twice in one minibatch, double-weighting
+    /// the freshest accept/reject signals in the update — so a batch
+    /// never contains the same stored tuple twice (property-tested).
     pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<&Tuple> {
         assert!(self.len() >= n, "buffer {} < batch {}", self.len(), n);
         let n_recent = (n + 1) / 2;
@@ -74,8 +94,20 @@ impl ReplayBuffer {
         for i in 0..n_recent {
             out.push(&self.data[self.recent_idx(i)]);
         }
-        for _ in n_recent..n {
-            out.push(&self.data[rng.usize_below(self.data.len())]);
+        // Floyd's algorithm over the older region: a uniform k-subset
+        // of the recency ranks [n_recent, len) in O(k) draws and O(k^2)
+        // membership checks on a small k — no O(len) allocation while
+        // the serving path contends on the buffer lock.
+        let k = n - n_recent;
+        let older = self.data.len() - n_recent;
+        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        for i in older - k..older {
+            let j = rng.usize_below(i + 1);
+            let choice = if picked.contains(&j) { i } else { j };
+            picked.push(choice);
+        }
+        for off in picked {
+            out.push(&self.data[self.recent_idx(n_recent + off)]);
         }
         out
     }
@@ -90,9 +122,13 @@ impl ReplayBuffer {
             / self.data.len() as f64
     }
 
+    /// Empty the stored tuples. `pushed` keeps its lifetime semantic
+    /// (see its doc — the learner's freshness gate relies on
+    /// monotonicity); `pushed_since_clear` resets to zero.
     pub fn clear(&mut self) {
         self.data.clear();
         self.head = 0;
+        self.pushed_since_clear = 0;
     }
 }
 
@@ -201,6 +237,25 @@ mod tests {
         assert_eq!(b.pushed, 11);
     }
 
+    /// Regression: per-epoch diagnostics read `pushed_since_clear`,
+    /// which must reset on clear() while `pushed` stays lifetime.
+    #[test]
+    fn pushed_since_clear_resets_on_clear() {
+        let mut b = ReplayBuffer::new(4);
+        for i in 0..6 {
+            b.push(tup(i, 1.0));
+        }
+        assert_eq!(b.pushed, 6);
+        assert_eq!(b.pushed_since_clear, 6);
+        b.clear();
+        assert_eq!(b.pushed_since_clear, 0, "clear must reset the epoch count");
+        assert_eq!(b.pushed, 6, "clear must not rewind the lifetime count");
+        b.push(tup(9, 0.0));
+        b.push(tup(10, 0.0));
+        assert_eq!(b.pushed_since_clear, 2);
+        assert_eq!(b.pushed, 8);
+    }
+
     #[test]
     fn prop_pushed_monotone_under_any_op_sequence() {
         run_prop("buffer-pushed-monotone", 128, |rng| {
@@ -213,8 +268,65 @@ mod tests {
                     b.push(tup(i as u32, if rng.bool(0.5) { 1.0 } else { 0.0 }));
                 }
                 assert!(b.pushed >= prev);
+                assert!(b.pushed_since_clear <= b.pushed);
+                // Everything stored arrived after the last clear.
+                assert!(b.len() as u64 <= b.pushed_since_clear);
                 assert!(b.len() <= b.capacity);
                 prev = b.pushed;
+            }
+        });
+    }
+
+    /// Regression: the uniform remainder must come from OUTSIDE the
+    /// recency half. Pre-fix, it was drawn from the whole buffer, so a
+    /// newest tuple could appear twice in one minibatch (double-weighting
+    /// fresh signals) — with 64 independent draws below, that happened
+    /// with overwhelming probability.
+    #[test]
+    fn sample_remainder_excludes_recency_half() {
+        let mut b = ReplayBuffer::new(100);
+        for i in 0..40 {
+            b.push(tup(i, 1.0)); // action == push index, all distinct
+        }
+        run_prop("sample-remainder-older-only", 64, |rng| {
+            let batch = b.sample(8, rng);
+            // recency half: the 4 newest, in order
+            let recent: Vec<u32> = batch[..4].iter().map(|t| t.action).collect();
+            assert_eq!(recent, vec![39, 38, 37, 36]);
+            for t in &batch[4..] {
+                assert!(
+                    t.action < 36,
+                    "remainder drew tuple {} from the recency half",
+                    t.action
+                );
+            }
+        });
+    }
+
+    /// A minibatch never contains the same stored tuple twice — the
+    /// recency half is distinct by construction and the remainder is
+    /// drawn without replacement from the older region.
+    #[test]
+    fn prop_sample_has_no_duplicates() {
+        run_prop("sample-no-duplicates", 128, |rng| {
+            let cap = 2 + rng.usize_below(24);
+            let mut b = ReplayBuffer::new(cap);
+            let pushes = 1 + rng.usize_below(3 * cap);
+            for i in 0..pushes {
+                b.push(tup(i as u32, 0.0));
+            }
+            let n = 1 + rng.usize_below(b.len());
+            let batch = b.sample(n, rng);
+            assert_eq!(batch.len(), n);
+            let mut ptrs: Vec<*const Tuple> =
+                batch.iter().map(|t| *t as *const Tuple).collect();
+            ptrs.sort_unstable();
+            ptrs.dedup();
+            assert_eq!(ptrs.len(), n, "duplicate tuple in one minibatch");
+            // The recency half is the newest ceil(n/2), newest first.
+            let newest = b.data[b.recent_idx(0)].action;
+            for (i, t) in batch[..(n + 1) / 2].iter().enumerate() {
+                assert_eq!(t.action, newest - i as u32);
             }
         });
     }

@@ -18,8 +18,11 @@
 //! The runtime is multi-backend behind [`runtime::Backend`]: the
 //! hermetic pure-Rust reference interpreter
 //! ([`runtime::Runtime::load_reference`] — no artifacts, no Python, no
-//! XLA; the invariant test suite runs on it unconditionally) and the
-//! PJRT path ([`runtime::Runtime::load`]). Start with
+//! XLA; the invariant test suite runs on it unconditionally), the
+//! PJRT path ([`runtime::Runtime::load`]), and the remote executor
+//! ([`runtime::Runtime::load_remote`] / `dvi serve-backend` —
+//! batched calls shipped to another process/host over a
+//! dependency-free wire protocol, [`runtime::remote`]). Start with
 //! [`runtime::Runtime::load_auto`], then construct engines from
 //! [`engine`], or drive everything through the `dvi` binary.
 

@@ -10,6 +10,10 @@
 //!   fig2     --train 2000        ablation learning curves (Figure 2)
 //!   serve    --port 7501 --workers 2 [--no-online]
 //!            [--batched --max-batch 8 --slots 16]   continuous batching
+//!   serve-backend --listen 127.0.0.1:7600           executor server:
+//!            front the local backend (reference/pjrt) for remote
+//!            clients (`--backend remote --remote HOST:PORT`, or
+//!            DVI_REMOTE=HOST:PORT with any subcommand)
 //!
 //! Everything reads `--artifacts DIR` (default: ./artifacts).
 
@@ -52,8 +56,10 @@ fn main() {
 
 /// Backend selection: `--backend reference` forces the hermetic
 /// pure-Rust backend; `--backend pjrt` requires compiled artifacts (and
-/// the `pjrt` cargo feature); the default `auto` uses PJRT when
-/// available and falls back to the reference backend.
+/// the `pjrt` cargo feature); `--backend remote` ships every artifact
+/// call to a `dvi serve-backend` executor (`--remote HOST:PORT` or
+/// DVI_REMOTE); the default `auto` prefers DVI_REMOTE, then PJRT when
+/// available, and falls back to the reference backend.
 fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = match args.get_or("backend", "auto").as_str() {
@@ -64,8 +70,17 @@ fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
             Runtime::load_reference(seed)?
         }
         "pjrt" => Runtime::load(&dir, None)?,
+        "remote" => {
+            let addr = match args.get("remote") {
+                Some(a) => a.to_string(),
+                None => std::env::var("DVI_REMOTE").context(
+                    "--backend remote needs --remote HOST:PORT (or DVI_REMOTE)",
+                )?,
+            };
+            Runtime::load_remote(&addr)?
+        }
         "auto" => Runtime::load_auto(&dir)?,
-        other => bail!("unknown --backend '{other}' (auto|reference|pjrt)"),
+        other => bail!("unknown --backend '{other}' (auto|reference|pjrt|remote)"),
     };
     Ok(Arc::new(rt))
 }
@@ -80,9 +95,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("table3") => table3(args),
         Some("fig2") => fig2(args),
         Some("serve") => serve(args),
+        Some("serve-backend") => serve_backend(args),
         Some(other) => bail!("unknown subcommand '{other}' (see src/main.rs docs)"),
         None => bail!(
-            "usage: dvi <info|run|train|table1|table2|table3|fig2|serve> [...]"
+            "usage: dvi <info|run|train|table1|table2|table3|fig2|serve|\
+             serve-backend> [...]"
         ),
     }
 }
@@ -270,4 +287,31 @@ fn serve(args: &Args) -> Result<()> {
          echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}"
     );
     api::serve(listener, router, tok, stop)
+}
+
+/// Executor-server mode: front the locally selected backend over the
+/// remote-executor wire protocol, so `serve --batched --backend remote`
+/// (or any other subcommand) in another process can point its lanes
+/// here.
+fn serve_backend(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    if rt.backend_name() == "remote" {
+        bail!(
+            "refusing to re-export a remote backend \
+             (serve-backend must front a local backend)"
+        );
+    }
+    let listen = args.get_or("listen", "127.0.0.1:7600");
+    let listener = std::net::TcpListener::bind(listen.as_str())
+        .with_context(|| format!("binding executor listener on {listen}"))?;
+    println!(
+        "executor backend '{}' listening on {listen}; point a client at it:\n  \
+         dvi serve --batched --backend remote --remote {listen}",
+        rt.backend_name()
+    );
+    // The CLI has no graceful-shutdown trigger: the server runs until
+    // the process is killed. The stop flag exists for embedders (and
+    // tests) that drive serve_tcp directly.
+    let stop = Arc::new(AtomicBool::new(false));
+    dvi::runtime::remote::server::serve_tcp(listener, rt, stop)
 }

@@ -27,6 +27,10 @@ use super::tensor::{DType, Tensor};
 pub enum Buffer {
     /// Host-resident tensor (reference backend).
     Host(Arc<Tensor>),
+    /// Handle to a buffer resident in a remote executor's table
+    /// ([`crate::runtime::remote::RemoteBackend`]). Dropping the last
+    /// clone queues the id for server-side release.
+    Remote(Arc<crate::runtime::remote::RemoteHandle>),
     /// PJRT device buffer.
     #[cfg(feature = "pjrt")]
     Pjrt(Arc<xla::PjRtBuffer>),
@@ -41,6 +45,9 @@ impl Buffer {
     pub fn as_host(&self) -> Result<&Tensor> {
         match self {
             Buffer::Host(t) => Ok(t),
+            Buffer::Remote(h) => Err(anyhow::anyhow!(
+                "buffer {h:?} is remote-resident, not host"
+            )),
             #[cfg(feature = "pjrt")]
             Buffer::Pjrt(_) => {
                 Err(anyhow::anyhow!("buffer is device-resident, not host"))
@@ -52,9 +59,7 @@ impl Buffer {
     pub fn as_pjrt(&self) -> Result<&Arc<xla::PjRtBuffer>> {
         match self {
             Buffer::Pjrt(b) => Ok(b),
-            Buffer::Host(_) => {
-                Err(anyhow::anyhow!("buffer is host-resident, not PJRT"))
-            }
+            _ => Err(anyhow::anyhow!("buffer is not PJRT-resident")),
         }
     }
 }
@@ -63,6 +68,7 @@ impl std::fmt::Debug for Buffer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Buffer::Host(t) => write!(f, "Buffer::Host{:?}", t.shape),
+            Buffer::Remote(h) => write!(f, "Buffer::Remote({h:?})"),
             #[cfg(feature = "pjrt")]
             Buffer::Pjrt(_) => write!(f, "Buffer::Pjrt"),
         }

@@ -1,0 +1,106 @@
+//! Backend-level fault injection: a delegating [`Backend`] that fails
+//! every `every`-th `call_batched`, at most `max_failures` times.
+//!
+//! Pairs with [`crate::runtime::Runtime::map_backend`] — the chaos
+//! tests wrap the reference backend to prove the batched scheduler
+//! absorbs chunk failures through `fail_lane` without wedging a tick
+//! (`tests/sched.rs`, plus the scheduler's accounting regression test).
+//! The failure cap is what makes those tests deterministic rather than
+//! probabilistic: it bounds worst-case lane kills so "some lanes
+//! survive" is a guarantee, not a likelihood.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, BatchItem, Buffer, CallOut};
+use super::manifest::ArtifactSpec;
+use super::tensor::{DType, Tensor};
+
+pub struct FlakyBackend {
+    inner: Arc<dyn Backend>,
+    every: u64,
+    max_failures: u64,
+    calls: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl FlakyBackend {
+    /// Fail the `every`-th, `2*every`-th, ... batched call, stopping
+    /// after `max_failures` injected failures.
+    pub fn new(
+        inner: Arc<dyn Backend>,
+        every: u64,
+        max_failures: u64,
+    ) -> FlakyBackend {
+        assert!(every >= 1);
+        FlakyBackend {
+            inner,
+            every,
+            max_failures,
+            calls: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }
+    }
+
+    /// Batched calls observed so far (failed ones included).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Failures injected so far.
+    pub fn failures(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed).min(self.max_failures)
+    }
+}
+
+impl Backend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>
+    {
+        self.inner.call(spec, kv, inputs)
+    }
+
+    fn call_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.every == 0
+            && self.failures.fetch_add(1, Ordering::Relaxed) < self.max_failures
+        {
+            bail!("injected chunk failure (batched call #{n})");
+        }
+        self.inner.call_batched(spec, batch)
+    }
+
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
+        self.inner.fresh_kv(spec)
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        self.inner.upload(t)
+    }
+
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        self.inner.to_host(b, dtype, shape)
+    }
+
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        self.inner.set_global(name, t)
+    }
+
+    fn read_global(&self, name: &str) -> Result<Tensor> {
+        self.inner.read_global(name)
+    }
+
+    fn reset_global(&self, name: &str) -> Result<()> {
+        self.inner.reset_global(name)
+    }
+}

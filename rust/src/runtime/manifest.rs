@@ -37,6 +37,17 @@ impl Role {
             other => bail!("unknown role '{other}'"),
         })
     }
+
+    /// Inverse of [`Role::parse`] (manifest/wire serialization).
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Weight => "weight",
+            Role::Global => "global",
+            Role::Kv => "kv",
+            Role::In => "in",
+            Role::Out => "out",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -65,6 +76,20 @@ impl Port {
     pub fn elem_count(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Inverse of [`Port::parse`] (wire serialization for the remote
+    /// executor's manifest handshake).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert(
+            "shape".to_string(),
+            Json::Arr(self.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        o.insert("dtype".to_string(), Json::Str(self.dtype.name().to_string()));
+        o.insert("role".to_string(), Json::Str(self.role.name().to_string()));
+        Json::Obj(o)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -83,6 +108,42 @@ impl ArtifactSpec {
 
     pub fn outputs_with_role(&self, role: Role) -> impl Iterator<Item = &Port> {
         self.outputs.iter().filter(move |p| p.role == role)
+    }
+
+    /// Parse one artifact entry (shared by `Manifest::load` and the
+    /// remote-executor handshake — [`ArtifactSpec::to_json`] always
+    /// emits `file`, so both sources must provide it).
+    pub fn from_json(name: &str, dir: &Path, spec: &Json) -> Result<ArtifactSpec> {
+        let file = dir.join(spec.get("file").as_str().context("file")?);
+        let params = spec
+            .get("params")
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(Port::parse)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("artifact {name} params"))?;
+        let outputs = spec
+            .get("outputs")
+            .as_arr()
+            .context("outputs")?
+            .iter()
+            .map(Port::parse)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("artifact {name} outputs"))?;
+        Ok(ArtifactSpec { name: name.to_string(), file, params, outputs })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ports = |ps: &[Port]| Json::Arr(ps.iter().map(Port::to_json).collect());
+        let mut o = BTreeMap::new();
+        o.insert(
+            "file".to_string(),
+            Json::Str(self.file.to_string_lossy().into_owned()),
+        );
+        o.insert("params".to_string(), ports(&self.params));
+        o.insert("outputs".to_string(), ports(&self.outputs));
+        Json::Obj(o)
     }
 }
 
@@ -106,27 +167,7 @@ impl Manifest {
 
         let mut artifacts = BTreeMap::new();
         for (name, spec) in j.get("artifacts").as_obj().context("artifacts")? {
-            let file = dir.join(spec.get("file").as_str().context("file")?);
-            let params = spec
-                .get("params")
-                .as_arr()
-                .context("params")?
-                .iter()
-                .map(Port::parse)
-                .collect::<Result<Vec<_>>>()
-                .with_context(|| format!("artifact {name} params"))?;
-            let outputs = spec
-                .get("outputs")
-                .as_arr()
-                .context("outputs")?
-                .iter()
-                .map(Port::parse)
-                .collect::<Result<Vec<_>>>()
-                .with_context(|| format!("artifact {name} outputs"))?;
-            artifacts.insert(
-                name.clone(),
-                ArtifactSpec { name: name.clone(), file, params, outputs },
-            );
+            artifacts.insert(name.clone(), ArtifactSpec::from_json(name, dir, spec)?);
         }
 
         let mut prompts = BTreeMap::new();
@@ -144,6 +185,44 @@ impl Manifest {
             weights_file: dir.join(
                 j.get("weights").as_str().unwrap_or("weights.bin")),
             vocab_file: dir.join(j.get("vocab").as_str().unwrap_or("vocab.json")),
+            config: j.get("config").clone(),
+            exposures: j.get("exposures").clone(),
+        })
+    }
+
+    /// Serialize the executor-relevant subset (artifact specs + config +
+    /// exposures) for the remote-executor handshake. Prompt/weight/vocab
+    /// *paths* are deliberately omitted: a remote client has no use for
+    /// the server's filesystem layout.
+    pub fn to_wire_json(&self) -> Json {
+        let mut arts = BTreeMap::new();
+        for (name, spec) in &self.artifacts {
+            arts.insert(name.clone(), spec.to_json());
+        }
+        let mut o = BTreeMap::new();
+        o.insert("artifacts".to_string(), Json::Obj(arts));
+        o.insert("config".to_string(), self.config.clone());
+        o.insert("exposures".to_string(), self.exposures.clone());
+        Json::Obj(o)
+    }
+
+    /// Rebuild a manifest from [`Manifest::to_wire_json`] output.
+    /// `origin` tags `dir` and the derived paths (diagnostics only).
+    pub fn from_wire_json(origin: &str, j: &Json) -> Result<Manifest> {
+        let dir = PathBuf::from(format!("<remote:{origin}>"));
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j.get("artifacts").as_obj().context("wire artifacts")? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec::from_json(name, &dir, spec)?,
+            );
+        }
+        Ok(Manifest {
+            weights_file: dir.join("weights"),
+            vocab_file: dir.join("vocab"),
+            dir,
+            artifacts,
+            prompts: BTreeMap::new(),
             config: j.get("config").clone(),
             exposures: j.get("exposures").clone(),
         })
@@ -195,6 +274,29 @@ mod tests {
         assert_eq!(p.name, "kv_sh_k");
         assert_eq!(p.elem_count(), 2 * 320 * 6 * 32);
         assert_eq!(p.role, Role::Kv);
+    }
+
+    #[test]
+    fn wire_json_roundtrips_specs_and_config() {
+        let cfg = crate::runtime::reference::ReferenceConfig::default();
+        let m = crate::runtime::reference::synth::manifest(&cfg);
+        let wire = m.to_wire_json();
+        let back = Manifest::from_wire_json("test", &wire).unwrap();
+        assert_eq!(back.artifacts.len(), m.artifacts.len());
+        for (name, spec) in &m.artifacts {
+            let b = back.artifact(name).unwrap();
+            assert_eq!(b.params.len(), spec.params.len());
+            for (x, y) in b.params.iter().zip(&spec.params) {
+                assert_eq!((&x.name, &x.shape, x.dtype, x.role),
+                           (&y.name, &y.shape, y.dtype, y.role));
+            }
+            assert_eq!(b.outputs.len(), spec.outputs.len());
+        }
+        assert_eq!(back.config, m.config);
+        assert_eq!(
+            back.spec_usize("k_spec").unwrap(),
+            m.spec_usize("k_spec").unwrap()
+        );
     }
 
     #[test]

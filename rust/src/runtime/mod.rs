@@ -17,10 +17,12 @@
 //! so every binary in the repo runs out of the box.
 
 pub mod backend;
+pub mod chaos;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
+pub mod remote;
 pub mod tensor;
 pub mod weights;
 
@@ -33,6 +35,7 @@ use anyhow::{bail, Context, Result};
 pub use backend::{Backend, BatchItem, Buffer, CallOut};
 pub use manifest::{ArtifactSpec, Manifest, Port, Role};
 pub use reference::{ReferenceBackend, ReferenceConfig};
+pub use remote::RemoteBackend;
 pub use tensor::{DType, Tensor, TensorData};
 pub use weights::{load_weights, WeightMap};
 
@@ -191,10 +194,125 @@ impl Runtime {
         }
     }
 
+    /// Connect to a remote executor (`dvi serve-backend --listen ...`)
+    /// at `addr` and build a runtime whose backend ships every artifact
+    /// call over the wire. The manifest, prompt sets, and vocabulary
+    /// come from the executor's handshake, so engines, the scheduler,
+    /// and the learner run unmodified.
+    pub fn load_remote(addr: &str) -> Result<Runtime> {
+        Runtime::load_remote_with(Box::new(remote::transport::TcpConnector {
+            addr: addr.to_string(),
+        }))
+    }
+
+    /// [`Runtime::load_remote`] over an arbitrary connector (TCP in
+    /// production, in-process loopback in the hermetic tests).
+    pub fn load_remote_with(
+        connector: Box<dyn remote::transport::Connector>,
+    ) -> Result<Runtime> {
+        let (be, info) = RemoteBackend::connect(connector)?;
+        let backend: Arc<dyn Backend> = Arc::new(be);
+        let artifacts = info
+            .manifest
+            .artifacts
+            .values()
+            .map(|spec| {
+                (
+                    spec.name.clone(),
+                    Arc::new(Artifact { spec: spec.clone(), backend: backend.clone() }),
+                )
+            })
+            .collect();
+        log::info(&format!(
+            "remote runtime ready (executor backend: {})",
+            info.backend
+        ));
+        Ok(Runtime {
+            manifest: info.manifest,
+            backend,
+            artifacts,
+            prompts: info.prompts,
+            vocab: info.vocab,
+        })
+    }
+
+    /// Fully hermetic remote runtime: spawns an in-process executor
+    /// thread fronting a reference backend seeded with `seed`, reached
+    /// through the loopback transport — the complete remote path
+    /// (framing, codec, server dispatch, buffer table) with no sockets.
+    pub fn load_remote_loopback(seed: u64) -> Result<Runtime> {
+        let server = Arc::new(Runtime::load_reference(seed)?);
+        Runtime::load_remote_with(Box::new(remote::server::spawn_loopback(server)))
+    }
+
+    /// [`Runtime::load_remote_loopback`] with deterministic fault
+    /// injection: every `fail_every`-th client send errors (at most
+    /// `max_failures` times), exercising the at-most-once /
+    /// lazy-reconnect path under load.
+    pub fn load_remote_loopback_chaos(
+        seed: u64,
+        fail_every: u64,
+        max_failures: u64,
+    ) -> Result<Runtime> {
+        let server = Arc::new(Runtime::load_reference(seed)?);
+        let plan = remote::transport::ChaosPlan::new(fail_every, max_failures);
+        Runtime::load_remote_with(Box::new(remote::server::spawn_loopback_chaos(
+            server, plan,
+        )))
+    }
+
+    /// Hermetic runtime for tests honoring `DVI_TEST_REMOTE`: unset (or
+    /// empty) yields the in-process reference backend; `loopback` routes
+    /// the same reference backend through the remote executor path, so
+    /// CI proves the wire seam with the identical test suite.
+    pub fn load_hermetic(seed: u64) -> Result<Runtime> {
+        match std::env::var("DVI_TEST_REMOTE").as_deref() {
+            Ok("loopback") => Runtime::load_remote_loopback(seed),
+            Ok("") | Err(_) => Runtime::load_reference(seed),
+            Ok(other) => bail!(
+                "unsupported DVI_TEST_REMOTE='{other}' (expected 'loopback')"
+            ),
+        }
+    }
+
+    /// Rebuild this runtime with its backend wrapped by `wrap` — the
+    /// fault-injection / instrumentation hook (`tests/sched.rs` wraps
+    /// the reference backend in a chaos layer that fails every Nth
+    /// batched call). Artifacts are re-bound to the wrapper.
+    pub fn map_backend(
+        mut self,
+        wrap: impl FnOnce(Arc<dyn Backend>) -> Arc<dyn Backend>,
+    ) -> Runtime {
+        let backend = wrap(self.backend.clone());
+        self.artifacts = self
+            .manifest
+            .artifacts
+            .values()
+            .map(|spec| {
+                (
+                    spec.name.clone(),
+                    Arc::new(Artifact { spec: spec.clone(), backend: backend.clone() }),
+                )
+            })
+            .collect();
+        self.backend = backend;
+        self
+    }
+
+    /// Backend auto-selection, in priority order: a remote executor
+    /// named by `DVI_REMOTE` (addr of a `dvi serve-backend` process);
     /// PJRT when compiled in and `dir` holds a manifest; otherwise the
     /// hermetic reference backend. Every binary stays runnable with no
     /// artifacts, no Python, and no XLA.
     pub fn load_auto(dir: &Path) -> Result<Runtime> {
+        if let Ok(addr) = std::env::var("DVI_REMOTE") {
+            if !addr.is_empty() {
+                log::info(&format!(
+                    "DVI_REMOTE set — using the remote executor at {addr}"
+                ));
+                return Runtime::load_remote(&addr);
+            }
+        }
         let have_manifest = dir.join("manifest.json").exists();
         if cfg!(feature = "pjrt") && have_manifest {
             Runtime::load(dir, None)

@@ -1,0 +1,299 @@
+//! Remote-executor backend: ships batched artifact calls to a separate
+//! process/host over the length-prefixed [`proto`] wire format.
+//!
+//! The client side ([`RemoteBackend`]) implements the full
+//! [`crate::runtime::Backend`] trait, so every engine, the scheduler,
+//! the router, and the online learner run unmodified against an
+//! executor living across a socket. Per-sequence KV state is
+//! **server-resident**: the client holds [`RemoteHandle`]s (ids), and a
+//! `call_batched` ships only the small per-call inputs — the seam that
+//! sharding and multi-host serving build on.
+//!
+//! ## Failure semantics (what the scheduler sees)
+//!
+//! * Execution is **at-most-once**: a call is sent exactly once; if the
+//!   transport dies before the reply arrives, the call returns `Err`
+//!   and is never replayed (replaying could double-apply a `train_step`
+//!   global update). The scheduler maps that `Err` onto its existing
+//!   per-chunk `fail_lane` path, so one dropped connection costs one
+//!   chunk of lanes — never a wedged tick.
+//! * Reconnect is **lazy and bounded**: the dead transport is dropped
+//!   immediately; the *next* call dials again (up to
+//!   [`RECONNECT_ATTEMPTS`] times, with a version re-handshake). The
+//!   executor's buffer table is shared across connections, so surviving
+//!   sequences keep their KV and decode bitwise-identically after a
+//!   reconnect (`tests/remote.rs`, `tests/sched.rs`).
+//! * Semantic errors (unknown artifact, bad shapes) come back as
+//!   `Reply::Err` on a healthy connection and do not tear it down.
+//!
+//! Dropped client handles are released server-side by piggybacking a
+//! free-list on the next `Call` — no per-drop round trip.
+
+pub mod proto;
+pub mod server;
+pub mod transport;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::backend::{Backend, BatchItem, Buffer, CallOut};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::{DType, Tensor};
+
+use self::proto::{BufInfo, HelloInfo, Lane, Msg, Reply, VERSION};
+use self::transport::{Connector, Transport};
+
+/// Dial attempts per call before giving up on a dead executor.
+pub const RECONNECT_ATTEMPTS: u32 = 3;
+
+/// Client handle to a server-resident buffer. Dropping the last clone
+/// queues the id for release on the next call.
+pub struct RemoteHandle {
+    pub id: u64,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    freelist: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Drop for RemoteHandle {
+    fn drop(&mut self) {
+        if let Ok(mut frees) = self.freelist.lock() {
+            frees.push(self.id);
+        }
+    }
+}
+
+impl std::fmt::Debug for RemoteHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "remote#{}{:?}", self.id, self.shape)
+    }
+}
+
+pub struct RemoteBackend {
+    connector: Box<dyn Connector>,
+    /// `None` = known-dead; re-dialed lazily by the next call.
+    conn: Mutex<Option<Box<dyn Transport>>>,
+    freelist: Arc<Mutex<Vec<u64>>>,
+}
+
+impl RemoteBackend {
+    /// Dial the executor and fetch its manifest handshake. Returns the
+    /// backend plus everything needed to assemble a
+    /// [`crate::runtime::Runtime`] over it.
+    pub fn connect(connector: Box<dyn Connector>) -> Result<(RemoteBackend, HelloInfo)> {
+        let be = RemoteBackend {
+            connector,
+            conn: Mutex::new(None),
+            freelist: Arc::new(Mutex::new(Vec::new())),
+        };
+        let reply = be.roundtrip(&Msg::Hello { version: VERSION, want_manifest: true })?;
+        let Reply::Hello { backend, manifest_json: Some(doc) } = reply else {
+            bail!("executor handshake did not include a manifest");
+        };
+        let info = proto::parse_hello(&be.connector.endpoint(), backend, &doc)?;
+        Ok((be, info))
+    }
+
+    /// Dial + version handshake (manifest skipped on reconnects).
+    fn dial(&self) -> Result<Box<dyn Transport>> {
+        let mut last: Option<anyhow::Error> = None;
+        for _ in 0..RECONNECT_ATTEMPTS {
+            let attempt = (|| -> Result<Box<dyn Transport>> {
+                let mut t = self.connector.connect()?;
+                let hello = Msg::Hello { version: VERSION, want_manifest: false };
+                t.send(&hello.encode())?;
+                match Reply::decode(&t.recv()?)? {
+                    Reply::Hello { .. } => Ok(t),
+                    Reply::Err(e) => bail!("executor rejected handshake: {e}"),
+                    _ => bail!("unexpected handshake reply"),
+                }
+            })();
+            match attempt {
+                Ok(t) => return Ok(t),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one dial attempt")).with_context(|| {
+            format!(
+                "remote executor at {} unreachable after {RECONNECT_ATTEMPTS} attempts",
+                self.connector.endpoint()
+            )
+        })
+    }
+
+    /// One request/response. At-most-once: a transport failure marks
+    /// the connection dead and surfaces as `Err` without resending.
+    fn roundtrip(&self, msg: &Msg) -> Result<Reply> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.dial()?);
+        }
+        let t = guard.as_mut().expect("connection just established");
+        let attempt = (|| -> Result<Reply> {
+            t.send(&msg.encode())?;
+            Reply::decode(&t.recv()?)
+        })();
+        match attempt {
+            Ok(Reply::Err(e)) => bail!("remote executor: {e}"),
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                *guard = None; // dead transport; next call re-dials
+                Err(e.context("transport failure (connection dropped)"))
+            }
+        }
+    }
+
+    fn drain_frees(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.freelist.lock().unwrap())
+    }
+
+    /// Re-queue frees whose carrying message never reached the server.
+    fn requeue_frees(&self, frees: Vec<u64>) {
+        if !frees.is_empty() {
+            self.freelist.lock().unwrap().extend(frees);
+        }
+    }
+
+    fn handle(&self, info: BufInfo) -> Buffer {
+        Buffer::Remote(Arc::new(RemoteHandle {
+            id: info.id,
+            dtype: info.dtype,
+            shape: info.shape,
+            freelist: self.freelist.clone(),
+        }))
+    }
+
+    fn kv_ids(kv: &[Buffer]) -> Result<Vec<u64>> {
+        kv.iter()
+            .map(|b| match b {
+                Buffer::Remote(h) => Ok(h.id),
+                other => bail!(
+                    "remote backend received a non-remote kv buffer ({other:?}); \
+                     stage it with upload() first"
+                ),
+            })
+            .collect()
+    }
+
+    /// Shared body of `call` / `call_batched`.
+    fn call_lanes(&self, spec: &ArtifactSpec, lanes: Vec<Lane>) -> Result<Vec<CallOut>> {
+        let n = lanes.len();
+        let frees = self.drain_frees();
+        let msg = Msg::Call { artifact: spec.name.clone(), frees, lanes };
+        let reply = match self.roundtrip(&msg) {
+            Ok(r) => r,
+            Err(e) => {
+                // The free-list never reached the executor; release the
+                // ids with a later message instead of leaking them.
+                if let Msg::Call { frees, .. } = msg {
+                    self.requeue_frees(frees);
+                }
+                return Err(e);
+            }
+        };
+        let Reply::Lanes(outs) = reply else {
+            bail!("{}: unexpected reply to batched call", spec.name);
+        };
+        if outs.len() != n {
+            bail!("{}: executor returned {} lanes for {n}", spec.name, outs.len());
+        }
+        Ok(outs
+            .into_iter()
+            .map(|lane| CallOut {
+                outputs: lane.outputs,
+                kv: lane.kv.into_iter().map(|b| self.handle(b)).collect(),
+            })
+            .collect())
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>
+    {
+        let lane = Lane { kv: Self::kv_ids(kv)?, inputs: inputs.to_vec() };
+        let mut outs = self.call_lanes(spec, vec![lane])?;
+        Ok(outs.pop().expect("lane count checked"))
+    }
+
+    fn call_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        let lanes = batch
+            .iter()
+            .map(|item| {
+                Ok(Lane {
+                    kv: Self::kv_ids(item.kv)?,
+                    inputs: item.inputs.to_vec(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.call_lanes(spec, lanes)
+    }
+
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
+        match self.roundtrip(&Msg::FreshKv { artifact: spec.name.clone() })? {
+            Reply::Buffers(bs) => {
+                Ok(bs.into_iter().map(|b| self.handle(b)).collect())
+            }
+            _ => bail!("{}: unexpected reply to fresh_kv", spec.name),
+        }
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        match self.roundtrip(&Msg::Upload { tensor: t.clone() })? {
+            Reply::Buffers(mut bs) if bs.len() == 1 => {
+                Ok(self.handle(bs.pop().expect("length checked")))
+            }
+            _ => bail!("unexpected reply to upload"),
+        }
+    }
+
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        match b {
+            Buffer::Remote(h) => {
+                let msg = Msg::Download {
+                    id: h.id,
+                    dtype,
+                    shape: shape.to_vec(),
+                };
+                match self.roundtrip(&msg)? {
+                    Reply::Tensor(t) => Ok(t),
+                    _ => bail!("unexpected reply to download"),
+                }
+            }
+            other => bail!("to_host on a non-remote buffer {other:?}"),
+        }
+    }
+
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        match self.roundtrip(&Msg::SetGlobal {
+            name: name.to_string(),
+            tensor: t.clone(),
+        })? {
+            Reply::Unit => Ok(()),
+            _ => bail!("unexpected reply to set_global"),
+        }
+    }
+
+    fn read_global(&self, name: &str) -> Result<Tensor> {
+        match self.roundtrip(&Msg::ReadGlobal { name: name.to_string() })? {
+            Reply::Tensor(t) => Ok(t),
+            _ => bail!("unexpected reply to read_global"),
+        }
+    }
+
+    fn reset_global(&self, name: &str) -> Result<()> {
+        match self.roundtrip(&Msg::ResetGlobal { name: name.to_string() })? {
+            Reply::Unit => Ok(()),
+            _ => bail!("unexpected reply to reset_global"),
+        }
+    }
+}

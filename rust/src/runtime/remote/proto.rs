@@ -1,0 +1,720 @@
+//! Dependency-free length-prefixed wire protocol for the remote
+//! executor (`DVIR` v1).
+//!
+//! Every message is one frame: a `u32` little-endian payload length
+//! followed by the payload; the payload's first byte is an opcode tag.
+//! Tensors travel as raw little-endian bits, so a value that crosses the
+//! wire is **bitwise identical** on both sides — the losslessness
+//! invariant the scheduler tests assert survives the transport by
+//! construction, not by tolerance.
+//!
+//! The protocol covers exactly the [`crate::runtime::Backend`] seam:
+//!
+//! * `Hello` — version handshake; optionally returns the executor's
+//!   manifest/prompts/vocabulary as one JSON document
+//!   ([`hello_json`] / [`HelloInfo`]), so a client [`crate::runtime::Runtime`]
+//!   can be constructed from nothing but a connection.
+//! * `Call` — `call`/`call_batched` unified as a lane list. Per-sequence
+//!   KV state stays **server-resident**: lanes reference buffers by id,
+//!   and each reply returns fresh ids for the chained KV outputs. A
+//!   `frees` list piggybacks dropped client handles on the hot path.
+//! * `FreshKv` / `Upload` / `Download` — buffer lifecycle + staging.
+//! * `SetGlobal` / `ReadGlobal` / `ResetGlobal` — mutable globals
+//!   (LoRA adapters, Adam moments), so the online learner runs
+//!   unmodified against a remote executor.
+//! * `Free` — standalone handle release.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::{DType, Tensor, TensorData};
+use crate::util::json::Json;
+use crate::workload::{PromptSample, PromptSet};
+
+/// Protocol version; bumped on any wire-format change.
+pub const VERSION: u32 = 1;
+
+/// Upper bound on a single frame, guarding a corrupted length prefix.
+pub const MAX_FRAME: usize = 256 << 20;
+
+// Opcode tags (request space < 128, reply space >= 128).
+const OP_HELLO: u8 = 1;
+const OP_CALL: u8 = 2;
+const OP_FRESH_KV: u8 = 3;
+const OP_UPLOAD: u8 = 4;
+const OP_DOWNLOAD: u8 = 5;
+const OP_SET_GLOBAL: u8 = 6;
+const OP_READ_GLOBAL: u8 = 7;
+const OP_RESET_GLOBAL: u8 = 8;
+const OP_FREE: u8 = 9;
+const RE_HELLO: u8 = 128;
+const RE_LANES: u8 = 129;
+const RE_BUFFERS: u8 = 130;
+const RE_TENSOR: u8 = 131;
+const RE_UNIT: u8 = 132;
+const RE_ERR: u8 = 133;
+
+/// Server-side buffer descriptor: the id plus the host-visible
+/// dtype/shape the client needs to rehydrate a handle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufInfo {
+    pub id: u64,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One independent sequence's slice of a batched call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lane {
+    /// Server-resident KV buffer ids, in manifest kv-param order.
+    pub kv: Vec<u64>,
+    /// Per-call host inputs, in manifest in-param order.
+    pub inputs: Vec<Tensor>,
+}
+
+/// One lane's result: host outputs inline, chained KV as fresh ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneOut {
+    pub outputs: Vec<Tensor>,
+    pub kv: Vec<BufInfo>,
+}
+
+/// Client → server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello { version: u32, want_manifest: bool },
+    Call { artifact: String, frees: Vec<u64>, lanes: Vec<Lane> },
+    FreshKv { artifact: String },
+    Upload { tensor: Tensor },
+    Download { id: u64, dtype: DType, shape: Vec<usize> },
+    SetGlobal { name: String, tensor: Tensor },
+    ReadGlobal { name: String },
+    ResetGlobal { name: String },
+    Free { ids: Vec<u64> },
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Hello { backend: String, manifest_json: Option<String> },
+    Lanes(Vec<LaneOut>),
+    Buffers(Vec<BufInfo>),
+    Tensor(Tensor),
+    Unit,
+    Err(String),
+}
+
+// ----------------------------------------------------------------------------
+// Primitive codec
+// ----------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn ids(&mut self, ids: &[u64]) {
+        self.u32(ids.len() as u32);
+        for &id in ids {
+            self.u64(id);
+        }
+    }
+
+    fn shape(&mut self, shape: &[usize]) {
+        self.u8(shape.len() as u8);
+        for &d in shape {
+            self.u64(d as u64);
+        }
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        self.u8(dtype_code(t.dtype()));
+        self.shape(&t.shape);
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    self.0.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    self.0.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn tensors(&mut self, ts: &[Tensor]) {
+        self.u32(ts.len() as u32);
+        for t in ts {
+            self.tensor(t);
+        }
+    }
+
+    fn buf_info(&mut self, b: &BufInfo) {
+        self.u64(b.id);
+        self.u8(dtype_code(b.dtype));
+        self.shape(&b.shape);
+    }
+
+    fn buf_infos(&mut self, bs: &[BufInfo]) {
+        self.u32(bs.len() as u32);
+        for b in bs {
+            self.buf_info(b);
+        }
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "truncated frame at byte {} (wanted {n} more of {})",
+            self.i,
+            self.b.len()
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bounded collection length: every element of the collection
+    /// occupies at least `min_elem` payload bytes, so a count whose
+    /// minimum encoding exceeds the remaining bytes is corrupt —
+    /// rejected here, before any count-sized work happens.
+    fn len(&mut self, min_elem: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(min_elem).context("collection size overflow")?;
+        ensure!(
+            need <= self.b.len() - self.i,
+            "implausible collection length {n}"
+        );
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let s = self.take(n)?;
+        Ok(std::str::from_utf8(s).context("non-utf8 string")?.to_string())
+    }
+
+    fn ids(&mut self) -> Result<Vec<u64>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let n = self.u8()? as usize;
+        (0..n).map(|_| Ok(self.u64()? as usize)).collect()
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let dtype = DType::from_code(self.u8()?)?;
+        let shape = self.shape()?;
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .context("tensor shape overflow")?;
+        let bytes = n.checked_mul(4).context("tensor size overflow")?;
+        let raw = self.take(bytes)?;
+        Ok(match dtype {
+            DType::F32 => Tensor::f32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::I32 => Tensor::i32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        })
+    }
+
+    fn tensors(&mut self) -> Result<Vec<Tensor>> {
+        // dtype byte + ndim byte is the smallest possible tensor.
+        let n = self.len(2)?;
+        (0..n).map(|_| self.tensor()).collect()
+    }
+
+    fn buf_info(&mut self) -> Result<BufInfo> {
+        Ok(BufInfo {
+            id: self.u64()?,
+            dtype: DType::from_code(self.u8()?)?,
+            shape: self.shape()?,
+        })
+    }
+
+    fn buf_infos(&mut self) -> Result<Vec<BufInfo>> {
+        // id (8) + dtype (1) + ndim (1) is the smallest buffer info.
+        let n = self.len(10)?;
+        (0..n).map(|_| self.buf_info()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.i == self.b.len(),
+            "trailing bytes in frame ({} of {})",
+            self.b.len() - self.i,
+            self.b.len()
+        );
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------------------
+// Message codec
+// ----------------------------------------------------------------------------
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            Msg::Hello { version, want_manifest } => {
+                e.u8(OP_HELLO);
+                e.u32(*version);
+                e.u8(*want_manifest as u8);
+            }
+            Msg::Call { artifact, frees, lanes } => {
+                e.u8(OP_CALL);
+                e.str(artifact);
+                e.ids(frees);
+                e.u32(lanes.len() as u32);
+                for lane in lanes {
+                    e.ids(&lane.kv);
+                    e.tensors(&lane.inputs);
+                }
+            }
+            Msg::FreshKv { artifact } => {
+                e.u8(OP_FRESH_KV);
+                e.str(artifact);
+            }
+            Msg::Upload { tensor } => {
+                e.u8(OP_UPLOAD);
+                e.tensor(tensor);
+            }
+            Msg::Download { id, dtype, shape } => {
+                e.u8(OP_DOWNLOAD);
+                e.u64(*id);
+                e.u8(dtype_code(*dtype));
+                e.shape(shape);
+            }
+            Msg::SetGlobal { name, tensor } => {
+                e.u8(OP_SET_GLOBAL);
+                e.str(name);
+                e.tensor(tensor);
+            }
+            Msg::ReadGlobal { name } => {
+                e.u8(OP_READ_GLOBAL);
+                e.str(name);
+            }
+            Msg::ResetGlobal { name } => {
+                e.u8(OP_RESET_GLOBAL);
+                e.str(name);
+            }
+            Msg::Free { ids } => {
+                e.u8(OP_FREE);
+                e.ids(ids);
+            }
+        }
+        e.0
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(frame);
+        let msg = match d.u8()? {
+            OP_HELLO => Msg::Hello {
+                version: d.u32()?,
+                want_manifest: d.u8()? != 0,
+            },
+            OP_CALL => {
+                let artifact = d.str()?;
+                let frees = d.ids()?;
+                // kv count (4) + inputs count (4) is the smallest lane.
+                let n = d.len(8)?;
+                let lanes = (0..n)
+                    .map(|_| {
+                        Ok(Lane { kv: d.ids()?, inputs: d.tensors()? })
+                    })
+                    .collect::<Result<_>>()?;
+                Msg::Call { artifact, frees, lanes }
+            }
+            OP_FRESH_KV => Msg::FreshKv { artifact: d.str()? },
+            OP_UPLOAD => Msg::Upload { tensor: d.tensor()? },
+            OP_DOWNLOAD => Msg::Download {
+                id: d.u64()?,
+                dtype: DType::from_code(d.u8()?)?,
+                shape: d.shape()?,
+            },
+            OP_SET_GLOBAL => Msg::SetGlobal {
+                name: d.str()?,
+                tensor: d.tensor()?,
+            },
+            OP_READ_GLOBAL => Msg::ReadGlobal { name: d.str()? },
+            OP_RESET_GLOBAL => Msg::ResetGlobal { name: d.str()? },
+            OP_FREE => Msg::Free { ids: d.ids()? },
+            op => bail!("unknown request opcode {op}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+impl Reply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            Reply::Hello { backend, manifest_json } => {
+                e.u8(RE_HELLO);
+                e.str(backend);
+                match manifest_json {
+                    Some(j) => {
+                        e.u8(1);
+                        e.str(j);
+                    }
+                    None => e.u8(0),
+                }
+            }
+            Reply::Lanes(lanes) => {
+                e.u8(RE_LANES);
+                e.u32(lanes.len() as u32);
+                for lane in lanes {
+                    e.tensors(&lane.outputs);
+                    e.buf_infos(&lane.kv);
+                }
+            }
+            Reply::Buffers(bs) => {
+                e.u8(RE_BUFFERS);
+                e.buf_infos(bs);
+            }
+            Reply::Tensor(t) => {
+                e.u8(RE_TENSOR);
+                e.tensor(t);
+            }
+            Reply::Unit => e.u8(RE_UNIT),
+            Reply::Err(msg) => {
+                e.u8(RE_ERR);
+                e.str(msg);
+            }
+        }
+        e.0
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<Reply> {
+        let mut d = Dec::new(frame);
+        let reply = match d.u8()? {
+            RE_HELLO => {
+                let backend = d.str()?;
+                let manifest_json = if d.u8()? != 0 {
+                    Some(d.str()?)
+                } else {
+                    None
+                };
+                Reply::Hello { backend, manifest_json }
+            }
+            RE_LANES => {
+                // outputs count (4) + kv count (4) is the smallest lane.
+                let n = d.len(8)?;
+                let lanes = (0..n)
+                    .map(|_| {
+                        Ok(LaneOut {
+                            outputs: d.tensors()?,
+                            kv: d.buf_infos()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Reply::Lanes(lanes)
+            }
+            RE_BUFFERS => Reply::Buffers(d.buf_infos()?),
+            RE_TENSOR => Reply::Tensor(d.tensor()?),
+            RE_UNIT => Reply::Unit,
+            RE_ERR => Reply::Err(d.str()?),
+            op => bail!("unknown reply opcode {op}"),
+        };
+        d.finish()?;
+        Ok(reply)
+    }
+}
+
+// ----------------------------------------------------------------------------
+// Handshake document: manifest + prompts + vocab as one JSON string
+// ----------------------------------------------------------------------------
+
+/// What a client learns from the manifest handshake — enough to build a
+/// fully functional [`crate::runtime::Runtime`] over the connection.
+pub struct HelloInfo {
+    pub backend: String,
+    pub manifest: Manifest,
+    pub prompts: BTreeMap<String, PromptSet>,
+    pub vocab: Option<Vec<String>>,
+}
+
+fn sample_to_json(s: &PromptSample) -> Json {
+    let ids = |v: &[u32]| {
+        Json::Arr(v.iter().map(|&t| Json::Num(t as f64)).collect())
+    };
+    let mut o = BTreeMap::new();
+    o.insert("task".to_string(), Json::Num(s.task as f64));
+    o.insert("max_new".to_string(), Json::Num(s.max_new as f64));
+    o.insert("prompt".to_string(), ids(&s.prompt));
+    o.insert("answer".to_string(), ids(&s.answer));
+    Json::Obj(o)
+}
+
+fn sample_from_json(j: &Json) -> Result<PromptSample> {
+    let ids = |j: &Json| -> Result<Vec<u32>> {
+        j.as_arr()
+            .context("token array")?
+            .iter()
+            .map(|v| Ok(v.as_usize().context("token id")? as u32))
+            .collect()
+    };
+    Ok(PromptSample {
+        task: j.get("task").as_usize().context("sample task")? as u32,
+        max_new: j.get("max_new").as_usize().context("sample max_new")?,
+        prompt: ids(j.get("prompt"))?,
+        answer: ids(j.get("answer"))?,
+    })
+}
+
+/// Serialize the executor's manifest, in-memory prompt sets, and
+/// vocabulary as the handshake JSON document.
+pub fn hello_json(
+    manifest: &Manifest,
+    prompts: &BTreeMap<String, PromptSet>,
+    vocab: Option<&[String]>,
+) -> String {
+    let mut root = BTreeMap::new();
+    root.insert("manifest".to_string(), manifest.to_wire_json());
+    let sets: BTreeMap<String, Json> = prompts
+        .iter()
+        .map(|(task, set)| {
+            (
+                task.clone(),
+                Json::Arr(set.samples.iter().map(sample_to_json).collect()),
+            )
+        })
+        .collect();
+    root.insert("prompts".to_string(), Json::Obj(sets));
+    root.insert(
+        "vocab".to_string(),
+        match vocab {
+            Some(words) => Json::Arr(
+                words.iter().map(|w| Json::Str(w.clone())).collect(),
+            ),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(root).to_string()
+}
+
+/// Parse the handshake document back into client-side structures.
+/// `origin` tags the reconstructed manifest's `dir` (e.g. the address).
+pub fn parse_hello(origin: &str, backend: String, text: &str) -> Result<HelloInfo> {
+    let j = Json::parse(text).context("parsing handshake json")?;
+    let manifest = Manifest::from_wire_json(origin, j.get("manifest"))?;
+    let mut prompts = BTreeMap::new();
+    if let Some(sets) = j.get("prompts").as_obj() {
+        for (task, arr) in sets {
+            let samples = arr
+                .as_arr()
+                .with_context(|| format!("prompt set '{task}'"))?
+                .iter()
+                .map(sample_from_json)
+                .collect::<Result<_>>()?;
+            prompts.insert(task.clone(), PromptSet { samples });
+        }
+    }
+    let vocab = match j.get("vocab") {
+        Json::Arr(words) => Some(
+            words
+                .iter()
+                .map(|w| Ok(w.as_str().context("vocab word")?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        _ => None,
+    };
+    Ok(HelloInfo { backend, manifest, prompts, vocab })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_msg(m: Msg) {
+        let enc = m.encode();
+        assert_eq!(Msg::decode(&enc).unwrap(), m);
+    }
+
+    fn roundtrip_reply(r: Reply) {
+        let enc = r.encode();
+        assert_eq!(Reply::decode(&enc).unwrap(), r);
+    }
+
+    #[test]
+    fn messages_roundtrip_bitwise() {
+        roundtrip_msg(Msg::Hello { version: VERSION, want_manifest: true });
+        roundtrip_msg(Msg::Call {
+            artifact: "draft_block".into(),
+            frees: vec![3, 9],
+            lanes: vec![
+                Lane {
+                    kv: vec![1, 2],
+                    inputs: vec![
+                        Tensor::scalar_i32(-7),
+                        Tensor::f32(vec![2, 3], vec![0.5, -1.25, f32::MIN_POSITIVE, 0.0, 1e-30, 3.5]),
+                    ],
+                },
+                Lane { kv: vec![], inputs: vec![] },
+            ],
+        });
+        roundtrip_msg(Msg::FreshKv { artifact: "prefill_shallow".into() });
+        roundtrip_msg(Msg::Upload { tensor: Tensor::i32(vec![3], vec![1, -2, 3]) });
+        roundtrip_msg(Msg::Download {
+            id: 42,
+            dtype: DType::F32,
+            shape: vec![2, 160, 16],
+        });
+        roundtrip_msg(Msg::SetGlobal {
+            name: "lora.A".into(),
+            tensor: Tensor::zeros_f32(vec![4, 2]),
+        });
+        roundtrip_msg(Msg::ReadGlobal { name: "lora.B".into() });
+        roundtrip_msg(Msg::ResetGlobal { name: "adam.mA".into() });
+        roundtrip_msg(Msg::Free { ids: vec![7] });
+    }
+
+    #[test]
+    fn replies_roundtrip_bitwise() {
+        roundtrip_reply(Reply::Hello {
+            backend: "reference".into(),
+            manifest_json: Some("{\"a\":1}".into()),
+        });
+        roundtrip_reply(Reply::Hello { backend: "pjrt".into(), manifest_json: None });
+        roundtrip_reply(Reply::Lanes(vec![LaneOut {
+            outputs: vec![Tensor::f32(vec![2], vec![1.5e-39, -0.0])],
+            kv: vec![BufInfo { id: 5, dtype: DType::F32, shape: vec![2, 4] }],
+        }]));
+        roundtrip_reply(Reply::Buffers(vec![
+            BufInfo { id: 1, dtype: DType::I32, shape: vec![] },
+        ]));
+        roundtrip_reply(Reply::Tensor(Tensor::scalar_f32(2.5)));
+        roundtrip_reply(Reply::Unit);
+        roundtrip_reply(Reply::Err("boom".into()));
+    }
+
+    #[test]
+    fn float_bits_survive_exactly() {
+        // Subnormals, negative zero, and extreme exponents must cross
+        // the wire bit-for-bit (losslessness depends on it).
+        let vals = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, f32::MAX, -f32::MIN];
+        let t = Tensor::f32(vec![4], vals.clone());
+        let enc = Msg::Upload { tensor: t }.encode();
+        let Msg::Upload { tensor } = Msg::decode(&enc).unwrap() else {
+            panic!("wrong opcode");
+        };
+        let got = tensor.as_f32().unwrap();
+        for (a, b) in vals.iter().zip(got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn garbage_frames_are_rejected_not_panicking() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[250]).is_err());
+        assert!(Reply::decode(&[RE_TENSOR, 9]).is_err()); // bad dtype code
+        // Truncated tensor payload.
+        let mut enc = Msg::Upload {
+            tensor: Tensor::f32(vec![4], vec![0.0; 4]),
+        }
+        .encode();
+        enc.truncate(enc.len() - 3);
+        assert!(Msg::decode(&enc).is_err());
+        // Trailing bytes.
+        let mut enc = Msg::Free { ids: vec![1] }.encode();
+        enc.push(0);
+        assert!(Msg::decode(&enc).is_err());
+        // Implausible collection length must error, not allocate.
+        let mut e = vec![OP_FREE];
+        e.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(&e).is_err());
+    }
+
+    #[test]
+    fn hello_document_roundtrips() {
+        use crate::runtime::reference::{synth, ReferenceConfig};
+        let cfg = ReferenceConfig::default();
+        let manifest = synth::manifest(&cfg);
+        let prompts = synth::prompt_sets(&cfg);
+        let vocab = synth::vocab(&cfg);
+        let doc = hello_json(&manifest, &prompts, Some(&vocab));
+        let info = parse_hello("loopback", "reference".into(), &doc).unwrap();
+        assert_eq!(info.backend, "reference");
+        assert_eq!(info.manifest.artifacts.len(), manifest.artifacts.len());
+        let spec = info.manifest.artifact("draft_block").unwrap();
+        let orig = manifest.artifact("draft_block").unwrap();
+        assert_eq!(spec.params.len(), orig.params.len());
+        for (a, b) in spec.params.iter().zip(&orig.params) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.dtype, b.dtype);
+            assert_eq!(a.role, b.role);
+        }
+        assert_eq!(
+            info.manifest.spec_usize("k_spec").unwrap(),
+            manifest.spec_usize("k_spec").unwrap()
+        );
+        assert_eq!(info.prompts["qa"].samples[0].prompt,
+                   prompts["qa"].samples[0].prompt);
+        assert_eq!(info.vocab.as_deref(), Some(&vocab[..]));
+    }
+}

@@ -1,0 +1,277 @@
+//! Executor-server side of the remote backend: fronts any local
+//! [`crate::runtime::Backend`] (reference or PJRT) over a framed
+//! transport.
+//!
+//! State model: one **shared buffer table** per server, not per
+//! connection. Per-sequence KV handles therefore survive a client
+//! reconnect — a dropped connection costs exactly the in-flight call
+//! (the scheduler fails that chunk's lanes), never the KV state of
+//! co-resident sequences. Ids are minted from one atomic counter, so a
+//! reconnecting client can never collide with its pre-drop handles.
+//!
+//! Known tradeoff of that sharing: buffers are only released by client
+//! free-lists, so a client that dies permanently (or a reply lost
+//! after execution) leaks its entries until the executor restarts.
+//! Session-scoped ownership (free-all-for-client) is deferred to the
+//! sharding work that will give clients identities — see ROADMAP.
+//!
+//! Error discipline: a malformed or semantically invalid request gets a
+//! `Reply::Err` and the connection stays up (the client surfaces it as
+//! a per-call error); only transport failures tear a connection down.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::backend::{BatchItem, Buffer};
+use crate::runtime::manifest::Role;
+use crate::runtime::{log, Runtime};
+
+use super::proto::{hello_json, BufInfo, LaneOut, Msg, Reply, VERSION};
+use super::transport::{
+    ChaosPlan, LoopbackConnector, LoopbackTransport, TcpTransport, Transport,
+};
+
+/// Server-resident buffer store: id → backend-native buffer handle.
+pub struct BufferTable {
+    next: AtomicU64,
+    bufs: Mutex<HashMap<u64, Buffer>>,
+}
+
+impl BufferTable {
+    pub fn new() -> BufferTable {
+        BufferTable { next: AtomicU64::new(1), bufs: Mutex::new(HashMap::new()) }
+    }
+
+    fn insert(&self, buf: Buffer, dtype: crate::runtime::DType, shape: Vec<usize>)
+        -> BufInfo
+    {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.bufs.lock().unwrap().insert(id, buf);
+        BufInfo { id, dtype, shape }
+    }
+
+    fn get(&self, id: u64) -> Result<Buffer> {
+        self.bufs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("unknown buffer id {id} (freed or never allocated)"))
+    }
+
+    fn free(&self, ids: &[u64]) {
+        if ids.is_empty() {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        for id in ids {
+            bufs.remove(id);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for BufferTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Execute one request against the fronted runtime. Pure with respect
+/// to the connection: all state lives in `rt` and `table`.
+fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
+    match msg {
+        Msg::Hello { version, want_manifest } => {
+            anyhow::ensure!(
+                version == VERSION,
+                "protocol version mismatch: client {version}, server {VERSION}"
+            );
+            let manifest_json = want_manifest.then(|| {
+                hello_json(&rt.manifest, &rt.prompts, rt.vocab.as_deref())
+            });
+            Ok(Reply::Hello {
+                backend: rt.backend_name().to_string(),
+                manifest_json,
+            })
+        }
+        Msg::Call { artifact, frees, lanes } => {
+            table.free(&frees);
+            let art = rt.artifact(&artifact)?;
+            let kvs: Vec<Vec<Buffer>> = lanes
+                .iter()
+                .map(|lane| lane.kv.iter().map(|&id| table.get(id)).collect())
+                .collect::<Result<_>>()?;
+            let items: Vec<BatchItem<'_>> = lanes
+                .iter()
+                .zip(&kvs)
+                .map(|(lane, kv)| BatchItem { kv, inputs: &lane.inputs })
+                .collect();
+            let outs = art.call_batched(&items)?;
+            let kv_ports: Vec<_> = art.spec.outputs_with_role(Role::Kv).collect();
+            let lanes_out = outs
+                .into_iter()
+                .map(|out| LaneOut {
+                    outputs: out.outputs,
+                    kv: out
+                        .kv
+                        .into_iter()
+                        .zip(&kv_ports)
+                        .map(|(b, p)| table.insert(b, p.dtype, p.shape.clone()))
+                        .collect(),
+                })
+                .collect();
+            Ok(Reply::Lanes(lanes_out))
+        }
+        Msg::FreshKv { artifact } => {
+            let art = rt.artifact(&artifact)?;
+            let bufs = rt.fresh_kv(&artifact)?;
+            let ports: Vec<_> = art.spec.params_with_role(Role::Kv).collect();
+            Ok(Reply::Buffers(
+                bufs.into_iter()
+                    .zip(&ports)
+                    .map(|(b, p)| table.insert(b, p.dtype, p.shape.clone()))
+                    .collect(),
+            ))
+        }
+        Msg::Upload { tensor } => {
+            let dtype = tensor.dtype();
+            let shape = tensor.shape.clone();
+            let buf = rt.upload(&tensor)?;
+            Ok(Reply::Buffers(vec![table.insert(buf, dtype, shape)]))
+        }
+        Msg::Download { id, dtype, shape } => {
+            let buf = table.get(id)?;
+            Ok(Reply::Tensor(rt.to_host(&buf, dtype, &shape)?))
+        }
+        Msg::SetGlobal { name, tensor } => {
+            rt.set_global(&name, &tensor)?;
+            Ok(Reply::Unit)
+        }
+        Msg::ReadGlobal { name } => Ok(Reply::Tensor(rt.read_global(&name)?)),
+        Msg::ResetGlobal { name } => {
+            rt.reset_global(&name)?;
+            Ok(Reply::Unit)
+        }
+        Msg::Free { ids } => {
+            table.free(&ids);
+            Ok(Reply::Unit)
+        }
+    }
+}
+
+/// Serve one connection until the peer hangs up. Request errors are
+/// answered with `Reply::Err`; only a transport failure returns.
+pub fn serve_connection(
+    rt: &Runtime,
+    table: &BufferTable,
+    transport: &mut dyn Transport,
+) -> Result<()> {
+    loop {
+        let frame = match transport.recv() {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer gone: normal teardown
+        };
+        let reply = match Msg::decode(&frame) {
+            Ok(msg) => match execute(rt, table, msg) {
+                Ok(reply) => reply,
+                Err(e) => Reply::Err(format!("{e:#}")),
+            },
+            Err(e) => Reply::Err(format!("malformed request: {e:#}")),
+        };
+        transport
+            .send(&reply.encode())
+            .context("sending reply (client connection lost)")?;
+    }
+}
+
+/// TCP executor server: accept loop, one thread + shared buffer table
+/// across connections. Runs until `stop` is set (checked per accept) or
+/// the listener dies. This is what `dvi serve-backend --listen` runs.
+pub fn serve_tcp(
+    listener: TcpListener,
+    rt: Arc<Runtime>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let table = Arc::new(BufferTable::new());
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream {
+            Ok(stream) => {
+                let peer = stream
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "<unknown>".to_string());
+                log::info(&format!("executor: connection from {peer}"));
+                let rt = rt.clone();
+                let table = table.clone();
+                std::thread::Builder::new()
+                    .name("dvi-executor-conn".into())
+                    .spawn(move || {
+                        let mut t = TcpTransport::new(stream);
+                        if let Err(e) = serve_connection(&rt, &table, &mut t) {
+                            log::info(&format!("executor: {peer} dropped: {e}"));
+                        }
+                    })?;
+            }
+            Err(e) => log::info(&format!("executor: accept failed: {e}")),
+        }
+    }
+    Ok(())
+}
+
+fn spawn_loopback_inner(
+    rt: Arc<Runtime>,
+    chaos: Option<ChaosPlan>,
+) -> LoopbackConnector {
+    let (accept_tx, accept_rx) =
+        std::sync::mpsc::channel::<LoopbackTransport>();
+    let table = Arc::new(BufferTable::new());
+    std::thread::Builder::new()
+        .name("dvi-executor-loopback".into())
+        .spawn(move || {
+            // Accept loop ends when the connector (the only sender) is
+            // dropped; per-connection threads end when their client
+            // endpoint is dropped. No explicit shutdown required.
+            while let Ok(mut transport) = accept_rx.recv() {
+                let rt = rt.clone();
+                let table = table.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("dvi-executor-loopback-conn".into())
+                    .spawn(move || {
+                        let _ = serve_connection(&rt, &table, &mut transport);
+                    });
+                if spawned.is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawning loopback executor thread");
+    LoopbackConnector { accept_tx: Mutex::new(accept_tx), chaos }
+}
+
+/// In-process executor: an accept thread fronting `rt`'s backend over
+/// loopback transports. The returned connector behaves exactly like a
+/// TCP connector (including reconnects after an injected failure), so
+/// the hermetic test suite exercises the full remote path.
+pub fn spawn_loopback(rt: Arc<Runtime>) -> LoopbackConnector {
+    spawn_loopback_inner(rt, None)
+}
+
+/// Like [`spawn_loopback`], with a fault injector executing `plan` on
+/// every client transport (counted across reconnects).
+pub fn spawn_loopback_chaos(rt: Arc<Runtime>, plan: ChaosPlan) -> LoopbackConnector {
+    spawn_loopback_inner(rt, Some(plan))
+}

@@ -1,0 +1,295 @@
+//! Framed transports for the remote-executor protocol.
+//!
+//! A [`Transport`] moves whole frames (the length prefix is the
+//! transport's concern, not the codec's). Three implementations:
+//!
+//! * [`TcpTransport`] — `u32` length prefix over a `TcpStream`; the
+//!   production path behind `dvi serve-backend --listen`.
+//! * loopback ([`loopback_pair`]) — a pair of in-process byte channels,
+//!   used by the hermetic test suite and CI (`DVI_TEST_REMOTE=loopback`)
+//!   so the full encode → frame → decode path runs with no sockets.
+//! * [`ChaosTransport`] — wraps any transport and fails every Nth send,
+//!   injecting deterministic transport faults for the scheduler's
+//!   fail-lane tests.
+//!
+//! A [`Connector`] mints fresh transports, which is what gives the
+//! client its bounded-reconnect behavior: a dead connection is dropped
+//! and the next backend call dials again.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::proto::MAX_FRAME;
+
+/// One framed, ordered, bidirectional byte channel.
+pub trait Transport: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// Mints fresh connections (dial + nothing else; the protocol handshake
+/// is the client's job).
+pub trait Connector: Send + Sync {
+    fn connect(&self) -> Result<Box<dyn Transport>>;
+    /// Human-readable endpoint for error messages.
+    fn endpoint(&self) -> String;
+}
+
+// ----------------------------------------------------------------------------
+// TCP
+// ----------------------------------------------------------------------------
+
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> TcpTransport {
+        // Frames are already whole messages; don't let Nagle delay them.
+        let _ = stream.set_nodelay(true);
+        TcpTransport { stream }
+    }
+
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to executor at {addr}"))?;
+        Ok(TcpTransport::new(stream))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        ensure!(frame.len() <= MAX_FRAME, "frame too large: {}", frame.len());
+        self.stream.write_all(&(frame.len() as u32).to_le_bytes())?;
+        self.stream.write_all(frame)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let len = u32::from_le_bytes(len) as usize;
+        ensure!(len <= MAX_FRAME, "oversized frame announced: {len}");
+        let mut frame = vec![0u8; len];
+        self.stream.read_exact(&mut frame)?;
+        Ok(frame)
+    }
+}
+
+pub struct TcpConnector {
+    pub addr: String,
+}
+
+impl Connector for TcpConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>> {
+        Ok(Box::new(TcpTransport::connect(&self.addr)?))
+    }
+
+    fn endpoint(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+}
+
+// ----------------------------------------------------------------------------
+// In-process loopback
+// ----------------------------------------------------------------------------
+
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Two connected in-process endpoints.
+pub fn loopback_pair() -> (LoopbackTransport, LoopbackTransport) {
+    let (atx, brx) = channel();
+    let (btx, arx) = channel();
+    (
+        LoopbackTransport { tx: atx, rx: arx },
+        LoopbackTransport { tx: btx, rx: brx },
+    )
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| anyhow!("loopback peer hung up"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow!("loopback peer hung up"))
+    }
+}
+
+/// Dials the in-process executor's accept loop
+/// (`server::spawn_loopback`): each `connect` mints a fresh channel pair
+/// and hands the server end across, mirroring a TCP accept.
+pub struct LoopbackConnector {
+    pub(super) accept_tx: Mutex<Sender<LoopbackTransport>>,
+    /// Fault-injection plan applied to every minted client transport
+    /// (shared counters, so fault spacing spans reconnects).
+    pub(super) chaos: Option<ChaosPlan>,
+}
+
+impl Connector for LoopbackConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>> {
+        let (client, server) = loopback_pair();
+        self.accept_tx
+            .lock()
+            .unwrap()
+            .send(server)
+            .map_err(|_| anyhow!("loopback executor has shut down"))?;
+        Ok(match &self.chaos {
+            Some(plan) => Box::new(ChaosTransport {
+                inner: Box::new(client),
+                plan: plan.clone(),
+            }),
+            None => Box::new(client),
+        })
+    }
+
+    fn endpoint(&self) -> String {
+        "loopback".to_string()
+    }
+}
+
+// ----------------------------------------------------------------------------
+// Fault injection
+// ----------------------------------------------------------------------------
+
+/// Deterministic fault-injection plan, shared across reconnects: every
+/// `every`-th send fails, at most `max_failures` times in total. The
+/// cap lets chaos tests bound worst-case damage (each failure can kill
+/// at most one scheduler chunk) while the modulo guarantees the first
+/// failure actually fires.
+#[derive(Clone)]
+pub struct ChaosPlan {
+    pub every: u64,
+    pub max_failures: u64,
+    sends: Arc<AtomicU64>,
+    injected: Arc<AtomicU64>,
+}
+
+impl ChaosPlan {
+    pub fn new(every: u64, max_failures: u64) -> ChaosPlan {
+        // every=2 locks into a handshake-ok / call-fail cycle (sends
+        // alternate dial-Hello and the retried call), so every request
+        // would fail until the cap runs out; >= 3 keeps reconnects able
+        // to make progress between injected faults.
+        assert!(every >= 3, "every < 3 would starve reconnects");
+        ChaosPlan {
+            every,
+            max_failures,
+            sends: Arc::new(AtomicU64::new(0)),
+            injected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Count one send; `Some(n)` means send number `n` must fail.
+    fn trip(&self) -> Option<u64> {
+        let n = self.sends.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.every != 0 {
+            return None;
+        }
+        let k = self.injected.fetch_add(1, Ordering::Relaxed);
+        (k < self.max_failures).then_some(n)
+    }
+
+    /// Failures injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed).min(self.max_failures)
+    }
+}
+
+/// Transport wrapper executing a [`ChaosPlan`]: a tripped send errors
+/// and the frame is *not* delivered, modeling a connection dropped
+/// before the request reached the executor — the at-most-once case the
+/// client maps onto the scheduler's `fail_lane` path.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: ChaosPlan,
+}
+
+impl ChaosTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: ChaosPlan) -> ChaosTransport {
+        ChaosTransport { inner, plan }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if let Some(n) = self.plan.trip() {
+            bail!("injected transport failure (send #{n})");
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.inner.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_frames_roundtrip_in_order() {
+        let (mut a, mut b) = loopback_pair();
+        a.send(&[1, 2, 3]).unwrap();
+        a.send(&[]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![1, 2, 3]);
+        assert_eq!(b.recv().unwrap(), Vec::<u8>::new());
+        b.send(&[9]).unwrap();
+        assert_eq!(a.recv().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn loopback_hangup_errors() {
+        let (mut a, b) = loopback_pair();
+        drop(b);
+        assert!(a.send(&[1]).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn chaos_fails_every_nth_send_up_to_cap() {
+        let (a, mut b) = loopback_pair();
+        let plan = ChaosPlan::new(3, 1);
+        let mut c = ChaosTransport::new(Box::new(a), plan.clone());
+        assert!(c.send(&[1]).is_ok());
+        assert!(c.send(&[2]).is_ok());
+        assert!(c.send(&[3]).is_err()); // injected; frame not delivered
+        assert!(c.send(&[4]).is_ok());
+        assert!(c.send(&[5]).is_ok());
+        assert!(c.send(&[6]).is_ok()); // would trip, but capped at 1
+        assert_eq!(plan.injected(), 1);
+        assert_eq!(b.recv().unwrap(), vec![1]);
+        assert_eq!(b.recv().unwrap(), vec![2]);
+        assert_eq!(b.recv().unwrap(), vec![4]);
+        assert_eq!(b.recv().unwrap(), vec![5]);
+        assert_eq!(b.recv().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream);
+            let f = t.recv().unwrap();
+            t.send(&f).unwrap(); // echo
+        });
+        let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
+        c.send(&[5, 6, 7]).unwrap();
+        assert_eq!(c.recv().unwrap(), vec![5, 6, 7]);
+        server.join().unwrap();
+    }
+}

@@ -28,6 +28,14 @@ impl DType {
     pub fn size_bytes(self) -> usize {
         4
     }
+
+    /// Inverse of [`DType::from_name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]

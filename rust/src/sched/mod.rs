@@ -67,9 +67,18 @@ pub struct SchedStats {
     pub lanes: AtomicU64,
     /// Tokens committed across all sequences.
     pub committed_tokens: AtomicU64,
-    /// Sequences completed (served + failed).
+    /// Sequences that reached a terminal state: completed **plus**
+    /// failed. Every terminal path (drain, mid-flight `fail_lane`,
+    /// admission rejection) increments this *and* adds the sequence's
+    /// queue wait to `queue_wait_ns`, so `mean_queue_wait_ms` is a true
+    /// mean over everything served — failures included. Invariant
+    /// (regression-tested): `served == completed + failed` and
+    /// `queue_wait_ns == Σ queue_wait` over all drained results.
     pub served: AtomicU64,
-    /// Total submit→admission wait.
+    /// Subset of `served` that ended in an error (admission rejection,
+    /// backend/transport failure, apply failure).
+    pub failed: AtomicU64,
+    /// Total submit→admission wait, over completed AND failed lanes.
     pub queue_wait_ns: AtomicU64,
     /// Most slots ever occupied at once (must stay <= max_slots).
     pub slot_high_water: AtomicU64,
@@ -86,6 +95,18 @@ impl SchedStats {
         }
     }
 
+    /// Sequences that completed successfully. Loads `failed` first and
+    /// subtracts saturating: a concurrent `fail_lane` bumps `served`
+    /// before `failed`, so the opposite order could transiently read
+    /// failed > served and wrap.
+    pub fn completed(&self) -> u64 {
+        let failed = self.failed.load(Ordering::Relaxed);
+        self.served.load(Ordering::Relaxed).saturating_sub(failed)
+    }
+
+    /// Mean submit→admission wait across every terminal sequence —
+    /// failed lanes keep their wait in the numerator AND denominator,
+    /// so failures can't bias the mean low.
     pub fn mean_queue_wait_ms(&self) -> f64 {
         let served = self.served.load(Ordering::Relaxed);
         if served == 0 {
@@ -199,11 +220,14 @@ impl Scheduler {
         std::mem::take(&mut self.done)
     }
 
-    /// Complete a lane with an error, freeing its slot.
+    /// Complete a lane with an error, freeing its slot. Accounting must
+    /// mirror the success path exactly: served + queue-wait both move,
+    /// plus the failure counter (see [`SchedStats::served`]).
     fn fail_lane(&mut self, slot: usize, err: anyhow::Error) {
         if let Some(lane) = self.slots[slot].take() {
             log::info(&format!("scheduled sequence {} failed: {err}", lane.id));
             self.stats.served.fetch_add(1, Ordering::Relaxed);
+            self.stats.failed.fetch_add(1, Ordering::Relaxed);
             self.stats
                 .queue_wait_ns
                 .fetch_add(lane.queue_wait_ns, Ordering::Relaxed);
@@ -236,6 +260,7 @@ impl Scheduler {
                     // Bad request (e.g. oversized prompt): fail fast, keep
                     // the slot for the next queued request.
                     self.stats.served.fetch_add(1, Ordering::Relaxed);
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     self.stats
                         .queue_wait_ns
                         .fetch_add(queue_wait_ns, Ordering::Relaxed);
@@ -380,8 +405,70 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    use std::time::Duration;
+
+    use crate::runtime::chaos::FlakyBackend;
+    use crate::runtime::Backend;
+
     fn runtime() -> Arc<Runtime> {
         Arc::new(Runtime::load_reference(0x5C4ED).expect("reference runtime"))
+    }
+
+    /// Regression (accounting audit): a lane failed MID-FLIGHT must
+    /// contribute its queue wait to `queue_wait_ns` and count in both
+    /// `served` and `failed`, exactly like a completed lane — otherwise
+    /// `mean_queue_wait_ms` is biased low under failures. Submissions
+    /// are backdated 50ms so the bias would be unmissable: dropping the
+    /// failed lanes' waits would pull the mean to ~half of 50ms.
+    ///
+    /// FlakyBackend(every=2, cap=1) fails exactly the SECOND batched
+    /// call: with 4 admitted lanes and max_batch=2 that is
+    /// deterministically the second prefill chunk — two resident lanes
+    /// fail mid-flight while the first chunk's two lanes complete.
+    #[test]
+    fn failed_lanes_keep_queue_wait_accounting_consistent() {
+        let rt = Runtime::load_reference(0x5C4ED)
+            .unwrap()
+            .map_backend(|inner| {
+                Arc::new(FlakyBackend::new(inner, 2, 1)) as Arc<dyn Backend>
+            });
+        let rt = Arc::new(rt);
+        let cfg = SchedConfig {
+            method: "ar".into(),
+            max_batch: 2,
+            max_slots: 4,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let backdated = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .expect("monotonic clock supports a 50ms backdate");
+        for p in prompts(&rt, 4) {
+            sched.submit_at(p, 6, backdated);
+        }
+        sched.run_until_idle(10_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), 4, "every lane must reach a terminal state");
+        let errs = done.iter().filter(|r| r.result.is_err()).count();
+        // Exactly the second prefill chunk's two lanes fail; the first
+        // chunk's two lanes complete. Both outcomes coexist, so the
+        // mean check below actually exercises the failed-lane path.
+        assert_eq!(errs, 2, "expected exactly the failed chunk's lanes to err");
+
+        let stats = &sched.stats;
+        assert_eq!(stats.served.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.failed.load(Ordering::Relaxed) as usize, errs);
+        assert_eq!(stats.completed() as usize, 4 - errs);
+        // The stats' total equals the per-result sum exactly: no
+        // terminal path may drop (or double-count) a lane's wait.
+        let sum: u64 = done.iter().map(|r| r.queue_wait_ns).sum();
+        assert_eq!(stats.queue_wait_ns.load(Ordering::Relaxed), sum);
+        // Every wait was >= 50ms, so a mean over served must be too;
+        // failed lanes missing from the numerator would show up here.
+        assert!(
+            stats.mean_queue_wait_ms() >= 50.0,
+            "mean queue wait {}ms < 50ms: a failed lane's wait was dropped",
+            stats.mean_queue_wait_ms()
+        );
     }
 
     fn prompts(rt: &Runtime, n: usize) -> Vec<Vec<u32>> {
@@ -423,6 +510,8 @@ mod tests {
         );
         assert!(stats.occupancy() > 1.0, "batching never exceeded one lane");
         assert_eq!(stats.served.load(Ordering::Relaxed), 9);
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.completed(), 9);
     }
 
     /// Oversized prompts are rejected at admission with an Err result;
@@ -450,6 +539,9 @@ mod tests {
                 assert!(!r.result.unwrap().tokens.is_empty());
             }
         }
+        // Admission rejections are served + failed, like any terminal.
+        assert_eq!(sched.stats.served.load(Ordering::Relaxed), 2);
+        assert_eq!(sched.stats.failed.load(Ordering::Relaxed), 1);
     }
 
     /// Unknown methods fail at construction, before any thread spawns.

@@ -6,19 +6,28 @@
 //! token streams to the per-sequence `DviEngine` / `ArEngine` paths,
 //! with >= 8 concurrent sequences actually multiplexed (mean batch
 //! occupancy > 1) through a recycled KV slot pool. Plus: a property test
-//! that interleaved admission never starves a sequence.
+//! that interleaved admission never starves a sequence, chaos tests
+//! (backend- and transport-level fault injection must fail chunks, not
+//! the scheduler, leaving survivors bitwise-identical), and the same
+//! losslessness proven through the remote-executor backend.
+//!
+//! With `DVI_TEST_REMOTE=loopback` (the CI remote step), `runtime()`
+//! routes every backend call through the remote executor's loopback
+//! transport, so this whole suite additionally proves the wire seam.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use dvi::engine::Engine;
 use dvi::harness::{load_prompts, make_engine};
-use dvi::runtime::Runtime;
+use dvi::runtime::{chaos::FlakyBackend, Backend, Runtime};
 use dvi::sched::{SchedConfig, SchedStats, Scheduler};
 use dvi::util::prop::run_prop;
 
+const SEED: u64 = 0xBA7C4;
+
 fn runtime() -> Arc<Runtime> {
-    Arc::new(Runtime::load_reference(0xBA7C4).expect("reference runtime"))
+    Arc::new(Runtime::load_hermetic(SEED).expect("hermetic runtime"))
 }
 
 /// Mixed-task workload via the seeded deterministic shuffle.
@@ -116,6 +125,132 @@ fn token_streams_invariant_to_max_batch() {
     let (c, _) = scheduler_tokens(&rt, "dvi", &cases, 8, 4);
     assert_eq!(a, b, "max_batch changed the committed tokens");
     assert_eq!(b, c, "slot pressure changed the committed tokens");
+}
+
+// ----------------------------------------------------------------------------
+// Chaos: injected failures must cost chunks, never the scheduler
+// ----------------------------------------------------------------------------
+
+/// Drive a chaos scheduler over `cases` (submitting the second half
+/// mid-run, so admission races the failures) and check the combined
+/// invariant: every sequence reaches a terminal state, at least one
+/// fails and at least one survives, survivors are bitwise-identical to
+/// the serial engine, and stats stay consistent.
+fn chaos_run(rt: Arc<Runtime>, method: &str, cases: &[(Vec<u32>, usize)]) {
+    let golden: Vec<Vec<u32>> = {
+        let engine_rt = Arc::new(Runtime::load_reference(SEED).unwrap());
+        let mut engine = make_engine(engine_rt, method).unwrap();
+        cases
+            .iter()
+            .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
+            .collect()
+    };
+    let cfg = SchedConfig { method: method.into(), max_batch: 2, max_slots: 4 };
+    let mut sched = Scheduler::new(rt, cfg, None).unwrap();
+    let half = cases.len() / 2;
+    let mut ids: Vec<u64> = cases[..half]
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    for _ in 0..3 {
+        sched.tick().unwrap();
+    }
+    // Late arrivals: the queue must keep draining despite failures.
+    ids.extend(cases[half..].iter().map(|(p, n)| sched.submit(p.clone(), *n)));
+    sched.run_until_idle(100_000).unwrap();
+    assert_eq!(sched.queued(), 0, "admission queue starved");
+
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "every sequence must terminate");
+    done.sort_by_key(|r| r.id);
+    let mut oks = 0usize;
+    let mut errs = 0usize;
+    for (r, (&id, golden)) in done.iter().zip(ids.iter().zip(&golden)) {
+        assert_eq!(r.id, id);
+        match &r.result {
+            Ok(g) => {
+                oks += 1;
+                assert_eq!(
+                    &g.tokens, golden,
+                    "surviving lane {id} diverged from serial engine output"
+                );
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    assert!(errs >= 1, "chaos injection never fired");
+    assert!(oks >= 1, "chaos killed every lane — nothing survived to check");
+    let stats = &sched.stats;
+    assert_eq!(stats.served.load(Ordering::Relaxed) as usize, cases.len());
+    assert_eq!(stats.failed.load(Ordering::Relaxed) as usize, errs);
+    assert_eq!(stats.completed() as usize, oks);
+}
+
+/// Backend-level chaos: every Nth `call_batched` chunk errors. The
+/// scheduler must absorb each failure via `fail_lane` (that chunk's
+/// lanes only) without wedging the tick or starving admission, and
+/// surviving lanes must stay bitwise-lossless vs the serial engine.
+#[test]
+fn chaos_every_nth_chunk_fails_only_its_lanes() {
+    // Rate math: even in the degenerate worst case (every sequence
+    // EOS-ing right after its two prefill calls), 10 DVI sequences make
+    // >= 10 batched calls (2 participations each, at most 2 lanes per
+    // chunk), so every=6 guarantees the injection fires; the 3-failure
+    // cap kills at most 6 of 10 sequences, so survivors are guaranteed
+    // too.
+    let rt = Runtime::load_reference(SEED).unwrap().map_backend(|inner| {
+        Arc::new(FlakyBackend::new(inner, 6, 3)) as Arc<dyn Backend>
+    });
+    let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+    let cases = mixed_prompts(&local, 10, 16);
+    chaos_run(Arc::new(rt), "dvi", &cases);
+}
+
+// ----------------------------------------------------------------------------
+// Remote executor: batched scheduling across the wire seam
+// ----------------------------------------------------------------------------
+
+/// Headline remote invariant: batched scheduling through the
+/// `RemoteBackend` (loopback transport — full framing/codec/server
+/// path, no sockets) commits bitwise-identical token streams to the
+/// in-process per-sequence engines, for both DVI and AR.
+#[test]
+fn remote_batched_is_bitwise_lossless_vs_local_engine() {
+    let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+    let remote = Arc::new(Runtime::load_remote_loopback(SEED).unwrap());
+    assert_eq!(remote.backend_name(), "remote");
+    let cases = mixed_prompts(&local, 10, 20);
+    for method in ["dvi", "ar"] {
+        let mut engine = make_engine(local.clone(), method).unwrap();
+        let golden: Vec<Vec<u32>> = cases
+            .iter()
+            .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
+            .collect();
+        let (got, stats) = scheduler_tokens(&remote, method, &cases, 4, cases.len());
+        assert_eq!(
+            got, golden,
+            "remote batched {method} diverged from in-process engine"
+        );
+        assert!(stats.occupancy() > 1.0, "remote path never actually batched");
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 0);
+    }
+}
+
+/// Transport-level chaos through the full remote path: every 29th
+/// client send errors, at most 3 times (at-most-once execution, lazy
+/// bounded reconnect, server-side KV survives the reconnect). Failures
+/// must map onto per-chunk `fail_lane`, survivors must stay
+/// bitwise-lossless. (Even in the degenerate worst case a run issues
+/// >= 32 sends — 2 for the handshake, 2 fresh_kv per admission, >= 10
+/// batched calls — so 29 guarantees a failure; the cap kills at most
+/// 6 of 10 sequences.)
+#[test]
+fn remote_transport_chaos_fails_chunks_not_the_scheduler() {
+    let remote =
+        Arc::new(Runtime::load_remote_loopback_chaos(SEED, 29, 3).unwrap());
+    let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+    let cases = mixed_prompts(&local, 10, 16);
+    chaos_run(remote, "dvi", &cases);
 }
 
 /// Fairness: under randomly interleaved admission and any (max_batch,
