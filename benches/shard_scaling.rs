@@ -1,0 +1,144 @@
+//! Shard scaling: the batched scheduler driving a loopback executor
+//! fleet of 1 vs 2 vs 4 shards at a fixed offered load, so the cost of
+//! the sharded client (routing, per-shard sub-call threads, reassembly)
+//! and the benefit of fanning lanes out are both visible before any
+//! real network is involved. An in-process reference row anchors the
+//! remote overhead.
+//!
+//! Every configuration's committed token streams are checked bitwise
+//! against the 1-shard run before its timing is trusted — sharding is a
+//! deployment choice, never a semantic one.
+//!
+//!   cargo bench --bench shard_scaling
+//!
+//! Knobs: DVI_BENCH_SEQS   sequences at fixed load   (default 24)
+//!        DVI_BENCH_TINY=1 CI smoke scale (8 sequences, shards 1/2)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dvi::runtime::Runtime;
+use dvi::sched::{SchedConfig, Scheduler};
+
+const SEED: u64 = 0x54A2D;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Run {
+    label: String,
+    wall_s: f64,
+    tokens: u64,
+    occupancy: f64,
+    streams: Vec<Vec<u32>>,
+}
+
+/// Drive `cases` through a fresh batched scheduler on `rt`; returns the
+/// timing plus the committed streams (submission order) for the
+/// losslessness cross-check.
+fn drive(
+    rt: Arc<Runtime>,
+    label: &str,
+    cases: &[(Vec<u32>, usize)],
+) -> Run {
+    let cfg = SchedConfig {
+        method: "dvi".into(),
+        max_batch: 8,
+        max_slots: 16,
+    };
+    let mut sched = Scheduler::new(rt, cfg, None).expect("scheduler");
+    let t0 = Instant::now();
+    let ids: Vec<u64> = cases
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    sched.run_until_idle(1_000_000).expect("scheduler drained");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "{label}: sequences went missing");
+    done.sort_by_key(|r| r.id);
+    let streams: Vec<Vec<u32>> = ids
+        .iter()
+        .zip(done)
+        .map(|(&id, r)| {
+            assert_eq!(id, r.id);
+            r.result.expect("generation failed").tokens
+        })
+        .collect();
+    let tokens = streams.iter().map(|s| s.len() as u64).sum();
+    Run {
+        label: label.to_string(),
+        wall_s,
+        tokens,
+        occupancy: sched.stats.occupancy(),
+        streams,
+    }
+}
+
+fn main() {
+    let tiny = std::env::var("DVI_BENCH_TINY").is_ok();
+    let seqs = env_usize("DVI_BENCH_SEQS", if tiny { 8 } else { 24 });
+    let shard_counts: &[usize] = if tiny { &[1, 2] } else { &[1, 2, 4] };
+
+    let local = Arc::new(Runtime::load_reference(SEED).expect("local runtime"));
+    let cases: Vec<(Vec<u32>, usize)> = {
+        let stream = dvi::harness::load_prompts(&local, "stream").expect("prompts");
+        stream
+            .shuffled(0x5EED)
+            .take(seqs)
+            .samples
+            .iter()
+            .map(|s| (s.prompt.clone(), s.max_new.min(16)))
+            .collect()
+    };
+
+    println!(
+        "\n== Shard scaling: batched DVI scheduler over a loopback executor \
+         fleet, load={} seqs, max_batch=8, slots=16 ==",
+        cases.len()
+    );
+    println!();
+    println!("| backend | shards | wall ms | tokens | tok/s | occupancy |");
+    println!("|---|---|---|---|---|---|");
+
+    let mut runs = vec![drive(local.clone(), "in-process", &cases)];
+    for &n in shard_counts {
+        let rt = Runtime::load_remote_sharded_loopback(SEED, n)
+            .expect("sharded loopback runtime");
+        runs.push(drive(Arc::new(rt), &format!("sharded x{n}"), &cases));
+    }
+
+    // Bitwise losslessness across every configuration before timing is
+    // reported: shard count must never change a committed stream.
+    for r in &runs[1..] {
+        assert_eq!(
+            r.streams, runs[0].streams,
+            "{}: committed streams diverged from in-process run",
+            r.label
+        );
+    }
+
+    for r in &runs {
+        let shards = r.label.strip_prefix("sharded x").unwrap_or("-");
+        println!(
+            "| {} | {} | {:.2} | {} | {:.0} | {:.2} |",
+            r.label,
+            shards,
+            r.wall_s * 1e3,
+            r.tokens,
+            r.tokens as f64 / r.wall_s.max(1e-9),
+            r.occupancy
+        );
+    }
+    let base = &runs[1]; // sharded x1: the wire baseline
+    for r in &runs[2..] {
+        println!(
+            "[shard_scaling] {} vs x1: {:.2}x wall ({:.1} ms -> {:.1} ms)",
+            r.label,
+            base.wall_s / r.wall_s.max(1e-9),
+            base.wall_s * 1e3,
+            r.wall_s * 1e3
+        );
+    }
+}

@@ -17,11 +17,14 @@ use super::{Engine, GenResult};
 
 pub struct ArEngine {
     ctx: Arc<ArCtx>,
+    /// Sequential placement key per generation (sharded backends pin
+    /// each sequence's KV to one executor by it).
+    next_key: u64,
 }
 
 impl ArEngine {
     pub fn new(rt: Arc<Runtime>) -> Result<ArEngine> {
-        Ok(ArEngine { ctx: Arc::new(ArCtx::new(rt)?) })
+        Ok(ArEngine { ctx: Arc::new(ArCtx::new(rt)?), next_key: 0 })
     }
 }
 
@@ -31,7 +34,9 @@ impl Engine for ArEngine {
     }
 
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
-        let mut seq = ArSeq::new(self.ctx.clone(), prompt, max_new)?;
+        let key = self.next_key;
+        self.next_key += 1;
+        let mut seq = ArSeq::new(self.ctx.clone(), prompt, max_new, key)?;
         while !seq.is_done() {
             let call = seq.next_call()?;
             let out = call.artifact.call(&call.kv, &call.inputs)?;

@@ -34,12 +34,20 @@ pub struct DviEngine {
     pub k_spec: usize,
     /// Tuple sink; engine logs accept/reject supervision when present.
     pub buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+    /// Sequential placement key per generation (sharded backends pin
+    /// each sequence's KV to one executor by it).
+    next_key: u64,
 }
 
 impl DviEngine {
     pub fn new(rt: Arc<Runtime>) -> Result<DviEngine> {
         let ctx = DviCtx::new(rt)?;
-        Ok(DviEngine { k_spec: ctx.k_spec, ctx: Arc::new(ctx), buffer: None })
+        Ok(DviEngine {
+            k_spec: ctx.k_spec,
+            ctx: Arc::new(ctx),
+            buffer: None,
+            next_key: 0,
+        })
     }
 
     pub fn with_buffer(mut self, buffer: Arc<Mutex<ReplayBuffer>>) -> Self {
@@ -63,8 +71,10 @@ impl Engine for DviEngine {
     }
 
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenResult> {
+        let key = self.next_key;
+        self.next_key += 1;
         let mut seq =
-            DviSeq::new(self.ctx.clone(), self.buffer.clone(), prompt, max_new)?;
+            DviSeq::new(self.ctx.clone(), self.buffer.clone(), prompt, max_new, key)?;
         while !seq.is_done() {
             let call = seq.next_call()?;
             let out = call.artifact.call(&call.kv, &call.inputs)?;

@@ -13,7 +13,12 @@
 //!   serve-backend --listen 127.0.0.1:7600           executor server:
 //!            front the local backend (reference/pjrt) for remote
 //!            clients (`--backend remote --remote HOST:PORT`, or
-//!            DVI_REMOTE=HOST:PORT with any subcommand)
+//!            DVI_REMOTE=HOST:PORT with any subcommand). Run several
+//!            and pass a comma list (`--remote h1:p1,h2:p2` /
+//!            DVI_REMOTE=h1:p1,h2:p2) for a sharded fleet: sequences
+//!            round-robin across executors, KV stays put per shard,
+//!            and a dead executor degrades (its lanes fail) instead of
+//!            wedging serving
 //!
 //! Everything reads `--artifacts DIR` (default: ./artifacts).
 
@@ -57,8 +62,9 @@ fn main() {
 /// Backend selection: `--backend reference` forces the hermetic
 /// pure-Rust backend; `--backend pjrt` requires compiled artifacts (and
 /// the `pjrt` cargo feature); `--backend remote` ships every artifact
-/// call to a `dvi serve-backend` executor (`--remote HOST:PORT` or
-/// DVI_REMOTE); the default `auto` prefers DVI_REMOTE, then PJRT when
+/// call to `dvi serve-backend` executor(s) (`--remote HOST:PORT`, or a
+/// comma list `h1:p1,h2:p2` for a sharded fleet; DVI_REMOTE accepts the
+/// same syntax); the default `auto` prefers DVI_REMOTE, then PJRT when
 /// available, and falls back to the reference backend.
 fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -107,6 +113,17 @@ fn dispatch(args: &Args) -> Result<()> {
 fn info(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
     println!("backend: {}", rt.backend_name());
+    for s in rt.executor_status() {
+        match s.metrics {
+            Some(m) => println!(
+                "  shard {} @ {}: {} calls, occupancy {:.2}, {} buffers, \
+                 {} sessions",
+                s.shard, s.endpoint, m.calls, m.occupancy(), m.buffers,
+                m.sessions
+            ),
+            None => println!("  shard {} @ {}: UNREACHABLE", s.shard, s.endpoint),
+        }
+    }
     println!("artifacts: {}", rt.manifest.dir.display());
     println!("model config: {}", rt.manifest.config.get("model"));
     println!("spec config: {}", rt.manifest.config.get("spec"));
@@ -277,6 +294,18 @@ fn serve(args: &Args) -> Result<()> {
     )?);
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     let stop = Arc::new(AtomicBool::new(false));
+    for s in router.executor_status() {
+        match s.metrics {
+            Some(m) => println!(
+                "remote executor shard {} @ {}: {} buffers, {} sessions",
+                s.shard, s.endpoint, m.buffers, m.sessions
+            ),
+            None => println!(
+                "remote executor shard {} @ {}: UNREACHABLE",
+                s.shard, s.endpoint
+            ),
+        }
+    }
     let mode = if batched {
         format!("batched scheduler, max_batch={max_batch}, slots={max_slots}")
     } else {
@@ -295,7 +324,7 @@ fn serve(args: &Args) -> Result<()> {
 /// here.
 fn serve_backend(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
-    if rt.backend_name() == "remote" {
+    if rt.backend_name().starts_with("remote") {
         bail!(
             "refusing to re-export a remote backend \
              (serve-backend must front a local backend)"

@@ -91,6 +91,44 @@ pub struct BatchItem<'a> {
     pub inputs: &'a [Tensor],
 }
 
+/// Executor-side serving counters, transport-neutral: in-process code
+/// reads them straight off an executor's state, and the remote wire
+/// protocol ships them in its `Metrics` reply. All counters are
+/// lifetime totals except `buffers`/`sessions`, which are live gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecMetrics {
+    /// `Call` requests served (batched and single-lane alike).
+    pub calls: u64,
+    /// Lanes carried by those calls; `lanes / calls` is the executor's
+    /// observed batch occupancy.
+    pub lanes: u64,
+    /// Live buffer-table entries (server-resident KV + staged uploads).
+    pub buffers: u64,
+    /// Sessions with at least one live connection.
+    pub sessions: u64,
+}
+
+impl ExecMetrics {
+    /// Mean lanes per served call (0 before the first call).
+    pub fn occupancy(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.lanes as f64 / self.calls as f64
+        }
+    }
+}
+
+/// One remote executor's health, as seen by the client: its shard
+/// index, endpoint, and its [`ExecMetrics`] (`None` when the executor
+/// is unreachable).
+#[derive(Debug, Clone)]
+pub struct ExecutorStatus {
+    pub shard: u32,
+    pub endpoint: String,
+    pub metrics: Option<ExecMetrics>,
+}
+
 /// Backend abstraction over artifact execution and buffer management.
 ///
 /// `call` receives the artifact's manifest spec (already shape-checked
@@ -122,8 +160,42 @@ pub trait Backend: Send + Sync {
             .collect()
     }
 
+    /// Batched execution with **per-lane** failure granularity: lane i's
+    /// entry is `Err` only if lane i could not be executed. The default
+    /// maps a whole-call failure onto every lane (one executor, one
+    /// fate); backends that fan lanes out across independent executors
+    /// (the sharded remote client) override it so one dead executor
+    /// fails only the lanes it owned. Successful lanes keep the bitwise
+    /// contract of [`Backend::call_batched`].
+    fn call_batched_partial(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Vec<Result<CallOut>> {
+        match self.call_batched(spec, batch) {
+            Ok(outs) => outs.into_iter().map(Ok).collect(),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                batch
+                    .iter()
+                    .map(|_| Err(anyhow::anyhow!("{msg}")))
+                    .collect()
+            }
+        }
+    }
+
     /// Fresh zeroed per-sequence KV buffers for an artifact's kv params.
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>>;
+
+    /// [`Backend::fresh_kv`] with a caller-supplied **placement key**:
+    /// allocations sharing a key land on the same executor, so a
+    /// sequence's shallow and deep KV sets stay co-resident and its
+    /// server-side state never straddles shards. Single-executor
+    /// backends ignore the key.
+    fn fresh_kv_keyed(&self, spec: &ArtifactSpec, key: u64) -> Result<Vec<Buffer>> {
+        let _ = key;
+        self.fresh_kv(spec)
+    }
 
     /// Upload a host tensor (used by tests to stage KV/global inputs).
     fn upload(&self, t: &Tensor) -> Result<Buffer>;
@@ -139,4 +211,10 @@ pub trait Backend: Send + Sync {
 
     /// Reset a global buffer to its initial (weights-file) value.
     fn reset_global(&self, name: &str) -> Result<()>;
+
+    /// Health of the remote executor(s) behind this backend, one entry
+    /// per executor. Empty for in-process backends.
+    fn executor_status(&self) -> Vec<ExecutorStatus> {
+        Vec::new()
+    }
 }

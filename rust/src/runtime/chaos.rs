@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, BatchItem, Buffer, CallOut};
+use super::backend::{Backend, BatchItem, Buffer, CallOut, ExecutorStatus};
 use super::manifest::ArtifactSpec;
 use super::tensor::{DType, Tensor};
 
@@ -80,8 +80,37 @@ impl Backend for FlakyBackend {
         self.inner.call_batched(spec, batch)
     }
 
+    fn call_batched_partial(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Vec<Result<CallOut>> {
+        // An injected fault kills the whole chunk (that is this
+        // wrapper's failure model), but a healthy call must delegate to
+        // the inner backend's own partial path — wrapping a sharded
+        // backend must not collapse its per-shard failure domains.
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.every == 0
+            && self.failures.fetch_add(1, Ordering::Relaxed) < self.max_failures
+        {
+            return batch
+                .iter()
+                .map(|_| {
+                    Err(anyhow::anyhow!("injected chunk failure (batched call #{n})"))
+                })
+                .collect();
+        }
+        self.inner.call_batched_partial(spec, batch)
+    }
+
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
         self.inner.fresh_kv(spec)
+    }
+
+    fn fresh_kv_keyed(&self, spec: &ArtifactSpec, key: u64) -> Result<Vec<Buffer>> {
+        // Forwarded, not defaulted: a wrapped sharded backend must keep
+        // its keyed placement.
+        self.inner.fresh_kv_keyed(spec, key)
     }
 
     fn upload(&self, t: &Tensor) -> Result<Buffer> {
@@ -102,5 +131,9 @@ impl Backend for FlakyBackend {
 
     fn reset_global(&self, name: &str) -> Result<()> {
         self.inner.reset_global(name)
+    }
+
+    fn executor_status(&self) -> Vec<ExecutorStatus> {
+        self.inner.executor_status()
     }
 }

@@ -206,6 +206,30 @@ impl Manifest {
         Json::Obj(o)
     }
 
+    /// The model-identity view: artifact port layouts + config +
+    /// exposures, with every filesystem detail (artifact `file` paths,
+    /// `dir`, prompt/weight/vocab locations) excluded. Two executors
+    /// front "the same model" iff this matches — the sharded client
+    /// compares it at connect time, so identical fleets at different
+    /// addresses (whose reconstructed manifests differ only by their
+    /// endpoint-tagged dirs) are accepted and real spec/config
+    /// divergence is still rejected.
+    pub fn identity_json(&self) -> Json {
+        let ports = |ps: &[Port]| Json::Arr(ps.iter().map(Port::to_json).collect());
+        let mut arts = BTreeMap::new();
+        for (name, spec) in &self.artifacts {
+            let mut o = BTreeMap::new();
+            o.insert("params".to_string(), ports(&spec.params));
+            o.insert("outputs".to_string(), ports(&spec.outputs));
+            arts.insert(name.clone(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("artifacts".to_string(), Json::Obj(arts));
+        root.insert("config".to_string(), self.config.clone());
+        root.insert("exposures".to_string(), self.exposures.clone());
+        Json::Obj(root)
+    }
+
     /// Rebuild a manifest from [`Manifest::to_wire_json`] output.
     /// `origin` tags `dir` and the derived paths (diagnostics only).
     pub fn from_wire_json(origin: &str, j: &Json) -> Result<Manifest> {
@@ -306,5 +330,36 @@ mod tests {
         )
         .unwrap();
         assert!(Port::parse(&j).is_err());
+    }
+
+    /// Two executors at different addresses reconstruct manifests whose
+    /// wire JSON differs (endpoint-tagged artifact file paths) but whose
+    /// model identity matches — the property the sharded connect check
+    /// relies on. A real spec difference must still change the identity.
+    #[test]
+    fn identity_json_ignores_deployment_layout() {
+        let cfg = crate::runtime::reference::ReferenceConfig::default();
+        let m = crate::runtime::reference::synth::manifest(&cfg);
+        let wire = m.to_wire_json();
+        let a = Manifest::from_wire_json("tcp://h1:7600", &wire).unwrap();
+        let b = Manifest::from_wire_json("tcp://h2:7600", &wire).unwrap();
+        assert_ne!(
+            a.to_wire_json().to_string(),
+            b.to_wire_json().to_string(),
+            "wire JSON embeds per-endpoint paths (why identity_json exists)"
+        );
+        assert_eq!(
+            a.identity_json().to_string(),
+            b.identity_json().to_string(),
+            "identity must not depend on deployment layout"
+        );
+        let small = crate::runtime::reference::synth::manifest(
+            &crate::runtime::reference::ReferenceConfig { d_model: 24, ..cfg },
+        );
+        assert_ne!(
+            small.identity_json().to_string(),
+            m.identity_json().to_string(),
+            "a real model difference must change the identity"
+        );
     }
 }

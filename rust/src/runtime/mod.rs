@@ -30,11 +30,12 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-pub use backend::{Backend, BatchItem, Buffer, CallOut};
+pub use backend::{Backend, BatchItem, Buffer, CallOut, ExecMetrics, ExecutorStatus};
 pub use manifest::{ArtifactSpec, Manifest, Port, Role};
 pub use reference::{ReferenceBackend, ReferenceConfig};
+pub use remote::shard::{shard_for_key, ShardedRemoteBackend};
 pub use remote::RemoteBackend;
 pub use tensor::{DType, Tensor, TensorData};
 pub use weights::{load_weights, WeightMap};
@@ -119,6 +120,32 @@ impl Artifact {
         }
         Ok(outs)
     }
+
+    /// [`Artifact::call_batched`] with per-lane failure granularity: the
+    /// outer `Err` is reserved for caller bugs (shape mismatches, a
+    /// backend violating its contract); the inner per-lane `Err`s are
+    /// execution failures — on a sharded remote backend, only the lanes
+    /// owned by a dead executor. The scheduler drives this seam so one
+    /// lost shard degrades a tick instead of wedging it.
+    pub fn call_batched_partial(
+        &self,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<Result<CallOut>>> {
+        for item in batch {
+            self.check_lane(item.kv, item.inputs)?;
+        }
+        let outs = self.backend.call_batched_partial(&self.spec, batch);
+        if outs.len() != batch.len() {
+            bail!(
+                "{}: batched backend returned {} results for {} lanes",
+                self.spec.name, outs.len(), batch.len()
+            );
+        }
+        for out in outs.iter().flatten() {
+            self.check_out(out)?;
+        }
+        Ok(outs)
+    }
 }
 
 pub struct Runtime {
@@ -194,24 +221,32 @@ impl Runtime {
         }
     }
 
-    /// Connect to a remote executor (`dvi serve-backend --listen ...`)
-    /// at `addr` and build a runtime whose backend ships every artifact
-    /// call over the wire. The manifest, prompt sets, and vocabulary
-    /// come from the executor's handshake, so engines, the scheduler,
-    /// and the learner run unmodified.
+    /// Connect to one or more remote executors
+    /// (`dvi serve-backend --listen ...`) and build a runtime whose
+    /// backend ships every artifact call over the wire. `addr` is a
+    /// single `HOST:PORT` or a comma-separated list — two or more
+    /// addresses yield a [`ShardedRemoteBackend`] that routes each
+    /// sequence's KV to one executor and fans batched calls out across
+    /// all of them. The manifest, prompt sets, and vocabulary come from
+    /// the executors' handshakes, so engines, the scheduler, and the
+    /// learner run unmodified.
     pub fn load_remote(addr: &str) -> Result<Runtime> {
-        Runtime::load_remote_with(Box::new(remote::transport::TcpConnector {
-            addr: addr.to_string(),
-        }))
+        let addrs: Vec<&str> =
+            addr.split(',').map(str::trim).filter(|a| !a.is_empty()).collect();
+        match addrs.as_slice() {
+            [] => bail!("empty remote executor address"),
+            [one] => Runtime::load_remote_with(Box::new(
+                remote::transport::TcpConnector { addr: one.to_string() },
+            )),
+            many => Runtime::load_remote_sharded(many),
+        }
     }
 
-    /// [`Runtime::load_remote`] over an arbitrary connector (TCP in
-    /// production, in-process loopback in the hermetic tests).
-    pub fn load_remote_with(
-        connector: Box<dyn remote::transport::Connector>,
-    ) -> Result<Runtime> {
-        let (be, info) = RemoteBackend::connect(connector)?;
-        let backend: Arc<dyn Backend> = Arc::new(be);
+    /// Build a runtime from an already-handshaken remote backend.
+    fn assemble_remote(
+        backend: Arc<dyn Backend>,
+        info: remote::proto::HelloInfo,
+    ) -> Runtime {
         let artifacts = info
             .manifest
             .artifacts
@@ -223,17 +258,78 @@ impl Runtime {
                 )
             })
             .collect();
-        log::info(&format!(
-            "remote runtime ready (executor backend: {})",
-            info.backend
-        ));
-        Ok(Runtime {
+        Runtime {
             manifest: info.manifest,
             backend,
             artifacts,
             prompts: info.prompts,
             vocab: info.vocab,
-        })
+        }
+    }
+
+    /// [`Runtime::load_remote`] over an arbitrary connector (TCP in
+    /// production, in-process loopback in the hermetic tests).
+    pub fn load_remote_with(
+        connector: Box<dyn remote::transport::Connector>,
+    ) -> Result<Runtime> {
+        let (be, info) = RemoteBackend::connect(connector)?;
+        log::info(&format!(
+            "remote runtime ready (executor backend: {})",
+            info.backend
+        ));
+        Ok(Runtime::assemble_remote(Arc::new(be), info))
+    }
+
+    /// Sharded remote runtime over a list of executor addresses — the
+    /// explicit form of `load_remote("h1:p1,h2:p2")`.
+    pub fn load_remote_sharded(addrs: &[&str]) -> Result<Runtime> {
+        Runtime::load_remote_sharded_with(
+            addrs
+                .iter()
+                .map(|a| {
+                    Box::new(remote::transport::TcpConnector {
+                        addr: a.to_string(),
+                    }) as Box<dyn remote::transport::Connector>
+                })
+                .collect(),
+        )
+    }
+
+    /// Sharded remote runtime over arbitrary connectors, one per
+    /// executor: lanes are routed by the shard owning their KV, batched
+    /// calls fan out concurrently, and a dead executor fails only its
+    /// own lanes (the scheduler's `fail_lane` absorbs them). All
+    /// executors must front identical artifacts/config — verified
+    /// against shard 0's handshake at connect time.
+    pub fn load_remote_sharded_with(
+        connectors: Vec<Box<dyn remote::transport::Connector>>,
+    ) -> Result<Runtime> {
+        let shards = connectors.len();
+        let (be, info) = ShardedRemoteBackend::connect(connectors)?;
+        log::info(&format!(
+            "sharded remote runtime ready ({shards} executors, backend: {})",
+            info.backend
+        ));
+        Ok(Runtime::assemble_remote(Arc::new(be), info))
+    }
+
+    /// Fully hermetic sharded runtime: `shards` in-process executors,
+    /// each fronting an identically seeded reference backend behind its
+    /// own loopback transport — the complete multi-executor path
+    /// (routing, concurrent sub-calls, per-shard failure domains) with
+    /// no sockets.
+    pub fn load_remote_sharded_loopback(seed: u64, shards: usize) -> Result<Runtime> {
+        let mut rts = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            rts.push(Arc::new(Runtime::load_reference(seed)?));
+        }
+        let connectors = remote::server::spawn_loopback_shards(rts)
+            .into_iter()
+            .map(|s| {
+                Box::new(s.connector) as Box<dyn remote::transport::Connector>
+            })
+            .collect();
+        Runtime::load_remote_sharded_with(connectors)
     }
 
     /// Fully hermetic remote runtime: spawns an in-process executor
@@ -264,11 +360,33 @@ impl Runtime {
     /// Hermetic runtime for tests honoring `DVI_TEST_REMOTE`: unset (or
     /// empty) yields the in-process reference backend; `loopback` routes
     /// the same reference backend through the remote executor path, so
-    /// CI proves the wire seam with the identical test suite.
+    /// CI proves the wire seam with the identical test suite. With
+    /// `DVI_TEST_SHARDS=N` (N >= 2) the loopback path spawns N
+    /// executors behind the sharded client, so the same suite also
+    /// proves the multi-executor path.
     pub fn load_hermetic(seed: u64) -> Result<Runtime> {
+        let shards = match std::env::var("DVI_TEST_SHARDS") {
+            Ok(s) if !s.is_empty() => s
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .with_context(|| format!("bad DVI_TEST_SHARDS='{s}'"))?,
+            _ => 1,
+        };
         match std::env::var("DVI_TEST_REMOTE").as_deref() {
+            Ok("loopback") if shards > 1 => {
+                Runtime::load_remote_sharded_loopback(seed, shards)
+            }
             Ok("loopback") => Runtime::load_remote_loopback(seed),
-            Ok("") | Err(_) => Runtime::load_reference(seed),
+            Ok("") | Err(_) => {
+                // A sharded lane without the loopback mode would test
+                // zero sharded code while reporting green — refuse.
+                ensure!(
+                    shards <= 1,
+                    "DVI_TEST_SHARDS={shards} requires DVI_TEST_REMOTE=loopback"
+                );
+                Runtime::load_reference(seed)
+            }
             Ok(other) => bail!(
                 "unsupported DVI_TEST_REMOTE='{other}' (expected 'loopback')"
             ),
@@ -299,16 +417,17 @@ impl Runtime {
         self
     }
 
-    /// Backend auto-selection, in priority order: a remote executor
-    /// named by `DVI_REMOTE` (addr of a `dvi serve-backend` process);
-    /// PJRT when compiled in and `dir` holds a manifest; otherwise the
+    /// Backend auto-selection, in priority order: remote executor(s)
+    /// named by `DVI_REMOTE` (one `dvi serve-backend` address, or a
+    /// comma list — `host1:p1,host2:p2` — for a sharded fleet); PJRT
+    /// when compiled in and `dir` holds a manifest; otherwise the
     /// hermetic reference backend. Every binary stays runnable with no
     /// artifacts, no Python, and no XLA.
     pub fn load_auto(dir: &Path) -> Result<Runtime> {
         if let Ok(addr) = std::env::var("DVI_REMOTE") {
             if !addr.is_empty() {
                 log::info(&format!(
-                    "DVI_REMOTE set — using the remote executor at {addr}"
+                    "DVI_REMOTE set — using the remote executor(s) at {addr}"
                 ));
                 return Runtime::load_remote(&addr);
             }
@@ -353,6 +472,21 @@ impl Runtime {
     /// params.
     pub fn fresh_kv(&self, artifact: &str) -> Result<Vec<Buffer>> {
         self.backend.fresh_kv(&self.artifact(artifact)?.spec)
+    }
+
+    /// [`Runtime::fresh_kv`] with a placement key: allocations sharing a
+    /// key are co-resident on one executor of a sharded backend, so a
+    /// sequence's KV sets never straddle shards. In-process backends
+    /// ignore the key — results are bitwise identical either way.
+    pub fn fresh_kv_keyed(&self, artifact: &str, key: u64) -> Result<Vec<Buffer>> {
+        self.backend.fresh_kv_keyed(&self.artifact(artifact)?.spec, key)
+    }
+
+    /// Health of the remote executor(s) behind this runtime (empty for
+    /// in-process backends): per-shard endpoint plus the executor-side
+    /// `Metrics` counters when reachable.
+    pub fn executor_status(&self) -> Vec<ExecutorStatus> {
+        self.backend.executor_status()
     }
 
     /// Reset a global buffer back to its initial value (used to re-init

@@ -17,40 +17,84 @@
 //!   global update). The scheduler maps that `Err` onto its existing
 //!   per-chunk `fail_lane` path, so one dropped connection costs one
 //!   chunk of lanes — never a wedged tick.
-//! * Reconnect is **lazy and bounded**: the dead transport is dropped
-//!   immediately; the *next* call dials again (up to
+//! * Reconnect is **lazy and bounded**: the dead transport is marked
+//!   unusable; the *next* call dials again (up to
 //!   [`RECONNECT_ATTEMPTS`] times, with a version re-handshake). The
-//!   executor's buffer table is shared across connections, so surviving
-//!   sequences keep their KV and decode bitwise-identically after a
-//!   reconnect (`tests/remote.rs`, `tests/sched.rs`).
+//!   executor's buffer table is shared across a session's connections,
+//!   so surviving sequences keep their KV and decode bitwise-identically
+//!   after a reconnect (`tests/remote.rs`, `tests/sched.rs`).
 //! * Semantic errors (unknown artifact, bad shapes) come back as
 //!   `Reply::Err` on a healthy connection and do not tear it down.
 //!
 //! Dropped client handles are released server-side by piggybacking a
-//! free-list on the next `Call` — no per-drop round trip.
+//! free-list on the next `Call` — no per-drop round trip. Buffers are
+//! additionally **session-owned**: every backend instance mints one
+//! session id, presents it in every handshake, and the executor frees
+//! everything the session still owns when its last connection closes —
+//! so a client that dies without sending its frees cannot leak executor
+//! buffer-table entries. To keep KV alive across a *reconnect* (same
+//! session, new connection), the dead transport is retained as a zombie
+//! until the replacement has completed its handshake — as long as the
+//! *server* has not observed the old connection close, the session's
+//! live-connection count never touches zero. That is deterministic for
+//! client-side failures (the loopback/chaos suite, a send that errored
+//! locally); if the server observed the drop first — a real TCP
+//! RST/partition — the session ends, its buffers are freed, and the
+//! resident sequences fail cleanly on their next call (the scheduler's
+//! `fail_lane` absorbs them; serving continues). Bounded state was
+//! chosen over best-effort KV survival for server-observed drops.
+//!
+//! [`shard::ShardedRemoteBackend`] fans the same seam out across N
+//! executors; each [`RemoteHandle`] carries the shard that owns it.
 
 pub mod proto;
 pub mod server;
+pub mod shard;
 pub mod transport;
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::backend::{Backend, BatchItem, Buffer, CallOut};
+use crate::runtime::backend::{
+    Backend, BatchItem, Buffer, CallOut, ExecutorStatus,
+};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{DType, Tensor};
 
-use self::proto::{BufInfo, HelloInfo, Lane, Msg, Reply, VERSION};
+use self::proto::{BufInfo, ExecMetrics, HelloInfo, Lane, Msg, Reply, VERSION};
 use self::transport::{Connector, Transport};
 
 /// Dial attempts per call before giving up on a dead executor.
 pub const RECONNECT_ATTEMPTS: u32 = 3;
 
+/// Mint a process-unique session id: time entropy (distinct across
+/// processes sharing an executor) mixed with a counter (distinct across
+/// backends within one process).
+fn mint_session_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seq = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut z = nanos
+        ^ ((std::process::id() as u64) << 32)
+        ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    // splitmix64 finalizer: spreads the low-entropy inputs.
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Client handle to a server-resident buffer. Dropping the last clone
-/// queues the id for release on the next call.
+/// queues the id for release on the next call. `shard` names the
+/// executor that owns the buffer (always 0 for a single-executor
+/// backend); the sharded client routes by it.
 pub struct RemoteHandle {
     pub id: u64,
+    pub shard: u32,
     pub dtype: DType,
     pub shape: Vec<usize>,
     freelist: Arc<Mutex<Vec<u64>>>,
@@ -66,14 +110,32 @@ impl Drop for RemoteHandle {
 
 impl std::fmt::Debug for RemoteHandle {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "remote#{}{:?}", self.id, self.shape)
+        write!(f, "remote#{}@{}{:?}", self.id, self.shard, self.shape)
     }
+}
+
+/// Connection slot: the live transport plus, during a reconnect, the
+/// previous (dead) transport held as a **zombie**. Keeping the zombie
+/// until a replacement connection has completed its handshake means the
+/// executor never sees this session's connection count reach zero
+/// mid-reconnect — so session-owned KV survives (the executor frees a
+/// session's buffers only when its *last* connection closes).
+#[derive(Default)]
+struct ConnSlot {
+    live: Option<Box<dyn Transport>>,
+    zombie: Option<Box<dyn Transport>>,
 }
 
 pub struct RemoteBackend {
     connector: Box<dyn Connector>,
-    /// `None` = known-dead; re-dialed lazily by the next call.
-    conn: Mutex<Option<Box<dyn Transport>>>,
+    /// Which shard of a sharded deployment this client is (0 standalone);
+    /// stamped on every minted handle so the router can send a lane back
+    /// to the executor that holds its KV.
+    shard: u32,
+    /// Session identity presented in every handshake; stable across
+    /// reconnects, so the executor can scope buffer ownership to it.
+    session: u64,
+    conn: Mutex<ConnSlot>,
     freelist: Arc<Mutex<Vec<u64>>>,
 }
 
@@ -82,17 +144,38 @@ impl RemoteBackend {
     /// backend plus everything needed to assemble a
     /// [`crate::runtime::Runtime`] over it.
     pub fn connect(connector: Box<dyn Connector>) -> Result<(RemoteBackend, HelloInfo)> {
+        RemoteBackend::connect_shard(connector, 0)
+    }
+
+    /// [`RemoteBackend::connect`] tagging every minted handle with
+    /// `shard` — used by the sharded client so buffers know which
+    /// executor owns them.
+    pub fn connect_shard(
+        connector: Box<dyn Connector>,
+        shard: u32,
+    ) -> Result<(RemoteBackend, HelloInfo)> {
         let be = RemoteBackend {
             connector,
-            conn: Mutex::new(None),
+            shard,
+            session: mint_session_id(),
+            conn: Mutex::new(ConnSlot::default()),
             freelist: Arc::new(Mutex::new(Vec::new())),
         };
-        let reply = be.roundtrip(&Msg::Hello { version: VERSION, want_manifest: true })?;
+        let reply = be.roundtrip(&Msg::Hello {
+            version: VERSION,
+            want_manifest: true,
+            session: be.session,
+        })?;
         let Reply::Hello { backend, manifest_json: Some(doc) } = reply else {
             bail!("executor handshake did not include a manifest");
         };
         let info = proto::parse_hello(&be.connector.endpoint(), backend, &doc)?;
         Ok((be, info))
+    }
+
+    /// Human-readable executor address (for metrics/status lines).
+    pub fn endpoint(&self) -> String {
+        self.connector.endpoint()
     }
 
     /// Dial + version handshake (manifest skipped on reconnects).
@@ -101,7 +184,11 @@ impl RemoteBackend {
         for _ in 0..RECONNECT_ATTEMPTS {
             let attempt = (|| -> Result<Box<dyn Transport>> {
                 let mut t = self.connector.connect()?;
-                let hello = Msg::Hello { version: VERSION, want_manifest: false };
+                let hello = Msg::Hello {
+                    version: VERSION,
+                    want_manifest: false,
+                    session: self.session,
+                };
                 t.send(&hello.encode())?;
                 match Reply::decode(&t.recv()?)? {
                     Reply::Hello { .. } => Ok(t),
@@ -123,13 +210,21 @@ impl RemoteBackend {
     }
 
     /// One request/response. At-most-once: a transport failure marks
-    /// the connection dead and surfaces as `Err` without resending.
+    /// the connection dead and surfaces as `Err` without resending. The
+    /// dead transport is parked as a zombie until the next successful
+    /// dial completes its handshake, keeping the server-side session
+    /// (and its buffers) alive across the gap.
     fn roundtrip(&self, msg: &Msg) -> Result<Reply> {
-        let mut guard = self.conn.lock().unwrap();
-        if guard.is_none() {
-            *guard = Some(self.dial()?);
+        let mut slot = self.conn.lock().unwrap();
+        if slot.live.is_none() {
+            // A dial failure keeps the zombie: the session should stay
+            // open server-side while this client is alive and retrying.
+            slot.live = Some(self.dial()?);
+            // The replacement has handshaken (the server counted it), so
+            // the old connection can close without ending the session.
+            slot.zombie = None;
         }
-        let t = guard.as_mut().expect("connection just established");
+        let t = slot.live.as_mut().expect("connection just established");
         let attempt = (|| -> Result<Reply> {
             t.send(&msg.encode())?;
             Reply::decode(&t.recv()?)
@@ -138,9 +233,18 @@ impl RemoteBackend {
             Ok(Reply::Err(e)) => bail!("remote executor: {e}"),
             Ok(reply) => Ok(reply),
             Err(e) => {
-                *guard = None; // dead transport; next call re-dials
+                slot.zombie = slot.live.take(); // park; next call re-dials
                 Err(e.context("transport failure (connection dropped)"))
             }
+        }
+    }
+
+    /// Fetch the executor's serving counters (occupancy, buffer-table
+    /// size, live sessions).
+    pub fn metrics(&self) -> Result<ExecMetrics> {
+        match self.roundtrip(&Msg::Metrics)? {
+            Reply::Metrics(m) => Ok(m),
+            _ => bail!("unexpected reply to metrics"),
         }
     }
 
@@ -158,16 +262,23 @@ impl RemoteBackend {
     fn handle(&self, info: BufInfo) -> Buffer {
         Buffer::Remote(Arc::new(RemoteHandle {
             id: info.id,
+            shard: self.shard,
             dtype: info.dtype,
             shape: info.shape,
             freelist: self.freelist.clone(),
         }))
     }
 
-    fn kv_ids(kv: &[Buffer]) -> Result<Vec<u64>> {
+    fn kv_ids(&self, kv: &[Buffer]) -> Result<Vec<u64>> {
         kv.iter()
             .map(|b| match b {
-                Buffer::Remote(h) => Ok(h.id),
+                Buffer::Remote(h) if h.shard == self.shard => Ok(h.id),
+                Buffer::Remote(h) => bail!(
+                    "kv buffer {h:?} belongs to shard {}, not this \
+                     executor (shard {})",
+                    h.shard,
+                    self.shard
+                ),
                 other => bail!(
                     "remote backend received a non-remote kv buffer ({other:?}); \
                      stage it with upload() first"
@@ -216,7 +327,7 @@ impl Backend for RemoteBackend {
     fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
         -> Result<CallOut>
     {
-        let lane = Lane { kv: Self::kv_ids(kv)?, inputs: inputs.to_vec() };
+        let lane = Lane { kv: self.kv_ids(kv)?, inputs: inputs.to_vec() };
         let mut outs = self.call_lanes(spec, vec![lane])?;
         Ok(outs.pop().expect("lane count checked"))
     }
@@ -230,7 +341,7 @@ impl Backend for RemoteBackend {
             .iter()
             .map(|item| {
                 Ok(Lane {
-                    kv: Self::kv_ids(item.kv)?,
+                    kv: self.kv_ids(item.kv)?,
                     inputs: item.inputs.to_vec(),
                 })
             })
@@ -295,5 +406,13 @@ impl Backend for RemoteBackend {
             Reply::Unit => Ok(()),
             _ => bail!("unexpected reply to reset_global"),
         }
+    }
+
+    fn executor_status(&self) -> Vec<ExecutorStatus> {
+        vec![ExecutorStatus {
+            shard: self.shard,
+            endpoint: self.endpoint(),
+            metrics: self.metrics().ok(),
+        }]
     }
 }

@@ -10,7 +10,10 @@
 //!
 //! The protocol covers exactly the [`crate::runtime::Backend`] seam:
 //!
-//! * `Hello` — version handshake; optionally returns the executor's
+//! * `Hello` — version handshake carrying the client's **session id**
+//!   (stable across reconnects of one client; the executor scopes
+//!   buffer ownership to it, freeing everything a session owns when its
+//!   last connection closes). Optionally returns the executor's
 //!   manifest/prompts/vocabulary as one JSON document
 //!   ([`hello_json`] / [`HelloInfo`]), so a client [`crate::runtime::Runtime`]
 //!   can be constructed from nothing but a connection.
@@ -23,6 +26,9 @@
 //!   (LoRA adapters, Adam moments), so the online learner runs
 //!   unmodified against a remote executor.
 //! * `Free` — standalone handle release.
+//! * `Metrics` — executor-side occupancy counters ([`ExecMetrics`]:
+//!   calls/lanes served, buffer-table size, live sessions), so a client
+//!   router can expose remote executor health next to its own stats.
 
 use std::collections::BTreeMap;
 
@@ -34,7 +40,15 @@ use crate::util::json::Json;
 use crate::workload::{PromptSample, PromptSet};
 
 /// Protocol version; bumped on any wire-format change.
-pub const VERSION: u32 = 1;
+/// v2: `Hello` carries the client session id; `Metrics` added.
+///
+/// Versions are not wire-compatible with each other: a frame-layout
+/// change (like v2's wider `Hello`) makes a cross-version handshake
+/// fail as a malformed/trailing-bytes frame rather than reaching the
+/// in-band version check. Client and executor ship from the same tree,
+/// so mixed-version fleets are not supported — the error is opaque but
+/// the situation is operator error by construction.
+pub const VERSION: u32 = 2;
 
 /// Upper bound on a single frame, guarding a corrupted length prefix.
 pub const MAX_FRAME: usize = 256 << 20;
@@ -49,12 +63,14 @@ const OP_SET_GLOBAL: u8 = 6;
 const OP_READ_GLOBAL: u8 = 7;
 const OP_RESET_GLOBAL: u8 = 8;
 const OP_FREE: u8 = 9;
+const OP_METRICS: u8 = 10;
 const RE_HELLO: u8 = 128;
 const RE_LANES: u8 = 129;
 const RE_BUFFERS: u8 = 130;
 const RE_TENSOR: u8 = 131;
 const RE_UNIT: u8 = 132;
 const RE_ERR: u8 = 133;
+const RE_METRICS: u8 = 134;
 
 /// Server-side buffer descriptor: the id plus the host-visible
 /// dtype/shape the client needs to rehydrate a handle.
@@ -81,10 +97,15 @@ pub struct LaneOut {
     pub kv: Vec<BufInfo>,
 }
 
+/// The wire `Metrics` reply carries the transport-neutral
+/// [`ExecMetrics`] defined at the backend seam; re-exported here so
+/// protocol users can name it next to [`Msg`]/[`Reply`].
+pub use crate::runtime::backend::ExecMetrics;
+
 /// Client → server messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    Hello { version: u32, want_manifest: bool },
+    Hello { version: u32, want_manifest: bool, session: u64 },
     Call { artifact: String, frees: Vec<u64>, lanes: Vec<Lane> },
     FreshKv { artifact: String },
     Upload { tensor: Tensor },
@@ -93,6 +114,7 @@ pub enum Msg {
     ReadGlobal { name: String },
     ResetGlobal { name: String },
     Free { ids: Vec<u64> },
+    Metrics,
 }
 
 /// Server → client messages.
@@ -104,6 +126,7 @@ pub enum Reply {
     Tensor(Tensor),
     Unit,
     Err(String),
+    Metrics(ExecMetrics),
 }
 
 // ----------------------------------------------------------------------------
@@ -318,10 +341,11 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::default();
         match self {
-            Msg::Hello { version, want_manifest } => {
+            Msg::Hello { version, want_manifest, session } => {
                 e.u8(OP_HELLO);
                 e.u32(*version);
                 e.u8(*want_manifest as u8);
+                e.u64(*session);
             }
             Msg::Call { artifact, frees, lanes } => {
                 e.u8(OP_CALL);
@@ -364,6 +388,7 @@ impl Msg {
                 e.u8(OP_FREE);
                 e.ids(ids);
             }
+            Msg::Metrics => e.u8(OP_METRICS),
         }
         e.0
     }
@@ -374,6 +399,7 @@ impl Msg {
             OP_HELLO => Msg::Hello {
                 version: d.u32()?,
                 want_manifest: d.u8()? != 0,
+                session: d.u64()?,
             },
             OP_CALL => {
                 let artifact = d.str()?;
@@ -401,6 +427,7 @@ impl Msg {
             OP_READ_GLOBAL => Msg::ReadGlobal { name: d.str()? },
             OP_RESET_GLOBAL => Msg::ResetGlobal { name: d.str()? },
             OP_FREE => Msg::Free { ids: d.ids()? },
+            OP_METRICS => Msg::Metrics,
             op => bail!("unknown request opcode {op}"),
         };
         d.finish()?;
@@ -444,6 +471,13 @@ impl Reply {
                 e.u8(RE_ERR);
                 e.str(msg);
             }
+            Reply::Metrics(m) => {
+                e.u8(RE_METRICS);
+                e.u64(m.calls);
+                e.u64(m.lanes);
+                e.u64(m.buffers);
+                e.u64(m.sessions);
+            }
         }
         e.0
     }
@@ -477,6 +511,12 @@ impl Reply {
             RE_TENSOR => Reply::Tensor(d.tensor()?),
             RE_UNIT => Reply::Unit,
             RE_ERR => Reply::Err(d.str()?),
+            RE_METRICS => Reply::Metrics(ExecMetrics {
+                calls: d.u64()?,
+                lanes: d.u64()?,
+                buffers: d.u64()?,
+                sessions: d.u64()?,
+            }),
             op => bail!("unknown reply opcode {op}"),
         };
         d.finish()?;
@@ -601,7 +641,11 @@ mod tests {
 
     #[test]
     fn messages_roundtrip_bitwise() {
-        roundtrip_msg(Msg::Hello { version: VERSION, want_manifest: true });
+        roundtrip_msg(Msg::Hello {
+            version: VERSION,
+            want_manifest: true,
+            session: 0xDEAD_BEEF_0451,
+        });
         roundtrip_msg(Msg::Call {
             artifact: "draft_block".into(),
             frees: vec![3, 9],
@@ -630,6 +674,7 @@ mod tests {
         roundtrip_msg(Msg::ReadGlobal { name: "lora.B".into() });
         roundtrip_msg(Msg::ResetGlobal { name: "adam.mA".into() });
         roundtrip_msg(Msg::Free { ids: vec![7] });
+        roundtrip_msg(Msg::Metrics);
     }
 
     #[test]
@@ -649,6 +694,19 @@ mod tests {
         roundtrip_reply(Reply::Tensor(Tensor::scalar_f32(2.5)));
         roundtrip_reply(Reply::Unit);
         roundtrip_reply(Reply::Err("boom".into()));
+        roundtrip_reply(Reply::Metrics(ExecMetrics {
+            calls: 12,
+            lanes: 96,
+            buffers: 7,
+            sessions: 2,
+        }));
+    }
+
+    #[test]
+    fn exec_metrics_occupancy() {
+        let m = ExecMetrics { calls: 4, lanes: 10, buffers: 0, sessions: 1 };
+        assert!((m.occupancy() - 2.5).abs() < 1e-12);
+        assert_eq!(ExecMetrics::default().occupancy(), 0.0);
     }
 
     #[test]

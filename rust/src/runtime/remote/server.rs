@@ -3,21 +3,38 @@
 //! transport.
 //!
 //! State model: one **shared buffer table** per server, not per
-//! connection. Per-sequence KV handles therefore survive a client
-//! reconnect — a dropped connection costs exactly the in-flight call
-//! (the scheduler fails that chunk's lanes), never the KV state of
-//! co-resident sequences. Ids are minted from one atomic counter, so a
-//! reconnecting client can never collide with its pre-drop handles.
+//! connection, with every entry **owned by the session** (client) that
+//! allocated it. Sessions are identified by the client-minted id in the
+//! `Hello` handshake and span reconnects: per-sequence KV handles
+//! therefore survive a client reconnect — a dropped connection costs
+//! exactly the in-flight call (the scheduler fails that chunk's lanes),
+//! never the KV state of co-resident sequences. Ids are minted from one
+//! atomic counter, so a reconnecting client can never collide with its
+//! pre-drop handles.
 //!
-//! Known tradeoff of that sharing: buffers are only released by client
-//! free-lists, so a client that dies permanently (or a reply lost
-//! after execution) leaks its entries until the executor restarts.
-//! Session-scoped ownership (free-all-for-client) is deferred to the
-//! sharding work that will give clients identities — see ROADMAP.
+//! Leak discipline (the fix the ROADMAP flagged): when a session's
+//! **last** connection closes, every buffer it still owns is freed —
+//! a permanently dead client cannot leak executor buffer-table entries,
+//! even if it never sent its piggybacked frees. The client keeps its
+//! dead transport alive as a "zombie" until a replacement connection
+//! has completed its handshake (see `remote/mod.rs`), so a reconnect
+//! whose failure was observed client-side keeps the session's
+//! live-connection count above zero and its buffers survive — the
+//! deterministic case the loopback/chaos suite pins down. When the
+//! *server* observes the drop first (TCP RST, partition), the session
+//! ends and its buffers are freed; the reconnecting client's resident
+//! sequences then fail per-call and the scheduler degrades instead of
+//! wedging. Co-resident sessions are isolated: one client's death frees
+//! only its own entries. A reply that fails to send also frees the
+//! buffers it minted (the client can never learn their ids); the one
+//! residual window is a reply the transport accepted but the client
+//! never read — those orphans last until their session ends.
 //!
 //! Error discipline: a malformed or semantically invalid request gets a
 //! `Reply::Err` and the connection stays up (the client surfaces it as
 //! a per-call error); only transport failures tear a connection down.
+//! A request sent before the connection's `Hello` is rejected — buffer
+//! ownership needs a session before anything can allocate.
 
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -30,15 +47,17 @@ use crate::runtime::backend::{BatchItem, Buffer};
 use crate::runtime::manifest::Role;
 use crate::runtime::{log, Runtime};
 
-use super::proto::{hello_json, BufInfo, LaneOut, Msg, Reply, VERSION};
+use super::proto::{hello_json, BufInfo, ExecMetrics, LaneOut, Msg, Reply, VERSION};
 use super::transport::{
-    ChaosPlan, LoopbackConnector, LoopbackTransport, TcpTransport, Transport,
+    ChaosPlan, KillSwitch, LoopbackConnector, LoopbackTransport, TcpTransport,
+    Transport,
 };
 
-/// Server-resident buffer store: id → backend-native buffer handle.
+/// Server-resident buffer store: id → (owner session, backend-native
+/// buffer handle).
 pub struct BufferTable {
     next: AtomicU64,
-    bufs: Mutex<HashMap<u64, Buffer>>,
+    bufs: Mutex<HashMap<u64, (u64, Buffer)>>,
 }
 
 impl BufferTable {
@@ -46,11 +65,15 @@ impl BufferTable {
         BufferTable { next: AtomicU64::new(1), bufs: Mutex::new(HashMap::new()) }
     }
 
-    fn insert(&self, buf: Buffer, dtype: crate::runtime::DType, shape: Vec<usize>)
-        -> BufInfo
-    {
+    fn insert(
+        &self,
+        owner: u64,
+        buf: Buffer,
+        dtype: crate::runtime::DType,
+        shape: Vec<usize>,
+    ) -> BufInfo {
         let id = self.next.fetch_add(1, Ordering::Relaxed);
-        self.bufs.lock().unwrap().insert(id, buf);
+        self.bufs.lock().unwrap().insert(id, (owner, buf));
         BufInfo { id, dtype, shape }
     }
 
@@ -59,7 +82,7 @@ impl BufferTable {
             .lock()
             .unwrap()
             .get(&id)
-            .cloned()
+            .map(|(_, b)| b.clone())
             .with_context(|| format!("unknown buffer id {id} (freed or never allocated)"))
     }
 
@@ -71,6 +94,14 @@ impl BufferTable {
         for id in ids {
             bufs.remove(id);
         }
+    }
+
+    /// Drop every entry owned by `session`; returns how many were freed.
+    fn free_session(&self, session: u64) -> usize {
+        let mut bufs = self.bufs.lock().unwrap();
+        let before = bufs.len();
+        bufs.retain(|_, (owner, _)| *owner != session);
+        before - bufs.len()
     }
 
     pub fn len(&self) -> usize {
@@ -88,11 +119,96 @@ impl Default for BufferTable {
     }
 }
 
-/// Execute one request against the fronted runtime. Pure with respect
-/// to the connection: all state lives in `rt` and `table`.
-fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
+/// Executor-lifetime serving counters behind the `Metrics` message.
+#[derive(Default)]
+pub struct ExecStats {
+    /// `Call` requests served successfully.
+    pub calls: AtomicU64,
+    /// Lanes carried by those calls.
+    pub lanes: AtomicU64,
+}
+
+/// Everything one executor server shares across its connections.
+pub struct ExecutorState {
+    pub table: BufferTable,
+    pub stats: ExecStats,
+    /// session id → live connection count. A session leaves the map
+    /// (and its buffers are freed) when its last connection closes.
+    sessions: Mutex<HashMap<u64, usize>>,
+}
+
+impl ExecutorState {
+    pub fn new() -> ExecutorState {
+        ExecutorState {
+            table: BufferTable::new(),
+            stats: ExecStats::default(),
+            sessions: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    fn open_session(&self, session: u64) {
+        *self.sessions.lock().unwrap().entry(session).or_insert(0) += 1;
+    }
+
+    /// Close one connection of `session`; frees its buffers when this
+    /// was the last.
+    fn close_session(&self, session: u64) {
+        let mut sessions = self.sessions.lock().unwrap();
+        let last = match sessions.get_mut(&session) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
+                false
+            }
+            Some(_) => {
+                sessions.remove(&session);
+                true
+            }
+            None => false,
+        };
+        drop(sessions);
+        if last {
+            let freed = self.table.free_session(session);
+            if freed > 0 {
+                log::debug(&format!(
+                    "executor: session {session:#x} ended; freed {freed} \
+                     orphaned buffers"
+                ));
+            }
+        }
+    }
+
+    fn metrics(&self) -> ExecMetrics {
+        ExecMetrics {
+            calls: self.stats.calls.load(Ordering::Relaxed),
+            lanes: self.stats.lanes.load(Ordering::Relaxed),
+            buffers: self.table.len() as u64,
+            sessions: self.live_sessions() as u64,
+        }
+    }
+}
+
+impl Default for ExecutorState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Execute one request against the fronted runtime on behalf of
+/// `session`. Pure with respect to the connection: all state lives in
+/// `rt` and `state`.
+fn execute(
+    rt: &Runtime,
+    state: &ExecutorState,
+    session: u64,
+    msg: Msg,
+) -> Result<Reply> {
+    let table = &state.table;
     match msg {
-        Msg::Hello { version, want_manifest } => {
+        Msg::Hello { version, want_manifest, session: _ } => {
             anyhow::ensure!(
                 version == VERSION,
                 "protocol version mismatch: client {version}, server {VERSION}"
@@ -118,6 +234,8 @@ fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
                 .map(|(lane, kv)| BatchItem { kv, inputs: &lane.inputs })
                 .collect();
             let outs = art.call_batched(&items)?;
+            state.stats.calls.fetch_add(1, Ordering::Relaxed);
+            state.stats.lanes.fetch_add(lanes.len() as u64, Ordering::Relaxed);
             let kv_ports: Vec<_> = art.spec.outputs_with_role(Role::Kv).collect();
             let lanes_out = outs
                 .into_iter()
@@ -127,7 +245,9 @@ fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
                         .kv
                         .into_iter()
                         .zip(&kv_ports)
-                        .map(|(b, p)| table.insert(b, p.dtype, p.shape.clone()))
+                        .map(|(b, p)| {
+                            table.insert(session, b, p.dtype, p.shape.clone())
+                        })
                         .collect(),
                 })
                 .collect();
@@ -140,7 +260,7 @@ fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
             Ok(Reply::Buffers(
                 bufs.into_iter()
                     .zip(&ports)
-                    .map(|(b, p)| table.insert(b, p.dtype, p.shape.clone()))
+                    .map(|(b, p)| table.insert(session, b, p.dtype, p.shape.clone()))
                     .collect(),
             ))
         }
@@ -148,7 +268,7 @@ fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
             let dtype = tensor.dtype();
             let shape = tensor.shape.clone();
             let buf = rt.upload(&tensor)?;
-            Ok(Reply::Buffers(vec![table.insert(buf, dtype, shape)]))
+            Ok(Reply::Buffers(vec![table.insert(session, buf, dtype, shape)]))
         }
         Msg::Download { id, dtype, shape } => {
             let buf = table.get(id)?;
@@ -167,43 +287,94 @@ fn execute(rt: &Runtime, table: &BufferTable, msg: Msg) -> Result<Reply> {
             table.free(&ids);
             Ok(Reply::Unit)
         }
+        Msg::Metrics => Ok(Reply::Metrics(state.metrics())),
     }
 }
 
 /// Serve one connection until the peer hangs up. Request errors are
-/// answered with `Reply::Err`; only a transport failure returns.
+/// answered with `Reply::Err`; only a transport failure returns. On any
+/// exit, the connection is unregistered from its session — and if it
+/// was the session's last, the session's buffers are freed.
 pub fn serve_connection(
     rt: &Runtime,
-    table: &BufferTable,
+    state: &ExecutorState,
     transport: &mut dyn Transport,
 ) -> Result<()> {
-    loop {
-        let frame = match transport.recv() {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // peer gone: normal teardown
-        };
-        let reply = match Msg::decode(&frame) {
-            Ok(msg) => match execute(rt, table, msg) {
-                Ok(reply) => reply,
-                Err(e) => Reply::Err(format!("{e:#}")),
-            },
-            Err(e) => Reply::Err(format!("malformed request: {e:#}")),
-        };
-        transport
-            .send(&reply.encode())
-            .context("sending reply (client connection lost)")?;
+    let mut session: Option<u64> = None;
+    let result = (|| -> Result<()> {
+        loop {
+            let frame = match transport.recv() {
+                Ok(f) => f,
+                Err(_) => return Ok(()), // peer gone: normal teardown
+            };
+            let reply = match Msg::decode(&frame) {
+                Ok(msg) => {
+                    if let Msg::Hello { version, session: s, .. } = &msg {
+                        if *version == VERSION && session.is_none() {
+                            state.open_session(*s);
+                            session = Some(*s);
+                        }
+                    }
+                    // A Hello always reaches execute (so a version
+                    // mismatch gets its real error); anything else
+                    // needs the session that buffer ownership hangs on.
+                    let owner = match (&msg, session) {
+                        (Msg::Hello { .. }, s) => Some(s.unwrap_or(0)),
+                        (_, s) => s,
+                    };
+                    match owner {
+                        None => Reply::Err(
+                            "handshake required before any other request".into(),
+                        ),
+                        Some(owner) => match execute(rt, state, owner, msg) {
+                            Ok(reply) => reply,
+                            Err(e) => Reply::Err(format!("{e:#}")),
+                        },
+                    }
+                }
+                Err(e) => Reply::Err(format!("malformed request: {e:#}")),
+            };
+            if let Err(e) = transport.send(&reply.encode()) {
+                // The reply never reached the client, so any buffer ids
+                // it minted are unreachable — the client can never name
+                // them in a free-list. Reclaim them now; otherwise a
+                // session that survives the reconnect (zombie-parked
+                // client) would carry the orphans until it ends.
+                free_minted(state, &reply);
+                return Err(e.context("sending reply (client connection lost)"));
+            }
+        }
+    })();
+    if let Some(s) = session {
+        state.close_session(s);
     }
+    result
 }
 
-/// TCP executor server: accept loop, one thread + shared buffer table
-/// across connections. Runs until `stop` is set (checked per accept) or
-/// the listener dies. This is what `dvi serve-backend --listen` runs.
+/// Free every server-resident buffer a reply minted (fresh KV outputs,
+/// fresh_kv allocations, uploads) — used when the reply could not be
+/// delivered, making those ids permanently unreachable from the client.
+fn free_minted(state: &ExecutorState, reply: &Reply) {
+    let ids: Vec<u64> = match reply {
+        Reply::Lanes(lanes) => {
+            lanes.iter().flat_map(|l| l.kv.iter().map(|b| b.id)).collect()
+        }
+        Reply::Buffers(bs) => bs.iter().map(|b| b.id).collect(),
+        _ => return,
+    };
+    state.table.free(&ids);
+}
+
+/// TCP executor server: accept loop, one thread + shared
+/// [`ExecutorState`] across connections. Runs until `stop` is set
+/// (checked per accept) or the listener dies. This is what
+/// `dvi serve-backend --listen` runs.
 pub fn serve_tcp(
     listener: TcpListener,
     rt: Arc<Runtime>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
-    let table = Arc::new(BufferTable::new());
+    let state = Arc::new(ExecutorState::new());
     for stream in listener.incoming() {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -216,12 +387,12 @@ pub fn serve_tcp(
                     .unwrap_or_else(|_| "<unknown>".to_string());
                 log::info(&format!("executor: connection from {peer}"));
                 let rt = rt.clone();
-                let table = table.clone();
+                let state = state.clone();
                 std::thread::Builder::new()
                     .name("dvi-executor-conn".into())
                     .spawn(move || {
                         let mut t = TcpTransport::new(stream);
-                        if let Err(e) = serve_connection(&rt, &table, &mut t) {
+                        if let Err(e) = serve_connection(&rt, &state, &mut t) {
                             log::info(&format!("executor: {peer} dropped: {e}"));
                         }
                     })?;
@@ -232,26 +403,42 @@ pub fn serve_tcp(
     Ok(())
 }
 
-fn spawn_loopback_inner(
+/// One in-process executor with the handles tests need: the connector
+/// (clone it per client), the shared state (buffer table / metrics for
+/// leak assertions), and the kill switch that simulates the executor
+/// dying permanently.
+pub struct LoopbackShard {
+    pub connector: LoopbackConnector,
+    pub state: Arc<ExecutorState>,
+    pub kill: KillSwitch,
+}
+
+/// In-process executor: an accept thread fronting `rt`'s backend over
+/// loopback transports, with optional per-transport fault injection.
+/// The returned connector behaves exactly like a TCP connector
+/// (including reconnects after an injected failure), so the hermetic
+/// test suite exercises the full remote path.
+pub fn spawn_loopback_shard(
     rt: Arc<Runtime>,
     chaos: Option<ChaosPlan>,
-) -> LoopbackConnector {
+) -> LoopbackShard {
     let (accept_tx, accept_rx) =
         std::sync::mpsc::channel::<LoopbackTransport>();
-    let table = Arc::new(BufferTable::new());
+    let state = Arc::new(ExecutorState::new());
+    let conn_state = state.clone();
     std::thread::Builder::new()
         .name("dvi-executor-loopback".into())
         .spawn(move || {
-            // Accept loop ends when the connector (the only sender) is
-            // dropped; per-connection threads end when their client
-            // endpoint is dropped. No explicit shutdown required.
+            // Accept loop ends when every connector clone (the only
+            // senders) is dropped; per-connection threads end when their
+            // client endpoint is dropped. No explicit shutdown required.
             while let Ok(mut transport) = accept_rx.recv() {
                 let rt = rt.clone();
-                let table = table.clone();
+                let state = conn_state.clone();
                 let spawned = std::thread::Builder::new()
                     .name("dvi-executor-loopback-conn".into())
                     .spawn(move || {
-                        let _ = serve_connection(&rt, &table, &mut transport);
+                        let _ = serve_connection(&rt, &state, &mut transport);
                     });
                 if spawned.is_err() {
                     break;
@@ -259,19 +446,77 @@ fn spawn_loopback_inner(
             }
         })
         .expect("spawning loopback executor thread");
-    LoopbackConnector { accept_tx: Mutex::new(accept_tx), chaos }
+    let kill = KillSwitch::new();
+    LoopbackShard {
+        connector: LoopbackConnector {
+            accept_tx: Mutex::new(accept_tx),
+            chaos,
+            kill: kill.clone(),
+        },
+        state,
+        kill,
+    }
 }
 
-/// In-process executor: an accept thread fronting `rt`'s backend over
-/// loopback transports. The returned connector behaves exactly like a
-/// TCP connector (including reconnects after an injected failure), so
-/// the hermetic test suite exercises the full remote path.
+/// [`spawn_loopback_shard`] × N: one independent executor (own accept
+/// thread, buffer table, metrics, kill switch) per entry of `rts` —
+/// the hermetic stand-in for N `serve-backend` hosts. For bitwise
+/// losslessness across shards, every runtime must front identically
+/// seeded weights.
+pub fn spawn_loopback_shards(rts: Vec<Arc<Runtime>>) -> Vec<LoopbackShard> {
+    rts.into_iter().map(|rt| spawn_loopback_shard(rt, None)).collect()
+}
+
+/// Back-compat single-executor spawn (no test handles).
 pub fn spawn_loopback(rt: Arc<Runtime>) -> LoopbackConnector {
-    spawn_loopback_inner(rt, None)
+    spawn_loopback_shard(rt, None).connector
 }
 
 /// Like [`spawn_loopback`], with a fault injector executing `plan` on
 /// every client transport (counted across reconnects).
 pub fn spawn_loopback_chaos(rt: Arc<Runtime>, plan: ChaosPlan) -> LoopbackConnector {
-    spawn_loopback_inner(rt, Some(plan))
+    spawn_loopback_shard(rt, Some(plan)).connector
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_table_frees_by_session() {
+        let t = BufferTable::new();
+        let host = |v: f32| Buffer::host(crate::runtime::Tensor::scalar_f32(v));
+        let a1 = t.insert(1, host(0.0), crate::runtime::DType::F32, vec![]);
+        let a2 = t.insert(1, host(1.0), crate::runtime::DType::F32, vec![]);
+        let b1 = t.insert(2, host(2.0), crate::runtime::DType::F32, vec![]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.free_session(1), 2);
+        assert!(t.get(a1.id).is_err());
+        assert!(t.get(a2.id).is_err());
+        assert!(t.get(b1.id).is_ok(), "other session's buffers must survive");
+        assert_eq!(t.free_session(1), 0, "double-free is a no-op");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn session_refcount_frees_only_on_last_close() {
+        let s = ExecutorState::new();
+        s.open_session(7);
+        s.open_session(7); // reconnect overlap: two live connections
+        let info = s.table.insert(
+            7,
+            Buffer::host(crate::runtime::Tensor::scalar_f32(0.5)),
+            crate::runtime::DType::F32,
+            vec![],
+        );
+        s.close_session(7);
+        assert!(
+            s.table.get(info.id).is_ok(),
+            "one connection closing must not free a session with another live"
+        );
+        assert_eq!(s.live_sessions(), 1);
+        s.close_session(7);
+        assert!(s.table.get(info.id).is_err(), "last close frees the session");
+        assert_eq!(s.live_sessions(), 0);
+    }
 }

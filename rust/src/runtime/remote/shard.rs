@@ -1,0 +1,474 @@
+//! Sharded remote client: one [`crate::runtime::Backend`] fronting N
+//! `serve-backend` executors, so batched serving fans out across
+//! machines without the scheduler, engines, or learner changing.
+//!
+//! ## Placement: KV stays put
+//!
+//! Per-sequence KV is server-resident, so the unit of placement is the
+//! sequence: [`shard_for_key`] maps a sequence's placement key to one
+//! shard, *all* of its KV allocations land there
+//! ([`crate::runtime::Backend::fresh_kv_keyed`] — the seq machines pass
+//! one key for both their shallow and deep KV sets), and every handle
+//! carries its owning shard ([`RemoteHandle::shard`]), which descendant
+//! handles inherit because a lane's reply is minted by the shard that
+//! executed it. A sequence's state therefore **never migrates**: the
+//! mapping is a pure function of the key, and reconnects re-dial the
+//! same shard (`tests/sched.rs` property-tests this under transport
+//! chaos). Sequential keys round-robin, so offered load balances.
+//!
+//! ## Execution: split, fan out, reassemble
+//!
+//! A batched call is split by the shard of each lane's KV and the
+//! per-shard sub-calls are issued **concurrently** (one scoped thread
+//! per involved shard — the sub-call is a blocking request/response);
+//! replies are reassembled in lane order. Artifacts with *no* KV params
+//! (`train_step`) are **broadcast**: every shard executes the identical
+//! deterministic update, keeping globals (LoRA/Adam) in lockstep, and a
+//! bitwise cross-shard check on the returned outputs turns any drift
+//! into a loud error instead of silent divergence. `set_global` /
+//! `reset_global` broadcast the same way; `read_global` reads shard 0.
+//!
+//! Broadcasts are not serialized against in-flight lane calls: while
+//! an update is in flight, lanes on different shards (even within one
+//! chunk) may observe different global versions — the same transient
+//! read-skew online training already exhibits across chunks on a
+//! single executor. Every individual lane call still sees one
+//! consistent snapshot, and per-shard update *order* is total (one
+//! learner thread), so shards re-converge the moment the broadcast
+//! lands; losslessness guarantees are, as everywhere in this repo,
+//! stated for fixed weights. Connect-time identity checking covers
+//! artifact specs and config, **not weight contents** — fronting
+//! identically seeded/checkpointed weights is the operator's contract
+//! (a handshake weight checksum is a ROADMAP item).
+//!
+//! ## Failure: a dead shard degrades, never wedges
+//!
+//! [`crate::runtime::Backend::call_batched_partial`] is the seam the
+//! scheduler drives: a shard's transport failure maps to `Err` for
+//! **that shard's lanes only**, which the scheduler turns into
+//! `fail_lane` for those sequences while every other shard's lanes
+//! commit normally — bitwise identical to an in-process run
+//! (`tests/sched.rs` kills a shard mid-run and checks survivors).
+//! Broadcast calls are all-or-nothing: losing a shard mid-`train_step`
+//! could fork the global state, so the whole call errors and the
+//! learner skips that step.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::runtime::backend::{
+    Backend, BatchItem, Buffer, CallOut, ExecutorStatus,
+};
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::tensor::{DType, Tensor, TensorData};
+
+use super::proto::HelloInfo;
+use super::transport::Connector;
+use super::RemoteBackend;
+
+/// Pure placement function: which shard owns the KV of a sequence with
+/// this placement key. Deliberately the identity modulo — sequential
+/// keys (what the scheduler and engines mint) round-robin into an even
+/// spread, and the mapping is trivially stable across reconnects.
+pub fn shard_for_key(key: u64, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    (key % shards.max(1) as u64) as usize
+}
+
+/// True bitwise tensor equality for the drift check: float `PartialEq`
+/// would flag bitwise-identical NaNs as drift and miss a +0.0 / -0.0
+/// divergence — the lockstep invariant is about bits, not float math.
+fn bitwise_eq(a: &Tensor, b: &Tensor) -> bool {
+    if a.shape != b.shape {
+        return false;
+    }
+    match (&a.data, &b.data) {
+        (TensorData::F32(x), TensorData::F32(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (TensorData::I32(x), TensorData::I32(y)) => x == y,
+        _ => false,
+    }
+}
+
+pub struct ShardedRemoteBackend {
+    shards: Vec<RemoteBackend>,
+    /// Placement keys for un-keyed allocations (`fresh_kv`, `upload`):
+    /// sequential, so standalone allocations round-robin too.
+    alloc: AtomicU64,
+}
+
+impl ShardedRemoteBackend {
+    /// Dial every executor, handshake each, and verify they front the
+    /// same model: artifact port layouts and config must match shard
+    /// 0's ([`crate::runtime::Manifest::identity_json`] equality, which
+    /// deliberately excludes per-host filesystem layout so identical
+    /// fleets at different addresses pass), otherwise lanes routed to
+    /// different shards could silently decode different models.
+    pub fn connect(
+        connectors: Vec<Box<dyn Connector>>,
+    ) -> Result<(ShardedRemoteBackend, HelloInfo)> {
+        ensure!(!connectors.is_empty(), "sharded backend needs >= 1 executor");
+        let mut shards = Vec::with_capacity(connectors.len());
+        let mut first: Option<HelloInfo> = None;
+        for (i, connector) in connectors.into_iter().enumerate() {
+            let endpoint = connector.endpoint();
+            let (be, info) = RemoteBackend::connect_shard(connector, i as u32)
+                .with_context(|| format!("connecting shard {i} ({endpoint})"))?;
+            if let Some(head) = first.as_ref() {
+                let a = head.manifest.identity_json().to_string();
+                let b = info.manifest.identity_json().to_string();
+                ensure!(
+                    a == b,
+                    "shard {i} ({endpoint}) serves a different manifest \
+                     than shard 0 — all executors must front identical \
+                     artifacts/config"
+                );
+            } else {
+                first = Some(info);
+            }
+            shards.push(be);
+        }
+        let info = first.expect("at least one shard connected");
+        Ok((ShardedRemoteBackend { shards, alloc: AtomicU64::new(0) }, info))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning a lane's KV set; every buffer in the lane must
+    /// agree (a sequence's KV never straddles executors).
+    fn lane_shard(&self, kv: &[Buffer]) -> Result<usize> {
+        let mut shard: Option<u32> = None;
+        for b in kv {
+            let Buffer::Remote(h) = b else {
+                bail!(
+                    "sharded backend received a non-remote kv buffer \
+                     ({b:?}); stage it with upload() first"
+                );
+            };
+            match shard {
+                None => shard = Some(h.shard),
+                Some(s) => ensure!(
+                    s == h.shard,
+                    "lane mixes kv buffers from shards {s} and {} — a \
+                     sequence's KV must stay on one executor",
+                    h.shard
+                ),
+            }
+        }
+        let s = shard.context(
+            "lane has no kv buffers; stateless artifacts go through \
+             broadcast call(), not lane routing",
+        )? as usize;
+        ensure!(
+            s < self.shards.len(),
+            "kv buffer names shard {s} but only {} shards are connected",
+            self.shards.len()
+        );
+        Ok(s)
+    }
+
+    /// Run `f` against every shard concurrently; results in shard order.
+    fn on_all<T: Send>(
+        &self,
+        f: impl Fn(&RemoteBackend) -> Result<T> + Sync,
+    ) -> Vec<Result<T>> {
+        let f = &f;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|be| scope.spawn(move || f(be)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Broadcast a stateless (no-KV) call to every shard, demand that
+    /// all succeed, and bitwise-compare the outputs so shard drift
+    /// (diverged globals, mismatched weights) fails loudly.
+    fn broadcast_call(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+    ) -> Result<CallOut> {
+        let mut results = self.on_all(|be| be.call(spec, &[], inputs));
+        // Collect trailing shards first so shard 0's CallOut survives.
+        let rest: Vec<CallOut> = results
+            .drain(1..)
+            .enumerate()
+            .map(|(i, r)| {
+                r.with_context(|| {
+                    format!(
+                        "{}: broadcast failed on shard {} — global state may \
+                         have forked; restore the shard or restart the fleet",
+                        spec.name,
+                        i + 1
+                    )
+                })
+            })
+            .collect::<Result<_>>()?;
+        let head = results
+            .pop()
+            .expect("shard 0 result present")
+            .with_context(|| format!("{}: broadcast failed on shard 0", spec.name))?;
+        for (i, out) in rest.iter().enumerate() {
+            let same = out.outputs.len() == head.outputs.len()
+                && out
+                    .outputs
+                    .iter()
+                    .zip(&head.outputs)
+                    .all(|(a, b)| bitwise_eq(a, b));
+            ensure!(
+                same,
+                "{}: shard {} drifted from shard 0 (broadcast outputs \
+                 differ bitwise) — executors are no longer in lockstep",
+                spec.name,
+                i + 1
+            );
+        }
+        Ok(head)
+    }
+
+    /// Group lane indices by owning shard, preserving lane order within
+    /// each group. A routing error (mixed/missing KV) is reported on
+    /// the offending lane alone.
+    fn group_lanes(
+        &self,
+        batch: &[BatchItem<'_>],
+    ) -> (Vec<Vec<usize>>, Vec<Option<anyhow::Error>>) {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        let mut routing_errs: Vec<Option<anyhow::Error>> =
+            batch.iter().map(|_| None).collect();
+        for (i, item) in batch.iter().enumerate() {
+            match self.lane_shard(item.kv) {
+                Ok(s) => groups[s].push(i),
+                Err(e) => routing_errs[i] = Some(e),
+            }
+        }
+        (groups, routing_errs)
+    }
+}
+
+impl Backend for ShardedRemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote-sharded"
+    }
+
+    fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
+        -> Result<CallOut>
+    {
+        if spec.params_with_role(Role::Kv).count() == 0 {
+            // Stateless (train_step): every shard applies the identical
+            // deterministic update so globals stay in lockstep.
+            return self.broadcast_call(spec, inputs);
+        }
+        let shard = self.lane_shard(kv)?;
+        self.shards[shard]
+            .call(spec, kv, inputs)
+            .with_context(|| format!("{}: shard {shard} call failed", spec.name))
+    }
+
+    fn call_batched(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Result<Vec<CallOut>> {
+        // All-or-nothing view of the partial path: the first failing
+        // lane's error surfaces; successful lanes' fresh KV handles are
+        // dropped here, which queues their ids for server-side release.
+        let mut outs = Vec::with_capacity(batch.len());
+        for r in self.call_batched_partial(spec, batch) {
+            outs.push(r?);
+        }
+        Ok(outs)
+    }
+
+    fn call_batched_partial(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Vec<Result<CallOut>> {
+        let (groups, routing_errs) = self.group_lanes(batch);
+
+        // One concurrent sub-call per involved shard.
+        let sub_results: Vec<Option<Result<Vec<CallOut>>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .zip(&groups)
+                    .map(|(be, idxs)| {
+                        if idxs.is_empty() {
+                            return None;
+                        }
+                        let sub: Vec<BatchItem<'_>> = idxs
+                            .iter()
+                            .map(|&i| BatchItem {
+                                kv: batch[i].kv,
+                                inputs: batch[i].inputs,
+                            })
+                            .collect();
+                        Some(scope.spawn(move || {
+                            let outs = be.call_batched(spec, &sub)?;
+                            ensure!(
+                                outs.len() == sub.len(),
+                                "{}: shard returned {} lanes for {}",
+                                spec.name,
+                                outs.len(),
+                                sub.len()
+                            );
+                            Ok(outs)
+                        }))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.map(|h| h.join().expect("shard worker panicked")))
+                    .collect()
+            });
+
+        // Scatter per-shard results back into lane order.
+        let mut out: Vec<Option<Result<CallOut>>> =
+            batch.iter().map(|_| None).collect();
+        for (i, e) in routing_errs.into_iter().enumerate() {
+            if let Some(e) = e {
+                out[i] = Some(Err(e));
+            }
+        }
+        for (shard, (idxs, result)) in
+            groups.iter().zip(sub_results).enumerate()
+        {
+            match result {
+                None => {} // shard had no lanes this call
+                Some(Ok(outs)) => {
+                    for (&i, lane_out) in idxs.iter().zip(outs) {
+                        out[i] = Some(Ok(lane_out));
+                    }
+                }
+                Some(Err(e)) => {
+                    // Only this shard's lanes fail; the scheduler maps
+                    // them onto fail_lane while other shards' lanes
+                    // commit.
+                    let msg = format!("{e:#}");
+                    for &i in idxs {
+                        out[i] = Some(Err(anyhow!(
+                            "shard {shard} ({}): {msg}",
+                            self.shards[shard].endpoint()
+                        )));
+                    }
+                }
+            }
+        }
+        out.into_iter()
+            .map(|r| r.expect("every lane routed or errored"))
+            .collect()
+    }
+
+    fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
+        let key = self.alloc.fetch_add(1, Ordering::Relaxed);
+        self.fresh_kv_keyed(spec, key)
+    }
+
+    fn fresh_kv_keyed(&self, spec: &ArtifactSpec, key: u64) -> Result<Vec<Buffer>> {
+        let shard = shard_for_key(key, self.shards.len());
+        self.shards[shard]
+            .fresh_kv(spec)
+            .with_context(|| format!("{}: fresh_kv on shard {shard}", spec.name))
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        let key = self.alloc.fetch_add(1, Ordering::Relaxed);
+        self.shards[shard_for_key(key, self.shards.len())].upload(t)
+    }
+
+    fn to_host(&self, b: &Buffer, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        match b {
+            Buffer::Remote(h) => {
+                let s = h.shard as usize;
+                ensure!(
+                    s < self.shards.len(),
+                    "buffer {h:?} names shard {s} but only {} are connected",
+                    self.shards.len()
+                );
+                self.shards[s].to_host(b, dtype, shape)
+            }
+            other => bail!("to_host on a non-remote buffer {other:?}"),
+        }
+    }
+
+    fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
+        for (i, r) in self.on_all(|be| be.set_global(name, t)).into_iter().enumerate()
+        {
+            r.with_context(|| {
+                format!(
+                    "set_global('{name}') failed on shard {i} — global state \
+                     may have forked; restore the shard or restart the fleet"
+                )
+            })?;
+        }
+        Ok(())
+    }
+
+    fn read_global(&self, name: &str) -> Result<Tensor> {
+        // Shards are in lockstep (broadcast writes + drift checks), so
+        // shard 0 speaks for the fleet.
+        self.shards[0].read_global(name)
+    }
+
+    fn reset_global(&self, name: &str) -> Result<()> {
+        for (i, r) in self.on_all(|be| be.reset_global(name)).into_iter().enumerate()
+        {
+            r.with_context(|| {
+                format!(
+                    "reset_global('{name}') failed on shard {i} — global state \
+                     may have forked; restore the shard or restart the fleet"
+                )
+            })?;
+        }
+        Ok(())
+    }
+
+    fn executor_status(&self) -> Vec<ExecutorStatus> {
+        self.shards.iter().flat_map(|be| be.executor_status()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitwise_eq_is_about_bits_not_float_semantics() {
+        let nan = Tensor::f32(vec![1], vec![f32::NAN]);
+        assert!(bitwise_eq(&nan, &nan.clone()), "identical NaN bits must match");
+        let pos = Tensor::f32(vec![1], vec![0.0]);
+        let neg = Tensor::f32(vec![1], vec![-0.0]);
+        assert!(!bitwise_eq(&pos, &neg), "+0.0 vs -0.0 is drift");
+        assert!(!bitwise_eq(&pos, &Tensor::f32(vec![1, 1], vec![0.0])));
+        assert!(!bitwise_eq(&pos, &Tensor::i32(vec![1], vec![0])));
+    }
+
+    #[test]
+    fn shard_for_key_is_stable_and_balanced() {
+        for n in 1..=4usize {
+            for key in 0..32u64 {
+                let a = shard_for_key(key, n);
+                assert_eq!(a, shard_for_key(key, n), "placement must be pure");
+                assert!(a < n);
+            }
+            // Sequential keys round-robin: n consecutive keys cover all
+            // n shards exactly once.
+            let covered: std::collections::BTreeSet<usize> =
+                (0..n as u64).map(|k| shard_for_key(k, n)).collect();
+            assert_eq!(covered.len(), n, "sequential keys must spread evenly");
+        }
+    }
+}

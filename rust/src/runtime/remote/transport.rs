@@ -11,6 +11,10 @@
 //! * [`ChaosTransport`] — wraps any transport and fails every Nth send,
 //!   injecting deterministic transport faults for the scheduler's
 //!   fail-lane tests.
+//! * [`KillSwitch`] / [`GatedTransport`] — a latch that permanently
+//!   kills a connector and every transport it minted, simulating a dead
+//!   executor (shard) deterministically: once killed, sends, recvs, and
+//!   re-dials all fail until the end of the test.
 //!
 //! A [`Connector`] mints fresh transports, which is what gives the
 //! client its bounded-reconnect behavior: a dead connection is dropped
@@ -18,7 +22,7 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -135,23 +139,40 @@ pub struct LoopbackConnector {
     /// Fault-injection plan applied to every minted client transport
     /// (shared counters, so fault spacing spans reconnects).
     pub(super) chaos: Option<ChaosPlan>,
+    /// Shared executor-death latch: once tripped, dials fail and every
+    /// previously minted transport errors (see [`KillSwitch`]).
+    pub(super) kill: KillSwitch,
+}
+
+impl Clone for LoopbackConnector {
+    fn clone(&self) -> Self {
+        LoopbackConnector {
+            accept_tx: Mutex::new(self.accept_tx.lock().unwrap().clone()),
+            chaos: self.chaos.clone(),
+            kill: self.kill.clone(),
+        }
+    }
 }
 
 impl Connector for LoopbackConnector {
     fn connect(&self) -> Result<Box<dyn Transport>> {
+        if self.kill.is_killed() {
+            bail!("loopback executor killed");
+        }
         let (client, server) = loopback_pair();
         self.accept_tx
             .lock()
             .unwrap()
             .send(server)
             .map_err(|_| anyhow!("loopback executor has shut down"))?;
-        Ok(match &self.chaos {
+        let inner: Box<dyn Transport> = match &self.chaos {
             Some(plan) => Box::new(ChaosTransport {
                 inner: Box::new(client),
                 plan: plan.clone(),
             }),
             None => Box::new(client),
-        })
+        };
+        Ok(Box::new(GatedTransport { inner, kill: self.kill.clone() }))
     }
 
     fn endpoint(&self) -> String {
@@ -162,6 +183,52 @@ impl Connector for LoopbackConnector {
 // ----------------------------------------------------------------------------
 // Fault injection
 // ----------------------------------------------------------------------------
+
+/// Latch simulating a permanently dead executor: tests flip it to kill
+/// one shard and the sharded client must degrade (fail that shard's
+/// lanes) without wedging. Unlike [`ChaosPlan`] this is not transient —
+/// there is no cap and no recovery.
+#[derive(Clone, Default)]
+pub struct KillSwitch(Arc<AtomicBool>);
+
+impl KillSwitch {
+    pub fn new() -> KillSwitch {
+        KillSwitch::default()
+    }
+
+    /// Trip the latch: every gated transport and connector dies now.
+    pub fn kill(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Transport wrapper honoring a [`KillSwitch`]: both directions error
+/// once the latch trips, modeling an executor process that is gone (not
+/// just one dropped frame, which is [`ChaosTransport`]'s job).
+pub struct GatedTransport {
+    pub(super) inner: Box<dyn Transport>,
+    pub(super) kill: KillSwitch,
+}
+
+impl Transport for GatedTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if self.kill.is_killed() {
+            bail!("executor killed");
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        if self.kill.is_killed() {
+            bail!("executor killed");
+        }
+        self.inner.recv()
+    }
+}
 
 /// Deterministic fault-injection plan, shared across reconnects: every
 /// `every`-th send fails, at most `max_failures` times in total. The
@@ -275,6 +342,21 @@ mod tests {
         assert_eq!(b.recv().unwrap(), vec![4]);
         assert_eq!(b.recv().unwrap(), vec![5]);
         assert_eq!(b.recv().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn kill_switch_is_permanent_and_shared() {
+        let (a, mut b) = loopback_pair();
+        let kill = KillSwitch::new();
+        let mut g = GatedTransport { inner: Box::new(a), kill: kill.clone() };
+        assert!(g.send(&[1]).is_ok());
+        assert_eq!(b.recv().unwrap(), vec![1]);
+        kill.kill();
+        assert!(g.send(&[2]).is_err());
+        assert!(g.recv().is_err());
+        assert!(kill.is_killed());
+        // Still dead on the next attempt: a latch, not a counter.
+        assert!(g.send(&[3]).is_err());
     }
 
     #[test]

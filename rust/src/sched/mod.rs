@@ -316,36 +316,54 @@ impl Scheduler {
                     .iter()
                     .map(|s| BatchItem { kv: &s.kv, inputs: &s.inputs })
                     .collect();
-                let outs = specs[0].artifact.call_batched(&items);
+                // Per-lane failure granularity: on a sharded remote
+                // backend a dead executor fails only the lanes whose KV
+                // it owns; every other lane in the chunk commits
+                // normally. Single-executor backends degenerate to the
+                // old whole-chunk behavior (all lanes share one fate).
+                let outs = specs[0].artifact.call_batched_partial(&items);
                 drop(items);
                 match outs {
                     Ok(outs) => {
-                        // Only successful calls count toward progress and
-                        // the occupancy stats — a failing backend must not
-                        // report healthy batching.
-                        advanced += chunk.len();
-                        self.stats.calls.fetch_add(1, Ordering::Relaxed);
-                        self.stats
-                            .lanes
-                            .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                        let name = specs[0].artifact.spec.name.clone();
+                        let mut ok_lanes = 0u64;
                         for (&i, out) in chunk.iter().zip(outs) {
-                            let applied = self.slots[i]
-                                .as_mut()
-                                .expect("grouped lane is live")
-                                .state
-                                .apply(out);
-                            match applied {
-                                Ok(committed) => {
-                                    self.stats.committed_tokens.fetch_add(
-                                        committed as u64,
-                                        Ordering::Relaxed,
-                                    );
+                            match out {
+                                Ok(out) => {
+                                    ok_lanes += 1;
+                                    let applied = self.slots[i]
+                                        .as_mut()
+                                        .expect("grouped lane is live")
+                                        .state
+                                        .apply(out);
+                                    match applied {
+                                        Ok(committed) => {
+                                            self.stats.committed_tokens.fetch_add(
+                                                committed as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                        }
+                                        Err(e) => self.fail_lane(i, e),
+                                    }
                                 }
-                                Err(e) => self.fail_lane(i, e),
+                                Err(e) => self.fail_lane(
+                                    i,
+                                    anyhow!("batched {name} call failed: {e:#}"),
+                                ),
                             }
+                        }
+                        // Only lanes that actually executed count toward
+                        // progress and occupancy — a failing backend must
+                        // not report healthy batching.
+                        advanced += ok_lanes as usize;
+                        if ok_lanes > 0 {
+                            self.stats.calls.fetch_add(1, Ordering::Relaxed);
+                            self.stats.lanes.fetch_add(ok_lanes, Ordering::Relaxed);
                         }
                     }
                     Err(e) => {
+                        // Outer error: the whole chunk was unexecutable
+                        // (caller-side shape bug, contract violation).
                         let name = specs[0].artifact.spec.name.clone();
                         for &i in chunk {
                             self.fail_lane(

@@ -145,11 +145,16 @@ pub struct DviSeq {
 }
 
 impl DviSeq {
+    /// `key` is the sequence's placement key: both KV sets are allocated
+    /// with it, so on a sharded remote backend the sequence's entire
+    /// server-resident state lives on one executor (see
+    /// [`crate::runtime::shard_for_key`]). In-process backends ignore it.
     pub fn new(
         ctx: Arc<DviCtx>,
         buffer: Option<Arc<Mutex<ReplayBuffer>>>,
         prompt: &[u32],
         max_new: usize,
+        key: u64,
     ) -> Result<DviSeq> {
         ensure!(
             prompt.len() <= ctx.prefill_seq,
@@ -157,8 +162,8 @@ impl DviSeq {
             prompt.len(),
             ctx.prefill_seq
         );
-        let kv_sh = ctx.rt.fresh_kv("prefill_shallow")?;
-        let kv_dp = ctx.rt.fresh_kv("prefill_deep")?;
+        let kv_sh = ctx.rt.fresh_kv_keyed("prefill_shallow", key)?;
+        let kv_dp = ctx.rt.fresh_kv_keyed("prefill_deep", key)?;
         let now = Instant::now();
         Ok(DviSeq {
             buffer,
@@ -428,14 +433,20 @@ pub struct ArSeq {
 }
 
 impl ArSeq {
-    pub fn new(ctx: Arc<ArCtx>, prompt: &[u32], max_new: usize) -> Result<ArSeq> {
+    /// `key`: placement key for the KV allocation (see [`DviSeq::new`]).
+    pub fn new(
+        ctx: Arc<ArCtx>,
+        prompt: &[u32],
+        max_new: usize,
+        key: u64,
+    ) -> Result<ArSeq> {
         ensure!(
             prompt.len() <= ctx.prefill_seq,
             "prompt length {} exceeds prefill capacity {}",
             prompt.len(),
             ctx.prefill_seq
         );
-        let kv = ctx.rt.fresh_kv("prefill_full")?;
+        let kv = ctx.rt.fresh_kv_keyed("prefill_full", key)?;
         let now = Instant::now();
         Ok(ArSeq {
             step: ArStep::Prefill,
@@ -608,9 +619,8 @@ impl SeqState {
     }
 }
 
-/// Per-method shared context: what the scheduler needs to mint fresh
-/// sequences.
-pub enum MethodCtx {
+/// What the scheduler needs to mint fresh sequences of one method.
+enum MethodKind {
     Dvi {
         ctx: Arc<DviCtx>,
         buffer: Option<Arc<Mutex<ReplayBuffer>>>,
@@ -620,33 +630,48 @@ pub enum MethodCtx {
     },
 }
 
+/// Sequence factory: resolves the method's artifacts once and mints
+/// sequences with **sequential placement keys** (0, 1, 2, ...) so a
+/// sharded backend round-robins sequences across executors while each
+/// sequence's KV stays on exactly one (key i ↔ the i-th created
+/// sequence — deterministic, which the shard kill tests rely on).
+pub struct MethodCtx {
+    kind: MethodKind,
+    next_key: std::sync::atomic::AtomicU64,
+}
+
 impl MethodCtx {
     pub fn new(
         rt: Arc<Runtime>,
         method: &str,
         buffer: Option<Arc<Mutex<ReplayBuffer>>>,
     ) -> Result<MethodCtx> {
-        match method {
-            "dvi" => Ok(MethodCtx::Dvi {
+        let kind = match method {
+            "dvi" => MethodKind::Dvi {
                 ctx: Arc::new(DviCtx::new(rt)?),
                 buffer,
-            }),
-            "ar" => Ok(MethodCtx::Ar {
+            },
+            "ar" => MethodKind::Ar {
                 ctx: Arc::new(ArCtx::new(rt)?),
-            }),
+            },
             other => bail!("scheduler supports methods dvi|ar, got '{other}'"),
-        }
+        };
+        Ok(MethodCtx { kind, next_key: std::sync::atomic::AtomicU64::new(0) })
     }
 
     pub fn new_seq(&self, prompt: &[u32], max_new: usize) -> Result<SeqState> {
-        match self {
-            MethodCtx::Dvi { ctx, buffer } => Ok(SeqState::Dvi(Box::new(
-                DviSeq::new(ctx.clone(), buffer.clone(), prompt, max_new)?,
+        let key = self
+            .next_key
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match &self.kind {
+            MethodKind::Dvi { ctx, buffer } => Ok(SeqState::Dvi(Box::new(
+                DviSeq::new(ctx.clone(), buffer.clone(), prompt, max_new, key)?,
             ))),
-            MethodCtx::Ar { ctx } => Ok(SeqState::Ar(Box::new(ArSeq::new(
+            MethodKind::Ar { ctx } => Ok(SeqState::Ar(Box::new(ArSeq::new(
                 ctx.clone(),
                 prompt,
                 max_new,
+                key,
             )?))),
         }
     }
@@ -668,7 +693,7 @@ mod tests {
         let rt = runtime();
         let ctx = Arc::new(DviCtx::new(rt.clone()).unwrap());
         let prompt: Vec<u32> = vec![1, 10, 11, 3];
-        let mut s = DviSeq::new(ctx, None, &prompt, 12).unwrap();
+        let mut s = DviSeq::new(ctx, None, &prompt, 12, 0).unwrap();
         assert_eq!(s.phase(), SeqPhase::Prefilling);
         let mut seen_draft = false;
         let mut seen_verify = false;
@@ -699,9 +724,9 @@ mod tests {
         let rt = runtime();
         let ctx = Arc::new(ArCtx::new(rt.clone()).unwrap());
         let long = vec![1u32; ctx.prefill_seq + 1];
-        assert!(ArSeq::new(ctx, &long, 8).is_err());
+        assert!(ArSeq::new(ctx, &long, 8, 0).is_err());
         let dctx = Arc::new(DviCtx::new(rt).unwrap());
         let long = vec![1u32; dctx.prefill_seq + 1];
-        assert!(DviSeq::new(dctx, None, &long, 8).is_err());
+        assert!(DviSeq::new(dctx, None, &long, 8, 0).is_err());
     }
 }

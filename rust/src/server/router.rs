@@ -29,7 +29,7 @@ use crate::engine::dvi::DviEngine;
 use crate::engine::Engine;
 use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
-use crate::runtime::{log, Runtime};
+use crate::runtime::{log, ExecutorStatus, Runtime};
 use crate::sched::{SchedConfig, SchedStats, Scheduler};
 
 #[derive(Debug, Clone)]
@@ -102,6 +102,9 @@ pub struct Router {
     /// Scheduler metrics (batch occupancy, queue wait, committed tokens
     /// per tick); `Some` only in batched mode.
     pub sched_stats: Option<Arc<SchedStats>>,
+    /// The served runtime, kept so operators can poll remote executor
+    /// health ([`Router::executor_status`]) next to the serving stats.
+    rt: Arc<Runtime>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     learner: Option<JoinHandle<()>>,
@@ -296,7 +299,7 @@ impl Router {
         // train_step artifact fails start() instead of dying silently.
         let learner = if online_dvi {
             let trainer =
-                Trainer::new(rt, buffer, Schedule::new(cfg.objective), 0x1EA2)?;
+                Trainer::new(rt.clone(), buffer, Schedule::new(cfg.objective), 0x1EA2)?;
             let stop2 = stop.clone();
             let stats2 = stats.clone();
             Some(
@@ -312,11 +315,20 @@ impl Router {
             tx,
             stats,
             sched_stats,
+            rt,
             stop,
             workers,
             learner,
             next_id: AtomicU64::new(0),
         })
+    }
+
+    /// Health of the remote executor(s) serving this router's backend
+    /// calls: per-shard endpoint plus the executor-side `Metrics`
+    /// counters (occupancy, buffer-table size, calls served). Empty for
+    /// in-process backends.
+    pub fn executor_status(&self) -> Vec<ExecutorStatus> {
+        self.rt.executor_status()
     }
 
     /// Submit a prompt; returns a receiver for the response.

@@ -6,9 +6,12 @@
 //! sockets. One test additionally covers real TCP end-to-end.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use dvi::engine::Engine;
 use dvi::harness::make_engine;
+use dvi::runtime::remote::server::{spawn_loopback_shard, LoopbackShard};
+use dvi::runtime::remote::transport::Connector;
 use dvi::runtime::{DType, Runtime, Tensor};
 
 const SEED: u64 = 0x2E307E;
@@ -19,6 +22,30 @@ fn local() -> Runtime {
 
 fn remote() -> Runtime {
     Runtime::load_remote_loopback(SEED).expect("loopback remote runtime")
+}
+
+/// Client runtime over an existing loopback executor (the shard keeps
+/// the state/kill handles for assertions).
+fn client_of(shard: &LoopbackShard) -> Runtime {
+    Runtime::load_remote_with(Box::new(shard.connector.clone()))
+        .expect("loopback client runtime")
+}
+
+/// Wait (bounded) for the executor's async connection-teardown to leave
+/// the buffer table at `want` entries.
+fn await_table_len(shard: &LoopbackShard, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let len = shard.state.table.len();
+        if len == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "buffer table stuck at {len} entries (wanted {want})"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
 }
 
 /// The handshake must deliver everything a client runtime needs:
@@ -198,6 +225,292 @@ fn transport_chaos_reconnects_and_preserves_kv() {
     }
     assert!(failures >= 1, "chaos injection never fired");
     assert_eq!(got, golden, "token stream diverged across chaos reconnects");
+}
+
+/// Session-leak regression: a client that dies without ever sending its
+/// piggybacked frees must not leak executor buffer-table entries — the
+/// executor frees everything the session owned when its last connection
+/// closes.
+#[test]
+fn disconnect_frees_session_owned_buffers() {
+    let shard = spawn_loopback_shard(Arc::new(local()), None);
+    let rt = client_of(&shard);
+    let kv_a = rt.fresh_kv("target_step").unwrap();
+    let kv_b = rt.fresh_kv("prefill_full").unwrap();
+    let staged = rt.upload(&Tensor::scalar_f32(1.5)).unwrap();
+    let owned = kv_a.len() + kv_b.len() + 1;
+    assert_eq!(shard.state.table.len(), owned);
+    // Handles dropped client-side queue frees — but the client dies
+    // before any further call could carry them.
+    drop((kv_a, kv_b, staged));
+    assert_eq!(shard.state.table.len(), owned, "no free was ever sent");
+    drop(rt); // last connection of the session closes
+    await_table_len(&shard, 0);
+}
+
+/// Session teardown is scoped: one client dying frees only its own
+/// buffers; a co-resident client keeps its KV and stays serviceable.
+#[test]
+fn session_teardown_spares_other_clients() {
+    let shard = spawn_loopback_shard(Arc::new(local()), None);
+    let doomed = client_of(&shard);
+    let survivor = client_of(&shard);
+    let _doomed_kv = doomed.fresh_kv("target_step").unwrap();
+    let kv = survivor.fresh_kv("target_step").unwrap();
+    let total = shard.state.table.len();
+    assert!(total > kv.len(), "both sessions must have allocations");
+    drop(doomed);
+    await_table_len(&shard, kv.len());
+    // The survivor's KV is still valid server-side.
+    let out = survivor
+        .artifact("target_step")
+        .unwrap()
+        .call(&kv, &[Tensor::scalar_i32(5), Tensor::scalar_i32(0)])
+        .unwrap();
+    assert_eq!(out.kv.len(), kv.len());
+}
+
+/// A reply the executor could not deliver must not leak the buffers it
+/// minted: the client can never learn those ids, and a session that
+/// survives the reconnect would otherwise carry the orphans forever.
+#[test]
+fn lost_reply_buffers_are_reclaimed() {
+    use dvi::runtime::remote::proto::{Msg, Reply, VERSION};
+    use dvi::runtime::remote::server::serve_connection;
+    use dvi::runtime::remote::transport::Transport;
+
+    /// Feeds scripted request frames and fails every send after the
+    /// first `sends_ok` — the deterministic stand-in for a client that
+    /// vanished with a reply in flight.
+    struct ScriptedTransport {
+        inbox: Vec<Vec<u8>>,
+        sends_ok: usize,
+        sent: usize,
+    }
+    impl Transport for ScriptedTransport {
+        fn send(&mut self, _frame: &[u8]) -> anyhow::Result<()> {
+            self.sent += 1;
+            if self.sent > self.sends_ok {
+                anyhow::bail!("client vanished (reply undeliverable)");
+            }
+            Ok(())
+        }
+        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
+            if self.inbox.is_empty() {
+                anyhow::bail!("scripted eof");
+            }
+            Ok(self.inbox.remove(0))
+        }
+    }
+
+    let server_rt = Arc::new(local());
+    let shard = spawn_loopback_shard(server_rt.clone(), None);
+    let session = 0x5E55;
+
+    // A second live connection pins the session open, so session-end
+    // cleanup cannot mask a leak on the scripted connection.
+    let mut hold = shard.connector.clone().connect().unwrap();
+    hold.send(
+        &Msg::Hello { version: VERSION, want_manifest: false, session }.encode(),
+    )
+    .unwrap();
+    assert!(matches!(
+        Reply::decode(&hold.recv().unwrap()).unwrap(),
+        Reply::Hello { .. }
+    ));
+
+    // Scripted connection, same session: handshake reply succeeds, the
+    // FreshKv executes (minting server-resident buffers), and its reply
+    // send fails.
+    let mut t = ScriptedTransport {
+        inbox: vec![
+            Msg::Hello { version: VERSION, want_manifest: false, session }.encode(),
+            Msg::FreshKv { artifact: "target_step".into() }.encode(),
+        ],
+        sends_ok: 1,
+        sent: 0,
+    };
+    let err = serve_connection(&server_rt, &shard.state, &mut t).unwrap_err();
+    assert!(format!("{err:#}").contains("connection lost"));
+
+    // The minted-but-unreachable buffers were reclaimed even though the
+    // session is still alive.
+    assert_eq!(shard.state.table.len(), 0, "undeliverable reply leaked KV");
+    assert_eq!(shard.state.live_sessions(), 1, "held session must survive");
+
+    // And the surviving connection is still serviceable.
+    hold.send(&Msg::Metrics.encode()).unwrap();
+    match Reply::decode(&hold.recv().unwrap()).unwrap() {
+        Reply::Metrics(m) => assert_eq!(m.sessions, 1),
+        other => panic!("unexpected reply: {other:?}"),
+    }
+}
+
+/// A transport-chaos reconnect must NOT count as the session ending:
+/// server-resident KV survives because the client parks the dead
+/// transport until the replacement connection has handshaken.
+#[test]
+fn reconnect_does_not_reap_the_session() {
+    let shard = spawn_loopback_shard(
+        Arc::new(local()),
+        Some(dvi::runtime::remote::transport::ChaosPlan::new(4, 2)),
+    );
+    let rt = client_of(&shard);
+    let mut kv = rt.fresh_kv("target_step").unwrap();
+    let art = rt.artifact("target_step").unwrap();
+    let mut failures = 0;
+    for pos in 0..10 {
+        loop {
+            let inputs = [Tensor::scalar_i32(5), Tensor::scalar_i32(pos)];
+            match art.call(&kv, &inputs) {
+                Ok(out) => {
+                    kv = out.kv;
+                    break;
+                }
+                Err(_) => failures += 1,
+            }
+            assert!(failures < 50, "retry loop diverged");
+        }
+    }
+    assert!(failures >= 1, "chaos never fired");
+    // KV stayed resident through every reconnect (the decode above
+    // would have failed with unknown buffer ids otherwise); the session
+    // is still the only one and still owns its buffers.
+    assert!(shard.state.table.len() >= kv.len());
+    assert_eq!(shard.state.live_sessions(), 1);
+}
+
+// ----------------------------------------------------------------------------
+// Sharded client
+// ----------------------------------------------------------------------------
+
+/// Sharded loopback fleet (same seed per shard) + the shard handles.
+fn sharded(n: usize) -> (Arc<Runtime>, Vec<LoopbackShard>) {
+    let shards: Vec<LoopbackShard> = (0..n)
+        .map(|_| spawn_loopback_shard(Arc::new(local()), None))
+        .collect();
+    let connectors = shards
+        .iter()
+        .map(|s| Box::new(s.connector.clone()) as Box<dyn Connector>)
+        .collect();
+    let rt = Runtime::load_remote_sharded_with(connectors)
+        .expect("sharded loopback runtime");
+    (Arc::new(rt), shards)
+}
+
+/// Sharded handshake must reconstruct a full runtime and engines over a
+/// 2-shard fleet must stay bitwise identical to the in-process engines.
+#[test]
+fn sharded_engines_are_bitwise_lossless() {
+    let l = Arc::new(local());
+    let (r, shards) = sharded(2);
+    assert_eq!(r.backend_name(), "remote-sharded");
+    let prompts = l.synthetic_prompts("qa").unwrap().samples.clone();
+    for method in ["dvi", "ar"] {
+        let mut le = make_engine(l.clone(), method).unwrap();
+        let mut re = make_engine(r.clone(), method).unwrap();
+        for s in prompts.iter().take(3) {
+            let a = le.generate(&s.prompt, 12).unwrap();
+            let b = re.generate(&s.prompt, 12).unwrap();
+            assert_eq!(a.tokens, b.tokens, "{method} diverged over shards");
+        }
+    }
+    // Sequential placement keys round-robined real work onto BOTH
+    // executors (engines mint key 0, 1, 2, ... per generation).
+    for (i, shard) in shards.iter().enumerate() {
+        use std::sync::atomic::Ordering;
+        assert!(
+            shard.state.stats.calls.load(Ordering::Relaxed) > 0,
+            "shard {i} never executed a call"
+        );
+    }
+}
+
+/// Globals stay in lockstep across shards: set/reset broadcast, and a
+/// train_step broadcast applies the identical update everywhere (the
+/// drift check inside the sharded client verifies outputs bitwise).
+#[test]
+fn sharded_globals_and_train_step_stay_lockstep() {
+    let (r, _shards) = sharded(2);
+    let a0 = r.read_global("lora.A").unwrap();
+    let zero = Tensor::zeros_f32(a0.shape.clone());
+    r.set_global("lora.A", &zero).unwrap();
+    assert_eq!(r.read_global("lora.A").unwrap(), zero);
+    r.reset_global("lora.A").unwrap();
+    assert_eq!(r.read_global("lora.A").unwrap(), a0);
+
+    let cfg_n = r.manifest.train_f64("batch_size").unwrap() as usize;
+    let d = r.manifest.model_usize("d_model").unwrap();
+    let v = r.manifest.model_usize("vocab_size").unwrap();
+    let train = r.artifact("train_step").unwrap();
+    let out = train
+        .call(
+            &[],
+            &[
+                Tensor::f32(vec![cfg_n, d], vec![0.1; cfg_n * d]),
+                Tensor::i32(vec![cfg_n], vec![5; cfg_n]),
+                Tensor::f32(vec![cfg_n, v], vec![0.2; cfg_n * v]),
+                Tensor::f32(vec![cfg_n], vec![1.0; cfg_n]),
+                Tensor::f32(vec![cfg_n], vec![1.0; cfg_n]),
+                Tensor::f32(vec![8], vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3e-3, 1.0]),
+            ],
+        )
+        .unwrap();
+    assert!(out.outputs[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    // Every shard applied the update: lora.B moved identically, so a
+    // second broadcast's drift check still passes and read_global
+    // (shard 0) equals what any shard would report.
+    let b_after = r.read_global("lora.B").unwrap();
+    assert!(b_after.as_f32().unwrap().iter().any(|&x| x != 0.0));
+}
+
+/// The Metrics message surfaces executor-side counters through
+/// `Runtime::executor_status`, one entry per shard.
+#[test]
+fn executor_metrics_surface_per_shard() {
+    let (r, _shards) = sharded(2);
+    let mut engine = make_engine(r.clone(), "ar").unwrap();
+    let prompt = r.synthetic_prompts("qa").unwrap().samples[0].prompt.clone();
+    engine.generate(&prompt, 8).unwrap();
+    engine.generate(&prompt, 8).unwrap(); // key 1 → the other shard
+    let status = r.executor_status();
+    assert_eq!(status.len(), 2, "one status entry per executor");
+    for s in &status {
+        let m = s.metrics.as_ref().expect("live executor must report metrics");
+        assert!(m.calls > 0, "shard {} served no calls", s.shard);
+        assert!(m.occupancy() > 0.0);
+        assert_eq!(m.sessions, 1, "one sharded client = one session per shard");
+    }
+    assert_eq!(status[0].shard, 0);
+    assert_eq!(status[1].shard, 1);
+}
+
+/// Executors fronting different models must be refused at connect time
+/// (lanes routed to different shards would silently decode different
+/// weights).
+#[test]
+fn sharded_connect_rejects_mismatched_manifests() {
+    use dvi::runtime::ReferenceConfig;
+    let a = Arc::new(local());
+    let b = Arc::new(
+        Runtime::load_reference_with(ReferenceConfig {
+            seed: SEED,
+            d_model: 24,
+            ..Default::default()
+        })
+        .expect("small-model runtime"),
+    );
+    let sa = spawn_loopback_shard(a, None);
+    let sb = spawn_loopback_shard(b, None);
+    let err = Runtime::load_remote_sharded_with(vec![
+        Box::new(sa.connector.clone()) as Box<dyn Connector>,
+        Box::new(sb.connector.clone()) as Box<dyn Connector>,
+    ])
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different manifest"),
+        "unexpected error: {err:#}"
+    );
 }
 
 /// End-to-end over real TCP: `serve_tcp` in a background thread, a

@@ -20,7 +20,11 @@ use std::sync::Arc;
 
 use dvi::engine::Engine;
 use dvi::harness::{load_prompts, make_engine};
-use dvi::runtime::{chaos::FlakyBackend, Backend, Runtime};
+use dvi::runtime::remote::server::{spawn_loopback_shard, LoopbackShard};
+use dvi::runtime::remote::transport::{ChaosPlan, Connector};
+use dvi::runtime::{
+    chaos::FlakyBackend, shard_for_key, Backend, Buffer, Runtime, Tensor,
+};
 use dvi::sched::{SchedConfig, SchedStats, Scheduler};
 use dvi::util::prop::run_prop;
 
@@ -28,6 +32,17 @@ const SEED: u64 = 0xBA7C4;
 
 fn runtime() -> Arc<Runtime> {
     Arc::new(Runtime::load_hermetic(SEED).expect("hermetic runtime"))
+}
+
+/// Chaos soak factor: the CI chaos lane (`DVI_TEST_CHAOS=1`) repeats
+/// each fault-injection scenario with fresh runtimes/plans for extra
+/// coverage; the default suite runs each once. Every repetition keeps
+/// the capped, deterministic guarantees.
+fn chaos_reps() -> usize {
+    match std::env::var("DVI_TEST_CHAOS").as_deref() {
+        Ok("") | Err(_) => 1,
+        Ok(_) => 3,
+    }
 }
 
 /// Mixed-task workload via the seeded deterministic shuffle.
@@ -198,12 +213,14 @@ fn chaos_every_nth_chunk_fails_only_its_lanes() {
     // chunk), so every=6 guarantees the injection fires; the 3-failure
     // cap kills at most 6 of 10 sequences, so survivors are guaranteed
     // too.
-    let rt = Runtime::load_reference(SEED).unwrap().map_backend(|inner| {
-        Arc::new(FlakyBackend::new(inner, 6, 3)) as Arc<dyn Backend>
-    });
-    let local = Arc::new(Runtime::load_reference(SEED).unwrap());
-    let cases = mixed_prompts(&local, 10, 16);
-    chaos_run(Arc::new(rt), "dvi", &cases);
+    for _ in 0..chaos_reps() {
+        let rt = Runtime::load_reference(SEED).unwrap().map_backend(|inner| {
+            Arc::new(FlakyBackend::new(inner, 6, 3)) as Arc<dyn Backend>
+        });
+        let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+        let cases = mixed_prompts(&local, 10, 16);
+        chaos_run(Arc::new(rt), "dvi", &cases);
+    }
 }
 
 // ----------------------------------------------------------------------------
@@ -246,11 +263,213 @@ fn remote_batched_is_bitwise_lossless_vs_local_engine() {
 /// 6 of 10 sequences.)
 #[test]
 fn remote_transport_chaos_fails_chunks_not_the_scheduler() {
-    let remote =
-        Arc::new(Runtime::load_remote_loopback_chaos(SEED, 29, 3).unwrap());
+    for _ in 0..chaos_reps() {
+        let remote =
+            Arc::new(Runtime::load_remote_loopback_chaos(SEED, 29, 3).unwrap());
+        let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+        let cases = mixed_prompts(&local, 10, 16);
+        chaos_run(remote, "dvi", &cases);
+    }
+}
+
+// ----------------------------------------------------------------------------
+// Sharded executor fleet: routing, losslessness, and failure domains
+// ----------------------------------------------------------------------------
+
+/// Sharded loopback fleet (same seed per shard, so shards are bitwise
+/// interchangeable) plus the per-shard kill/state handles.
+fn sharded_fleet(n: usize) -> (Arc<Runtime>, Vec<LoopbackShard>) {
+    let shards: Vec<LoopbackShard> = (0..n)
+        .map(|_| {
+            spawn_loopback_shard(
+                Arc::new(Runtime::load_reference(SEED).unwrap()),
+                None,
+            )
+        })
+        .collect();
+    let connectors = shards
+        .iter()
+        .map(|s| Box::new(s.connector.clone()) as Box<dyn Connector>)
+        .collect();
+    let rt = Runtime::load_remote_sharded_with(connectors)
+        .expect("sharded loopback runtime");
+    (Arc::new(rt), shards)
+}
+
+/// Headline sharded invariant: batched scheduling across TWO executors
+/// commits bitwise-identical token streams to the in-process
+/// per-sequence engines, for both DVI and AR, with real multiplexing
+/// and zero failures.
+#[test]
+fn sharded_batched_is_bitwise_lossless_vs_local_engine() {
     let local = Arc::new(Runtime::load_reference(SEED).unwrap());
-    let cases = mixed_prompts(&local, 10, 16);
-    chaos_run(remote, "dvi", &cases);
+    let (remote, shards) = sharded_fleet(2);
+    assert_eq!(remote.backend_name(), "remote-sharded");
+    let cases = mixed_prompts(&local, 10, 20);
+    for method in ["dvi", "ar"] {
+        let mut engine = make_engine(local.clone(), method).unwrap();
+        let golden: Vec<Vec<u32>> = cases
+            .iter()
+            .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
+            .collect();
+        let (got, stats) = scheduler_tokens(&remote, method, &cases, 4, cases.len());
+        assert_eq!(
+            got, golden,
+            "sharded batched {method} diverged from in-process engine"
+        );
+        assert!(stats.occupancy() > 1.0, "sharded path never actually batched");
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 0);
+    }
+    // Round-robin placement really used both executors.
+    for (i, shard) in shards.iter().enumerate() {
+        assert!(
+            shard.state.stats.calls.load(Ordering::Relaxed) > 0,
+            "shard {i} never executed a call"
+        );
+    }
+}
+
+/// Kill one executor of a 2-shard fleet mid-run: every sequence whose
+/// KV lives on the dead shard fails (mapped through per-lane
+/// `fail_lane`), every sequence on the surviving shard completes with
+/// tokens bitwise identical to the in-process engine, and the
+/// scheduler neither wedges nor starves its queue.
+#[test]
+fn killing_one_shard_degrades_only_its_sequences() {
+    let local = Arc::new(Runtime::load_reference(SEED).unwrap());
+    // Keep only prompts whose generation spans >= 2 committed tokens:
+    // those provably out-live the kill point (after the two prefill
+    // ticks they still owe draft/verify rounds), which makes the
+    // failure accounting below exact instead of probabilistic.
+    let mut engine = make_engine(local.clone(), "dvi").unwrap();
+    let mut cases: Vec<(Vec<u32>, usize)> = Vec::new();
+    let mut golden: Vec<Vec<u32>> = Vec::new();
+    for (p, n) in mixed_prompts(&local, 20, 16) {
+        let g = engine.generate(&p, n).unwrap().tokens;
+        if g.len() >= 2 {
+            cases.push((p, n));
+            golden.push(g);
+        }
+        if cases.len() == 10 {
+            break;
+        }
+    }
+    assert!(cases.len() >= 6, "not enough multi-round prompts in the stream");
+
+    let (remote, shards) = sharded_fleet(2);
+    let cfg = SchedConfig { method: "dvi".into(), max_batch: 4, max_slots: 16 };
+    let mut sched = Scheduler::new(remote, cfg, None).unwrap();
+    let ids: Vec<u64> = cases
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    // Two ticks: everything admitted (slots >= cases), shallow + deep
+    // prefill issued; every sequence still owes draft/verify rounds.
+    sched.tick().unwrap();
+    sched.tick().unwrap();
+    shards[1].kill.kill();
+    sched.run_until_idle(100_000).unwrap();
+
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "every sequence must terminate");
+    done.sort_by_key(|r| r.id);
+    let mut errs = 0usize;
+    for (r, (&id, golden)) in done.iter().zip(ids.iter().zip(&golden)) {
+        assert_eq!(r.id, id);
+        // Admission order is FIFO, so sequence i carries placement key
+        // i: even keys live on shard 0 (survives), odd on shard 1
+        // (killed).
+        let home = shard_for_key(id, 2);
+        match &r.result {
+            Ok(g) => {
+                assert_eq!(
+                    home, 0,
+                    "sequence {id} lives on the killed shard but completed \
+                     after the kill"
+                );
+                assert_eq!(
+                    &g.tokens, golden,
+                    "surviving sequence {id} diverged from in-process engine"
+                );
+            }
+            Err(_) => {
+                assert_eq!(home, 1, "sequence {id} on the live shard failed");
+                errs += 1;
+            }
+        }
+    }
+    let odd = (0..cases.len()).filter(|i| i % 2 == 1).count();
+    assert_eq!(errs, odd, "exactly the killed shard's sequences must fail");
+    let stats = &sched.stats;
+    assert_eq!(stats.served.load(Ordering::Relaxed) as usize, cases.len());
+    assert_eq!(stats.failed.load(Ordering::Relaxed) as usize, errs);
+    assert_eq!(stats.completed() as usize, cases.len() - errs);
+}
+
+/// Placement stability: a sequence's KV shard is a pure function of its
+/// placement key, descendants of a KV allocation inherit the shard, and
+/// transport chaos (with reconnects) never migrates state to another
+/// executor mid-generation.
+#[test]
+fn prop_shard_placement_stable_across_reconnects() {
+    let n = 3usize;
+    let shards: Vec<LoopbackShard> = (0..n)
+        .map(|_| {
+            spawn_loopback_shard(
+                Arc::new(Runtime::load_reference(SEED).unwrap()),
+                Some(ChaosPlan::new(7, 100)),
+            )
+        })
+        .collect();
+    let connectors = shards
+        .iter()
+        .map(|s| Box::new(s.connector.clone()) as Box<dyn Connector>)
+        .collect();
+    let rt = Runtime::load_remote_sharded_with(connectors)
+        .expect("chaotic sharded runtime");
+
+    let shard_of = |b: &Buffer| -> u32 {
+        match b {
+            Buffer::Remote(h) => h.shard,
+            other => panic!("expected a remote buffer, got {other:?}"),
+        }
+    };
+    run_prop("shard-placement-stability", 12, |rng| {
+        let key = rng.below(1 << 40);
+        let expected = shard_for_key(key, n) as u32;
+        let mut retries = 0;
+        let mut kv = loop {
+            match rt.fresh_kv_keyed("target_step", key) {
+                Ok(kv) => break kv,
+                Err(_) => retries += 1,
+            }
+            assert!(retries < 200, "chaos retry loop diverged");
+        };
+        for b in &kv {
+            assert_eq!(shard_of(b), expected, "fresh kv landed off-shard");
+        }
+        let art = rt.artifact("target_step").unwrap();
+        for pos in 0..5 {
+            loop {
+                let inputs = [Tensor::scalar_i32(7), Tensor::scalar_i32(pos)];
+                match art.call(&kv, &inputs) {
+                    Ok(out) => {
+                        kv = out.kv;
+                        break;
+                    }
+                    Err(_) => retries += 1,
+                }
+                assert!(retries < 200, "chaos retry loop diverged");
+            }
+            for b in &kv {
+                assert_eq!(
+                    shard_of(b),
+                    expected,
+                    "KV migrated shards mid-generation (key {key})"
+                );
+            }
+        }
+    });
 }
 
 /// Fairness: under randomly interleaved admission and any (max_batch,
