@@ -117,9 +117,9 @@ fn info(args: &Args) -> Result<()> {
         match s.metrics {
             Some(m) => println!(
                 "  shard {} @ {}: {} calls, occupancy {:.2}, {} buffers, \
-                 {} sessions",
+                 {} sessions, inflight {}/{} (now/max)",
                 s.shard, s.endpoint, m.calls, m.occupancy(), m.buffers,
-                m.sessions
+                m.sessions, m.inflight, m.max_inflight
             ),
             None => println!("  shard {} @ {}: UNREACHABLE", s.shard, s.endpoint),
         }
@@ -297,8 +297,10 @@ fn serve(args: &Args) -> Result<()> {
     for s in router.executor_status() {
         match s.metrics {
             Some(m) => println!(
-                "remote executor shard {} @ {}: {} buffers, {} sessions",
-                s.shard, s.endpoint, m.buffers, m.sessions
+                "remote executor shard {} @ {}: {} buffers, {} sessions, \
+                 inflight {}/{} (now/max)",
+                s.shard, s.endpoint, m.buffers, m.sessions, m.inflight,
+                m.max_inflight
             ),
             None => println!(
                 "remote executor shard {} @ {}: UNREACHABLE",

@@ -94,7 +94,8 @@ pub struct BatchItem<'a> {
 /// Executor-side serving counters, transport-neutral: in-process code
 /// reads them straight off an executor's state, and the remote wire
 /// protocol ships them in its `Metrics` reply. All counters are
-/// lifetime totals except `buffers`/`sessions`, which are live gauges.
+/// lifetime totals except `buffers`/`sessions`/`inflight`, which are
+/// live gauges.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ExecMetrics {
     /// `Call` requests served (batched and single-lane alike).
@@ -106,6 +107,15 @@ pub struct ExecMetrics {
     pub buffers: u64,
     /// Sessions with at least one live connection.
     pub sessions: u64,
+    /// Calls currently in flight on this client's connection (submitted
+    /// to the pipelined mux, reply not yet matched). Client-side gauge:
+    /// the remote backend fills it after the `Metrics` reply decodes; 0
+    /// for in-process backends.
+    pub inflight: u64,
+    /// High-water of `inflight` over the current connection's lifetime
+    /// — the realized window depth. > 1 proves calls actually
+    /// overlapped on one connection (resets on reconnect).
+    pub max_inflight: u64,
 }
 
 impl ExecMetrics {
@@ -127,6 +137,28 @@ pub struct ExecutorStatus {
     pub shard: u32,
     pub endpoint: String,
     pub metrics: Option<ExecMetrics>,
+}
+
+/// Completion handle for a batched call submitted without waiting
+/// ([`Backend::call_batched_submit`]). Waiting consumes the handle and
+/// yields per-lane results in lane order — the same shape
+/// [`Backend::call_batched_partial`] returns. Handles own everything
+/// they need (no borrows), so a caller can submit many chunks — across
+/// shards and, on a pipelined connection, within one shard's in-flight
+/// window — before draining any of them.
+pub trait BatchHandle: Send {
+    /// Block until every lane resolves.
+    fn wait(self: Box<Self>) -> Vec<Result<CallOut>>;
+}
+
+/// [`BatchHandle`] for backends that execute synchronously at submit
+/// time: the results are already in hand, `wait` just returns them.
+pub struct ReadyBatch(pub Vec<Result<CallOut>>);
+
+impl BatchHandle for ReadyBatch {
+    fn wait(self: Box<Self>) -> Vec<Result<CallOut>> {
+        self.0
+    }
 }
 
 /// Backend abstraction over artifact execution and buffer management.
@@ -184,6 +216,24 @@ pub trait Backend: Send + Sync {
         }
     }
 
+    /// Submit a batched call **without waiting** for its results: the
+    /// returned handle resolves to exactly what
+    /// [`Backend::call_batched_partial`] would have returned for the
+    /// same batch. Encoding/dispatch happens before this returns (the
+    /// borrowed batch is released), so a caller can submit several
+    /// independent chunks back-to-back and then drain the handles —
+    /// on the pipelined remote backends the chunks genuinely overlap
+    /// (across shards, and within one shard's in-flight window). The
+    /// default executes synchronously at submit time, so in-process
+    /// backends keep their exact semantics.
+    fn call_batched_submit(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Box<dyn BatchHandle> {
+        Box::new(ReadyBatch(self.call_batched_partial(spec, batch)))
+    }
+
     /// Fresh zeroed per-sequence KV buffers for an artifact's kv params.
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>>;
 
@@ -216,5 +266,14 @@ pub trait Backend: Send + Sync {
     /// per executor. Empty for in-process backends.
     fn executor_status(&self) -> Vec<ExecutorStatus> {
         Vec::new()
+    }
+
+    /// Fingerprint of the weights (and initial globals) this backend
+    /// serves, used by the remote handshake so a sharded client can
+    /// reject a fleet whose executors front divergent weights at
+    /// connect time. `None` when the backend cannot hash its weights
+    /// (shipped on the wire as 0 = unknown, which skips the check).
+    fn weights_fingerprint(&self) -> Option<u64> {
+        None
     }
 }

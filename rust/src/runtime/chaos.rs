@@ -136,4 +136,13 @@ impl Backend for FlakyBackend {
     fn executor_status(&self) -> Vec<ExecutorStatus> {
         self.inner.executor_status()
     }
+
+    fn weights_fingerprint(&self) -> Option<u64> {
+        self.inner.weights_fingerprint()
+    }
+
+    // `call_batched_submit` deliberately stays on the trait default:
+    // it routes through this wrapper's `call_batched_partial`, so the
+    // scheduler's submit path keeps the fault injection (at the cost of
+    // executing at submit time — fine for an in-process test double).
 }

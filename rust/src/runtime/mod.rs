@@ -32,7 +32,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-pub use backend::{Backend, BatchItem, Buffer, CallOut, ExecMetrics, ExecutorStatus};
+pub use backend::{
+    Backend, BatchHandle, BatchItem, Buffer, CallOut, ExecMetrics,
+    ExecutorStatus, ReadyBatch,
+};
 pub use manifest::{ArtifactSpec, Manifest, Port, Role};
 pub use reference::{ReferenceBackend, ReferenceConfig};
 pub use remote::shard::{shard_for_key, ShardedRemoteBackend};
@@ -145,6 +148,74 @@ impl Artifact {
             self.check_out(out)?;
         }
         Ok(outs)
+    }
+
+    /// Submit a batched call without waiting: the returned handle
+    /// resolves to what [`Artifact::call_batched_partial`]'s inner
+    /// vector would hold (caller bugs surface as per-lane errors).
+    /// Lanes are shape-checked here at submit time; backend outputs are
+    /// checked when the handle is drained. On the pipelined remote
+    /// backends, chunks submitted back-to-back genuinely overlap —
+    /// across shards and within one shard's in-flight window — which is
+    /// how a scheduler tick keeps the whole fleet busy.
+    pub fn call_batched_submit(&self, batch: &[BatchItem<'_>]) -> Box<dyn BatchHandle> {
+        for item in batch {
+            if let Err(e) = self.check_lane(item.kv, item.inputs) {
+                let msg = format!("{e:#}");
+                return Box::new(ReadyBatch(
+                    batch
+                        .iter()
+                        .map(|_| Err(anyhow::anyhow!("{msg}")))
+                        .collect(),
+                ));
+            }
+        }
+        Box::new(CheckedBatch {
+            inner: self.backend.call_batched_submit(&self.spec, batch),
+            n: batch.len(),
+            n_out: self.spec.outputs_with_role(Role::Out).count(),
+            n_kv: self.spec.outputs_with_role(Role::Kv).count(),
+            name: self.spec.name.clone(),
+        })
+    }
+}
+
+/// Completion handle minted by [`Artifact::call_batched_submit`]:
+/// applies the same output checks [`Artifact::call_batched`] performs,
+/// once the underlying backend handle resolves.
+struct CheckedBatch {
+    inner: Box<dyn BatchHandle>,
+    n: usize,
+    n_out: usize,
+    n_kv: usize,
+    name: String,
+}
+
+impl BatchHandle for CheckedBatch {
+    fn wait(self: Box<Self>) -> Vec<Result<CallOut>> {
+        let CheckedBatch { inner, n, n_out, n_kv, name } = *self;
+        let outs = inner.wait();
+        if outs.len() != n {
+            let msg = format!(
+                "{name}: batched backend returned {} results for {n} lanes",
+                outs.len()
+            );
+            return (0..n).map(|_| Err(anyhow::anyhow!("{msg}"))).collect();
+        }
+        outs.into_iter()
+            .map(|r| -> Result<CallOut> {
+                let out = r?;
+                if out.outputs.len() != n_out || out.kv.len() != n_kv {
+                    bail!(
+                        "{name}: backend returned {} outputs / {} kv, \
+                         manifest says {n_out} / {n_kv}",
+                        out.outputs.len(),
+                        out.kv.len()
+                    );
+                }
+                Ok(out)
+            })
+            .collect()
     }
 }
 
@@ -280,6 +351,22 @@ impl Runtime {
         Ok(Runtime::assemble_remote(Arc::new(be), info))
     }
 
+    /// [`Runtime::load_remote_with`] pinning the per-connection
+    /// in-flight window explicitly (ignoring `DVI_MUX_WINDOW`) — for
+    /// tests and benches whose determinism depends on a known window.
+    pub fn load_remote_with_window(
+        connector: Box<dyn remote::transport::Connector>,
+        window: usize,
+    ) -> Result<Runtime> {
+        let (be, info) =
+            RemoteBackend::connect_shard_windowed(connector, 0, window)?;
+        log::info(&format!(
+            "remote runtime ready (executor backend: {}, window {window})",
+            info.backend
+        ));
+        Ok(Runtime::assemble_remote(Arc::new(be), info))
+    }
+
     /// Sharded remote runtime over a list of executor addresses — the
     /// explicit form of `load_remote("h1:p1,h2:p2")`.
     pub fn load_remote_sharded(addrs: &[&str]) -> Result<Runtime> {
@@ -339,6 +426,16 @@ impl Runtime {
     pub fn load_remote_loopback(seed: u64) -> Result<Runtime> {
         let server = Arc::new(Runtime::load_reference(seed)?);
         Runtime::load_remote_with(Box::new(remote::server::spawn_loopback(server)))
+    }
+
+    /// [`Runtime::load_remote_loopback`] with an explicit per-connection
+    /// in-flight window (`window = 1` restores the strict
+    /// request/response discipline; the serial-vs-pipelined bench in
+    /// `benches/remote_overhead.rs` compares the two).
+    pub fn load_remote_loopback_windowed(seed: u64, window: usize) -> Result<Runtime> {
+        let server = Arc::new(Runtime::load_reference(seed)?);
+        let connector = remote::server::spawn_loopback(server);
+        Runtime::load_remote_with_window(Box::new(connector), window)
     }
 
     /// [`Runtime::load_remote_loopback`] with deterministic fault
@@ -487,6 +584,14 @@ impl Runtime {
     /// `Metrics` counters when reachable.
     pub fn executor_status(&self) -> Vec<ExecutorStatus> {
         self.backend.executor_status()
+    }
+
+    /// Fingerprint of the weights (and initial globals) this runtime's
+    /// backend serves; carried in the executor handshake so sharded
+    /// clients can reject fleets with divergent weights at connect
+    /// time. `None` when the backend cannot hash its weights.
+    pub fn weights_fingerprint(&self) -> Option<u64> {
+        self.backend.weights_fingerprint()
     }
 
     /// Reset a global buffer back to its initial value (used to re-init

@@ -44,6 +44,11 @@ pub struct PjrtBackend {
     globals: RwLock<BTreeMap<String, (Arc<PjRtBuffer>, DType, Vec<usize>)>>,
     /// Host copies of weights (for buffer re-init, e.g. LoRA reset).
     pub host_weights: WeightMap,
+    /// Fingerprint of `host_weights`, hashed once at load — the remote
+    /// handshake asks for it on every connection, and re-hashing real
+    /// model weights per handshake would cost seconds on the
+    /// executor's connection thread.
+    fingerprint: u64,
 }
 
 impl PjrtBackend {
@@ -126,6 +131,7 @@ impl PjrtBackend {
             weight_bufs.len(),
             t0.elapsed().as_secs_f64()
         ));
+        let fingerprint = weights::fingerprint_weights(&host_weights);
         Ok((
             manifest,
             chosen,
@@ -135,6 +141,7 @@ impl PjrtBackend {
                 weights: weight_bufs,
                 globals: RwLock::new(globals),
                 host_weights,
+                fingerprint,
             },
         ))
     }
@@ -152,6 +159,13 @@ impl PjrtBackend {
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn weights_fingerprint(&self) -> Option<u64> {
+        // The host copies are what got uploaded, so the load-time hash
+        // speaks for the device state (globals included — weights.bin
+        // carries their initial values too).
+        Some(self.fingerprint)
     }
 
     /// Assemble the PJRT argument list in manifest (= HLO parameter)

@@ -122,6 +122,11 @@ pub struct ReferenceBackend {
     eagle: EagleW,
     globals: RwLock<BTreeMap<String, Tensor>>,
     init_globals: BTreeMap<String, Tensor>,
+    /// Fingerprint of every weight tensor + the initial globals,
+    /// computed once at construction; carried in the remote executor
+    /// handshake so a sharded fleet with divergent weights is rejected
+    /// at connect time (same seed + config ⇒ same fingerprint).
+    fingerprint: u64,
 }
 
 impl ReferenceBackend {
@@ -188,6 +193,46 @@ impl ReferenceBackend {
         }
         let globals = RwLock::new(init_globals.clone());
 
+        let fingerprint = {
+            use crate::runtime::weights::Fnv64;
+            let mut h = Fnv64::new();
+            for (tag, m) in [("target", &target), ("drafter", &drafter)] {
+                h.str(tag);
+                h.f32s(&m.embed);
+                h.u64(m.layers.len() as u64);
+                for l in &m.layers {
+                    for w in [
+                        &l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w2,
+                        &l.rms_attn, &l.rms_mlp,
+                    ] {
+                        h.f32s(w);
+                    }
+                }
+                h.f32s(&m.final_norm);
+                h.f32s(&m.lm_head);
+            }
+            h.str("medusa");
+            h.u64(medusa.len() as u64);
+            for head in &medusa {
+                h.f32s(&head.u);
+                h.f32s(&head.w);
+            }
+            h.str("hydra");
+            for w in [&hydra.w0, &hydra.ws, &hydra.we, &hydra.w] {
+                h.f32s(w);
+            }
+            h.str("eagle");
+            h.f32s(&eagle.w1);
+            h.f32s(&eagle.w2);
+            h.str("globals");
+            h.u64(init_globals.len() as u64);
+            for (name, t) in &init_globals {
+                h.str(name);
+                h.tensor(t);
+            }
+            h.finish()
+        };
+
         Ok(ReferenceBackend {
             cfg,
             target,
@@ -197,6 +242,7 @@ impl ReferenceBackend {
             eagle,
             globals,
             init_globals,
+            fingerprint,
         })
     }
 
@@ -686,6 +732,10 @@ impl ReferenceBackend {
 impl Backend for ReferenceBackend {
     fn name(&self) -> &'static str {
         "reference"
+    }
+
+    fn weights_fingerprint(&self) -> Option<u64> {
+        Some(self.fingerprint)
     }
 
     fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])

@@ -9,19 +9,37 @@
 //! `call_batched` ships only the small per-call inputs — the seam that
 //! sharding and multi-host serving build on.
 //!
+//! ## Pipelining (protocol v3)
+//!
+//! Each connection is fronted by a [`mux::MuxConn`]: a persistent
+//! writer/reader worker pair, a pending-call table keyed by **call id**,
+//! and a bounded in-flight **window** ([`mux::DEFAULT_WINDOW`] calls,
+//! `DVI_MUX_WINDOW` to override; 1 restores the strict request/response
+//! discipline of v2). [`RemoteBackend::submit_lanes`] — surfaced
+//! through [`crate::runtime::Backend::call_batched_submit`] — issues a
+//! call and returns a completion handle without waiting, so independent
+//! chunks overlap on one connection and a sharded tick keeps every
+//! shard's pipe full. Replies are matched to callers by id and may
+//! arrive out of order.
+//!
 //! ## Failure semantics (what the scheduler sees)
 //!
 //! * Execution is **at-most-once**: a call is sent exactly once; if the
 //!   transport dies before the reply arrives, the call returns `Err`
 //!   and is never replayed (replaying could double-apply a `train_step`
-//!   global update). The scheduler maps that `Err` onto its existing
-//!   per-chunk `fail_lane` path, so one dropped connection costs one
-//!   chunk of lanes — never a wedged tick.
-//! * Reconnect is **lazy and bounded**: the dead transport is marked
+//!   global update). Under pipelining the same rule is per call: a
+//!   failed send fails exactly the call it was carrying, a dead
+//!   transport fails exactly the calls in flight on it, and a
+//!   `Reply::Err` resolves only the call it answers. The scheduler maps
+//!   each failed lane onto its existing `fail_lane` path, so one
+//!   dropped connection costs its in-flight calls — never a wedged
+//!   tick.
+//! * Reconnect is **lazy and bounded**: the dead connection is marked
 //!   unusable; the *next* call dials again (up to
-//!   [`RECONNECT_ATTEMPTS`] times, with a version re-handshake). The
-//!   executor's buffer table is shared across a session's connections,
-//!   so surviving sequences keep their KV and decode bitwise-identically
+//!   [`RECONNECT_ATTEMPTS`] times, with a version re-handshake that
+//!   also re-checks the executor's weights fingerprint). The executor's
+//!   buffer table is shared across a session's connections, so
+//!   surviving sequences keep their KV and decode bitwise-identically
 //!   after a reconnect (`tests/remote.rs`, `tests/sched.rs`).
 //! * Semantic errors (unknown artifact, bad shapes) come back as
 //!   `Reply::Err` on a healthy connection and do not tear it down.
@@ -33,35 +51,41 @@
 //! everything the session still owns when its last connection closes —
 //! so a client that dies without sending its frees cannot leak executor
 //! buffer-table entries. To keep KV alive across a *reconnect* (same
-//! session, new connection), the dead transport is retained as a zombie
-//! until the replacement has completed its handshake — as long as the
-//! *server* has not observed the old connection close, the session's
-//! live-connection count never touches zero. That is deterministic for
-//! client-side failures (the loopback/chaos suite, a send that errored
-//! locally); if the server observed the drop first — a real TCP
-//! RST/partition — the session ends, its buffers are freed, and the
-//! resident sequences fail cleanly on their next call (the scheduler's
-//! `fail_lane` absorbs them; serving continues). Bounded state was
-//! chosen over best-effort KV survival for server-observed drops.
+//! session, new connection), the dead connection is retained as a
+//! zombie — its mux writer worker **parks** the transport's send half
+//! instead of dropping it — until the replacement has completed its
+//! handshake: as long as the *server* has not observed the old
+//! connection close, the session's live-connection count never touches
+//! zero. That is deterministic for client-side failures (the
+//! loopback/chaos suite, a send that errored locally); if the server
+//! observed the drop first — a real TCP RST/partition — the session
+//! ends, its buffers are freed, and the resident sequences fail cleanly
+//! on their next call (the scheduler's `fail_lane` absorbs them;
+//! serving continues). Bounded state was chosen over best-effort KV
+//! survival for server-observed drops.
 //!
 //! [`shard::ShardedRemoteBackend`] fans the same seam out across N
 //! executors; each [`RemoteHandle`] carries the shard that owns it.
 
+pub mod mux;
 pub mod proto;
 pub mod server;
 pub mod shard;
 pub mod transport;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::runtime::backend::{
-    Backend, BatchItem, Buffer, CallOut, ExecutorStatus,
+    Backend, BatchHandle, BatchItem, Buffer, CallOut, ExecutorStatus,
+    ReadyBatch,
 };
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::{DType, Tensor};
 
+use self::mux::{env_window, CallHandle, MuxConn};
 use self::proto::{BufInfo, ExecMetrics, HelloInfo, Lane, Msg, Reply, VERSION};
 use self::transport::{Connector, Transport};
 
@@ -72,7 +96,6 @@ pub const RECONNECT_ATTEMPTS: u32 = 3;
 /// processes sharing an executor) mixed with a counter (distinct across
 /// backends within one process).
 fn mint_session_id() -> u64 {
-    use std::sync::atomic::{AtomicU64, Ordering};
     static COUNTER: AtomicU64 = AtomicU64::new(1);
     let nanos = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -114,16 +137,135 @@ impl std::fmt::Debug for RemoteHandle {
     }
 }
 
-/// Connection slot: the live transport plus, during a reconnect, the
-/// previous (dead) transport held as a **zombie**. Keeping the zombie
-/// until a replacement connection has completed its handshake means the
-/// executor never sees this session's connection count reach zero
-/// mid-reconnect — so session-owned KV survives (the executor frees a
-/// session's buffers only when its *last* connection closes).
+/// Rehydrate a server-minted buffer descriptor into a client handle.
+fn mint_handle(
+    freelist: &Arc<Mutex<Vec<u64>>>,
+    shard: u32,
+    info: BufInfo,
+) -> Buffer {
+    Buffer::Remote(Arc::new(RemoteHandle {
+        id: info.id,
+        shard,
+        dtype: info.dtype,
+        shape: info.shape,
+        freelist: freelist.clone(),
+    }))
+}
+
+/// Map a raw mux completion onto call semantics: `Reply::Err` is a
+/// semantic per-call error (connection stays up), a transport `Err`
+/// already failed only the calls it belonged to.
+fn finish(reply: Result<Reply>) -> Result<Reply> {
+    match reply {
+        Ok(Reply::Err(e)) => bail!("remote executor: {e}"),
+        Ok(reply) => Ok(reply),
+        Err(e) => Err(e.context("transport failure (connection dropped)")),
+    }
+}
+
+/// Connection slot: the live pipelined connection plus, during a
+/// reconnect, the previous (dead) one held as a **zombie**. Keeping the
+/// zombie until a replacement connection has completed its handshake
+/// means the executor never sees this session's connection count reach
+/// zero mid-reconnect — so session-owned KV survives (the executor
+/// frees a session's buffers only when its *last* connection closes).
+/// The zombie's mux writer parks the transport's send half for exactly
+/// this reason (see [`mux`]).
 #[derive(Default)]
 struct ConnSlot {
-    live: Option<Box<dyn Transport>>,
-    zombie: Option<Box<dyn Transport>>,
+    live: Option<Arc<MuxConn>>,
+    zombie: Option<Arc<MuxConn>>,
+}
+
+/// Completion handle for one submitted lane call
+/// ([`RemoteBackend::submit_lanes`]): owns everything needed to decode
+/// the reply into [`CallOut`]s (no borrows), so callers can hold many
+/// of these across shards and drain them as executors finish.
+pub struct LanesFuture {
+    spec_name: String,
+    n: usize,
+    shard: u32,
+    freelist: Arc<Mutex<Vec<u64>>>,
+    /// Free-list ids this call is carrying; requeued if the frame may
+    /// never have reached the executor (transport failure), *not* on a
+    /// semantic `Reply::Err` (the executor processed the frees).
+    frees: Vec<u64>,
+    sub: Result<CallHandle>,
+}
+
+impl LanesFuture {
+    /// Block until the call resolves; per-lane results in lane order.
+    pub fn wait_lanes(self) -> Vec<Result<CallOut>> {
+        let LanesFuture { spec_name, n, shard, freelist, frees, sub } = self;
+        let all_err = |msg: String| -> Vec<Result<CallOut>> {
+            (0..n).map(|_| Err(anyhow!("{spec_name}: {msg}"))).collect()
+        };
+        let requeue = |frees: Vec<u64>| {
+            if !frees.is_empty() {
+                freelist.lock().unwrap().extend(frees);
+            }
+        };
+        let handle = match sub {
+            Ok(h) => h,
+            Err(e) => {
+                // Never submitted: the frees never left this client.
+                requeue(frees);
+                return all_err(format!("{e:#}"));
+            }
+        };
+        match handle.wait() {
+            Err(e) => {
+                // Transport failure: the frame may never have arrived,
+                // so release the ids with a later message. (If it did
+                // arrive, the re-free is an idempotent no-op.)
+                requeue(frees);
+                all_err(format!(
+                    "{:#}",
+                    e.context("transport failure (connection dropped)")
+                ))
+            }
+            Ok(Reply::Err(e)) => all_err(format!("remote executor: {e}")),
+            Ok(Reply::Lanes(outs)) => {
+                if outs.len() != n {
+                    return all_err(format!(
+                        "executor returned {} lanes for {n}",
+                        outs.len()
+                    ));
+                }
+                outs.into_iter()
+                    .map(|lane| {
+                        Ok(CallOut {
+                            outputs: lane.outputs,
+                            kv: lane
+                                .kv
+                                .into_iter()
+                                .map(|b| mint_handle(&freelist, shard, b))
+                                .collect(),
+                        })
+                    })
+                    .collect()
+            }
+            Ok(_) => all_err("unexpected reply to batched call".to_string()),
+        }
+    }
+}
+
+impl BatchHandle for LanesFuture {
+    fn wait(self: Box<Self>) -> Vec<Result<CallOut>> {
+        (*self).wait_lanes()
+    }
+}
+
+/// Completion handle for a submitted non-`Call` request (broadcasts,
+/// metrics): resolves to the mapped reply.
+pub(crate) struct MsgFuture {
+    sub: Result<CallHandle>,
+}
+
+impl MsgFuture {
+    pub(crate) fn wait(self) -> Result<Reply> {
+        finish(self.sub?.wait())
+    }
 }
 
 pub struct RemoteBackend {
@@ -135,8 +277,15 @@ pub struct RemoteBackend {
     /// Session identity presented in every handshake; stable across
     /// reconnects, so the executor can scope buffer ownership to it.
     session: u64,
+    /// In-flight window per connection (>= 1; 1 = serial discipline).
+    window: usize,
     conn: Mutex<ConnSlot>,
     freelist: Arc<Mutex<Vec<u64>>>,
+    /// Executor weights fingerprint learned at connect time (0 =
+    /// unknown); re-checked on every reconnect handshake so a restarted
+    /// executor with different weights cannot silently resume the
+    /// session.
+    expected_hash: AtomicU64,
 }
 
 impl RemoteBackend {
@@ -149,27 +298,41 @@ impl RemoteBackend {
 
     /// [`RemoteBackend::connect`] tagging every minted handle with
     /// `shard` — used by the sharded client so buffers know which
-    /// executor owns them.
+    /// executor owns them. The in-flight window comes from
+    /// `DVI_MUX_WINDOW` (default [`mux::DEFAULT_WINDOW`]).
     pub fn connect_shard(
         connector: Box<dyn Connector>,
         shard: u32,
     ) -> Result<(RemoteBackend, HelloInfo)> {
+        RemoteBackend::connect_shard_windowed(connector, shard, env_window()?)
+    }
+
+    /// [`RemoteBackend::connect_shard`] with an explicit in-flight
+    /// window (benches compare serial `window = 1` against pipelined).
+    pub fn connect_shard_windowed(
+        connector: Box<dyn Connector>,
+        shard: u32,
+        window: usize,
+    ) -> Result<(RemoteBackend, HelloInfo)> {
+        ensure!(window >= 1, "mux window must be >= 1, got {window}");
         let be = RemoteBackend {
             connector,
             shard,
             session: mint_session_id(),
+            window,
             conn: Mutex::new(ConnSlot::default()),
             freelist: Arc::new(Mutex::new(Vec::new())),
+            expected_hash: AtomicU64::new(0),
         };
-        let reply = be.roundtrip(&Msg::Hello {
-            version: VERSION,
-            want_manifest: true,
-            session: be.session,
-        })?;
-        let Reply::Hello { backend, manifest_json: Some(doc) } = reply else {
-            bail!("executor handshake did not include a manifest");
-        };
-        let info = proto::parse_hello(&be.connector.endpoint(), backend, &doc)?;
+        let (conn, backend, manifest_json, weights_hash) =
+            be.dial_handshake(true)?;
+        be.conn.lock().unwrap().live = Some(Arc::new(conn));
+        be.expected_hash.store(weights_hash, Ordering::Relaxed);
+        let doc = manifest_json
+            .context("executor handshake did not include a manifest")?;
+        let mut info =
+            proto::parse_hello(&be.connector.endpoint(), backend, &doc)?;
+        info.weights_hash = weights_hash;
         Ok((be, info))
     }
 
@@ -178,28 +341,63 @@ impl RemoteBackend {
         self.connector.endpoint()
     }
 
-    /// Dial + version handshake (manifest skipped on reconnects).
-    fn dial(&self) -> Result<Box<dyn Transport>> {
+    /// Dial + untagged version handshake (manifest skipped on
+    /// reconnects), then split the transport and start the mux worker
+    /// pair. Also verifies the executor still fronts the weights this
+    /// session first connected to.
+    fn dial_handshake(
+        &self,
+        want_manifest: bool,
+    ) -> Result<(MuxConn, String, Option<String>, u64)> {
+        let hello = Msg::Hello {
+            version: VERSION,
+            want_manifest,
+            session: self.session,
+        };
         let mut last: Option<anyhow::Error> = None;
         for _ in 0..RECONNECT_ATTEMPTS {
-            let attempt = (|| -> Result<Box<dyn Transport>> {
+            // Only transport-level faults (dial, send, recv, undecodable
+            // reply) are retried; once the executor *answers*, its
+            // verdict is final — a rejection or fingerprint mismatch
+            // would only repeat, and retrying it would mislabel an
+            // explicit refusal as "unreachable".
+            let attempt = (|| -> Result<(Box<dyn Transport>, Reply)> {
                 let mut t = self.connector.connect()?;
-                let hello = Msg::Hello {
-                    version: VERSION,
-                    want_manifest: false,
-                    session: self.session,
-                };
                 t.send(&hello.encode())?;
-                match Reply::decode(&t.recv()?)? {
-                    Reply::Hello { .. } => Ok(t),
-                    Reply::Err(e) => bail!("executor rejected handshake: {e}"),
-                    _ => bail!("unexpected handshake reply"),
-                }
+                let reply = Reply::decode(&t.recv()?)?;
+                Ok((t, reply))
             })();
-            match attempt {
-                Ok(t) => return Ok(t),
-                Err(e) => last = Some(e),
-            }
+            let (t, reply) = match attempt {
+                Ok(x) => x,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            return match reply {
+                Reply::Hello { backend, manifest_json, weights_hash } => {
+                    let expected = self.expected_hash.load(Ordering::Relaxed);
+                    ensure!(
+                        expected == 0
+                            || weights_hash == 0
+                            || expected == weights_hash,
+                        "executor at {} now serves different weights \
+                         (fingerprint {weights_hash:#018x}, session expects \
+                         {expected:#018x}) — refusing to resume the session \
+                         on it",
+                        self.connector.endpoint()
+                    );
+                    let (tx, rx) = t.split()?;
+                    Ok((
+                        MuxConn::start(tx, rx, self.window),
+                        backend,
+                        manifest_json,
+                        weights_hash,
+                    ))
+                }
+                Reply::Err(e) => Err(anyhow!("executor rejected handshake: {e}")),
+                _ => Err(anyhow!("unexpected handshake reply")),
+            };
         }
         Err(last.expect("at least one dial attempt")).with_context(|| {
             format!(
@@ -209,64 +407,111 @@ impl RemoteBackend {
         })
     }
 
-    /// One request/response. At-most-once: a transport failure marks
-    /// the connection dead and surfaces as `Err` without resending. The
-    /// dead transport is parked as a zombie until the next successful
-    /// dial completes its handshake, keeping the server-side session
-    /// (and its buffers) alive across the gap.
-    fn roundtrip(&self, msg: &Msg) -> Result<Reply> {
+    /// The live pipelined connection, lazily (re)dialed. A dead
+    /// connection is parked as a zombie — its parked send half keeps
+    /// the server-side session alive — until the replacement has
+    /// handshaken; a dial failure keeps the zombie for the next try.
+    fn mux(&self) -> Result<Arc<MuxConn>> {
         let mut slot = self.conn.lock().unwrap();
-        if slot.live.is_none() {
-            // A dial failure keeps the zombie: the session should stay
-            // open server-side while this client is alive and retrying.
-            slot.live = Some(self.dial()?);
-            // The replacement has handshaken (the server counted it), so
-            // the old connection can close without ending the session.
-            slot.zombie = None;
-        }
-        let t = slot.live.as_mut().expect("connection just established");
-        let attempt = (|| -> Result<Reply> {
-            t.send(&msg.encode())?;
-            Reply::decode(&t.recv()?)
-        })();
-        match attempt {
-            Ok(Reply::Err(e)) => bail!("remote executor: {e}"),
-            Ok(reply) => Ok(reply),
-            Err(e) => {
-                slot.zombie = slot.live.take(); // park; next call re-dials
-                Err(e.context("transport failure (connection dropped)"))
+        if let Some(live) = &slot.live {
+            if !live.is_dead() {
+                return Ok(live.clone());
             }
+            slot.zombie = slot.live.take();
+        }
+        let (conn, _, _, _) = self.dial_handshake(false)?;
+        let conn = Arc::new(conn);
+        slot.live = Some(conn.clone());
+        // The replacement has handshaken (the server counted it), so
+        // the old connection can close without ending the session.
+        slot.zombie = None;
+        Ok(conn)
+    }
+
+    /// Submit one request to the pipelined connection; completion
+    /// handle returned immediately. At-most-once: a failed call is
+    /// never re-sent by this layer.
+    fn submit(&self, msg: &Msg) -> Result<CallHandle> {
+        self.mux()?.submit(msg)
+    }
+
+    /// One request/response (submission + blocking wait).
+    fn roundtrip(&self, msg: &Msg) -> Result<Reply> {
+        finish(self.submit(msg)?.wait())
+    }
+
+    /// Submit a non-`Call` request without waiting (the sharded client
+    /// broadcasts globals updates to every shard concurrently).
+    pub(crate) fn submit_msg(&self, msg: &Msg) -> MsgFuture {
+        MsgFuture { sub: self.submit(msg) }
+    }
+
+    /// A [`LanesFuture`] that was never submitted: every lane resolves
+    /// to `err`. Keeps submission paths total when lane assembly fails.
+    pub(crate) fn submit_lanes_poisoned(
+        &self,
+        spec: &ArtifactSpec,
+        n: usize,
+        err: anyhow::Error,
+    ) -> LanesFuture {
+        LanesFuture {
+            spec_name: spec.name.clone(),
+            n,
+            shard: self.shard,
+            freelist: self.freelist.clone(),
+            frees: Vec::new(),
+            sub: Err(err),
+        }
+    }
+
+    /// Submit a lane call without waiting. The returned future owns its
+    /// decode context, so many calls can be in flight per connection
+    /// (bounded by the window) and across shards.
+    pub fn submit_lanes(
+        &self,
+        spec: &ArtifactSpec,
+        lanes: Vec<Lane>,
+    ) -> LanesFuture {
+        let n = lanes.len();
+        let frees = self.drain_frees();
+        let msg = Msg::Call {
+            artifact: spec.name.clone(),
+            frees: frees.clone(),
+            lanes,
+        };
+        LanesFuture {
+            spec_name: spec.name.clone(),
+            n,
+            shard: self.shard,
+            freelist: self.freelist.clone(),
+            frees,
+            sub: self.submit(&msg),
         }
     }
 
     /// Fetch the executor's serving counters (occupancy, buffer-table
-    /// size, live sessions).
+    /// size, live sessions), plus this connection's realized window
+    /// depth (`inflight` / `max_inflight` — client-side gauges the
+    /// wire reply cannot know).
     pub fn metrics(&self) -> Result<ExecMetrics> {
-        match self.roundtrip(&Msg::Metrics)? {
-            Reply::Metrics(m) => Ok(m),
+        let mut m = match self.roundtrip(&Msg::Metrics)? {
+            Reply::Metrics(m) => m,
             _ => bail!("unexpected reply to metrics"),
+        };
+        let slot = self.conn.lock().unwrap();
+        if let Some(live) = &slot.live {
+            m.inflight = live.inflight();
+            m.max_inflight = live.max_inflight();
         }
+        Ok(m)
     }
 
     fn drain_frees(&self) -> Vec<u64> {
         std::mem::take(&mut *self.freelist.lock().unwrap())
     }
 
-    /// Re-queue frees whose carrying message never reached the server.
-    fn requeue_frees(&self, frees: Vec<u64>) {
-        if !frees.is_empty() {
-            self.freelist.lock().unwrap().extend(frees);
-        }
-    }
-
     fn handle(&self, info: BufInfo) -> Buffer {
-        Buffer::Remote(Arc::new(RemoteHandle {
-            id: info.id,
-            shard: self.shard,
-            dtype: info.dtype,
-            shape: info.shape,
-            freelist: self.freelist.clone(),
-        }))
+        mint_handle(&self.freelist, self.shard, info)
     }
 
     fn kv_ids(&self, kv: &[Buffer]) -> Result<Vec<u64>> {
@@ -287,35 +532,25 @@ impl RemoteBackend {
             .collect()
     }
 
-    /// Shared body of `call` / `call_batched`.
+    /// One [`BatchItem`] as a wire lane: KV handles resolved to this
+    /// executor's buffer ids plus the per-call host inputs. The single
+    /// place the item→lane mapping lives (single-shard and sharded
+    /// submission paths both route through it).
+    pub(crate) fn assemble_lane(&self, item: &BatchItem<'_>) -> Result<Lane> {
+        Ok(Lane {
+            kv: self.kv_ids(item.kv)?,
+            inputs: item.inputs.to_vec(),
+        })
+    }
+
+    fn assemble_lanes(&self, batch: &[BatchItem<'_>]) -> Result<Vec<Lane>> {
+        batch.iter().map(|item| self.assemble_lane(item)).collect()
+    }
+
+    /// Shared body of `call` / `call_batched`: submit + wait, first
+    /// lane error wins.
     fn call_lanes(&self, spec: &ArtifactSpec, lanes: Vec<Lane>) -> Result<Vec<CallOut>> {
-        let n = lanes.len();
-        let frees = self.drain_frees();
-        let msg = Msg::Call { artifact: spec.name.clone(), frees, lanes };
-        let reply = match self.roundtrip(&msg) {
-            Ok(r) => r,
-            Err(e) => {
-                // The free-list never reached the executor; release the
-                // ids with a later message instead of leaking them.
-                if let Msg::Call { frees, .. } = msg {
-                    self.requeue_frees(frees);
-                }
-                return Err(e);
-            }
-        };
-        let Reply::Lanes(outs) = reply else {
-            bail!("{}: unexpected reply to batched call", spec.name);
-        };
-        if outs.len() != n {
-            bail!("{}: executor returned {} lanes for {n}", spec.name, outs.len());
-        }
-        Ok(outs
-            .into_iter()
-            .map(|lane| CallOut {
-                outputs: lane.outputs,
-                kv: lane.kv.into_iter().map(|b| self.handle(b)).collect(),
-            })
-            .collect())
+        self.submit_lanes(spec, lanes).wait_lanes().into_iter().collect()
     }
 }
 
@@ -327,7 +562,7 @@ impl Backend for RemoteBackend {
     fn call(&self, spec: &ArtifactSpec, kv: &[Buffer], inputs: &[Tensor])
         -> Result<CallOut>
     {
-        let lane = Lane { kv: self.kv_ids(kv)?, inputs: inputs.to_vec() };
+        let lane = self.assemble_lane(&BatchItem { kv, inputs })?;
         let mut outs = self.call_lanes(spec, vec![lane])?;
         Ok(outs.pop().expect("lane count checked"))
     }
@@ -337,16 +572,31 @@ impl Backend for RemoteBackend {
         spec: &ArtifactSpec,
         batch: &[BatchItem<'_>],
     ) -> Result<Vec<CallOut>> {
-        let lanes = batch
-            .iter()
-            .map(|item| {
-                Ok(Lane {
-                    kv: self.kv_ids(item.kv)?,
-                    inputs: item.inputs.to_vec(),
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        self.call_lanes(spec, lanes)
+        self.call_lanes(spec, self.assemble_lanes(batch)?)
+    }
+
+    fn call_batched_partial(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Vec<Result<CallOut>> {
+        self.call_batched_submit(spec, batch).wait()
+    }
+
+    fn call_batched_submit(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Box<dyn BatchHandle> {
+        match self.assemble_lanes(batch) {
+            Ok(lanes) => Box::new(self.submit_lanes(spec, lanes)),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                Box::new(ReadyBatch(
+                    batch.iter().map(|_| Err(anyhow!("{msg}"))).collect(),
+                ))
+            }
+        }
     }
 
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
@@ -414,5 +664,10 @@ impl Backend for RemoteBackend {
             endpoint: self.endpoint(),
             metrics: self.metrics().ok(),
         }]
+    }
+
+    fn weights_fingerprint(&self) -> Option<u64> {
+        let h = self.expected_hash.load(Ordering::Relaxed);
+        (h != 0).then_some(h)
     }
 }

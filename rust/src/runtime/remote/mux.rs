@@ -1,0 +1,573 @@
+//! Pipelined multiplexed RPC runtime (protocol v3) — the client half of
+//! the call-id seam.
+//!
+//! One [`MuxConn`] owns one handshaken connection and runs a persistent
+//! **writer/reader worker pair** for it (replacing the per-chunk
+//! `std::thread::scope` churn the sharded client used to pay on the
+//! serving hot path):
+//!
+//! * [`MuxConn::submit`] encodes a request, tags it with a fresh call
+//!   id, and hands it to the writer worker — returning a [`CallHandle`]
+//!   immediately. Up to `window` calls may be in flight at once;
+//!   submission blocks (briefly — the window drains as replies land)
+//!   when the window is full, which is the backpressure that bounds
+//!   per-connection client state and executor queue depth.
+//! * the **writer** worker drains the submission queue onto the
+//!   transport's send half. A failed send resolves *exactly the call it
+//!   was carrying* and then kills the connection (every other in-flight
+//!   call fails as "in flight when the transport died" — at-most-once,
+//!   nothing is ever replayed). The dead send half is deliberately
+//!   **parked**, not dropped: the server must not observe this
+//!   connection closing until a replacement has handshaken, or it would
+//!   reap the session (and its KV) mid-reconnect.
+//! * the **reader** worker blocks in `recv`, untags each reply, and
+//!   resolves the matching entry of the **pending-call table** — by
+//!   call id, so replies may arrive in any order. A reply for an id
+//!   that is no longer pending (a call failed by chaos whose reply
+//!   straggled in) is dropped on the floor. A recv failure kills the
+//!   connection and fails everything still pending.
+//!
+//! Failure is scoped by design: `Reply::Err` resolves only its own
+//! call (semantic errors don't tear the connection down), a send fault
+//! fails only the call being sent plus whatever was genuinely in
+//! flight, and the next submission after a kill gets an immediate error
+//! so the owning backend can lazily re-dial. The connection-level
+//! `inflight` / `max_inflight` gauges feed
+//! [`crate::runtime::backend::ExecMetrics`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::proto::{self, Msg, Reply};
+use super::transport::{FrameRx, FrameTx};
+
+/// Default in-flight window per connection. Deep enough that a
+/// scheduler tick's chunks overlap on one executor, small enough that a
+/// slow shard backpressures the client instead of buffering a tick's
+/// worth of tensors. Override with `DVI_MUX_WINDOW` (>= 1; 1 restores
+/// the strict request/response discipline of protocol v2).
+pub const DEFAULT_WINDOW: usize = 8;
+
+/// The configured window: `DVI_MUX_WINDOW` or [`DEFAULT_WINDOW`].
+/// A set-but-invalid value (unparseable, or 0 — there is no "off"; use
+/// 1 for the serial discipline) is an error, not a silent fallback:
+/// a misconfigured fleet should fail at connect time, matching the
+/// explicit-window API's validation.
+pub fn env_window() -> Result<usize> {
+    match std::env::var("DVI_MUX_WINDOW") {
+        Ok(s) if !s.is_empty() => {
+            let w: usize = s
+                .parse()
+                .map_err(|_| anyhow!("bad DVI_MUX_WINDOW='{s}' (want an integer >= 1)"))?;
+            ensure!(
+                w >= 1,
+                "DVI_MUX_WINDOW must be >= 1 (got 0); use 1 for the \
+                 strict request/response discipline"
+            );
+            Ok(w)
+        }
+        _ => Ok(DEFAULT_WINDOW),
+    }
+}
+
+/// One call's completion cell: filled exactly once (by the reader, the
+/// writer's send-failure path, or the kill path), consumed by
+/// [`CallHandle::wait`].
+struct CallCell {
+    slot: Mutex<Option<Result<Reply>>>,
+    cv: Condvar,
+}
+
+impl CallCell {
+    fn new() -> CallCell {
+        CallCell { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn fill(&self, r: Result<Reply>) {
+        let mut g = self.slot.lock().unwrap();
+        // First resolution wins; late stragglers are dropped.
+        if g.is_none() {
+            *g = Some(r);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Completion handle for one submitted call. `wait` blocks until the
+/// reader matches the reply (or the call fails) and yields the **raw**
+/// reply — mapping `Reply::Err` to an error is the owning backend's
+/// job, because only it knows the call's semantics (e.g. requeueing the
+/// free-list a failed `Call` was carrying).
+pub struct CallHandle {
+    cell: Arc<CallCell>,
+}
+
+impl CallHandle {
+    pub fn wait(self) -> Result<Reply> {
+        let mut g = self.cell.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.cell.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Pending-call table + window accounting, shared by submitters and the
+/// two workers. One mutex covers both: resolving a call frees a window
+/// slot, so they change together.
+struct MuxState {
+    pending: HashMap<u64, Arc<CallCell>>,
+    /// In-flight calls (window slots in use).
+    used: usize,
+    /// Why the connection died; `Some` refuses new submissions.
+    dead: Option<String>,
+}
+
+struct MuxShared {
+    state: Mutex<MuxState>,
+    /// Signals window-full submitters (slot freed or connection died).
+    cv: Condvar,
+    /// High-water of `used` over this connection's lifetime.
+    max_inflight: AtomicU64,
+}
+
+impl MuxShared {
+    /// Resolve one pending call, freeing its window slot. Unknown ids
+    /// (already failed; straggler reply) are ignored.
+    fn resolve(&self, id: u64, r: Result<Reply>) {
+        let cell = {
+            let mut st = self.state.lock().unwrap();
+            match st.pending.remove(&id) {
+                Some(cell) => {
+                    st.used -= 1;
+                    self.cv.notify_all();
+                    cell
+                }
+                None => return,
+            }
+        };
+        cell.fill(r);
+    }
+
+    /// Kill the connection: refuse new submissions and fail every call
+    /// still in flight (at-most-once — they are never replayed).
+    fn kill(&self, reason: &str) {
+        let cells: Vec<(u64, Arc<CallCell>)> = {
+            let mut st = self.state.lock().unwrap();
+            if st.dead.is_some() {
+                return; // first death wins
+            }
+            st.dead = Some(reason.to_string());
+            st.used = 0;
+            self.cv.notify_all();
+            st.pending.drain().collect()
+        };
+        for (id, cell) in cells {
+            cell.fill(Err(anyhow!(
+                "transport failure (connection dropped with call #{id} in \
+                 flight): {reason}"
+            )));
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        self.state.lock().unwrap().dead.is_some()
+    }
+
+    fn dead_reason(&self) -> Option<String> {
+        self.state.lock().unwrap().dead.clone()
+    }
+}
+
+/// A frame queued for the writer worker.
+struct Outbound {
+    id: u64,
+    frame: Vec<u8>,
+}
+
+/// One pipelined connection: submission queue, pending-call table,
+/// bounded window, and the persistent writer/reader worker pair.
+/// Dropping the last handle closes the submission queue, which lets the
+/// writer exit and release the transport — only then does the server
+/// observe the connection close (session-lifetime ordering).
+pub struct MuxConn {
+    /// Submission queue into the writer worker. Behind a mutex so the
+    /// connection is `Sync` on every toolchain (`mpsc::Sender` only
+    /// became `Sync` recently); contention is submitter-vs-submitter
+    /// and the critical section is one channel push.
+    tx: Mutex<Sender<Outbound>>,
+    shared: Arc<MuxShared>,
+    next_id: AtomicU64,
+    window: usize,
+}
+
+impl MuxConn {
+    /// Spin up the worker pair over an already-handshaken connection's
+    /// split halves. `window` >= 1 bounds the in-flight calls.
+    pub fn start(
+        tx_half: Box<dyn FrameTx>,
+        rx_half: Box<dyn FrameRx>,
+        window: usize,
+    ) -> MuxConn {
+        assert!(window >= 1, "mux window must be >= 1");
+        let shared = Arc::new(MuxShared {
+            state: Mutex::new(MuxState {
+                pending: HashMap::new(),
+                used: 0,
+                dead: None,
+            }),
+            cv: Condvar::new(),
+            max_inflight: AtomicU64::new(0),
+        });
+        let (tx, out_rx) = channel::<Outbound>();
+        let w_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("dvi-mux-writer".into())
+            .spawn(move || writer_loop(tx_half, out_rx, w_shared))
+            .expect("spawning mux writer worker");
+        let r_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("dvi-mux-reader".into())
+            .spawn(move || reader_loop(rx_half, r_shared))
+            .expect("spawning mux reader worker");
+        MuxConn { tx: Mutex::new(tx), shared, next_id: AtomicU64::new(1), window }
+    }
+
+    /// Submit one request; returns its completion handle. Blocks while
+    /// the in-flight window is full; errors immediately once the
+    /// connection is dead (the owner should re-dial).
+    pub fn submit(&self, msg: &Msg) -> Result<CallHandle> {
+        let cell = Arc::new(CallCell::new());
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            loop {
+                if let Some(reason) = &st.dead {
+                    bail!("connection dead: {reason}");
+                }
+                if st.used < self.window {
+                    break;
+                }
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            st.used += 1;
+            self.shared
+                .max_inflight
+                .fetch_max(st.used as u64, Ordering::Relaxed);
+            st.pending.insert(id, cell.clone());
+        }
+        let frame = msg.encode_tagged(id);
+        if self.tx.lock().unwrap().send(Outbound { id, frame }).is_err() {
+            // Writer gone: the connection died between the window check
+            // and the enqueue. The frame was never sent (at-most-once).
+            self.shared.resolve(id, Err(anyhow!("connection closed")));
+            bail!("connection dead: submission queue closed");
+        }
+        Ok(CallHandle { cell })
+    }
+
+    /// True once a transport fault killed this connection (new
+    /// submissions are refused; the owner should re-dial).
+    pub fn is_dead(&self) -> bool {
+        self.shared.is_dead()
+    }
+
+    /// Calls currently in flight (window slots in use).
+    pub fn inflight(&self) -> u64 {
+        self.shared.state.lock().unwrap().used as u64
+    }
+
+    /// High-water of [`MuxConn::inflight`] over this connection's
+    /// lifetime — the realized pipelining depth.
+    pub fn max_inflight(&self) -> u64 {
+        self.shared.max_inflight.load(Ordering::Relaxed)
+    }
+
+    /// The configured window (for status lines).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+/// Writer worker: drain the submission queue onto the send half. On a
+/// send failure, fail exactly the call being carried, kill the
+/// connection, and then keep draining (failing) until every `MuxConn`
+/// handle is gone — *holding the send half open the whole time*, so the
+/// server cannot observe this connection closing (and reap the session)
+/// before a replacement connection has handshaken.
+fn writer_loop(
+    mut tx_half: Box<dyn FrameTx>,
+    out_rx: Receiver<Outbound>,
+    shared: Arc<MuxShared>,
+) {
+    // Once the connection dies (our own send fault, or the reader's
+    // recv fault), queued frames are failed instead of sent — nobody
+    // would read their replies. The dead-check is **best-effort**, not
+    // a guarantee: a reader-side kill can race a send already past the
+    // check, so a call failed by the kill may still reach (and execute
+    // on) the executor — the same server-side ambiguity as a lost
+    // reply. What IS guaranteed is at-most-once: this layer never sends
+    // a frame twice, so a failed call is failed, not retried, and its
+    // only possible server-side residue is orphaned minted buffers
+    // (reclaimed at session end) or, for a broadcast, a fork the caller
+    // is told to treat as fatal.
+    let mut parked: Option<String> = None;
+    while let Ok(out) = out_rx.recv() {
+        if parked.is_none() {
+            parked = shared.dead_reason();
+        }
+        if let Some(reason) = &parked {
+            shared
+                .resolve(out.id, Err(anyhow!("connection dead: {reason}")));
+            continue;
+        }
+        if let Err(e) = tx_half.send(&out.frame) {
+            let reason = format!("send failed: {e:#}");
+            // This call's frame never reached the executor; everything
+            // else in flight dies with the connection (at-most-once).
+            shared.resolve(out.id, Err(anyhow!("{reason}")));
+            shared.kill(&reason);
+            parked = Some(reason);
+        }
+    }
+    // Submission queue closed (every MuxConn handle dropped): teardown.
+    // Only now does the send half drop — a parked (dead) connection
+    // holds it open until the owner has a handshaken replacement, so
+    // the server never sees the session's connection count dip to zero
+    // mid-reconnect.
+}
+
+/// Reader worker: match tagged replies to pending calls by id. Any
+/// framing violation or recv failure kills the connection.
+fn reader_loop(mut rx_half: Box<dyn FrameRx>, shared: Arc<MuxShared>) {
+    loop {
+        let frame = match rx_half.recv() {
+            Ok(f) => f,
+            Err(e) => {
+                shared.kill(&format!("recv failed: {e:#}"));
+                return;
+            }
+        };
+        let (id, payload) = match proto::untag(&frame) {
+            Ok(x) => x,
+            Err(e) => {
+                shared.kill(&format!("malformed reply frame: {e:#}"));
+                return;
+            }
+        };
+        match Reply::decode(payload) {
+            Ok(reply) => shared.resolve(id, Ok(reply)),
+            Err(e) => {
+                // An undecodable reply means the streams have lost
+                // framing sync — no later reply can be trusted.
+                shared.kill(&format!("malformed reply for call #{id}: {e:#}"));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::Tensor;
+    use std::time::Duration;
+
+    /// Scripted send half: counts frames and forwards the observed
+    /// (id, payload) pairs to the test.
+    struct ScriptTx {
+        seen: Sender<(u64, Vec<u8>)>,
+        fail_after: usize,
+        sent: usize,
+    }
+
+    impl FrameTx for ScriptTx {
+        fn send(&mut self, frame: &[u8]) -> Result<()> {
+            if self.sent >= self.fail_after {
+                bail!("scripted send failure");
+            }
+            self.sent += 1;
+            let (id, payload) = proto::untag(frame)?;
+            let _ = self.seen.send((id, payload.to_vec()));
+            Ok(())
+        }
+    }
+
+    /// Scripted recv half: a sequence of thunks, each either producing
+    /// a frame (possibly after waiting on the sent-frame channel) or an
+    /// error. After the script, every recv errors (connection over).
+    struct ScriptRx {
+        frames: Receiver<Vec<u8>>,
+    }
+
+    impl FrameRx for ScriptRx {
+        fn recv(&mut self) -> Result<Vec<u8>> {
+            self.frames
+                .recv()
+                .map_err(|_| anyhow!("scripted transport closed"))
+        }
+    }
+
+    fn reply_scalar(v: f32) -> Reply {
+        Reply::Tensor(Tensor::scalar_f32(v))
+    }
+
+    /// Replies delivered in REVERSE submission order must still resolve
+    /// each handle with its own call's payload — matching is by call
+    /// id, not arrival order.
+    #[test]
+    fn out_of_order_replies_match_by_call_id() {
+        let (seen_tx, seen_rx) = channel();
+        let (frame_tx, frame_rx) = channel::<Vec<u8>>();
+        let conn = MuxConn::start(
+            Box::new(ScriptTx { seen: seen_tx, fail_after: usize::MAX, sent: 0 }),
+            Box::new(ScriptRx { frames: frame_rx }),
+            4,
+        );
+        let h1 = conn.submit(&Msg::ReadGlobal { name: "a".into() }).unwrap();
+        let h2 = conn.submit(&Msg::ReadGlobal { name: "b".into() }).unwrap();
+        let h3 = conn.submit(&Msg::ReadGlobal { name: "c".into() }).unwrap();
+        // Wait until the writer delivered all three requests, recording
+        // their ids; submission order assigns ascending ids.
+        let ids: Vec<u64> = (0..3).map(|_| seen_rx.recv().unwrap().0).collect();
+        assert_eq!(ids.len(), 3);
+        assert!(ids[0] < ids[1] && ids[1] < ids[2], "ids must ascend");
+        // Window filled to 3 while nothing had resolved.
+        assert_eq!(conn.inflight(), 3);
+        assert_eq!(conn.max_inflight(), 3);
+        // Deliver replies 3, 1, 2 — fully out of order.
+        for (id, v) in [(ids[2], 3.0f32), (ids[0], 1.0), (ids[1], 2.0)] {
+            frame_tx.send(proto::tag(id, &reply_scalar(v).encode())).unwrap();
+        }
+        let got1 = h1.wait().unwrap();
+        let got2 = h2.wait().unwrap();
+        let got3 = h3.wait().unwrap();
+        assert_eq!(got1, reply_scalar(1.0), "call 1 got someone else's reply");
+        assert_eq!(got2, reply_scalar(2.0), "call 2 got someone else's reply");
+        assert_eq!(got3, reply_scalar(3.0), "call 3 got someone else's reply");
+        assert_eq!(conn.inflight(), 0, "window must drain as replies match");
+        assert_eq!(conn.max_inflight(), 3);
+    }
+
+    /// A reply that never arrives fails exactly its own call when the
+    /// connection dies; calls whose replies landed first are untouched.
+    #[test]
+    fn dropped_reply_fails_exactly_one_call() {
+        let (seen_tx, seen_rx) = channel();
+        let (frame_tx, frame_rx) = channel::<Vec<u8>>();
+        let conn = MuxConn::start(
+            Box::new(ScriptTx { seen: seen_tx, fail_after: usize::MAX, sent: 0 }),
+            Box::new(ScriptRx { frames: frame_rx }),
+            4,
+        );
+        let dropped = conn.submit(&Msg::ReadGlobal { name: "a".into() }).unwrap();
+        let answered = conn.submit(&Msg::ReadGlobal { name: "b".into() }).unwrap();
+        let ids: Vec<u64> = (0..2).map(|_| seen_rx.recv().unwrap().0).collect();
+        // The second call's reply arrives; the first call's is dropped
+        // by the network, then the connection dies (scripted EOF).
+        frame_tx
+            .send(proto::tag(ids[1], &reply_scalar(2.0).encode()))
+            .unwrap();
+        let got = answered.wait().unwrap();
+        assert_eq!(got, reply_scalar(2.0));
+        drop(frame_tx); // EOF → reader kills the connection
+        let err = dropped.wait().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("in flight"),
+            "dropped call must fail as in-flight on a dead transport: {msg}"
+        );
+        assert!(conn.is_dead());
+        // New submissions are refused — the owner must re-dial.
+        assert!(conn.submit(&Msg::Metrics).is_err());
+        assert_eq!(conn.inflight(), 0);
+    }
+
+    /// A send failure resolves the call it was carrying and kills the
+    /// connection; a call whose reply already landed is unaffected.
+    #[test]
+    fn send_failure_fails_the_carried_call() {
+        let (seen_tx, seen_rx) = channel();
+        let (frame_tx, frame_rx) = channel::<Vec<u8>>();
+        let conn = MuxConn::start(
+            Box::new(ScriptTx { seen: seen_tx, fail_after: 1, sent: 0 }),
+            Box::new(ScriptRx { frames: frame_rx }),
+            4,
+        );
+        let ok = conn.submit(&Msg::ReadGlobal { name: "a".into() }).unwrap();
+        let (id, _) = seen_rx.recv().unwrap();
+        frame_tx.send(proto::tag(id, &reply_scalar(1.0).encode())).unwrap();
+        assert_eq!(ok.wait().unwrap(), reply_scalar(1.0));
+        // Second send is scripted to fail.
+        let doomed = conn.submit(&Msg::ReadGlobal { name: "b".into() }).unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(format!("{err:#}").contains("send failed"), "{err:#}");
+        assert!(conn.is_dead());
+    }
+
+    /// A straggler reply for an id that already failed must be ignored,
+    /// not corrupt the window accounting or a later call.
+    #[test]
+    fn straggler_replies_are_ignored() {
+        let (seen_tx, seen_rx) = channel();
+        let (frame_tx, frame_rx) = channel::<Vec<u8>>();
+        let conn = MuxConn::start(
+            Box::new(ScriptTx { seen: seen_tx, fail_after: usize::MAX, sent: 0 }),
+            Box::new(ScriptRx { frames: frame_rx }),
+            2,
+        );
+        let h = conn.submit(&Msg::Metrics).unwrap();
+        let (id, _) = seen_rx.recv().unwrap();
+        // A reply for a never-issued id, then the real one.
+        frame_tx
+            .send(proto::tag(id + 1000, &reply_scalar(9.0).encode()))
+            .unwrap();
+        frame_tx.send(proto::tag(id, &reply_scalar(1.0).encode())).unwrap();
+        assert_eq!(h.wait().unwrap(), reply_scalar(1.0));
+        assert_eq!(conn.inflight(), 0);
+        // Give the reader a beat to process the straggler before
+        // checking it did not poison the connection.
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(!conn.is_dead());
+    }
+
+    /// The window blocks the (window+1)-th submission until a slot
+    /// frees — bounded in-flight state, not an unbounded queue.
+    #[test]
+    fn window_bounds_inflight_submissions() {
+        let (seen_tx, seen_rx) = channel();
+        let (frame_tx, frame_rx) = channel::<Vec<u8>>();
+        let conn = Arc::new(MuxConn::start(
+            Box::new(ScriptTx { seen: seen_tx, fail_after: usize::MAX, sent: 0 }),
+            Box::new(ScriptRx { frames: frame_rx }),
+            2,
+        ));
+        let _h1 = conn.submit(&Msg::Metrics).unwrap();
+        let _h2 = conn.submit(&Msg::Metrics).unwrap();
+        assert_eq!(conn.inflight(), 2);
+        // Third submission must block until one reply lands.
+        let c2 = conn.clone();
+        let (done_tx, done_rx) = channel();
+        std::thread::spawn(move || {
+            let h3 = c2.submit(&Msg::Metrics).unwrap();
+            done_tx.send(()).unwrap();
+            let _ = h3.wait();
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "third submission went through a full window"
+        );
+        let (id, _) = seen_rx.recv().unwrap();
+        frame_tx.send(proto::tag(id, &reply_scalar(0.0).encode())).unwrap();
+        done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("freed slot must unblock the submitter");
+        assert_eq!(conn.max_inflight(), 2, "window cap must hold");
+    }
+}

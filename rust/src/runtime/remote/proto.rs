@@ -1,5 +1,5 @@
 //! Dependency-free length-prefixed wire protocol for the remote
-//! executor (`DVIR` v1).
+//! executor (`DVIR` v3, pipelined).
 //!
 //! Every message is one frame: a `u32` little-endian payload length
 //! followed by the payload; the payload's first byte is an opcode tag.
@@ -8,13 +8,32 @@
 //! invariant the scheduler tests assert survives the transport by
 //! construction, not by tolerance.
 //!
+//! ## v3 framing: negotiate untagged, then pipeline by call id
+//!
+//! The **first** frame each way on a connection is an *untagged*
+//! `Hello` / `Hello`-reply pair — its wire layout is shared with v2, so
+//! a version mismatch is detected in-band and answered with a clean
+//! `Reply::Err` instead of a framing error (mixed v2/v3 fleets are
+//! rejected at connect time, not mid-decode). Every frame **after** a
+//! successful v3 handshake is tagged: an 8-byte little-endian
+//! **call id** ([`tag`] / [`untag`]) precedes the opcode payload.
+//! Requests carry ids minted by the client; each reply echoes the id of
+//! the request it answers. Ids are what make the connection
+//! *multiplexed*: many calls can be in flight at once (bounded by the
+//! client's window) and replies are matched to callers by id, so they
+//! may legally arrive out of order.
+//!
 //! The protocol covers exactly the [`crate::runtime::Backend`] seam:
 //!
 //! * `Hello` — version handshake carrying the client's **session id**
 //!   (stable across reconnects of one client; the executor scopes
 //!   buffer ownership to it, freeing everything a session owns when its
-//!   last connection closes). Optionally returns the executor's
-//!   manifest/prompts/vocabulary as one JSON document
+//!   last connection closes). The reply carries the executor's
+//!   **weights fingerprint** (hash of loaded weights + initial globals;
+//!   0 = unknown), so a sharded client can reject a fleet whose
+//!   executors front divergent weights at connect time instead of
+//!   waiting for a train-step drift check. Optionally returns the
+//!   executor's manifest/prompts/vocabulary as one JSON document
 //!   ([`hello_json`] / [`HelloInfo`]), so a client [`crate::runtime::Runtime`]
 //!   can be constructed from nothing but a connection.
 //! * `Call` — `call`/`call_batched` unified as a lane list. Per-sequence
@@ -41,17 +60,41 @@ use crate::workload::{PromptSample, PromptSet};
 
 /// Protocol version; bumped on any wire-format change.
 /// v2: `Hello` carries the client session id; `Metrics` added.
+/// v3: pipelined multiplexing — every post-handshake frame is prefixed
+/// with a `u64` call id; the `Hello` reply carries the executor's
+/// weights fingerprint.
 ///
-/// Versions are not wire-compatible with each other: a frame-layout
-/// change (like v2's wider `Hello`) makes a cross-version handshake
-/// fail as a malformed/trailing-bytes frame rather than reaching the
-/// in-band version check. Client and executor ship from the same tree,
-/// so mixed-version fleets are not supported — the error is opaque but
-/// the situation is operator error by construction.
-pub const VERSION: u32 = 2;
+/// The `Hello` request's wire layout is **stable across v2/v3**, so the
+/// version check happens in-band: a v2 peer dialing a v3 executor (or
+/// vice versa) gets a clean `Reply::Err` naming both versions, before
+/// any tagged frame is exchanged. Everything after the handshake is
+/// version-specific and never reached by a rejected peer.
+pub const VERSION: u32 = 3;
 
 /// Upper bound on a single frame, guarding a corrupted length prefix.
 pub const MAX_FRAME: usize = 256 << 20;
+
+/// Prefix `payload` with its call id — the v3 post-handshake framing.
+/// (Hot paths use [`Msg::encode_tagged`] / [`Reply::encode_tagged`],
+/// which write the id into the same buffer as the payload instead of
+/// re-copying an already-encoded frame.)
+pub fn tag(call_id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(8 + payload.len());
+    frame.extend_from_slice(&call_id.to_le_bytes());
+    frame.extend_from_slice(payload);
+    frame
+}
+
+/// Split a tagged frame into its call id and opcode payload.
+pub fn untag(frame: &[u8]) -> Result<(u64, &[u8])> {
+    ensure!(
+        frame.len() >= 8,
+        "tagged frame too short ({} bytes; want >= 8 for the call id)",
+        frame.len()
+    );
+    let id = u64::from_le_bytes(frame[..8].try_into().unwrap());
+    Ok((id, &frame[8..]))
+}
 
 // Opcode tags (request space < 128, reply space >= 128).
 const OP_HELLO: u8 = 1;
@@ -120,7 +163,10 @@ pub enum Msg {
 /// Server → client messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
-    Hello { backend: String, manifest_json: Option<String> },
+    /// Handshake reply. `weights_hash` fingerprints the executor's
+    /// loaded weights + initial globals (0 = backend cannot hash); the
+    /// sharded client rejects fleets whose fingerprints differ.
+    Hello { backend: String, manifest_json: Option<String>, weights_hash: u64 },
     Lanes(Vec<LaneOut>),
     Buffers(Vec<BufInfo>),
     Tensor(Tensor),
@@ -340,6 +386,21 @@ impl<'a> Dec<'a> {
 impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::default();
+        self.encode_body(&mut e);
+        e.0
+    }
+
+    /// Encode with the v3 call-id prefix written into the same buffer
+    /// — one allocation, no re-copy of the payload (tensors can be
+    /// large; this is the per-request hot path).
+    pub fn encode_tagged(&self, call_id: u64) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u64(call_id);
+        self.encode_body(&mut e);
+        e.0
+    }
+
+    fn encode_body(&self, e: &mut Enc) {
         match self {
             Msg::Hello { version, want_manifest, session } => {
                 e.u8(OP_HELLO);
@@ -390,7 +451,6 @@ impl Msg {
             }
             Msg::Metrics => e.u8(OP_METRICS),
         }
-        e.0
     }
 
     pub fn decode(frame: &[u8]) -> Result<Msg> {
@@ -438,8 +498,21 @@ impl Msg {
 impl Reply {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::default();
+        self.encode_body(&mut e);
+        e.0
+    }
+
+    /// Tagged single-buffer encode; see [`Msg::encode_tagged`].
+    pub fn encode_tagged(&self, call_id: u64) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u64(call_id);
+        self.encode_body(&mut e);
+        e.0
+    }
+
+    fn encode_body(&self, e: &mut Enc) {
         match self {
-            Reply::Hello { backend, manifest_json } => {
+            Reply::Hello { backend, manifest_json, weights_hash } => {
                 e.u8(RE_HELLO);
                 e.str(backend);
                 match manifest_json {
@@ -449,6 +522,7 @@ impl Reply {
                     }
                     None => e.u8(0),
                 }
+                e.u64(*weights_hash);
             }
             Reply::Lanes(lanes) => {
                 e.u8(RE_LANES);
@@ -472,6 +546,10 @@ impl Reply {
                 e.str(msg);
             }
             Reply::Metrics(m) => {
+                // `inflight` / `max_inflight` are deliberately not
+                // wire-carried: the in-flight window is a property of
+                // the *client's* connection, filled in client-side by
+                // the mux after this reply decodes.
                 e.u8(RE_METRICS);
                 e.u64(m.calls);
                 e.u64(m.lanes);
@@ -479,7 +557,6 @@ impl Reply {
                 e.u64(m.sessions);
             }
         }
-        e.0
     }
 
     pub fn decode(frame: &[u8]) -> Result<Reply> {
@@ -492,7 +569,8 @@ impl Reply {
                 } else {
                     None
                 };
-                Reply::Hello { backend, manifest_json }
+                let weights_hash = d.u64()?;
+                Reply::Hello { backend, manifest_json, weights_hash }
             }
             RE_LANES => {
                 // outputs count (4) + kv count (4) is the smallest lane.
@@ -516,6 +594,7 @@ impl Reply {
                 lanes: d.u64()?,
                 buffers: d.u64()?,
                 sessions: d.u64()?,
+                ..ExecMetrics::default()
             }),
             op => bail!("unknown reply opcode {op}"),
         };
@@ -535,6 +614,8 @@ pub struct HelloInfo {
     pub manifest: Manifest,
     pub prompts: BTreeMap<String, PromptSet>,
     pub vocab: Option<Vec<String>>,
+    /// Executor's weights fingerprint from the handshake (0 = unknown).
+    pub weights_hash: u64,
 }
 
 fn sample_to_json(s: &PromptSample) -> Json {
@@ -622,7 +703,7 @@ pub fn parse_hello(origin: &str, backend: String, text: &str) -> Result<HelloInf
         ),
         _ => None,
     };
-    Ok(HelloInfo { backend, manifest, prompts, vocab })
+    Ok(HelloInfo { backend, manifest, prompts, vocab, weights_hash: 0 })
 }
 
 #[cfg(test)]
@@ -682,8 +763,13 @@ mod tests {
         roundtrip_reply(Reply::Hello {
             backend: "reference".into(),
             manifest_json: Some("{\"a\":1}".into()),
+            weights_hash: 0x00C0_FFEE_D00D_F00D,
         });
-        roundtrip_reply(Reply::Hello { backend: "pjrt".into(), manifest_json: None });
+        roundtrip_reply(Reply::Hello {
+            backend: "pjrt".into(),
+            manifest_json: None,
+            weights_hash: 0,
+        });
         roundtrip_reply(Reply::Lanes(vec![LaneOut {
             outputs: vec![Tensor::f32(vec![2], vec![1.5e-39, -0.0])],
             kv: vec![BufInfo { id: 5, dtype: DType::F32, shape: vec![2, 4] }],
@@ -694,19 +780,47 @@ mod tests {
         roundtrip_reply(Reply::Tensor(Tensor::scalar_f32(2.5)));
         roundtrip_reply(Reply::Unit);
         roundtrip_reply(Reply::Err("boom".into()));
+        // The window-depth gauges are client-filled, not wire-carried,
+        // so only the zeroed form roundtrips.
         roundtrip_reply(Reply::Metrics(ExecMetrics {
             calls: 12,
             lanes: 96,
             buffers: 7,
             sessions: 2,
+            ..ExecMetrics::default()
         }));
     }
 
     #[test]
     fn exec_metrics_occupancy() {
-        let m = ExecMetrics { calls: 4, lanes: 10, buffers: 0, sessions: 1 };
+        let m = ExecMetrics {
+            calls: 4,
+            lanes: 10,
+            buffers: 0,
+            sessions: 1,
+            ..ExecMetrics::default()
+        };
         assert!((m.occupancy() - 2.5).abs() < 1e-12);
         assert_eq!(ExecMetrics::default().occupancy(), 0.0);
+    }
+
+    #[test]
+    fn tagged_frames_roundtrip_and_reject_runts() {
+        let payload = Msg::Metrics.encode();
+        let frame = tag(0xABCD_EF01_2345_6789, &payload);
+        let (id, body) = untag(&frame).unwrap();
+        assert_eq!(id, 0xABCD_EF01_2345_6789);
+        assert_eq!(body, &payload[..]);
+        assert!(matches!(Msg::decode(body).unwrap(), Msg::Metrics));
+        // The single-buffer hot-path encode produces identical bytes.
+        assert_eq!(Msg::Metrics.encode_tagged(0xABCD_EF01_2345_6789), frame);
+        let r = Reply::Unit;
+        assert_eq!(r.encode_tagged(7), tag(7, &r.encode()));
+        // An empty payload is legal framing (the codec rejects it later).
+        let (id, body) = untag(&tag(7, &[])).unwrap();
+        assert_eq!((id, body.len()), (7, 0));
+        // A frame shorter than the id prefix is a protocol violation.
+        assert!(untag(&[1, 2, 3]).is_err());
     }
 
     #[test]

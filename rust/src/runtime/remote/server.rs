@@ -2,6 +2,21 @@
 //! [`crate::runtime::Backend`] (reference or PJRT) over a framed
 //! transport.
 //!
+//! Protocol v3 connection lifecycle: the first frame each way is the
+//! **untagged** `Hello` exchange — the version check happens there,
+//! in-band (a v2 peer gets a clean `Reply::Err` naming both versions,
+//! because the `Hello` request layout is shared across v2/v3), and the
+//! reply carries the executor's weights fingerprint. After a
+//! successful handshake the transport is split: the connection thread
+//! decodes **call-id-tagged** requests and executes them in arrival
+//! order, handing each `(call_id, reply)` to a writer worker that
+//! sends tagged replies as they complete — so reply serialization
+//! overlaps the next request's execution, and a pipelining client can
+//! keep several calls in flight on one connection. Errors are scoped
+//! by id: a malformed or semantically invalid request gets a tagged
+//! `Reply::Err` and the connection stays up; only transport failures
+//! (or framing loss) tear it down.
+//!
 //! State model: one **shared buffer table** per server, not per
 //! connection, with every entry **owned by the session** (client) that
 //! allocated it. Sessions are identified by the client-minted id in the
@@ -47,7 +62,9 @@ use crate::runtime::backend::{BatchItem, Buffer};
 use crate::runtime::manifest::Role;
 use crate::runtime::{log, Runtime};
 
-use super::proto::{hello_json, BufInfo, ExecMetrics, LaneOut, Msg, Reply, VERSION};
+use super::proto::{
+    self, hello_json, BufInfo, ExecMetrics, LaneOut, Msg, Reply, VERSION,
+};
 use super::transport::{
     ChaosPlan, KillSwitch, LoopbackConnector, LoopbackTransport, TcpTransport,
     Transport,
@@ -182,11 +199,14 @@ impl ExecutorState {
     }
 
     fn metrics(&self) -> ExecMetrics {
+        // `inflight` / `max_inflight` stay default (0): the window is a
+        // client-connection property the client overlays after decode.
         ExecMetrics {
             calls: self.stats.calls.load(Ordering::Relaxed),
             lanes: self.stats.lanes.load(Ordering::Relaxed),
             buffers: self.table.len() as u64,
             sessions: self.live_sessions() as u64,
+            ..ExecMetrics::default()
         }
     }
 }
@@ -194,6 +214,19 @@ impl ExecutorState {
 impl Default for ExecutorState {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Build the handshake reply: backend name, (optionally) the manifest
+/// document, and the fingerprint of the weights this executor fronts
+/// (0 when the backend cannot hash them).
+fn hello_reply(rt: &Runtime, want_manifest: bool) -> Reply {
+    let manifest_json = want_manifest
+        .then(|| hello_json(&rt.manifest, &rt.prompts, rt.vocab.as_deref()));
+    Reply::Hello {
+        backend: rt.backend_name().to_string(),
+        manifest_json,
+        weights_hash: rt.weights_fingerprint().unwrap_or(0),
     }
 }
 
@@ -208,18 +241,16 @@ fn execute(
 ) -> Result<Reply> {
     let table = &state.table;
     match msg {
+        // A tagged re-Hello on an established connection is legal (and
+        // answered in place); the version was already checked by the
+        // untagged negotiation, but stays checked here for the tests
+        // that drive `execute` directly.
         Msg::Hello { version, want_manifest, session: _ } => {
             anyhow::ensure!(
                 version == VERSION,
                 "protocol version mismatch: client {version}, server {VERSION}"
             );
-            let manifest_json = want_manifest.then(|| {
-                hello_json(&rt.manifest, &rt.prompts, rt.vocab.as_deref())
-            });
-            Ok(Reply::Hello {
-                backend: rt.backend_name().to_string(),
-                manifest_json,
-            })
+            Ok(hello_reply(rt, want_manifest))
         }
         Msg::Call { artifact, frees, lanes } => {
             table.free(&frees);
@@ -291,63 +322,133 @@ fn execute(
     }
 }
 
-/// Serve one connection until the peer hangs up. Request errors are
-/// answered with `Reply::Err`; only a transport failure returns. On any
-/// exit, the connection is unregistered from its session — and if it
-/// was the session's last, the session's buffers are freed.
+/// Serve one connection until the peer hangs up.
+///
+/// Phase 1 (untagged): the first frame must be a `Hello`; a version
+/// mismatch or a non-`Hello` first frame is answered with an untagged
+/// `Reply::Err` and the connection closes — no session is opened, no
+/// tagged frame is ever exchanged with an incompatible peer.
+///
+/// Phase 2 (tagged, pipelined): requests are decoded by call id and
+/// executed in arrival order; tagged replies go through a writer worker
+/// so sending overlaps the next request's execution. Request errors are
+/// answered with a tagged `Reply::Err`; only transport failures (or
+/// framing loss) return. On any exit, the connection is unregistered
+/// from its session — and if it was the session's last, the session's
+/// buffers are freed.
 pub fn serve_connection(
     rt: &Runtime,
     state: &ExecutorState,
-    transport: &mut dyn Transport,
+    mut transport: Box<dyn Transport>,
 ) -> Result<()> {
-    let mut session: Option<u64> = None;
-    let result = (|| -> Result<()> {
-        loop {
-            let frame = match transport.recv() {
-                Ok(f) => f,
-                Err(_) => return Ok(()), // peer gone: normal teardown
-            };
-            let reply = match Msg::decode(&frame) {
-                Ok(msg) => {
-                    if let Msg::Hello { version, session: s, .. } = &msg {
-                        if *version == VERSION && session.is_none() {
-                            state.open_session(*s);
-                            session = Some(*s);
-                        }
+    // ---- phase 1: untagged version negotiation --------------------------
+    let first = match transport.recv() {
+        Ok(f) => f,
+        Err(_) => return Ok(()), // peer gone before the handshake
+    };
+    let (version, want_manifest, session) = match Msg::decode(&first) {
+        Ok(Msg::Hello { version, want_manifest, session }) => {
+            (version, want_manifest, session)
+        }
+        Ok(_) => {
+            let err =
+                Reply::Err("handshake required before any other request".into());
+            let _ = transport.send(&err.encode());
+            return Ok(());
+        }
+        Err(e) => {
+            let err = Reply::Err(format!("malformed handshake: {e:#}"));
+            let _ = transport.send(&err.encode());
+            return Ok(());
+        }
+    };
+    if version != VERSION {
+        // The Hello layout is stable across v2/v3, so a mixed-version
+        // peer lands here and gets a clean in-band rejection.
+        let err = Reply::Err(format!(
+            "protocol version mismatch: client {version}, server {VERSION}"
+        ));
+        let _ = transport.send(&err.encode());
+        return Ok(());
+    }
+    state.open_session(session);
+    if let Err(e) = transport.send(&hello_reply(rt, want_manifest).encode()) {
+        state.close_session(session);
+        return Err(e.context("sending handshake reply"));
+    }
+
+    // ---- phase 2: pipelined tagged dispatch -----------------------------
+    let halves = transport.split();
+    let (mut tx, mut rx) = match halves {
+        Ok(h) => h,
+        Err(e) => {
+            state.close_session(session);
+            return Err(e.context("splitting executor transport"));
+        }
+    };
+    // Set by the writer the moment a reply proves undeliverable, so the
+    // dispatch loop stops *executing* a lost client's pipelined backlog
+    // (up to a full window of requests could already be in the pipe).
+    let client_lost = AtomicBool::new(false);
+    let client_lost = &client_lost;
+    let result = std::thread::scope(|scope| -> Result<()> {
+        let (reply_tx, reply_rx) =
+            std::sync::mpsc::channel::<(u64, Reply)>();
+        let writer = scope.spawn(move || -> Result<()> {
+            while let Ok((id, reply)) = reply_rx.recv() {
+                if let Err(e) = tx.send(&reply.encode_tagged(id)) {
+                    client_lost.store(true, Ordering::Relaxed);
+                    // The reply never reached the client, so any buffer
+                    // ids it minted are unreachable — the client can
+                    // never name them in a free-list. Reclaim them (and
+                    // everything queued behind them); otherwise a
+                    // session that survives the reconnect (zombie-
+                    // parked client) would carry the orphans until it
+                    // ends.
+                    free_minted(state, &reply);
+                    while let Ok((_, queued)) = reply_rx.recv() {
+                        free_minted(state, &queued);
                     }
-                    // A Hello always reaches execute (so a version
-                    // mismatch gets its real error); anything else
-                    // needs the session that buffer ownership hangs on.
-                    let owner = match (&msg, session) {
-                        (Msg::Hello { .. }, s) => Some(s.unwrap_or(0)),
-                        (_, s) => s,
-                    };
-                    match owner {
-                        None => Reply::Err(
-                            "handshake required before any other request".into(),
-                        ),
-                        Some(owner) => match execute(rt, state, owner, msg) {
+                    return Err(
+                        e.context("sending reply (client connection lost)")
+                    );
+                }
+            }
+            Ok(())
+        });
+        loop {
+            let frame = match rx.recv() {
+                Ok(f) => f,
+                Err(_) => break, // peer gone: normal teardown
+            };
+            if client_lost.load(Ordering::Relaxed) {
+                break; // writer hit an undeliverable reply: stop executing
+            }
+            let (id, reply) = match proto::untag(&frame) {
+                Ok((id, payload)) => {
+                    let reply = match Msg::decode(payload) {
+                        Ok(msg) => match execute(rt, state, session, msg) {
                             Ok(reply) => reply,
                             Err(e) => Reply::Err(format!("{e:#}")),
                         },
-                    }
+                        Err(e) => {
+                            Reply::Err(format!("malformed request: {e:#}"))
+                        }
+                    };
+                    (id, reply)
                 }
-                Err(e) => Reply::Err(format!("malformed request: {e:#}")),
+                // An untaggable frame means framing sync is lost; no
+                // later frame on this connection can be trusted.
+                Err(_) => break,
             };
-            if let Err(e) = transport.send(&reply.encode()) {
-                // The reply never reached the client, so any buffer ids
-                // it minted are unreachable — the client can never name
-                // them in a free-list. Reclaim them now; otherwise a
-                // session that survives the reconnect (zombie-parked
-                // client) would carry the orphans until it ends.
-                free_minted(state, &reply);
-                return Err(e.context("sending reply (client connection lost)"));
+            if reply_tx.send((id, reply)).is_err() {
+                break; // writer exited before any reply failed
             }
         }
-    })();
-    if let Some(s) = session {
-        state.close_session(s);
-    }
+        drop(reply_tx);
+        writer.join().expect("executor writer worker panicked")
+    });
+    state.close_session(session);
     result
 }
 
@@ -391,8 +492,8 @@ pub fn serve_tcp(
                 std::thread::Builder::new()
                     .name("dvi-executor-conn".into())
                     .spawn(move || {
-                        let mut t = TcpTransport::new(stream);
-                        if let Err(e) = serve_connection(&rt, &state, &mut t) {
+                        let t = Box::new(TcpTransport::new(stream));
+                        if let Err(e) = serve_connection(&rt, &state, t) {
                             log::info(&format!("executor: {peer} dropped: {e}"));
                         }
                     })?;
@@ -432,13 +533,14 @@ pub fn spawn_loopback_shard(
             // Accept loop ends when every connector clone (the only
             // senders) is dropped; per-connection threads end when their
             // client endpoint is dropped. No explicit shutdown required.
-            while let Ok(mut transport) = accept_rx.recv() {
+            while let Ok(transport) = accept_rx.recv() {
                 let rt = rt.clone();
                 let state = conn_state.clone();
                 let spawned = std::thread::Builder::new()
                     .name("dvi-executor-loopback-conn".into())
                     .spawn(move || {
-                        let _ = serve_connection(&rt, &state, &mut transport);
+                        let _ =
+                            serve_connection(&rt, &state, Box::new(transport));
                     });
                 if spawned.is_err() {
                     break;

@@ -16,15 +16,20 @@
 //! same shard (`tests/sched.rs` property-tests this under transport
 //! chaos). Sequential keys round-robin, so offered load balances.
 //!
-//! ## Execution: split, fan out, reassemble
+//! ## Execution: split, submit, drain
 //!
 //! A batched call is split by the shard of each lane's KV and the
-//! per-shard sub-calls are issued **concurrently** (one scoped thread
-//! per involved shard — the sub-call is a blocking request/response);
-//! replies are reassembled in lane order. Artifacts with *no* KV params
-//! (`train_step`) are **broadcast**: every shard executes the identical
-//! deterministic update, keeping globals (LoRA/Adam) in lockstep, and a
-//! bitwise cross-shard check on the returned outputs turns any drift
+//! per-shard sub-calls are **submitted without waiting** onto each
+//! shard's pipelined connection ([`RemoteBackend::submit_lanes`] — the
+//! protocol-v3 mux); completion handles are then drained and replies
+//! reassembled in lane order. No threads are spawned on the hot path:
+//! the per-connection writer/reader worker pair is persistent, and one
+//! scheduler tick can keep *every* shard's pipe full by submitting all
+//! of its chunks before draining any
+//! ([`crate::runtime::Backend::call_batched_submit`]). Artifacts with
+//! *no* KV params (`train_step`) are **broadcast**: the call is
+//! submitted to every shard concurrently, every shard must succeed, and
+//! a bitwise cross-shard check on the returned outputs turns any drift
 //! into a loud error instead of silent divergence. `set_global` /
 //! `reset_global` broadcast the same way; `read_global` reads shard 0.
 //!
@@ -34,12 +39,13 @@
 //! read-skew online training already exhibits across chunks on a
 //! single executor. Every individual lane call still sees one
 //! consistent snapshot, and per-shard update *order* is total (one
-//! learner thread), so shards re-converge the moment the broadcast
-//! lands; losslessness guarantees are, as everywhere in this repo,
-//! stated for fixed weights. Connect-time identity checking covers
-//! artifact specs and config, **not weight contents** — fronting
-//! identically seeded/checkpointed weights is the operator's contract
-//! (a handshake weight checksum is a ROADMAP item).
+//! learner thread submitting to per-shard FIFO connections), so shards
+//! re-converge the moment the broadcast lands; losslessness guarantees
+//! are, as everywhere in this repo, stated for fixed weights.
+//! Connect-time identity checking covers artifact specs, config, *and*
+//! weight contents: every executor's handshake carries a fingerprint of
+//! its loaded weights + initial globals, and a fleet whose fingerprints
+//! differ is refused before a single lane is routed.
 //!
 //! ## Failure: a dead shard degrades, never wedges
 //!
@@ -58,14 +64,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::runtime::backend::{
-    Backend, BatchItem, Buffer, CallOut, ExecutorStatus,
+    Backend, BatchHandle, BatchItem, Buffer, CallOut, ExecutorStatus,
 };
 use crate::runtime::manifest::{ArtifactSpec, Role};
 use crate::runtime::tensor::{DType, Tensor, TensorData};
 
-use super::proto::HelloInfo;
+use super::proto::{HelloInfo, Lane, Msg, Reply};
 use super::transport::Connector;
-use super::RemoteBackend;
+use super::{LanesFuture, RemoteBackend};
 
 /// Pure placement function: which shard owns the KV of a sequence with
 /// this placement key. Deliberately the identity modulo — sequential
@@ -105,8 +111,10 @@ impl ShardedRemoteBackend {
     /// same model: artifact port layouts and config must match shard
     /// 0's ([`crate::runtime::Manifest::identity_json`] equality, which
     /// deliberately excludes per-host filesystem layout so identical
-    /// fleets at different addresses pass), otherwise lanes routed to
-    /// different shards could silently decode different models.
+    /// fleets at different addresses pass), **and** the handshake
+    /// weights fingerprints must agree — two executors with the same
+    /// manifest but different weights.bin would otherwise serve
+    /// divergent models undetected until a train-step drift check.
     pub fn connect(
         connectors: Vec<Box<dyn Connector>>,
     ) -> Result<(ShardedRemoteBackend, HelloInfo)> {
@@ -125,6 +133,17 @@ impl ShardedRemoteBackend {
                     "shard {i} ({endpoint}) serves a different manifest \
                      than shard 0 — all executors must front identical \
                      artifacts/config"
+                );
+                ensure!(
+                    head.weights_hash == 0
+                        || info.weights_hash == 0
+                        || head.weights_hash == info.weights_hash,
+                    "shard {i} ({endpoint}) serves different weights than \
+                     shard 0 (fingerprint {:#018x} != {:#018x}) — a mixed \
+                     fleet would decode divergent models; restore identical \
+                     weights on every executor",
+                    info.weights_hash,
+                    head.weights_hash
                 );
             } else {
                 first = Some(info);
@@ -172,54 +191,48 @@ impl ShardedRemoteBackend {
         Ok(s)
     }
 
-    /// Run `f` against every shard concurrently; results in shard order.
-    fn on_all<T: Send>(
-        &self,
-        f: impl Fn(&RemoteBackend) -> Result<T> + Sync,
-    ) -> Vec<Result<T>> {
-        let f = &f;
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter()
-                .map(|be| scope.spawn(move || f(be)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        })
-    }
-
-    /// Broadcast a stateless (no-KV) call to every shard, demand that
-    /// all succeed, and bitwise-compare the outputs so shard drift
+    /// Broadcast a stateless (no-KV) call: submit to every shard's
+    /// pipelined connection, then drain — all shards execute
+    /// concurrently with no thread spawned here. Demand that all
+    /// succeed, and bitwise-compare the outputs so shard drift
     /// (diverged globals, mismatched weights) fails loudly.
     fn broadcast_call(
         &self,
         spec: &ArtifactSpec,
         inputs: &[Tensor],
     ) -> Result<CallOut> {
-        let mut results = self.on_all(|be| be.call(spec, &[], inputs));
-        // Collect trailing shards first so shard 0's CallOut survives.
-        let rest: Vec<CallOut> = results
-            .drain(1..)
-            .enumerate()
-            .map(|(i, r)| {
-                r.with_context(|| {
-                    format!(
-                        "{}: broadcast failed on shard {} — global state may \
-                         have forked; restore the shard or restart the fleet",
-                        spec.name,
-                        i + 1
-                    )
-                })
+        let futures: Vec<LanesFuture> = self
+            .shards
+            .iter()
+            .map(|be| {
+                let lane = Lane { kv: Vec::new(), inputs: inputs.to_vec() };
+                be.submit_lanes(spec, vec![lane])
             })
-            .collect::<Result<_>>()?;
-        let head = results
-            .pop()
-            .expect("shard 0 result present")
-            .with_context(|| format!("{}: broadcast failed on shard 0", spec.name))?;
-        for (i, out) in rest.iter().enumerate() {
+            .collect();
+        // Drain every future before error-checking: an early return
+        // would drop un-waited futures, losing the free-lists their
+        // calls were carrying (requeueing happens inside wait_lanes).
+        let results: Vec<Result<CallOut>> = futures
+            .into_iter()
+            .map(|future| {
+                let mut lanes = future.wait_lanes();
+                debug_assert_eq!(lanes.len(), 1);
+                lanes.pop().expect("single broadcast lane")
+            })
+            .collect();
+        let mut outs: Vec<CallOut> = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            outs.push(r.with_context(|| {
+                format!(
+                    "{}: broadcast failed on shard {i} — global state may \
+                     have forked; restore the shard or restart the fleet",
+                    spec.name
+                )
+            })?);
+        }
+        let mut outs = outs.into_iter();
+        let head = outs.next().expect("shard 0 result present");
+        for (i, out) in outs.enumerate() {
             let same = out.outputs.len() == head.outputs.len()
                 && out
                     .outputs
@@ -235,6 +248,27 @@ impl ShardedRemoteBackend {
             );
         }
         Ok(head)
+    }
+
+    /// Broadcast a non-`Call` request to every shard concurrently and
+    /// demand unanimity; `what` labels errors.
+    fn broadcast_msg(
+        &self,
+        msg: &Msg,
+        what: &str,
+    ) -> Result<Vec<Reply>> {
+        let futures: Vec<_> =
+            self.shards.iter().map(|be| be.submit_msg(msg)).collect();
+        let mut replies = Vec::with_capacity(futures.len());
+        for (i, f) in futures.into_iter().enumerate() {
+            replies.push(f.wait().with_context(|| {
+                format!(
+                    "{what} failed on shard {i} — global state may have \
+                     forked; restore the shard or restart the fleet"
+                )
+            })?);
+        }
+        Ok(replies)
     }
 
     /// Group lane indices by owning shard, preserving lane order within
@@ -254,6 +288,46 @@ impl ShardedRemoteBackend {
             }
         }
         (groups, routing_errs)
+    }
+}
+
+/// In-flight sharded batched call: per-shard submission futures plus
+/// the lane bookkeeping to reassemble replies in lane order.
+struct ShardedBatch {
+    total: usize,
+    /// (shard index, endpoint, lane indices, submission future).
+    subs: Vec<(usize, String, Vec<usize>, LanesFuture)>,
+    routing_errs: Vec<Option<anyhow::Error>>,
+}
+
+impl BatchHandle for ShardedBatch {
+    fn wait(self: Box<Self>) -> Vec<Result<CallOut>> {
+        let ShardedBatch { total, subs, routing_errs } = *self;
+        let mut out: Vec<Option<Result<CallOut>>> =
+            (0..total).map(|_| None).collect();
+        for (i, e) in routing_errs.into_iter().enumerate() {
+            if let Some(e) = e {
+                out[i] = Some(Err(e));
+            }
+        }
+        // Drain shard futures in submission order; each shard's reply
+        // may already be in (executors finish independently — the wait
+        // only blocks on the slowest shard actually needed).
+        for (shard, endpoint, idxs, future) in subs {
+            let lanes = future.wait_lanes();
+            debug_assert_eq!(lanes.len(), idxs.len());
+            for (&i, lane_out) in idxs.iter().zip(lanes) {
+                out[i] = Some(lane_out.map_err(|e| {
+                    // Only this shard's lanes fail; the scheduler maps
+                    // them onto fail_lane while other shards' lanes
+                    // commit.
+                    anyhow!("shard {shard} ({endpoint}): {e:#}")
+                }));
+            }
+        }
+        out.into_iter()
+            .map(|r| r.expect("every lane routed or errored"))
+            .collect()
     }
 }
 
@@ -296,80 +370,38 @@ impl Backend for ShardedRemoteBackend {
         spec: &ArtifactSpec,
         batch: &[BatchItem<'_>],
     ) -> Vec<Result<CallOut>> {
+        self.call_batched_submit(spec, batch).wait()
+    }
+
+    fn call_batched_submit(
+        &self,
+        spec: &ArtifactSpec,
+        batch: &[BatchItem<'_>],
+    ) -> Box<dyn BatchHandle> {
         let (groups, routing_errs) = self.group_lanes(batch);
-
-        // One concurrent sub-call per involved shard.
-        let sub_results: Vec<Option<Result<Vec<CallOut>>>> =
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .shards
+        // One pipelined sub-call per involved shard, all submitted
+        // before any reply is awaited — every shard's pipe fills.
+        let subs = groups
+            .into_iter()
+            .enumerate()
+            .filter(|(_, idxs)| !idxs.is_empty())
+            .map(|(shard, idxs)| {
+                let be = &self.shards[shard];
+                let lanes: Result<Vec<Lane>> = idxs
                     .iter()
-                    .zip(&groups)
-                    .map(|(be, idxs)| {
-                        if idxs.is_empty() {
-                            return None;
-                        }
-                        let sub: Vec<BatchItem<'_>> = idxs
-                            .iter()
-                            .map(|&i| BatchItem {
-                                kv: batch[i].kv,
-                                inputs: batch[i].inputs,
-                            })
-                            .collect();
-                        Some(scope.spawn(move || {
-                            let outs = be.call_batched(spec, &sub)?;
-                            ensure!(
-                                outs.len() == sub.len(),
-                                "{}: shard returned {} lanes for {}",
-                                spec.name,
-                                outs.len(),
-                                sub.len()
-                            );
-                            Ok(outs)
-                        }))
-                    })
+                    .map(|&i| be.assemble_lane(&batch[i]))
                     .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.map(|h| h.join().expect("shard worker panicked")))
-                    .collect()
-            });
-
-        // Scatter per-shard results back into lane order.
-        let mut out: Vec<Option<Result<CallOut>>> =
-            batch.iter().map(|_| None).collect();
-        for (i, e) in routing_errs.into_iter().enumerate() {
-            if let Some(e) = e {
-                out[i] = Some(Err(e));
-            }
-        }
-        for (shard, (idxs, result)) in
-            groups.iter().zip(sub_results).enumerate()
-        {
-            match result {
-                None => {} // shard had no lanes this call
-                Some(Ok(outs)) => {
-                    for (&i, lane_out) in idxs.iter().zip(outs) {
-                        out[i] = Some(Ok(lane_out));
-                    }
-                }
-                Some(Err(e)) => {
-                    // Only this shard's lanes fail; the scheduler maps
-                    // them onto fail_lane while other shards' lanes
-                    // commit.
-                    let msg = format!("{e:#}");
-                    for &i in idxs {
-                        out[i] = Some(Err(anyhow!(
-                            "shard {shard} ({}): {msg}",
-                            self.shards[shard].endpoint()
-                        )));
-                    }
-                }
-            }
-        }
-        out.into_iter()
-            .map(|r| r.expect("every lane routed or errored"))
-            .collect()
+                let future = match lanes {
+                    Ok(lanes) => be.submit_lanes(spec, lanes),
+                    // kv_ids cannot fail here (group_lanes already
+                    // routed every lane), but stay total: surface the
+                    // error through the future's per-lane errs.
+                    Err(e) => be.submit_lanes_poisoned(spec, idxs.len(), e),
+                };
+                (shard, be.endpoint(), idxs, future)
+            })
+            .collect();
+        Box::new(ShardedBatch { total: batch.len(), subs, routing_errs })
     }
 
     fn fresh_kv(&self, spec: &ArtifactSpec) -> Result<Vec<Buffer>> {
@@ -405,14 +437,14 @@ impl Backend for ShardedRemoteBackend {
     }
 
     fn set_global(&self, name: &str, t: &Tensor) -> Result<()> {
-        for (i, r) in self.on_all(|be| be.set_global(name, t)).into_iter().enumerate()
+        let msg = Msg::SetGlobal { name: name.to_string(), tensor: t.clone() };
+        for reply in
+            self.broadcast_msg(&msg, &format!("set_global('{name}')"))?
         {
-            r.with_context(|| {
-                format!(
-                    "set_global('{name}') failed on shard {i} — global state \
-                     may have forked; restore the shard or restart the fleet"
-                )
-            })?;
+            ensure!(
+                matches!(reply, Reply::Unit),
+                "unexpected reply to set_global"
+            );
         }
         Ok(())
     }
@@ -424,20 +456,26 @@ impl Backend for ShardedRemoteBackend {
     }
 
     fn reset_global(&self, name: &str) -> Result<()> {
-        for (i, r) in self.on_all(|be| be.reset_global(name)).into_iter().enumerate()
+        let msg = Msg::ResetGlobal { name: name.to_string() };
+        for reply in
+            self.broadcast_msg(&msg, &format!("reset_global('{name}')"))?
         {
-            r.with_context(|| {
-                format!(
-                    "reset_global('{name}') failed on shard {i} — global state \
-                     may have forked; restore the shard or restart the fleet"
-                )
-            })?;
+            ensure!(
+                matches!(reply, Reply::Unit),
+                "unexpected reply to reset_global"
+            );
         }
         Ok(())
     }
 
     fn executor_status(&self) -> Vec<ExecutorStatus> {
         self.shards.iter().flat_map(|be| be.executor_status()).collect()
+    }
+
+    fn weights_fingerprint(&self) -> Option<u64> {
+        // Connect-time checking guarantees the fleet agrees; shard 0
+        // speaks for it.
+        self.shards[0].weights_fingerprint()
     }
 }
 

@@ -1,20 +1,31 @@
 //! Framed transports for the remote-executor protocol.
 //!
 //! A [`Transport`] moves whole frames (the length prefix is the
-//! transport's concern, not the codec's). Three implementations:
+//! transport's concern, not the codec's). Since protocol v3 the remote
+//! runtime is *pipelined*: after the handshake, a connection is
+//! [`Transport::split`] into an independently usable sending half
+//! ([`FrameTx`]) and receiving half ([`FrameRx`]) so the mux's
+//! persistent writer/reader worker pair can overlap sends with receives
+//! on one connection. Implementations:
 //!
 //! * [`TcpTransport`] — `u32` length prefix over a `TcpStream`; the
-//!   production path behind `dvi serve-backend --listen`.
+//!   production path behind `dvi serve-backend --listen`. Splitting
+//!   clones the stream; dropping the send half shuts the socket down so
+//!   a reader blocked in `recv` wakes up and exits.
 //! * loopback ([`loopback_pair`]) — a pair of in-process byte channels,
 //!   used by the hermetic test suite and CI (`DVI_TEST_REMOTE=loopback`)
 //!   so the full encode → frame → decode path runs with no sockets.
+//!   Splitting hands out the two channel ends.
 //! * [`ChaosTransport`] — wraps any transport and fails every Nth send,
 //!   injecting deterministic transport faults for the scheduler's
-//!   fail-lane tests.
+//!   fail-lane tests. Splitting wraps the send half (faults are send
+//!   faults); the shared counters keep fault spacing across reconnects
+//!   *and* across the split.
 //! * [`KillSwitch`] / [`GatedTransport`] — a latch that permanently
 //!   kills a connector and every transport it minted, simulating a dead
 //!   executor (shard) deterministically: once killed, sends, recvs, and
-//!   re-dials all fail until the end of the test.
+//!   re-dials all fail until the end of the test. Splitting gates both
+//!   halves on the same latch.
 //!
 //! A [`Connector`] mints fresh transports, which is what gives the
 //! client its bounded-reconnect behavior: a dead connection is dropped
@@ -30,10 +41,26 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::proto::MAX_FRAME;
 
+/// Sending half of a split transport (the mux writer worker's handle).
+pub trait FrameTx: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+}
+
+/// Receiving half of a split transport (the mux reader worker's handle).
+pub trait FrameRx: Send {
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
 /// One framed, ordered, bidirectional byte channel.
 pub trait Transport: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Split into independently usable halves so a writer worker can
+    /// send while a reader worker blocks in `recv` — the seam the
+    /// pipelined mux runtime is built on. Consumes the transport; the
+    /// halves share its fate (chaos plans, kill switches, the socket).
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)>;
 }
 
 /// Mints fresh connections (dial + nothing else; the protocol handshake
@@ -66,23 +93,71 @@ impl TcpTransport {
     }
 }
 
+fn tcp_send(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
+    ensure!(frame.len() <= MAX_FRAME, "frame too large: {}", frame.len());
+    stream.write_all(&(frame.len() as u32).to_le_bytes())?;
+    stream.write_all(frame)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn tcp_recv(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len <= MAX_FRAME, "oversized frame announced: {len}");
+    let mut frame = vec![0u8; len];
+    stream.read_exact(&mut frame)?;
+    Ok(frame)
+}
+
 impl Transport for TcpTransport {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
-        ensure!(frame.len() <= MAX_FRAME, "frame too large: {}", frame.len());
-        self.stream.write_all(&(frame.len() as u32).to_le_bytes())?;
-        self.stream.write_all(frame)?;
-        self.stream.flush()?;
-        Ok(())
+        tcp_send(&mut self.stream, frame)
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        let mut len = [0u8; 4];
-        self.stream.read_exact(&mut len)?;
-        let len = u32::from_le_bytes(len) as usize;
-        ensure!(len <= MAX_FRAME, "oversized frame announced: {len}");
-        let mut frame = vec![0u8; len];
-        self.stream.read_exact(&mut frame)?;
-        Ok(frame)
+        tcp_recv(&mut self.stream)
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let rx = self
+            .stream
+            .try_clone()
+            .context("cloning tcp stream for the reader half")?;
+        Ok((
+            Box::new(TcpSendHalf { stream: self.stream }),
+            Box::new(TcpRecvHalf { stream: rx }),
+        ))
+    }
+}
+
+/// Write side of a split TCP connection. Dropping it shuts the socket
+/// down both ways so the peer — and our own reader half blocked in
+/// `read_exact` — observe the close instead of hanging forever.
+pub struct TcpSendHalf {
+    stream: TcpStream,
+}
+
+impl FrameTx for TcpSendHalf {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        tcp_send(&mut self.stream, frame)
+    }
+}
+
+impl Drop for TcpSendHalf {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+pub struct TcpRecvHalf {
+    stream: TcpStream,
+}
+
+impl FrameRx for TcpRecvHalf {
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        tcp_recv(&mut self.stream)
     }
 }
 
@@ -119,15 +194,49 @@ pub fn loopback_pair() -> (LoopbackTransport, LoopbackTransport) {
     )
 }
 
+fn loopback_send(tx: &Sender<Vec<u8>>, frame: &[u8]) -> Result<()> {
+    tx.send(frame.to_vec())
+        .map_err(|_| anyhow!("loopback peer hung up"))
+}
+
+fn loopback_recv(rx: &Receiver<Vec<u8>>) -> Result<Vec<u8>> {
+    rx.recv().map_err(|_| anyhow!("loopback peer hung up"))
+}
+
 impl Transport for LoopbackTransport {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
-        self.tx
-            .send(frame.to_vec())
-            .map_err(|_| anyhow!("loopback peer hung up"))
+        loopback_send(&self.tx, frame)
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| anyhow!("loopback peer hung up"))
+        loopback_recv(&self.rx)
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        Ok((
+            Box::new(LoopbackSendHalf { tx: self.tx }),
+            Box::new(LoopbackRecvHalf { rx: self.rx }),
+        ))
+    }
+}
+
+pub struct LoopbackSendHalf {
+    tx: Sender<Vec<u8>>,
+}
+
+impl FrameTx for LoopbackSendHalf {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        loopback_send(&self.tx, frame)
+    }
+}
+
+pub struct LoopbackRecvHalf {
+    rx: Receiver<Vec<u8>>,
+}
+
+impl FrameRx for LoopbackRecvHalf {
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        loopback_recv(&self.rx)
     }
 }
 
@@ -208,7 +317,9 @@ impl KillSwitch {
 
 /// Transport wrapper honoring a [`KillSwitch`]: both directions error
 /// once the latch trips, modeling an executor process that is gone (not
-/// just one dropped frame, which is [`ChaosTransport`]'s job).
+/// just one dropped frame, which is [`ChaosTransport`]'s job). Both
+/// split halves stay gated on the same latch, so the mux's reader
+/// worker observes the death just like its writer does.
 pub struct GatedTransport {
     pub(super) inner: Box<dyn Transport>,
     pub(super) kill: KillSwitch,
@@ -222,6 +333,42 @@ impl Transport for GatedTransport {
         self.inner.send(frame)
     }
 
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        if self.kill.is_killed() {
+            bail!("executor killed");
+        }
+        self.inner.recv()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let (tx, rx) = self.inner.split()?;
+        Ok((
+            Box::new(GatedSendHalf { inner: tx, kill: self.kill.clone() }),
+            Box::new(GatedRecvHalf { inner: rx, kill: self.kill }),
+        ))
+    }
+}
+
+pub struct GatedSendHalf {
+    inner: Box<dyn FrameTx>,
+    kill: KillSwitch,
+}
+
+impl FrameTx for GatedSendHalf {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if self.kill.is_killed() {
+            bail!("executor killed");
+        }
+        self.inner.send(frame)
+    }
+}
+
+pub struct GatedRecvHalf {
+    inner: Box<dyn FrameRx>,
+    kill: KillSwitch,
+}
+
+impl FrameRx for GatedRecvHalf {
     fn recv(&mut self) -> Result<Vec<u8>> {
         if self.kill.is_killed() {
             bail!("executor killed");
@@ -277,7 +424,8 @@ impl ChaosPlan {
 /// Transport wrapper executing a [`ChaosPlan`]: a tripped send errors
 /// and the frame is *not* delivered, modeling a connection dropped
 /// before the request reached the executor — the at-most-once case the
-/// client maps onto the scheduler's `fail_lane` path.
+/// client maps onto per-call failures. Splitting moves the plan onto
+/// the send half (faults are send faults); counters stay shared.
 pub struct ChaosTransport {
     inner: Box<dyn Transport>,
     plan: ChaosPlan,
@@ -299,6 +447,25 @@ impl Transport for ChaosTransport {
 
     fn recv(&mut self) -> Result<Vec<u8>> {
         self.inner.recv()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let (tx, rx) = self.inner.split()?;
+        Ok((Box::new(ChaosSendHalf { inner: tx, plan: self.plan }), rx))
+    }
+}
+
+pub struct ChaosSendHalf {
+    inner: Box<dyn FrameTx>,
+    plan: ChaosPlan,
+}
+
+impl FrameTx for ChaosSendHalf {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if let Some(n) = self.plan.trip() {
+            bail!("injected transport failure (send #{n})");
+        }
+        self.inner.send(frame)
     }
 }
 
@@ -326,6 +493,22 @@ mod tests {
     }
 
     #[test]
+    fn split_halves_keep_the_channel_alive() {
+        let (a, mut b) = loopback_pair();
+        let (mut tx, mut rx) = (Box::new(a) as Box<dyn Transport>).split().unwrap();
+        tx.send(&[7, 8]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![7, 8]);
+        b.send(&[9]).unwrap();
+        assert_eq!(rx.recv().unwrap(), vec![9]);
+        // Dropping the send half hangs up the peer's recv...
+        drop(tx);
+        assert!(b.recv().is_err());
+        // ...and the peer dropping hangs up our recv half.
+        drop(b);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
     fn chaos_fails_every_nth_send_up_to_cap() {
         let (a, mut b) = loopback_pair();
         let plan = ChaosPlan::new(3, 1);
@@ -345,6 +528,20 @@ mod tests {
     }
 
     #[test]
+    fn chaos_split_keeps_counting_sends() {
+        let (a, mut b) = loopback_pair();
+        let plan = ChaosPlan::new(3, 10);
+        let chaos = Box::new(ChaosTransport::new(Box::new(a), plan.clone()));
+        let (mut tx, _rx) = (chaos as Box<dyn Transport>).split().unwrap();
+        assert!(tx.send(&[1]).is_ok());
+        assert!(tx.send(&[2]).is_ok());
+        assert!(tx.send(&[3]).is_err()); // 3rd send trips through the half
+        assert_eq!(plan.injected(), 1);
+        assert_eq!(b.recv().unwrap(), vec![1]);
+        assert_eq!(b.recv().unwrap(), vec![2]);
+    }
+
+    #[test]
     fn kill_switch_is_permanent_and_shared() {
         let (a, mut b) = loopback_pair();
         let kill = KillSwitch::new();
@@ -360,6 +557,19 @@ mod tests {
     }
 
     #[test]
+    fn kill_switch_gates_both_split_halves() {
+        let (a, _b) = loopback_pair();
+        let kill = KillSwitch::new();
+        let gated =
+            Box::new(GatedTransport { inner: Box::new(a), kill: kill.clone() });
+        let (mut tx, mut rx) = (gated as Box<dyn Transport>).split().unwrap();
+        assert!(tx.send(&[1]).is_ok());
+        kill.kill();
+        assert!(tx.send(&[2]).is_err());
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
     fn tcp_transport_roundtrips() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -372,6 +582,29 @@ mod tests {
         let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
         c.send(&[5, 6, 7]).unwrap();
         assert_eq!(c.recv().unwrap(), vec![5, 6, 7]);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_split_send_half_drop_wakes_the_reader() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream);
+            let f = t.recv().unwrap();
+            t.send(&f).unwrap();
+            // Block until the client side is torn down.
+            let _ = t.recv();
+        });
+        let c = Box::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        let (mut tx, mut rx) = (c as Box<dyn Transport>).split().unwrap();
+        tx.send(&[1, 2]).unwrap();
+        assert_eq!(rx.recv().unwrap(), vec![1, 2]);
+        // Dropping the send half shuts the socket down; the reader half
+        // must observe an error instead of blocking forever.
+        drop(tx);
+        assert!(rx.recv().is_err());
         server.join().unwrap();
     }
 }

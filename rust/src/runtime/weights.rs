@@ -109,6 +109,93 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Streaming FNV-1a (64-bit) — the dependency-free hash behind the
+/// executor handshake's weights fingerprint. Not cryptographic: it
+/// guards against *operator error* (mismatched weight files across a
+/// fleet), not an adversary.
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` hash apart.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Raw little-endian bits — bitwise-identical floats (and only
+    /// those) hash identically, matching the fleet lockstep contract.
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.bytes(&x.to_le_bytes());
+        }
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.bytes(&x.to_le_bytes());
+        }
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.u64(t.shape.len() as u64);
+        for &d in &t.shape {
+            self.u64(d as u64);
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                self.bytes(b"f");
+                self.f32s(v);
+            }
+            TensorData::I32(v) => {
+                self.bytes(b"i");
+                self.i32s(v);
+            }
+        }
+    }
+
+    /// Finish, reserving 0: the wire handshake uses 0 for "backend
+    /// cannot hash its weights", so a real fingerprint is never 0.
+    pub fn finish(&self) -> u64 {
+        self.0.max(1)
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fingerprint a named tensor map (weights files, initial globals):
+/// order-independent input (BTreeMap is sorted), name- and
+/// shape-sensitive, bitwise over the data.
+pub fn fingerprint_weights(map: &WeightMap) -> u64 {
+    let mut h = Fnv64::new();
+    h.u64(map.len() as u64);
+    for (name, t) in map {
+        h.str(name);
+        h.tensor(t);
+    }
+    h.finish()
+}
+
 /// Writer (used by tests and by state snapshots of the online learner).
 pub fn serialize_weights(map: &WeightMap) -> Vec<u8> {
     let mut out = Vec::new();
@@ -181,5 +268,32 @@ mod tests {
         let mut bytes = serialize_weights(&sample());
         bytes.push(0);
         assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let m = sample();
+        let a = fingerprint_weights(&m);
+        assert_eq!(a, fingerprint_weights(&m), "fingerprint must be pure");
+        assert_ne!(a, 0, "0 is reserved for 'cannot hash'");
+        // One flipped bit in one tensor changes the fingerprint.
+        let mut m2 = sample();
+        if let Tensor { data: TensorData::F32(v), .. } =
+            m2.get_mut("a.w").unwrap()
+        {
+            v[0] = f32::from_bits(v[0].to_bits() ^ 1);
+        }
+        assert_ne!(a, fingerprint_weights(&m2), "bit flip must be visible");
+        // A renamed tensor changes it too.
+        let mut m3 = sample();
+        let t = m3.remove("b").unwrap();
+        m3.insert("b2".into(), t);
+        assert_ne!(a, fingerprint_weights(&m3), "rename must be visible");
+        // -0.0 vs +0.0 is a bitwise difference and must be caught.
+        let mut m4 = sample();
+        m4.insert("scalar".into(), Tensor::scalar_f32(-0.0));
+        let mut m5 = sample();
+        m5.insert("scalar".into(), Tensor::scalar_f32(0.0));
+        assert_ne!(fingerprint_weights(&m4), fingerprint_weights(&m5));
     }
 }

@@ -36,9 +36,9 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::engine::GenResult;
 use crate::learner::ReplayBuffer;
-use crate::runtime::{log, BatchItem, Runtime};
+use crate::runtime::{log, BatchHandle, BatchItem, Runtime};
 
-use self::seq::{MethodCtx, SeqState};
+use self::seq::{CallSpec, MethodCtx, SeqState};
 
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
@@ -286,8 +286,24 @@ impl Scheduler {
             }
         }
 
-        // ---- one batched backend call per (artifact, chunk) ------------
-        let mut advanced = 0usize;
+        // ---- submit one batched backend call per (artifact, chunk) -----
+        // Submission is split from draining so independent chunks are in
+        // flight *together*: on the pipelined remote backends (protocol
+        // v3 mux) every shard's in-flight window fills before the first
+        // reply is awaited — a tick's wall time tracks the slowest
+        // shard's work, not the sum of chunk round trips. In-process
+        // backends execute at submit time and their handles resolve
+        // instantly, so their semantics (and bitwise streams) are
+        // unchanged.
+        struct PendingChunk {
+            idxs: Vec<usize>,
+            name: String,
+            handle: Box<dyn BatchHandle>,
+            /// Owns the lanes' kv/inputs until the handle resolves (the
+            /// buffers must not hit the free-list while in flight).
+            _specs: Vec<CallSpec>,
+        }
+        let mut in_flight: Vec<PendingChunk> = Vec::new();
         for (_, idxs) in groups {
             for chunk in idxs.chunks(self.cfg.max_batch) {
                 let mut specs = Vec::with_capacity(chunk.len());
@@ -316,63 +332,61 @@ impl Scheduler {
                     .iter()
                     .map(|s| BatchItem { kv: &s.kv, inputs: &s.inputs })
                     .collect();
-                // Per-lane failure granularity: on a sharded remote
-                // backend a dead executor fails only the lanes whose KV
-                // it owns; every other lane in the chunk commits
-                // normally. Single-executor backends degenerate to the
-                // old whole-chunk behavior (all lanes share one fate).
-                let outs = specs[0].artifact.call_batched_partial(&items);
+                let handle = specs[0].artifact.call_batched_submit(&items);
                 drop(items);
-                match outs {
-                    Ok(outs) => {
-                        let name = specs[0].artifact.spec.name.clone();
-                        let mut ok_lanes = 0u64;
-                        for (&i, out) in chunk.iter().zip(outs) {
-                            match out {
-                                Ok(out) => {
-                                    ok_lanes += 1;
-                                    let applied = self.slots[i]
-                                        .as_mut()
-                                        .expect("grouped lane is live")
-                                        .state
-                                        .apply(out);
-                                    match applied {
-                                        Ok(committed) => {
-                                            self.stats.committed_tokens.fetch_add(
-                                                committed as u64,
-                                                Ordering::Relaxed,
-                                            );
-                                        }
-                                        Err(e) => self.fail_lane(i, e),
-                                    }
-                                }
-                                Err(e) => self.fail_lane(
-                                    i,
-                                    anyhow!("batched {name} call failed: {e:#}"),
-                                ),
+                in_flight.push(PendingChunk {
+                    idxs: chunk.to_vec(),
+                    name: specs[0].artifact.spec.name.clone(),
+                    handle,
+                    _specs: specs,
+                });
+            }
+        }
+
+        // ---- drain completion handles in submission order --------------
+        // Per-lane failure granularity: on a sharded remote backend a
+        // dead executor fails only the lanes whose KV it owns; every
+        // other lane in the chunk commits normally. Single-executor
+        // backends degenerate to whole-chunk fate sharing. Draining in
+        // submission order keeps apply()/replay-buffer order — and thus
+        // the committed streams — identical to the serial discipline.
+        let mut advanced = 0usize;
+        for chunk in in_flight {
+            let PendingChunk { idxs, name, handle, _specs } = chunk;
+            let outs = handle.wait();
+            let mut ok_lanes = 0u64;
+            for (&i, out) in idxs.iter().zip(outs) {
+                match out {
+                    Ok(out) => {
+                        ok_lanes += 1;
+                        let applied = self.slots[i]
+                            .as_mut()
+                            .expect("grouped lane is live")
+                            .state
+                            .apply(out);
+                        match applied {
+                            Ok(committed) => {
+                                self.stats.committed_tokens.fetch_add(
+                                    committed as u64,
+                                    Ordering::Relaxed,
+                                );
                             }
-                        }
-                        // Only lanes that actually executed count toward
-                        // progress and occupancy — a failing backend must
-                        // not report healthy batching.
-                        advanced += ok_lanes as usize;
-                        if ok_lanes > 0 {
-                            self.stats.calls.fetch_add(1, Ordering::Relaxed);
-                            self.stats.lanes.fetch_add(ok_lanes, Ordering::Relaxed);
+                            Err(e) => self.fail_lane(i, e),
                         }
                     }
-                    Err(e) => {
-                        // Outer error: the whole chunk was unexecutable
-                        // (caller-side shape bug, contract violation).
-                        let name = specs[0].artifact.spec.name.clone();
-                        for &i in chunk {
-                            self.fail_lane(
-                                i,
-                                anyhow!("batched {name} call failed: {e}"),
-                            );
-                        }
-                    }
+                    Err(e) => self.fail_lane(
+                        i,
+                        anyhow!("batched {name} call failed: {e:#}"),
+                    ),
                 }
+            }
+            // Only lanes that actually executed count toward progress
+            // and occupancy — a failing backend must not report healthy
+            // batching.
+            advanced += ok_lanes as usize;
+            if ok_lanes > 0 {
+                self.stats.calls.fetch_add(1, Ordering::Relaxed);
+                self.stats.lanes.fetch_add(ok_lanes, Ordering::Relaxed);
             }
         }
 

@@ -273,33 +273,64 @@ fn session_teardown_spares_other_clients() {
 /// A reply the executor could not deliver must not leak the buffers it
 /// minted: the client can never learn those ids, and a session that
 /// survives the reconnect would otherwise carry the orphans forever.
+/// (v3: the handshake is untagged; the FreshKv request and its
+/// undeliverable reply travel as call-id-tagged frames.)
 #[test]
 fn lost_reply_buffers_are_reclaimed() {
-    use dvi::runtime::remote::proto::{Msg, Reply, VERSION};
+    use dvi::runtime::remote::proto::{self, Msg, Reply, VERSION};
     use dvi::runtime::remote::server::serve_connection;
-    use dvi::runtime::remote::transport::Transport;
+    use dvi::runtime::remote::transport::{FrameRx, FrameTx, Transport};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
 
     /// Feeds scripted request frames and fails every send after the
     /// first `sends_ok` — the deterministic stand-in for a client that
-    /// vanished with a reply in flight.
-    struct ScriptedTransport {
-        inbox: Vec<Vec<u8>>,
+    /// vanished with a reply in flight. Splitting shares the scripted
+    /// state so the server's writer/reader worker pair sees it too.
+    struct Shared {
+        inbox: Mutex<Vec<Vec<u8>>>,
         sends_ok: usize,
-        sent: usize,
+        sent: AtomicUsize,
     }
-    impl Transport for ScriptedTransport {
-        fn send(&mut self, _frame: &[u8]) -> anyhow::Result<()> {
-            self.sent += 1;
-            if self.sent > self.sends_ok {
+    impl Shared {
+        fn send(&self) -> anyhow::Result<()> {
+            if self.sent.fetch_add(1, Ordering::SeqCst) >= self.sends_ok {
                 anyhow::bail!("client vanished (reply undeliverable)");
             }
             Ok(())
         }
-        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
-            if self.inbox.is_empty() {
+        fn recv(&self) -> anyhow::Result<Vec<u8>> {
+            let mut inbox = self.inbox.lock().unwrap();
+            if inbox.is_empty() {
                 anyhow::bail!("scripted eof");
             }
-            Ok(self.inbox.remove(0))
+            Ok(inbox.remove(0))
+        }
+    }
+    struct ScriptedTransport(Arc<Shared>);
+    struct ScriptedTx(Arc<Shared>);
+    struct ScriptedRx(Arc<Shared>);
+    impl Transport for ScriptedTransport {
+        fn send(&mut self, _frame: &[u8]) -> anyhow::Result<()> {
+            self.0.send()
+        }
+        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
+            self.0.recv()
+        }
+        fn split(
+            self: Box<Self>,
+        ) -> anyhow::Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+            Ok((Box::new(ScriptedTx(self.0.clone())), Box::new(ScriptedRx(self.0))))
+        }
+    }
+    impl FrameTx for ScriptedTx {
+        fn send(&mut self, _frame: &[u8]) -> anyhow::Result<()> {
+            self.0.send()
+        }
+    }
+    impl FrameRx for ScriptedRx {
+        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
+            self.0.recv()
         }
     }
 
@@ -319,18 +350,20 @@ fn lost_reply_buffers_are_reclaimed() {
         Reply::Hello { .. }
     ));
 
-    // Scripted connection, same session: handshake reply succeeds, the
-    // FreshKv executes (minting server-resident buffers), and its reply
-    // send fails.
-    let mut t = ScriptedTransport {
-        inbox: vec![
-            Msg::Hello { version: VERSION, want_manifest: false, session }.encode(),
-            Msg::FreshKv { artifact: "target_step".into() }.encode(),
-        ],
+    // Scripted connection, same session: the untagged handshake reply
+    // succeeds, the tagged FreshKv executes (minting server-resident
+    // buffers), and its tagged reply send fails.
+    let shared = Arc::new(Shared {
+        inbox: Mutex::new(vec![
+            Msg::Hello { version: VERSION, want_manifest: false, session }
+                .encode(),
+            proto::tag(1, &Msg::FreshKv { artifact: "target_step".into() }.encode()),
+        ]),
         sends_ok: 1,
-        sent: 0,
-    };
-    let err = serve_connection(&server_rt, &shard.state, &mut t).unwrap_err();
+        sent: AtomicUsize::new(0),
+    });
+    let t = Box::new(ScriptedTransport(shared));
+    let err = serve_connection(&server_rt, &shard.state, t).unwrap_err();
     assert!(format!("{err:#}").contains("connection lost"));
 
     // The minted-but-unreachable buffers were reclaimed even though the
@@ -338,12 +371,236 @@ fn lost_reply_buffers_are_reclaimed() {
     assert_eq!(shard.state.table.len(), 0, "undeliverable reply leaked KV");
     assert_eq!(shard.state.live_sessions(), 1, "held session must survive");
 
-    // And the surviving connection is still serviceable.
-    hold.send(&Msg::Metrics.encode()).unwrap();
-    match Reply::decode(&hold.recv().unwrap()).unwrap() {
+    // And the surviving connection is still serviceable (tagged now —
+    // its handshake completed).
+    hold.send(&proto::tag(9, &Msg::Metrics.encode())).unwrap();
+    let (id, payload) = {
+        let frame = hold.recv().unwrap();
+        let (id, payload) = proto::untag(&frame).unwrap();
+        (id, payload.to_vec())
+    };
+    assert_eq!(id, 9, "reply must echo its request's call id");
+    match Reply::decode(&payload).unwrap() {
         Reply::Metrics(m) => assert_eq!(m.sessions, 1),
         other => panic!("unexpected reply: {other:?}"),
     }
+}
+
+/// A v2 peer dialing a v3 executor must be rejected with a clean
+/// in-band error naming both versions — before any session opens and
+/// before any tagged frame is exchanged.
+#[test]
+fn v2_peers_are_rejected_cleanly() {
+    use dvi::runtime::remote::proto::{Msg, Reply, VERSION};
+    use dvi::runtime::remote::transport::Transport as _;
+
+    let shard = spawn_loopback_shard(Arc::new(local()), None);
+    let mut conn = shard.connector.clone().connect().unwrap();
+    conn.send(
+        &Msg::Hello { version: VERSION - 1, want_manifest: true, session: 7 }
+            .encode(),
+    )
+    .unwrap();
+    match Reply::decode(&conn.recv().unwrap()).unwrap() {
+        Reply::Err(e) => {
+            assert!(
+                e.contains("version mismatch"),
+                "rejection must name the version problem: {e}"
+            );
+            assert!(e.contains('2') && e.contains('3'), "both versions: {e}");
+        }
+        other => panic!("expected a clean rejection, got {other:?}"),
+    }
+    // No session was opened for the rejected peer.
+    assert_eq!(shard.state.live_sessions(), 0);
+    // The connection is closed: the next recv observes the hangup.
+    assert!(conn.recv().is_err(), "rejected peer's connection must close");
+}
+
+/// Two executors with identical manifests (same dims) but different
+/// weights (different seeds) must be refused at connect time by the
+/// handshake weights fingerprint — divergence is caught before a
+/// single lane is routed, not by the first train-step drift check.
+#[test]
+fn sharded_connect_rejects_divergent_weights() {
+    let a = Arc::new(local());
+    let b = Arc::new(Runtime::load_reference(SEED + 1).unwrap());
+    assert_eq!(
+        a.manifest.identity_json().to_string(),
+        b.manifest.identity_json().to_string(),
+        "precondition: manifests must be identical so only the weights differ"
+    );
+    let sa = spawn_loopback_shard(a, None);
+    let sb = spawn_loopback_shard(b, None);
+    let err = Runtime::load_remote_sharded_with(vec![
+        Box::new(sa.connector.clone()) as Box<dyn Connector>,
+        Box::new(sb.connector.clone()) as Box<dyn Connector>,
+    ])
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different weights"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// Same-seed executors fingerprint identically, and the fingerprint is
+/// surfaced client-side (`Runtime::weights_fingerprint` matches the
+/// executor's own).
+#[test]
+fn weights_fingerprint_roundtrips_through_the_handshake() {
+    let server = local();
+    let want = server.weights_fingerprint().expect("reference backend hashes");
+    let r = remote();
+    assert_eq!(r.weights_fingerprint(), Some(want));
+}
+
+/// Pipelining overlap, deterministically: a gate holds every reply
+/// frame on the client side, N independent calls are submitted through
+/// `call_batched_submit` while the gate is closed (so all N are in
+/// flight at once), then the gate opens and each handle must resolve
+/// to the bitwise-identical result of the same-seed local backend —
+/// and the executor metrics must report the realized window depth.
+#[test]
+fn pipelined_submissions_overlap_and_stay_lossless() {
+    use dvi::runtime::remote::server::spawn_loopback;
+    use dvi::runtime::remote::transport::{FrameRx, FrameTx, Transport};
+    use dvi::runtime::{BatchHandle as _, BatchItem};
+    use std::sync::{Condvar, Mutex};
+
+    /// Open/closed latch shared by every gated recv half.
+    #[derive(Clone)]
+    struct Gate(Arc<(Mutex<bool>, Condvar)>);
+    impl Gate {
+        fn new() -> Gate {
+            Gate(Arc::new((Mutex::new(true), Condvar::new())))
+        }
+        fn set(&self, open: bool) {
+            *self.0 .0.lock().unwrap() = open;
+            self.0 .1.notify_all();
+        }
+        fn wait_open(&self) {
+            let mut g = self.0 .0.lock().unwrap();
+            while !*g {
+                g = self.0 .1.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Holds each *received* frame until the gate opens — replies reach
+    /// the client's reader worker only when the test allows.
+    struct HeldTransport {
+        inner: Box<dyn Transport>,
+        gate: Gate,
+    }
+    impl Transport for HeldTransport {
+        fn send(&mut self, frame: &[u8]) -> anyhow::Result<()> {
+            self.inner.send(frame)
+        }
+        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
+            let f = self.inner.recv()?;
+            self.gate.wait_open();
+            Ok(f)
+        }
+        fn split(
+            self: Box<Self>,
+        ) -> anyhow::Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+            let (tx, rx) = self.inner.split()?;
+            Ok((tx, Box::new(HeldRx { inner: rx, gate: self.gate })))
+        }
+    }
+    struct HeldRx {
+        inner: Box<dyn FrameRx>,
+        gate: Gate,
+    }
+    impl FrameRx for HeldRx {
+        fn recv(&mut self) -> anyhow::Result<Vec<u8>> {
+            let f = self.inner.recv()?;
+            self.gate.wait_open();
+            Ok(f)
+        }
+    }
+    struct HeldConnector<C: dvi::runtime::remote::transport::Connector> {
+        inner: C,
+        gate: Gate,
+    }
+    impl<C: dvi::runtime::remote::transport::Connector>
+        dvi::runtime::remote::transport::Connector for HeldConnector<C>
+    {
+        fn connect(&self) -> anyhow::Result<Box<dyn Transport>> {
+            Ok(Box::new(HeldTransport {
+                inner: self.inner.connect()?,
+                gate: self.gate.clone(),
+            }))
+        }
+        fn endpoint(&self) -> String {
+            self.inner.endpoint()
+        }
+    }
+
+    const LANES: usize = 4;
+    let gate = Gate::new();
+    let connector = HeldConnector {
+        inner: spawn_loopback(Arc::new(local())),
+        gate: gate.clone(),
+    };
+    // Window pinned > LANES so submissions never block on a closed
+    // gate, regardless of the DVI_MUX_WINDOW the CI lane exports.
+    let r =
+        Runtime::load_remote_with_window(Box::new(connector), LANES + 1).unwrap();
+    let l = local();
+
+    // Independent per-lane KV on both sides (gate open: serial setup).
+    let l_art = l.artifact("target_step").unwrap();
+    let r_art = r.artifact("target_step").unwrap();
+    let l_kvs: Vec<_> =
+        (0..LANES).map(|_| l.fresh_kv("target_step").unwrap()).collect();
+    let r_kvs: Vec<_> =
+        (0..LANES).map(|_| r.fresh_kv("target_step").unwrap()).collect();
+
+    // Golden: serial local calls.
+    let golden: Vec<_> = l_kvs
+        .iter()
+        .enumerate()
+        .map(|(i, kv)| {
+            let inputs =
+                [Tensor::scalar_i32(5 + i as i32), Tensor::scalar_i32(0)];
+            l_art.call(kv, &inputs).unwrap()
+        })
+        .collect();
+
+    // Close the gate, submit all lanes — every call is now in flight on
+    // one connection simultaneously (replies exist but cannot resolve).
+    gate.set(false);
+    let input_sets: Vec<[Tensor; 2]> = (0..LANES)
+        .map(|i| [Tensor::scalar_i32(5 + i as i32), Tensor::scalar_i32(0)])
+        .collect();
+    let handles: Vec<_> = r_kvs
+        .iter()
+        .zip(&input_sets)
+        .map(|(kv, inputs)| {
+            r_art.call_batched_submit(&[BatchItem { kv, inputs }])
+        })
+        .collect();
+    gate.set(true);
+
+    for (handle, want) in handles.into_iter().zip(&golden) {
+        let mut outs = handle.wait();
+        assert_eq!(outs.len(), 1);
+        let out = outs.pop().unwrap().expect("pipelined lane failed");
+        assert_eq!(
+            out.outputs[0], want.outputs[0],
+            "pipelined decode diverged from serial local"
+        );
+    }
+
+    // The realized window depth reached all LANES concurrent calls.
+    let status = r.executor_status();
+    let m = status[0].metrics.as_ref().expect("executor reachable");
+    assert!(
+        m.max_inflight >= LANES as u64,
+        "window never filled: max_inflight {} < {LANES}",
+        m.max_inflight
+    );
 }
 
 /// A transport-chaos reconnect must NOT count as the session ending:

@@ -253,19 +253,22 @@ fn remote_batched_is_bitwise_lossless_vs_local_engine() {
     }
 }
 
-/// Transport-level chaos through the full remote path: every 29th
-/// client send errors, at most 3 times (at-most-once execution, lazy
-/// bounded reconnect, server-side KV survives the reconnect). Failures
-/// must map onto per-chunk `fail_lane`, survivors must stay
-/// bitwise-lossless. (Even in the degenerate worst case a run issues
-/// >= 32 sends — 2 for the handshake, 2 fresh_kv per admission, >= 10
-/// batched calls — so 29 guarantees a failure; the cap kills at most
-/// 6 of 10 sequences.)
+/// Transport-level chaos through the full pipelined remote path: every
+/// 29th client send errors, at most 2 times (at-most-once execution,
+/// lazy bounded reconnect, server-side KV survives the reconnect).
+/// Failures must map onto per-lane `fail_lane`, survivors must stay
+/// bitwise-lossless. Worst-case damage under pipelining: an injected
+/// send failure kills the carried call *plus* everything in flight on
+/// that connection — bounded by the active lanes (max_slots = 4), so
+/// each failure costs at most 4 of the 10 sequences and the 2-failure
+/// cap guarantees >= 2 survivors. (Even in the degenerate worst case a
+/// run issues >= 32 sends — handshake, 2 fresh_kv per admission, >= 10
+/// batched calls — so 29 guarantees the first failure fires.)
 #[test]
 fn remote_transport_chaos_fails_chunks_not_the_scheduler() {
     for _ in 0..chaos_reps() {
         let remote =
-            Arc::new(Runtime::load_remote_loopback_chaos(SEED, 29, 3).unwrap());
+            Arc::new(Runtime::load_remote_loopback_chaos(SEED, 29, 2).unwrap());
         let local = Arc::new(Runtime::load_reference(SEED).unwrap());
         let cases = mixed_prompts(&local, 10, 16);
         chaos_run(remote, "dvi", &cases);
