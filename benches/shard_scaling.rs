@@ -46,6 +46,7 @@ fn drive(
         method: "dvi".into(),
         max_batch: 8,
         max_slots: 16,
+        adaptive: None,
     };
     let mut sched = Scheduler::new(rt, cfg, None).expect("scheduler");
     let t0 = Instant::now();

@@ -19,6 +19,7 @@ use std::time::Instant;
 use dvi::harness::load_prompts;
 use dvi::learner::Objective;
 use dvi::runtime::{ReferenceConfig, Runtime};
+use dvi::sched::AdaptiveK;
 use dvi::server::{Router, RouterConfig};
 
 struct RunStats {
@@ -27,6 +28,8 @@ struct RunStats {
     occupancy: f64,
     queue_wait_ms: f64,
     committed_per_tick: f64,
+    k_hist: [u64; 9],
+    mean_accept_ema: f64,
 }
 
 impl RunStats {
@@ -53,13 +56,43 @@ fn run_mode(
         tokens += rx.recv().expect("response").tokens.len() as u64;
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let (occupancy, queue_wait_ms, committed_per_tick) = match &router.sched_stats
-    {
-        Some(s) => (s.occupancy(), s.mean_queue_wait_ms(), s.committed_per_tick()),
-        None => (1.0, 0.0, 0.0),
-    };
+    let (occupancy, queue_wait_ms, committed_per_tick, k_hist, mean_accept_ema) =
+        match &router.sched_stats {
+            Some(s) => (
+                s.occupancy(),
+                s.mean_queue_wait_ms(),
+                s.committed_per_tick(),
+                s.k_hist_snapshot(),
+                s.mean_accept_ema(),
+            ),
+            None => (1.0, 0.0, 0.0, [0u64; 9], 0.0),
+        };
     router.shutdown();
-    RunStats { tokens, wall_s, occupancy, queue_wait_ms, committed_per_tick }
+    RunStats {
+        tokens,
+        wall_s,
+        occupancy,
+        queue_wait_ms,
+        committed_per_tick,
+        k_hist,
+        mean_accept_ema,
+    }
+}
+
+fn json_run(s: &RunStats) -> String {
+    let hist = s
+        .k_hist
+        .iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"tokens\":{},\"wall_s\":{:.6},\"tok_per_sec\":{:.2},\
+         \"occupancy\":{:.3},\"tok_per_tick\":{:.3},\"k_hist\":[{hist}],\
+         \"mean_accept_ema\":{:.4}}}",
+        s.tokens, s.wall_s, s.tok_per_sec(), s.occupancy,
+        s.committed_per_tick, s.mean_accept_ema
+    )
 }
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -168,10 +201,74 @@ fn main() {
         speedups.push((load, batched.tok_per_sec() / per_thread.tok_per_sec().max(1e-9), batched.occupancy));
     }
     println!();
-    for (load, speedup, occ) in speedups {
+    for (load, speedup, occ) in &speedups {
         println!(
             "[table4] load {load}: batched/per-thread throughput {speedup:.2}x, \
              mean batch occupancy {occ:.2}"
         );
+    }
+
+    // ---- fixed-k vs adaptive-k on the mixed stream load ----------------
+    // Same batched scheduler, same requests; only the speculation-depth
+    // policy differs. Committed streams are identical either way (greedy
+    // longest-prefix acceptance); the question is committed tokens/sec
+    // when low-acceptance sequences stop paying for full-depth rounds.
+    if method == "dvi" {
+        let load = loads.iter().copied().max().unwrap_or(4);
+        let reqs: Vec<(Vec<u32>, usize)> = stream
+            .samples
+            .iter()
+            .take(load)
+            .enumerate()
+            .map(|(i, s)| (s.prompt.clone(), s.max_new.min(16 + (i % 3) * 12)))
+            .collect();
+        let batched_cfg = |adaptive: Option<AdaptiveK>| RouterConfig {
+            method: method.clone(),
+            online: false,
+            objective: Objective::Dvi,
+            buffer_capacity: 4096,
+            batched: true,
+            max_batch,
+            max_slots: load.max(1),
+            adaptive,
+            ..RouterConfig::default()
+        };
+        let fixed = run_mode(rt.clone(), batched_cfg(None), &reqs);
+        let adaptive =
+            run_mode(rt.clone(), batched_cfg(Some(AdaptiveK::default())), &reqs);
+        let ratio = adaptive.tok_per_sec() / fixed.tok_per_sec().max(1e-9);
+        println!();
+        println!(
+            "| batched fixed-k | {load} | {} | {:.3} | {:.0} | {:.2} | {:.2} | {:.2} |",
+            fixed.tokens, fixed.wall_s, fixed.tok_per_sec(),
+            fixed.occupancy, fixed.queue_wait_ms, fixed.committed_per_tick
+        );
+        println!(
+            "| batched adaptive-k | {load} | {} | {:.3} | {:.0} | {:.2} | {:.2} | {:.2} |",
+            adaptive.tokens, adaptive.wall_s, adaptive.tok_per_sec(),
+            adaptive.occupancy, adaptive.queue_wait_ms,
+            adaptive.committed_per_tick
+        );
+        println!(
+            "[table4] load {load}: adaptive-k/fixed-k committed tok/s {ratio:.2}x \
+             (mean acceptance EMA {:.2}, chosen-k hist {:?})",
+            adaptive.mean_accept_ema, adaptive.k_hist
+        );
+        assert_eq!(
+            adaptive.tokens, fixed.tokens,
+            "adaptive-k changed the number of committed tokens"
+        );
+
+        // Machine-readable artifact for CI trend tracking.
+        let json = format!(
+            "{{\"bench\":\"table4_serving\",\"method\":\"{method}\",\
+             \"load\":{load},\"workers\":{workers},\"max_batch\":{max_batch},\
+             \"fixed_k\":{},\"adaptive_k\":{},\
+             \"adaptive_over_fixed\":{ratio:.4}}}",
+            json_run(&fixed), json_run(&adaptive)
+        );
+        let path = "BENCH_serving.json";
+        std::fs::write(path, format!("{json}\n")).expect("write bench artifact");
+        println!("[table4] wrote {path}");
     }
 }

@@ -25,7 +25,7 @@ use anyhow::Result;
 
 use crate::learner::ReplayBuffer;
 use crate::runtime::Runtime;
-use crate::sched::seq::{DviCtx, DviSeq};
+use crate::sched::seq::{AdaptiveK, DviCtx, DviSeq};
 
 use super::{Engine, GenResult};
 
@@ -60,6 +60,15 @@ impl DviEngine {
     pub fn without_draft_block(mut self) -> Self {
         let mut ctx = (*self.ctx).clone();
         ctx.draft_block = None;
+        self.ctx = Arc::new(ctx);
+        self
+    }
+
+    /// Override the adaptive speculation-depth policy explicitly
+    /// (construction defaults to the `DVI_ADAPTIVE_K` environment;
+    /// `None` pins every round to `k_spec`).
+    pub fn with_adaptive(mut self, adaptive: Option<AdaptiveK>) -> Self {
+        let ctx = (*self.ctx).clone().with_adaptive(adaptive);
         self.ctx = Arc::new(ctx);
         self
     }

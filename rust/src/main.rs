@@ -32,11 +32,13 @@ use dvi::engine::Engine;
 use dvi::harness;
 use dvi::learner::Objective;
 use dvi::runtime::{log, Runtime};
+use dvi::sched::AdaptiveK;
 use dvi::server::{api, Router, RouterConfig};
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
-const FLAGS: [&str; 5] = ["online", "no-online", "quiet", "verbose", "batched"];
+const FLAGS: [&str; 6] =
+    ["online", "no-online", "quiet", "verbose", "batched", "adaptive-k"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -278,6 +280,21 @@ fn serve(args: &Args) -> Result<()> {
     let batched = args.flag("batched");
     let max_batch = args.get_usize("max-batch", 8).map_err(anyhow::Error::msg)?;
     let max_slots = args.get_usize("slots", 16).map_err(anyhow::Error::msg)?;
+    // Adaptive speculation depth: --adaptive-k (or DVI_ADAPTIVE_K=1)
+    // turns it on; the knobs tune floor/ceiling/EMA/target. Off, every
+    // round drafts the manifest k_spec (the bitwise-reference mode).
+    let adaptive = if args.flag("adaptive-k") {
+        let mut ad = AdaptiveK::from_env().unwrap_or_default();
+        ad.floor = args.get_usize("k-floor", ad.floor).map_err(anyhow::Error::msg)?;
+        ad.ceiling =
+            args.get_usize("k-ceil", ad.ceiling).map_err(anyhow::Error::msg)?;
+        ad.alpha = args.get_f64("k-alpha", ad.alpha).map_err(anyhow::Error::msg)?;
+        ad.target =
+            args.get_f64("k-target", ad.target).map_err(anyhow::Error::msg)?;
+        Some(ad)
+    } else {
+        AdaptiveK::from_env()
+    };
     let tok = Arc::new(rt.tokenizer()?);
     let router = Arc::new(Router::start(
         rt,
@@ -290,6 +307,7 @@ fn serve(args: &Args) -> Result<()> {
             batched,
             max_batch,
             max_slots,
+            adaptive,
         },
     )?);
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
@@ -308,11 +326,22 @@ fn serve(args: &Args) -> Result<()> {
             ),
         }
     }
-    let mode = if batched {
+    let mut mode = if batched {
         format!("batched scheduler, max_batch={max_batch}, slots={max_slots}")
     } else {
         format!("{workers} workers")
     };
+    if let Some(ad) = adaptive {
+        let ceil = if ad.ceiling == usize::MAX {
+            "k_spec".to_string()
+        } else {
+            ad.ceiling.to_string()
+        };
+        mode.push_str(&format!(
+            ", adaptive-k [{}..{ceil}] target={} alpha={}",
+            ad.floor, ad.target, ad.alpha
+        ));
+    }
     println!(
         "serving on 127.0.0.1:{port} ({mode}, online={online}); try:\n  \
          echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}"

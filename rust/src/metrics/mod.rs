@@ -47,12 +47,19 @@ impl RunMetrics {
 
     /// Wall-time speedup vs a baseline run over the same prompts.
     pub fn speedup_vs(&self, baseline: &RunMetrics) -> f64 {
-        let own = self.tokens_per_sec();
+        self.speedup_opt(baseline).unwrap_or(0.0)
+    }
+
+    /// Speedup vs baseline, or `None` when the baseline has no decode
+    /// throughput to compare against. Reports must not render the `None`
+    /// case as a literal 0x — downstream averaging would read that as
+    /// "infinitely slow" instead of "not measured".
+    pub fn speedup_opt(&self, baseline: &RunMetrics) -> Option<f64> {
         let base = baseline.tokens_per_sec();
         if base == 0.0 {
-            0.0
+            None
         } else {
-            own / base
+            Some(self.tokens_per_sec() / base)
         }
     }
 }
@@ -96,6 +103,17 @@ mod tests {
         slow.add(&gen(10, 1_000_000_000, 0, 0));
         assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-9);
         assert_eq!(fast.speedup_vs(&RunMetrics::default()), 0.0);
+    }
+
+    #[test]
+    fn speedup_opt_none_for_dead_baseline() {
+        let mut fast = RunMetrics::default();
+        fast.add(&gen(20, 1_000_000_000, 4, 4));
+        assert_eq!(fast.speedup_opt(&RunMetrics::default()), None);
+        let mut slow = RunMetrics::default();
+        slow.add(&gen(10, 1_000_000_000, 0, 0));
+        let sp = fast.speedup_opt(&slow).unwrap();
+        assert!((sp - 2.0).abs() < 1e-9);
     }
 
     #[test]

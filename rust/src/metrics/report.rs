@@ -32,13 +32,17 @@ pub fn render_table2(
             let key = (m.to_string(), t.to_string());
             let base_key = (baseline.to_string(), t.to_string());
             match (results.get(&key), results.get(&base_key)) {
-                (Some(r), Some(b)) => {
-                    let sp = r.speedup_vs(b);
-                    sum += sp;
-                    cnt += 1;
-                    row.push_str(&format!(
-                        " {:.2} | {:.2}x |", r.mat.mean(), sp));
-                }
+                (Some(r), Some(b)) => match r.speedup_opt(b) {
+                    Some(sp) => {
+                        sum += sp;
+                        cnt += 1;
+                        row.push_str(&format!(
+                            " {:.2} | {:.2}x |", r.mat.mean(), sp));
+                    }
+                    // Baseline ran but recorded no decode time: show the
+                    // MAT, leave speedup unmeasured (and out of the Avg).
+                    None => row.push_str(&format!(" {:.2} | - |", r.mat.mean())),
+                },
                 _ => row.push_str(" - | - |"),
             }
         }
@@ -67,16 +71,19 @@ pub fn csv_table2(
             let key = (m.to_string(), t.to_string());
             let base_key = (baseline.to_string(), t.to_string());
             if let Some(r) = results.get(&key) {
+                // Missing/zero baseline -> empty field, not "0.0000":
+                // a literal zero poisons any downstream column average,
+                // while an empty cell is skipped by CSV consumers.
                 let sp = results
                     .get(&base_key)
-                    .map(|b| r.speedup_vs(b))
-                    .unwrap_or(0.0);
+                    .and_then(|b| r.speedup_opt(b))
+                    .map(|s| format!("{s:.4}"))
+                    .unwrap_or_default();
                 out.push_str(&format!(
-                    "{m},{t},{:.4},{:.4},{:.2},{:.4},{},{}\n",
+                    "{m},{t},{:.4},{:.4},{:.2},{sp},{},{}\n",
                     r.mat.mean(),
                     r.acceptance.mean(),
                     r.tokens_per_sec(),
-                    sp,
                     r.prompts,
                     r.new_tokens
                 ));
@@ -126,6 +133,30 @@ mod tests {
         assert!(md.contains("2.00x"));
         let csv = csv_table2(&["qa"], &["dvi"], &results, "ar");
         assert!(csv.lines().count() == 2);
+    }
+
+    #[test]
+    fn csv_missing_baseline_leaves_speedup_empty() {
+        let mut results = BTreeMap::new();
+        results.insert(("dvi".into(), "qa".into()), metrics(20, 1_000));
+        // Baseline absent entirely: speedup column must be empty, not a
+        // literal 0.0000 that a consumer would average in.
+        let csv = csv_table2(&["qa"], &["dvi"], &results, "ar");
+        let row = csv.lines().nth(1).unwrap();
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(fields.len(), 8, "row keeps all columns: {row}");
+        assert_eq!(fields[5], "", "speedup should be empty: {row}");
+
+        // Baseline present but with zero decode throughput: same rule.
+        results.insert(("ar".into(), "qa".into()), RunMetrics::default());
+        let csv = csv_table2(&["qa"], &["dvi"], &results, "ar");
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').nth(5), Some(""), "zero baseline: {row}");
+
+        // And the markdown table keeps such cells out of the average.
+        let md = render_table2(&["qa"], &["dvi"], &results, "ar");
+        let dvi_row = md.lines().find(|l| l.starts_with("| dvi |")).unwrap();
+        assert!(dvi_row.ends_with("| - | - |"), "no fake avg: {dvi_row}");
     }
 
     #[test]

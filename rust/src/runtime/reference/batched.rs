@@ -162,7 +162,7 @@ impl ReferenceBackend {
         batch: &[BatchItem<'_>],
     ) -> Result<Vec<CallOut>> {
         let m = &self.target;
-        let (split, k) = (self.cfg.split_layer, self.cfg.k_spec);
+        let split = self.cfg.split_layer;
         let (a, b) = self.lora()?;
         let (mut lanes, shapes) = self.lanes_kv(spec, batch)?;
         let mut toks: Vec<i32> = batch
@@ -173,17 +173,37 @@ impl ReferenceBackend {
             .iter()
             .map(|item| Ok(item.inputs[1].as_i32()?[0] as usize))
             .collect::<Result<Vec<_>>>()?;
+        // Per-lane round lengths (adaptive-k); lanes drop out of the
+        // shared layer sweep once their own round is drafted.
+        let lens: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[2].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        for &len in &lens {
+            ensure!(
+                len >= 1 && len <= self.cfg.k_spec,
+                "draft_block len {len} outside 1..={}",
+                self.cfg.k_spec
+            );
+        }
+        let kmax = lens.iter().copied().max().unwrap_or(0);
         let n = batch.len();
         let mut drafted: Vec<Vec<i32>> = vec![Vec::new(); n];
         let mut rows: Vec<Vec<f32>> =
-            (0..n).map(|_| Vec::with_capacity(k * m.d)).collect();
-        for i in 0..k {
+            (0..n).map(|_| Vec::with_capacity(kmax * m.d)).collect();
+        for i in 0..kmax {
+            let active: Vec<bool> = lens.iter().map(|&l| l > i).collect();
             for (li, lane) in lanes.iter_mut().enumerate() {
-                lane.h = m.embed_row(toks[li] as usize)?;
-                lane.pos = poss[li] + i;
+                if active[li] {
+                    lane.h = m.embed_row(toks[li] as usize)?;
+                    lane.pos = poss[li] + i;
+                }
             }
-            m.step_layers_lanes(0, split, &mut lanes)?;
+            m.step_layers_lanes_masked(0, split, &mut lanes, Some(&active))?;
             for (li, lane) in lanes.iter().enumerate() {
+                if !active[li] {
+                    continue;
+                }
                 let logits = m.draft_logits(
                     &lane.h, a.as_f32()?, b.as_f32()?, self.cfg.lora_rank,
                     self.cfg.lora_gamma,
@@ -197,8 +217,9 @@ impl ReferenceBackend {
         let outputs = drafted
             .into_iter()
             .zip(rows)
-            .map(|(dr, r)| {
-                vec![Tensor::i32(vec![k], dr), Tensor::f32(vec![k, m.d], r)]
+            .zip(&lens)
+            .map(|((dr, r), &len)| {
+                vec![Tensor::i32(vec![len], dr), Tensor::f32(vec![len, m.d], r)]
             })
             .collect();
         Ok(Self::wrap_lanes(lanes, shapes, outputs))
@@ -221,22 +242,42 @@ impl ReferenceBackend {
         for hk in &hks {
             ensure!(hk.shape[0] == bsz, "ragged verify batch");
         }
-        let mut logits: Vec<Vec<f32>> = (0..batch.len())
-            .map(|_| Vec::with_capacity(bsz * m.vocab))
+        // Live row count per lane: hk blocks are padded to a uniform
+        // k_spec rows, but only rows 0..len are stepped/committed.
+        let lens: Vec<usize> = batch
+            .iter()
+            .map(|item| Ok(item.inputs[2].as_i32()?[0] as usize))
+            .collect::<Result<Vec<_>>>()?;
+        for &len in &lens {
+            ensure!(
+                len >= 1 && len <= bsz,
+                "verify_block len {len} outside 1..={bsz}"
+            );
+        }
+        let imax = lens.iter().copied().max().unwrap_or(0);
+        let mut logits: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&len| Vec::with_capacity(len * m.vocab))
             .collect();
-        for i in 0..bsz {
-            for ((lane, hk), &pos) in lanes.iter_mut().zip(&hks).zip(&poss) {
-                lane.h = hk.row_f32(i)?.to_vec();
-                lane.pos = pos + i;
+        for i in 0..imax {
+            let active: Vec<bool> = lens.iter().map(|&l| l > i).collect();
+            for (li, (lane, hk)) in lanes.iter_mut().zip(&hks).enumerate() {
+                if active[li] {
+                    lane.h = hk.row_f32(i)?.to_vec();
+                    lane.pos = poss[li] + i;
+                }
             }
-            m.step_layers_lanes(split, l, &mut lanes)?;
-            for (lg, lane) in logits.iter_mut().zip(&lanes) {
-                lg.extend_from_slice(&m.logits(&lane.h));
+            m.step_layers_lanes_masked(split, l, &mut lanes, Some(&active))?;
+            for (li, (lg, lane)) in logits.iter_mut().zip(&lanes).enumerate() {
+                if active[li] {
+                    lg.extend_from_slice(&m.logits(&lane.h));
+                }
             }
         }
         let outputs = logits
             .into_iter()
-            .map(|lg| vec![Tensor::f32(vec![bsz, m.vocab], lg)])
+            .zip(&lens)
+            .map(|(lg, &len)| vec![Tensor::f32(vec![len, m.vocab], lg)])
             .collect();
         Ok(Self::wrap_lanes(lanes, shapes, outputs))
     }
@@ -422,18 +463,41 @@ mod tests {
             })
             .collect();
         assert_batched_matches(&be, "draft_step", &draft_lanes);
-        let block_out = assert_batched_matches(&be, "draft_block", &draft_lanes);
+        // Per-lane round lengths exercise the adaptive-k masking: the
+        // batched kernels must match serial calls even when lanes drop
+        // out of the shared layer sweep at different steps.
+        let k = be.cfg.k_spec;
+        let lens: Vec<usize> = (0..prompts.len())
+            .map(|i| k - i.min(k - 1))
+            .collect();
+        let block_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = draft_lanes
+            .iter()
+            .zip(&lens)
+            .map(|((kv, inp), &len)| {
+                let mut inp = inp.clone();
+                inp.push(Tensor::scalar_i32(len as i32));
+                (kv.clone(), inp)
+            })
+            .collect();
+        let block_out = assert_batched_matches(&be, "draft_block", &block_lanes);
 
+        let d = be.cfg.d_model;
         let verify_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = dp_out
             .iter()
             .zip(&block_out)
             .zip(&prompts)
-            .map(|((dpo, blo), pr)| {
+            .zip(&lens)
+            .map(|(((dpo, blo), pr), &len)| {
+                // hk blocks travel padded to the uniform [k_spec, d]
+                // manifest shape; only rows 0..len are live.
+                let mut hk = blo.outputs[1].as_f32().unwrap().to_vec();
+                hk.resize(k * d, 0.0);
                 (
                     dpo.kv.clone(),
                     vec![
-                        blo.outputs[1].clone(),
+                        Tensor::f32(vec![k, d], hk),
                         Tensor::scalar_i32(pr.len() as i32),
+                        Tensor::scalar_i32(len as i32),
                     ],
                 )
             })

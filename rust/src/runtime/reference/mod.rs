@@ -431,10 +431,18 @@ impl ReferenceBackend {
                    inputs: &[Tensor]) -> Result<CallOut> {
         let mut tok = inputs[0].as_i32()?[0];
         let pos = inputs[1].as_i32()?[0] as usize;
+        // Round length: adaptive-k sends 1..=k_spec; k_spec reproduces the
+        // historical fixed-k loop bitwise.
+        let k = inputs[2].as_i32()?[0] as usize;
+        ensure!(
+            k >= 1 && k <= self.cfg.k_spec,
+            "draft_block len {k} outside 1..={}",
+            self.cfg.k_spec
+        );
         let (a, b) = self.lora()?;
         let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
         let m = &self.target;
-        let (split, k) = (self.cfg.split_layer, self.cfg.k_spec);
+        let split = self.cfg.split_layer;
         let mut drafted = Vec::with_capacity(k);
         let mut rows = Vec::with_capacity(k * m.d);
         for i in 0..k {
@@ -462,7 +470,15 @@ impl ReferenceBackend {
                     inputs: &[Tensor]) -> Result<CallOut> {
         let hk = &inputs[0];
         let pos = inputs[1].as_i32()?[0] as usize;
-        let b = hk.shape[0];
+        // Rows 0..len of the (k_spec-padded) hk block are live; padding
+        // rows are never stepped, so no deep-stack FLOPs are wasted and
+        // no KV slot beyond pos+len-1 is written.
+        let b = inputs[2].as_i32()?[0] as usize;
+        ensure!(
+            b >= 1 && b <= hk.shape[0],
+            "verify_block len {b} outside 1..={}",
+            hk.shape[0]
+        );
         let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
         let m = &self.target;
         let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);

@@ -239,9 +239,32 @@ impl ModelW {
         hi: usize,
         lanes: &mut [StepLane],
     ) -> Result<()> {
+        self.step_layers_lanes_masked(lo, hi, lanes, None)
+    }
+
+    /// [`Self::step_layers_lanes`] with an optional activity mask:
+    /// inactive lanes are skipped entirely (no op executes against their
+    /// state), which lets variable-round-length batches (adaptive-k)
+    /// share one layer sweep. Because lanes never interact, skipping a
+    /// lane cannot perturb any other lane's results — active lanes stay
+    /// bitwise identical to an unmasked (or serial) run.
+    pub fn step_layers_lanes_masked(
+        &self,
+        lo: usize,
+        hi: usize,
+        lanes: &mut [StepLane],
+        active: Option<&[bool]>,
+    ) -> Result<()> {
         let d = self.d;
         ensure!(hi <= self.layers.len() && lo <= hi, "bad layer range {lo}..{hi}");
-        for lane in lanes.iter() {
+        if let Some(mask) = active {
+            ensure!(mask.len() == lanes.len(), "mask/lane count mismatch");
+        }
+        let live = |li: usize| active.map_or(true, |m| m[li]);
+        for (li, lane) in lanes.iter().enumerate() {
+            if !live(li) {
+                continue;
+            }
             ensure!(
                 lane.pos < self.max_seq,
                 "position {} >= max_seq {}",
@@ -256,7 +279,10 @@ impl ModelW {
         let inv_sqrt_d = 1.0 / (d as f32).sqrt();
         for (row, layer) in self.layers[lo..hi].iter().enumerate() {
             let base = row * self.max_seq * d;
-            for lane in lanes.iter_mut() {
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                if !live(li) {
+                    continue;
+                }
                 self.layer_pos_step(
                     layer, base, &mut lane.h, &mut lane.kc, &mut lane.vc,
                     lane.pos, inv_sqrt_d,

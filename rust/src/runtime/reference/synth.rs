@@ -104,6 +104,7 @@ pub fn manifest(cfg: &ReferenceConfig) -> Manifest {
             port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
             port("tok", vec![], i, Role::In),
             port("pos", vec![], i, Role::In),
+            port("len", vec![], i, Role::In),
         ],
         vec![
             port("drafted", vec![b], i, Role::Out),
@@ -119,6 +120,7 @@ pub fn manifest(cfg: &ReferenceConfig) -> Manifest {
             port("kv_dp_v", dp_kv.clone(), f, Role::Kv),
             port("hk_block", vec![b, d], f, Role::In),
             port("pos", vec![], i, Role::In),
+            port("len", vec![], i, Role::In),
         ],
         vec![
             port("logits_phi", vec![b, v], f, Role::Out),

@@ -40,6 +40,8 @@ use crate::runtime::{log, BatchHandle, BatchItem, Runtime};
 
 use self::seq::{CallSpec, MethodCtx, SeqState};
 
+pub use self::seq::AdaptiveK;
+
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
     /// Sequence engine: "dvi" or "ar".
@@ -48,11 +50,21 @@ pub struct SchedConfig {
     pub max_batch: usize,
     /// KV slot pool size = max concurrently resident sequences.
     pub max_slots: usize,
+    /// Adaptive speculation depth for DVI sequences. `None` (the
+    /// default unless `DVI_ADAPTIVE_K=1` is set) pins every round to
+    /// the manifest `k_spec` — the bitwise-reference mode that the
+    /// lossless test gates compare against.
+    pub adaptive: Option<AdaptiveK>,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { method: "dvi".into(), max_batch: 8, max_slots: 16 }
+        SchedConfig {
+            method: "dvi".into(),
+            max_batch: 8,
+            max_slots: 16,
+            adaptive: AdaptiveK::from_env(),
+        }
     }
 }
 
@@ -82,6 +94,15 @@ pub struct SchedStats {
     pub queue_wait_ns: AtomicU64,
     /// Most slots ever occupied at once (must stay <= max_slots).
     pub slot_high_water: AtomicU64,
+    /// Histogram of verified DVI round lengths: bucket k counts rounds
+    /// drafted at depth k (bucket 8 collects k >= 8). Populated in
+    /// pinned mode too — every bucket lands on k_spec there.
+    pub k_hist: [AtomicU64; 9],
+    /// Σ (acceptance EMA × 1000) sampled once per verified round, with
+    /// `ema_rounds` the sample count — [`Self::mean_accept_ema`] is
+    /// their ratio.
+    pub ema_milli_sum: AtomicU64,
+    pub ema_rounds: AtomicU64,
 }
 
 impl SchedStats {
@@ -124,6 +145,24 @@ impl SchedStats {
             0.0
         } else {
             self.committed_tokens.load(Ordering::Relaxed) as f64 / ticks as f64
+        }
+    }
+
+    /// Snapshot of the chosen-k histogram (bucket index = round length,
+    /// bucket 8 = anything deeper).
+    pub fn k_hist_snapshot(&self) -> [u64; 9] {
+        std::array::from_fn(|i| self.k_hist[i].load(Ordering::Relaxed))
+    }
+
+    /// Mean per-round acceptance EMA across all verified DVI rounds.
+    pub fn mean_accept_ema(&self) -> f64 {
+        let rounds = self.ema_rounds.load(Ordering::Relaxed);
+        if rounds == 0 {
+            0.0
+        } else {
+            self.ema_milli_sum.load(Ordering::Relaxed) as f64
+                / rounds as f64
+                / 1000.0
         }
     }
 }
@@ -169,7 +208,7 @@ impl Scheduler {
     ) -> Result<Scheduler> {
         ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
         ensure!(cfg.max_slots >= 1, "max_slots must be >= 1");
-        let ctx = MethodCtx::new(rt, &cfg.method, buffer)?;
+        let ctx = MethodCtx::new(rt, &cfg.method, buffer, cfg.adaptive)?;
         let slots = (0..cfg.max_slots).map(|_| None).collect();
         Ok(Scheduler {
             ctx,
@@ -239,6 +278,82 @@ impl Scheduler {
         }
     }
 
+    /// Record a just-verified DVI round into the chosen-k histogram and
+    /// acceptance-EMA aggregates. Observability only: runs in pinned
+    /// mode too (where every round lands in the k_spec bucket) and
+    /// never influences call construction.
+    fn record_round_stats(&self, slot: usize) {
+        let Some(lane) = self.slots[slot].as_ref() else { return };
+        if let Some(k) = lane.state.last_round_k() {
+            self.stats.k_hist[k.min(8)].fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(ema) = lane.state.accept_ema() {
+            self.stats
+                .ema_milli_sum
+                .fetch_add((ema * 1000.0).round() as u64, Ordering::Relaxed);
+            self.stats.ema_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Split one artifact group's lanes into batched-call chunks.
+    ///
+    /// Pinned-k (and every non-verify artifact): fixed-size slices in
+    /// slot order, exactly the historical discipline — byte-for-byte the
+    /// same call stream, which the bitwise lossless gates rely on.
+    ///
+    /// Adaptive-k verify chunks are acceptance-aware instead: lanes are
+    /// ordered by descending acceptance EMA (deep, high-confidence
+    /// rounds first, ties broken by slot index for determinism) and
+    /// packed greedily by *expected verify rows* against a budget of
+    /// `max_batch x k_spec` rows per call — short rounds from
+    /// low-acceptance sequences share a call instead of each wasting a
+    /// full-width lane.
+    fn plan_chunks(&self, name: &str, idxs: Vec<usize>) -> Vec<Vec<usize>> {
+        if !(name == "verify_block" && self.ctx.adaptive_active()) {
+            return idxs
+                .chunks(self.cfg.max_batch)
+                .map(|c| c.to_vec())
+                .collect();
+        }
+        let k_spec = self.ctx.k_spec().unwrap_or(1).max(1);
+        let budget = self.cfg.max_batch * k_spec;
+        let lane_ema = |i: usize| {
+            self.slots[i]
+                .as_ref()
+                .and_then(|l| l.state.accept_ema())
+                .unwrap_or(0.0)
+        };
+        let lane_rows = |i: usize| {
+            self.slots[i]
+                .as_ref()
+                .and_then(|l| l.state.verify_rows())
+                .unwrap_or(k_spec)
+        };
+        let mut order = idxs;
+        order.sort_by(|&a, &b| {
+            lane_ema(b)
+                .partial_cmp(&lane_ema(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut chunks: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut rows = 0usize;
+        for i in order {
+            let r = lane_rows(i);
+            if !cur.is_empty() && rows + r > budget {
+                chunks.push(std::mem::take(&mut cur));
+                rows = 0;
+            }
+            rows += r;
+            cur.push(i);
+        }
+        if !cur.is_empty() {
+            chunks.push(cur);
+        }
+        chunks
+    }
+
     /// One scheduling step: admit, advance every active lane by exactly
     /// one batched backend call, drain completions. Returns the number
     /// of lanes advanced (0 with an empty queue means idle).
@@ -304,8 +419,10 @@ impl Scheduler {
             _specs: Vec<CallSpec>,
         }
         let mut in_flight: Vec<PendingChunk> = Vec::new();
-        for (_, idxs) in groups {
-            for chunk in idxs.chunks(self.cfg.max_batch) {
+        for (name, idxs) in groups {
+            let chunks = self.plan_chunks(name, idxs);
+            for chunk in &chunks {
+                let chunk = chunk.as_slice();
                 let mut specs = Vec::with_capacity(chunk.len());
                 let mut chunk_ok = true;
                 for &i in chunk {
@@ -370,6 +487,9 @@ impl Scheduler {
                                     committed as u64,
                                     Ordering::Relaxed,
                                 );
+                                if name == "verify_block" {
+                                    self.record_round_stats(i);
+                                }
                             }
                             Err(e) => self.fail_lane(i, e),
                         }
@@ -469,6 +589,7 @@ mod tests {
             method: "ar".into(),
             max_batch: 2,
             max_slots: 4,
+            adaptive: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let backdated = Instant::now()
@@ -518,6 +639,7 @@ mod tests {
             method: "ar".into(),
             max_batch: 4,
             max_slots: 3,
+            adaptive: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let mut ids = Vec::new();
@@ -556,6 +678,7 @@ mod tests {
             method: "dvi".into(),
             max_batch: 4,
             max_slots: 2,
+            adaptive: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let bad = sched.submit(vec![1u32; prefill_seq + 5], 8);

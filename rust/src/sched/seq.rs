@@ -19,9 +19,82 @@ use anyhow::{bail, ensure, Result};
 
 use crate::engine::{truncate_at_eos, GenResult, StepRecord};
 use crate::learner::{ReplayBuffer, Tuple};
-use crate::runtime::{Artifact, Buffer, CallOut, Runtime, Tensor};
+use crate::runtime::{Artifact, Buffer, CallOut, Role, Runtime, Tensor};
 use crate::spec::{longest_prefix, SeqPos};
 use crate::util::math::argmax;
+
+/// Adaptive speculation-depth policy (paper-adjacent: the dynamic draft
+/// length surveyed in PAPERS.md 2401.07851 §4 / 2411.13157). Each DVI
+/// sequence tracks an acceptance-rate EMA from its own verify outcomes
+/// and picks the next round's draft length k as the deepest speculation
+/// whose expected full-acceptance probability still clears `target`
+/// (`ema^k >= target`), clamped to `[floor, min(ceiling, k_spec)]`.
+///
+/// Disabled (`None`) is the default everywhere: every sequence then
+/// drafts exactly `k_spec` tokens per round and all call shapes are
+/// bitwise identical to the historical fixed-k pipeline, which is what
+/// the lossless test gates pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveK {
+    /// Lower bound on the chosen k (>= 1).
+    pub floor: usize,
+    /// Upper bound on the chosen k (clamped to the manifest k_spec).
+    pub ceiling: usize,
+    /// EMA smoothing factor in (0, 1]; higher adapts faster.
+    pub alpha: f64,
+    /// Full-acceptance probability target in (0, 1): draft k tokens only
+    /// while `ema^k >= target`.
+    pub target: f64,
+}
+
+impl Default for AdaptiveK {
+    fn default() -> AdaptiveK {
+        AdaptiveK { floor: 1, ceiling: usize::MAX, alpha: 0.25, target: 0.5 }
+    }
+}
+
+impl AdaptiveK {
+    /// Read the policy from the environment: `DVI_ADAPTIVE_K=1` enables
+    /// it, `DVI_K_FLOOR` / `DVI_K_CEIL` / `DVI_K_ALPHA` / `DVI_K_TARGET`
+    /// override the defaults. Returns `None` (pinned-k) when unset.
+    pub fn from_env() -> Option<AdaptiveK> {
+        let on = std::env::var("DVI_ADAPTIVE_K").ok()?;
+        if on != "1" && !on.eq_ignore_ascii_case("true") {
+            return None;
+        }
+        let mut ad = AdaptiveK::default();
+        if let Some(v) = env_parse::<usize>("DVI_K_FLOOR") {
+            ad.floor = v;
+        }
+        if let Some(v) = env_parse::<usize>("DVI_K_CEIL") {
+            ad.ceiling = v;
+        }
+        if let Some(v) = env_parse::<f64>("DVI_K_ALPHA") {
+            ad.alpha = v;
+        }
+        if let Some(v) = env_parse::<f64>("DVI_K_TARGET") {
+            ad.target = v;
+        }
+        Some(ad)
+    }
+
+    /// Pick the next round's draft length from the sequence's acceptance
+    /// EMA. Total, and monotone in `ema`: a drafter that is being
+    /// accepted more gets to speculate deeper.
+    pub fn choose(&self, ema: f64, k_spec: usize) -> usize {
+        let ceil = self.ceiling.min(k_spec).max(1);
+        let floor = self.floor.clamp(1, ceil);
+        let p = ema.clamp(0.01, 0.999);
+        let target = self.target.clamp(1e-3, 0.999);
+        let raw = (target.ln() / p.ln()).floor();
+        let k = if raw.is_finite() && raw >= 1.0 { raw as usize } else { 1 };
+        k.clamp(floor, ceil)
+    }
+}
+
+fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+    std::env::var(name).ok()?.parse().ok()
+}
 
 /// Coarse phase of a sequence, shared by both machines. AR sequences
 /// have no draft stage; their decode steps count as Verifying (each is
@@ -58,6 +131,13 @@ pub struct DviCtx {
     pub d_model: usize,
     pub prefill_seq: usize,
     pub max_seq: usize,
+    /// Per-sequence adaptive draft length; `None` pins every round to
+    /// `k_spec` (the bitwise-reference mode).
+    pub adaptive: Option<AdaptiveK>,
+    /// Whether the backend's block artifacts declare the scalar `len`
+    /// In port. Manifests exported before it existed don't; those run
+    /// the historical 2-input calls and adaptive-k degrades to pinned.
+    pub var_len: bool,
 }
 
 impl DviCtx {
@@ -66,18 +146,42 @@ impl DviCtx {
         let d_model = rt.manifest.model_usize("d_model")?;
         let prefill_seq = rt.manifest.spec_usize("prefill_seq")?;
         let max_seq = rt.manifest.model_usize("max_seq")?;
+        let has_len = |a: &Artifact| {
+            a.spec
+                .params
+                .iter()
+                .any(|p| p.role == Role::In && p.name == "len")
+        };
+        let verify = rt.artifact("verify_block")?;
+        let draft_block = rt.artifact("draft_block").ok();
+        let var_len = has_len(&verify)
+            && draft_block.as_deref().map_or(true, has_len);
         Ok(DviCtx {
             prefill_sh: rt.artifact("prefill_shallow")?,
             prefill_dp: rt.artifact("prefill_deep")?,
             draft: rt.artifact("draft_step")?,
-            draft_block: rt.artifact("draft_block").ok(),
-            verify: rt.artifact("verify_block")?,
+            draft_block,
+            verify,
             rt,
             k_spec,
             d_model,
             prefill_seq,
             max_seq,
+            adaptive: AdaptiveK::from_env(),
+            var_len,
         })
+    }
+
+    /// Override the adaptive-k policy (explicit config beats env).
+    pub fn with_adaptive(mut self, adaptive: Option<AdaptiveK>) -> DviCtx {
+        self.adaptive = adaptive;
+        self
+    }
+
+    /// True when rounds may actually vary in length (policy present and
+    /// the backend accepts a round-length input).
+    pub fn adaptive_active(&self) -> bool {
+        self.adaptive.is_some() && self.var_len
     }
 }
 
@@ -136,6 +240,15 @@ pub struct DviSeq {
     round_feed: (u32, usize),
     drafted: Vec<u32>,
     hk_rows: Vec<f32>,
+    /// Draft length chosen for the current round (== k_spec when the
+    /// adaptive policy is off).
+    round_k: usize,
+    /// Draft length of the last *verified* round, for stats surfacing.
+    last_round_k: Option<usize>,
+    /// Acceptance-rate EMA over this sequence's verify outcomes
+    /// (accepted / drafted per round). Starts optimistic at 1.0 so the
+    /// first round speculates at full depth, matching pinned-k.
+    accept_ema: f64,
     result: GenResult,
     started: Instant,
     round_t0: Instant,
@@ -177,6 +290,9 @@ impl DviSeq {
             round_feed: (0, 0),
             drafted: Vec::with_capacity(ctx.k_spec),
             hk_rows: Vec::with_capacity(ctx.k_spec * ctx.d_model),
+            round_k: ctx.k_spec,
+            last_round_k: None,
+            accept_ema: 1.0,
             result: GenResult::default(),
             started: now,
             round_t0: now,
@@ -218,6 +334,26 @@ impl DviSeq {
         self.result
     }
 
+    /// Acceptance-rate EMA over this sequence's verified rounds.
+    pub fn accept_ema(&self) -> f64 {
+        self.accept_ema
+    }
+
+    /// Draft length of the most recently verified round.
+    pub fn last_round_k(&self) -> Option<usize> {
+        self.last_round_k
+    }
+
+    /// Live row count of the pending verify call (the current round's
+    /// chosen k), when the sequence is waiting on a verify.
+    pub fn verify_rows(&self) -> Option<usize> {
+        if matches!(self.step, DviStep::Verify) {
+            Some(self.round_k)
+        } else {
+            None
+        }
+    }
+
     /// Materialise the next backend call for this sequence.
     pub fn next_call(&mut self) -> Result<CallSpec> {
         let now = Instant::now();
@@ -251,15 +387,25 @@ impl DviSeq {
                     self.round_feed = self.seq.feed();
                     self.drafted.clear();
                     self.hk_rows.clear();
+                    self.round_k = match &self.ctx.adaptive {
+                        Some(ad) if self.ctx.var_len => {
+                            ad.choose(self.accept_ema, self.ctx.k_spec)
+                        }
+                        _ => self.ctx.k_spec,
+                    };
                 }
                 if let Some(block) = &self.ctx.draft_block {
+                    let mut inputs = vec![
+                        Tensor::scalar_i32(self.round_feed.0 as i32),
+                        Tensor::scalar_i32(self.round_feed.1 as i32),
+                    ];
+                    if self.ctx.var_len {
+                        inputs.push(Tensor::scalar_i32(self.round_k as i32));
+                    }
                     Ok(CallSpec {
                         artifact: block.clone(),
                         kv: self.kv_sh.clone(),
-                        inputs: vec![
-                            Tensor::scalar_i32(self.round_feed.0 as i32),
-                            Tensor::scalar_i32(self.round_feed.1 as i32),
-                        ],
+                        inputs,
                     })
                 } else {
                     let tok = if i == 0 {
@@ -280,16 +426,22 @@ impl DviSeq {
             DviStep::Verify => {
                 self.call_t0 = now;
                 self.draft_ns = self.round_t0.elapsed().as_nanos() as u64;
+                // The hk block always travels at the manifest's uniform
+                // [k_spec, d] shape; short adaptive rounds zero-pad and
+                // tell the backend the live row count via `len`.
+                let mut hk = self.hk_rows.clone();
+                hk.resize(self.ctx.k_spec * self.ctx.d_model, 0.0);
+                let mut inputs = vec![
+                    Tensor::f32(vec![self.ctx.k_spec, self.ctx.d_model], hk),
+                    Tensor::scalar_i32(self.round_feed.1 as i32),
+                ];
+                if self.ctx.var_len {
+                    inputs.push(Tensor::scalar_i32(self.round_k as i32));
+                }
                 Ok(CallSpec {
                     artifact: self.ctx.verify.clone(),
                     kv: self.kv_dp.clone(),
-                    inputs: vec![
-                        Tensor::f32(
-                            vec![self.ctx.k_spec, self.ctx.d_model],
-                            self.hk_rows.clone(),
-                        ),
-                        Tensor::scalar_i32(self.round_feed.1 as i32),
-                    ],
+                    inputs,
                 })
             }
             DviStep::Done => bail!("sequence already complete"),
@@ -333,7 +485,7 @@ impl DviSeq {
                     let d = argmax(out.outputs[0].as_f32()?) as u32;
                     self.hk_rows.extend_from_slice(out.outputs[1].as_f32()?);
                     self.drafted.push(d);
-                    self.step = if i + 1 < self.ctx.k_spec {
+                    self.step = if i + 1 < self.round_k {
                         DviStep::Draft(i + 1)
                     } else {
                         DviStep::Verify
@@ -343,7 +495,7 @@ impl DviSeq {
             }
             DviStep::Verify => {
                 self.kv_dp = out.kv;
-                let k = self.ctx.k_spec;
+                let k = self.round_k;
                 let logits_phi = &out.outputs[0];
                 let verifier: Vec<u32> = (0..k)
                     .map(|i| Ok(argmax(logits_phi.row_f32(i)?) as u32))
@@ -351,12 +503,35 @@ impl DviSeq {
                 let outcome = longest_prefix(&self.drafted, &verifier);
                 let verify_ns = self.call_t0.elapsed().as_nanos() as u64;
 
+                let before = self.result.tokens.len();
+                self.seq.advance(k, outcome.accepted, &outcome.committed);
+                self.result.tokens.extend_from_slice(&outcome.committed);
+                self.roll_or_finish();
+                // Delivered delta: EOS/max_new truncation in
+                // roll_or_finish never cuts below `before` (earlier
+                // rounds already survived it), so this is what the
+                // caller actually gains from the round — and what the
+                // round's accounting and supervision must be clamped
+                // to, or the final round overcounts.
+                let delivered = self.result.tokens.len().saturating_sub(before);
+                self.result.steps.push(StepRecord {
+                    drafted: k,
+                    accepted: outcome.accepted,
+                    committed: delivered,
+                    draft_ns: self.draft_ns,
+                    verify_ns,
+                });
+
                 // IMPROVE: one tuple per drafted position up to and
                 // including the first reject (counterfactual positions
-                // beyond it are never logged).
+                // beyond it are never logged), clamped to the delivered
+                // point — a token cut by EOS/max_new truncation was
+                // never served, so the learner must not train on it.
+                // The reward-masked reject position survives exactly
+                // when its bonus token was delivered.
                 if let Some(buf) = &self.buffer {
                     let mut buf = buf.lock().unwrap();
-                    let logged = (outcome.accepted + 1).min(k);
+                    let logged = (outcome.accepted + 1).min(k).min(delivered);
                     let d = self.ctx.d_model;
                     for i in 0..logged {
                         buf.push(Tuple {
@@ -368,22 +543,17 @@ impl DviSeq {
                     }
                 }
 
-                let before = self.result.tokens.len();
-                self.seq.advance(k, outcome.accepted, &outcome.committed);
-                self.result.tokens.extend_from_slice(&outcome.committed);
-                self.result.steps.push(StepRecord {
-                    drafted: k,
-                    accepted: outcome.accepted,
-                    committed: outcome.total_committed(),
-                    draft_ns: self.draft_ns,
-                    verify_ns,
-                });
-                self.roll_or_finish();
-                // Delivered delta: EOS/max_new truncation in
-                // roll_or_finish never cuts below `before` (earlier
-                // rounds already survived it), so this is what the
-                // caller actually gains from the round.
-                Ok(self.result.tokens.len().saturating_sub(before))
+                // Acceptance EMA feeds the adaptive-k policy (and stats)
+                // regardless of mode; truncation does not touch it — it
+                // measures drafter quality, not delivery budget.
+                let alpha = self
+                    .ctx
+                    .adaptive
+                    .map_or(AdaptiveK::default().alpha, |ad| ad.alpha);
+                self.accept_ema = alpha * (outcome.accepted as f64 / k as f64)
+                    + (1.0 - alpha) * self.accept_ema;
+                self.last_round_k = Some(k);
+                Ok(delivered)
             }
             DviStep::Done => bail!("sequence already complete"),
         }
@@ -617,6 +787,30 @@ impl SeqState {
             SeqState::Ar(s) => s.into_result(),
         }
     }
+
+    /// Acceptance EMA (DVI sequences only).
+    pub fn accept_ema(&self) -> Option<f64> {
+        match self {
+            SeqState::Dvi(s) => Some(s.accept_ema()),
+            SeqState::Ar(_) => None,
+        }
+    }
+
+    /// Draft length of the last verified round (DVI sequences only).
+    pub fn last_round_k(&self) -> Option<usize> {
+        match self {
+            SeqState::Dvi(s) => s.last_round_k(),
+            SeqState::Ar(_) => None,
+        }
+    }
+
+    /// Rows the pending verify call will carry (DVI sequences only).
+    pub fn verify_rows(&self) -> Option<usize> {
+        match self {
+            SeqState::Dvi(s) => s.verify_rows(),
+            SeqState::Ar(_) => None,
+        }
+    }
 }
 
 /// What the scheduler needs to mint fresh sequences of one method.
@@ -641,14 +835,17 @@ pub struct MethodCtx {
 }
 
 impl MethodCtx {
+    /// `adaptive` sets the DVI draft-length policy explicitly; `None`
+    /// pins k (AR sequences ignore it either way).
     pub fn new(
         rt: Arc<Runtime>,
         method: &str,
         buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+        adaptive: Option<AdaptiveK>,
     ) -> Result<MethodCtx> {
         let kind = match method {
             "dvi" => MethodKind::Dvi {
-                ctx: Arc::new(DviCtx::new(rt)?),
+                ctx: Arc::new(DviCtx::new(rt)?.with_adaptive(adaptive)),
                 buffer,
             },
             "ar" => MethodKind::Ar {
@@ -657,6 +854,22 @@ impl MethodCtx {
             other => bail!("scheduler supports methods dvi|ar, got '{other}'"),
         };
         Ok(MethodCtx { kind, next_key: std::sync::atomic::AtomicU64::new(0) })
+    }
+
+    /// True when sequences minted here may vary their round length.
+    pub fn adaptive_active(&self) -> bool {
+        match &self.kind {
+            MethodKind::Dvi { ctx, .. } => ctx.adaptive_active(),
+            MethodKind::Ar { .. } => false,
+        }
+    }
+
+    /// The manifest draft depth bound (DVI only).
+    pub fn k_spec(&self) -> Option<usize> {
+        match &self.kind {
+            MethodKind::Dvi { ctx, .. } => Some(ctx.k_spec),
+            MethodKind::Ar { .. } => None,
+        }
     }
 
     pub fn new_seq(&self, prompt: &[u32], max_new: usize) -> Result<SeqState> {
@@ -715,6 +928,83 @@ mod tests {
         let r = s.into_result();
         assert!(!r.tokens.is_empty() && r.tokens.len() <= 12);
         assert!(r.steps.iter().all(|st| st.drafted > 0));
+    }
+
+    /// Regression (truncation-skewed accounting/supervision): when the
+    /// final round's committed tokens are cut by `max_new`, the step
+    /// record must carry the delivered delta — not the pre-truncation
+    /// commit count — and the replay buffer must not receive tuples for
+    /// tokens that were never served. Before the fix this recorded
+    /// `committed = k` and logged `min(accepted+1, k)` tuples.
+    #[test]
+    fn truncated_final_round_records_delivered_not_committed() {
+        let rt = runtime();
+        let ctx = Arc::new(DviCtx::new(rt.clone()).unwrap().with_adaptive(None));
+        let k = ctx.k_spec;
+        let vocab = rt.manifest.model_usize("vocab_size").unwrap();
+        let buffer = Arc::new(Mutex::new(ReplayBuffer::new(64)));
+        let prompt: Vec<u32> = vec![1, 10, 11, 3];
+        // max_new = 2: prefill delivers token 1, so the single verify
+        // round has a delivery budget of exactly 1.
+        let mut s = DviSeq::new(ctx, Some(buffer.clone()), &prompt, 2, 0).unwrap();
+        while !matches!(s.step, DviStep::Verify) {
+            assert!(!s.is_done(), "finished before the first verify");
+            let call = s.next_call().unwrap();
+            let out = call.artifact.call(&call.kv, &call.inputs).unwrap();
+            s.apply(out).unwrap();
+        }
+        let call = s.next_call().unwrap();
+        // Craft verifier logits that accept every drafted token: the
+        // round wants to commit k tokens into a budget of 1.
+        let mut logits = vec![0.0f32; k * vocab];
+        for (i, &d) in s.drafted.iter().enumerate() {
+            logits[i * vocab + d as usize] = 1.0;
+        }
+        let out = CallOut {
+            outputs: vec![Tensor::f32(vec![k, vocab], logits)],
+            kv: call.kv,
+        };
+        let delivered = s.apply(out).unwrap();
+        assert!(s.is_done());
+        let r = s.into_result();
+        assert!(r.tokens.len() <= 2);
+        let st = r.steps.last().unwrap();
+        assert_eq!(st.accepted, k, "crafted verify must accept all drafted");
+        assert_eq!(
+            st.committed, delivered,
+            "step accounting must record the delivered delta"
+        );
+        assert!(
+            st.committed < k,
+            "truncation must cut the recorded commit below k"
+        );
+        let buf = buffer.lock().unwrap();
+        assert_eq!(
+            buf.pushed as usize, delivered,
+            "replay tuples must stop at the delivered point"
+        );
+    }
+
+    /// The adaptive-k policy is total, bounded, and monotone in the
+    /// acceptance EMA; an optimistic (fresh) sequence speculates at
+    /// full depth so the first round matches pinned-k.
+    #[test]
+    fn adaptive_k_policy_bounds_and_monotonicity() {
+        let ad = AdaptiveK::default();
+        assert_eq!(ad.choose(1.0, 4), 4);
+        assert_eq!(ad.choose(0.0, 4), 1);
+        let mut last = usize::MAX;
+        for ema in [0.95, 0.8, 0.6, 0.4, 0.2] {
+            let k = ad.choose(ema, 8);
+            assert!((1..=8).contains(&k));
+            assert!(k <= last, "k must not grow as acceptance falls");
+            last = k;
+        }
+        let tight = AdaptiveK { floor: 2, ceiling: 3, ..AdaptiveK::default() };
+        for ema in [0.0, 0.5, 1.0] {
+            let k = tight.choose(ema, 8);
+            assert!((2..=3).contains(&k));
+        }
     }
 
     /// Prompts longer than the prefill window must be rejected at

@@ -4,6 +4,8 @@
 //!   -> {"prompt_ids": [1, 340, 28], "max_new": 32}
 //!   <- {"id": 0, "text": "...", "tokens": [..], "mat": 3.2,
 //!       "acceptance": 0.81, "decode_ms": 12.4}
+//!   -> {"stats": true}
+//!   <- {"served": 12, "tokens": 384, ..., "k_hist": [0,3,1,0,9,0,0,0,0]}
 //!
 //! Designed for the `dvi serve` subcommand and the serving example; the
 //! protocol stays trivially scriptable (`nc localhost 7501`).
@@ -106,6 +108,15 @@ fn handle_conn(stream: TcpStream, router: &Router, tok: &Tokenizer) -> Result<()
         let line = line?;
         if line.trim().is_empty() {
             continue;
+        }
+        // Stats probe: {"stats": true} returns the serving snapshot
+        // (router counters, scheduler metrics, adaptive-k histogram)
+        // without consuming a generation.
+        if let Ok(j) = Json::parse(&line) {
+            if j.get("stats").as_bool() == Some(true) {
+                writeln!(writer, "{}", router.stats_json())?;
+                continue;
+            }
         }
         match parse_request(&line, tok) {
             Ok((prompt, max_new)) => {

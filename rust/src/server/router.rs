@@ -30,7 +30,7 @@ use crate::engine::Engine;
 use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
 use crate::runtime::{log, ExecutorStatus, Runtime};
-use crate::sched::{SchedConfig, SchedStats, Scheduler};
+use crate::sched::{AdaptiveK, SchedConfig, SchedStats, Scheduler};
 
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -49,6 +49,10 @@ pub struct RouterConfig {
     pub max_batch: usize,
     /// Batched mode: KV slot pool size (max resident sequences).
     pub max_slots: usize,
+    /// Adaptive speculation depth for DVI serving (both modes). `None`
+    /// (the default unless `DVI_ADAPTIVE_K=1`) pins every round to the
+    /// manifest `k_spec`.
+    pub adaptive: Option<AdaptiveK>,
 }
 
 impl Default for RouterConfig {
@@ -62,6 +66,7 @@ impl Default for RouterConfig {
             batched: false,
             max_batch: 8,
             max_slots: 16,
+            adaptive: AdaptiveK::from_env(),
         }
     }
 }
@@ -260,6 +265,7 @@ impl Router {
                     method: cfg.method.clone(),
                     max_batch: cfg.max_batch,
                     max_slots: cfg.max_slots,
+                    adaptive: cfg.adaptive,
                 },
                 if online_dvi { Some(buffer.clone()) } else { None },
             )?;
@@ -276,7 +282,15 @@ impl Router {
             let mut engines: Vec<Box<dyn Engine + Send>> = Vec::new();
             for _ in 0..cfg.workers {
                 engines.push(if online_dvi {
-                    Box::new(DviEngine::new(rt.clone())?.with_buffer(buffer.clone()))
+                    Box::new(
+                        DviEngine::new(rt.clone())?
+                            .with_adaptive(cfg.adaptive)
+                            .with_buffer(buffer.clone()),
+                    )
+                } else if cfg.method == "dvi" {
+                    // Honor the explicit adaptive-k override in offline
+                    // per-thread serving too.
+                    Box::new(DviEngine::new(rt.clone())?.with_adaptive(cfg.adaptive))
                 } else {
                     make_engine(rt.clone(), &cfg.method)?
                 });
@@ -329,6 +343,40 @@ impl Router {
     /// in-process backends.
     pub fn executor_status(&self) -> Vec<ExecutorStatus> {
         self.rt.executor_status()
+    }
+
+    /// One-line JSON snapshot of serving state: router counters plus,
+    /// in batched mode, the scheduler metrics — including the adaptive-k
+    /// chosen-depth histogram and the mean acceptance EMA — and the
+    /// remote executor count. Served by the TCP API for
+    /// `{"stats": true}` requests and printed by `dvi serve`.
+    pub fn stats_json(&self) -> String {
+        let mut out = format!(
+            "{{\"served\":{},\"tokens\":{},\"train_steps\":{}",
+            self.stats.served.load(Ordering::Relaxed),
+            self.stats.tokens.load(Ordering::Relaxed),
+            self.stats.train_steps.load(Ordering::Relaxed),
+        );
+        if let Some(ss) = &self.sched_stats {
+            let hist = ss.k_hist_snapshot();
+            let hist_s = hist
+                .iter()
+                .map(u64::to_string)
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                ",\"occupancy\":{:.3},\"committed_per_tick\":{:.3},\
+                 \"mean_queue_wait_ms\":{:.3},\"k_hist\":[{hist_s}],\
+                 \"mean_accept_ema\":{:.3}",
+                ss.occupancy(),
+                ss.committed_per_tick(),
+                ss.mean_queue_wait_ms(),
+                ss.mean_accept_ema(),
+            ));
+        }
+        out.push_str(&format!(",\"executors\":{}", self.executor_status().len()));
+        out.push('}');
+        out
     }
 
     /// Submit a prompt; returns a receiver for the response.

@@ -16,16 +16,18 @@
 //! transport, so this whole suite additionally proves the wire seam.
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use dvi::engine::dvi::DviEngine;
 use dvi::engine::Engine;
 use dvi::harness::{load_prompts, make_engine};
+use dvi::learner::ReplayBuffer;
 use dvi::runtime::remote::server::{spawn_loopback_shard, LoopbackShard};
 use dvi::runtime::remote::transport::{ChaosPlan, Connector};
 use dvi::runtime::{
     chaos::FlakyBackend, shard_for_key, Backend, Buffer, Runtime, Tensor,
 };
-use dvi::sched::{SchedConfig, SchedStats, Scheduler};
+use dvi::sched::{AdaptiveK, SchedConfig, SchedStats, Scheduler};
 use dvi::util::prop::run_prop;
 
 const SEED: u64 = 0xBA7C4;
@@ -62,7 +64,11 @@ fn mixed_prompts(
 }
 
 /// Run `cases` through a batched scheduler; return per-case token
-/// streams (in submission order) plus the stats handle.
+/// streams (in submission order) plus the stats handle. Speculation
+/// depth follows the environment (`DVI_ADAPTIVE_K`), matching what the
+/// per-sequence engines constructed by `make_engine` do — so the
+/// adaptive CI lane flips golden and scheduler paths together and every
+/// bitwise gate in this file must STILL hold.
 fn scheduler_tokens(
     rt: &Arc<Runtime>,
     method: &str,
@@ -70,7 +76,21 @@ fn scheduler_tokens(
     max_batch: usize,
     max_slots: usize,
 ) -> (Vec<Vec<u32>>, Arc<SchedStats>) {
-    let cfg = SchedConfig { method: method.into(), max_batch, max_slots };
+    scheduler_tokens_with(rt, method, cases, max_batch, max_slots,
+        AdaptiveK::from_env())
+}
+
+/// Same, but with the speculation-depth policy pinned explicitly.
+fn scheduler_tokens_with(
+    rt: &Arc<Runtime>,
+    method: &str,
+    cases: &[(Vec<u32>, usize)],
+    max_batch: usize,
+    max_slots: usize,
+    adaptive: Option<AdaptiveK>,
+) -> (Vec<Vec<u32>>, Arc<SchedStats>) {
+    let cfg =
+        SchedConfig { method: method.into(), max_batch, max_slots, adaptive };
     let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
     let ids: Vec<u64> = cases
         .iter()
@@ -143,6 +163,126 @@ fn token_streams_invariant_to_max_batch() {
 }
 
 // ----------------------------------------------------------------------------
+// Adaptive speculation depth
+// ----------------------------------------------------------------------------
+
+/// Tentpole gate: with the default adaptive policy actually varying k
+/// per round, the committed streams must stay **bitwise identical** to
+/// the pinned-k scheduler — greedy longest-prefix acceptance makes the
+/// committed stream the verifier's greedy continuation no matter how
+/// deep each round drafts. (The pinned streams are in turn pinned to the
+/// per-sequence engine by `batched_dvi_is_bitwise_lossless_vs_engine`.)
+#[test]
+fn adaptive_k_streams_are_bitwise_identical_to_pinned_k() {
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 10, 24);
+    let (pinned, pinned_stats) =
+        scheduler_tokens_with(&rt, "dvi", &cases, 4, cases.len(), None);
+    let (adaptive, stats) = scheduler_tokens_with(
+        &rt, "dvi", &cases, 4, cases.len(), Some(AdaptiveK::default()));
+    assert_eq!(adaptive, pinned, "adaptive-k changed the committed tokens");
+
+    // Observability: every verified round lands in the chosen-k
+    // histogram with a sampled acceptance EMA; pinned mode drafts one
+    // fixed depth, so its histogram uses exactly one bucket.
+    let pinned_hist = pinned_stats.k_hist_snapshot();
+    assert_eq!(
+        pinned_hist.iter().filter(|&&c| c > 0).count(),
+        1,
+        "pinned mode must draft a single fixed depth: {pinned_hist:?}"
+    );
+    let hist = stats.k_hist_snapshot();
+    let rounds: u64 = hist.iter().sum();
+    assert_eq!(rounds, stats.ema_rounds.load(Ordering::Relaxed));
+    assert!(rounds > 0, "no verified rounds recorded");
+    let ema = stats.mean_accept_ema();
+    assert!(ema > 0.0 && ema <= 1.0, "mean acceptance EMA out of range: {ema}");
+    // Unless the hermetic drafter happened to keep its acceptance EMA
+    // high the whole run, the policy must have shrunk some round below
+    // the pinned depth.
+    let k_spec_bucket = pinned_hist.iter().position(|&c| c > 0).unwrap();
+    let shallow: u64 = hist[..k_spec_bucket].iter().sum();
+    assert!(
+        shallow > 0 || ema > 0.8,
+        "adaptive-k never shrank below k_spec despite mean EMA {ema}: {hist:?}"
+    );
+}
+
+/// Satellite regression (truncation accounting): `StepRecord.committed`
+/// and the replay tuples pushed for a round must both be bounded by the
+/// tokens actually DELIVERED after EOS/max_new truncation. Before the
+/// fix, the final truncated round recorded the full pre-truncation
+/// commit (skewing MAT upward) and logged tuples for discarded drafted
+/// positions (training on supervision the stream never contained).
+/// Short budgets make final-round truncation common, so sweep them
+/// through BOTH the per-sequence engine and the batched scheduler.
+#[test]
+fn step_accounting_and_replay_tuples_match_delivered_tokens() {
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 6, 24);
+    for max_new in 1..=6usize {
+        // Per-sequence engine path.
+        let buf = Arc::new(Mutex::new(ReplayBuffer::new(4096)));
+        let mut engine = DviEngine::new(rt.clone())
+            .unwrap()
+            .with_adaptive(None)
+            .with_buffer(buf.clone());
+        for (p, _) in &cases {
+            let before = buf.lock().unwrap().pushed;
+            let r = engine.generate(p, max_new).unwrap();
+            let pushed = (buf.lock().unwrap().pushed - before) as usize;
+            let committed: usize = r.steps.iter().map(|s| s.committed).sum();
+            assert_eq!(
+                1 + committed,
+                r.tokens.len(),
+                "prefill token + per-round committed must reconstruct the \
+                 stream exactly (max_new={max_new})"
+            );
+            assert!(r.tokens.len() <= max_new, "overshot the token budget");
+            // Tuples exist only for delivered drafted positions — never
+            // more than the stream minus the prefill-committed token.
+            assert!(
+                pushed <= r.tokens.len() - 1,
+                "replay logged {pushed} tuples for {} delivered tokens \
+                 (max_new={max_new})",
+                r.tokens.len()
+            );
+        }
+        // Batched scheduler path: same invariants through apply().
+        let buf = Arc::new(Mutex::new(ReplayBuffer::new(4096)));
+        let cfg = SchedConfig {
+            method: "dvi".into(),
+            max_batch: 3,
+            max_slots: 4,
+            adaptive: None,
+        };
+        let mut sched =
+            Scheduler::new(rt.clone(), cfg, Some(buf.clone())).unwrap();
+        for (p, _) in &cases {
+            sched.submit(p.clone(), max_new);
+        }
+        sched.run_until_idle(100_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        let mut tokens = 0usize;
+        let mut committed = 0usize;
+        for r in done {
+            let g = r.result.expect("scheduled generation failed");
+            let c: usize = g.steps.iter().map(|s| s.committed).sum();
+            assert_eq!(1 + c, g.tokens.len(), "scheduler path accounting");
+            tokens += g.tokens.len();
+            committed += c;
+        }
+        let pushed = buf.lock().unwrap().pushed as usize;
+        assert!(
+            pushed <= committed,
+            "scheduler replay logged {pushed} tuples for {committed} \
+             verify-committed tokens (max_new={max_new})"
+        );
+    }
+}
+
+// ----------------------------------------------------------------------------
 // Chaos: injected failures must cost chunks, never the scheduler
 // ----------------------------------------------------------------------------
 
@@ -160,7 +300,12 @@ fn chaos_run(rt: Arc<Runtime>, method: &str, cases: &[(Vec<u32>, usize)]) {
             .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
             .collect()
     };
-    let cfg = SchedConfig { method: method.into(), max_batch: 2, max_slots: 4 };
+    let cfg = SchedConfig {
+        method: method.into(),
+        max_batch: 2,
+        max_slots: 4,
+        adaptive: AdaptiveK::from_env(),
+    };
     let mut sched = Scheduler::new(rt, cfg, None).unwrap();
     let half = cases.len() / 2;
     let mut ids: Vec<u64> = cases[..half]
@@ -360,7 +505,12 @@ fn killing_one_shard_degrades_only_its_sequences() {
     assert!(cases.len() >= 6, "not enough multi-round prompts in the stream");
 
     let (remote, shards) = sharded_fleet(2);
-    let cfg = SchedConfig { method: "dvi".into(), max_batch: 4, max_slots: 16 };
+    let cfg = SchedConfig {
+        method: "dvi".into(),
+        max_batch: 4,
+        max_slots: 16,
+        adaptive: AdaptiveK::from_env(),
+    };
     let mut sched = Scheduler::new(remote, cfg, None).unwrap();
     let ids: Vec<u64> = cases
         .iter()
@@ -489,6 +639,7 @@ fn prop_interleaved_admission_never_starves() {
             method: "ar".into(),
             max_batch: 1 + rng.usize_below(4),
             max_slots,
+            adaptive: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let total = 4 + rng.usize_below(5);
