@@ -200,6 +200,7 @@ fn main() {
     println!();
     println!("| backend | artifact | lanes | calls | wall ms | us/call | us/lane-step |");
     println!("|---|---|---|---|---|---|---|");
+    let mut artifact_rows: Vec<String> = Vec::new();
     for artifact in ["target_step", "draft_step"] {
         let l = drive(&local, artifact, lanes, iters);
         let r = drive(&remote, artifact, lanes, iters);
@@ -219,6 +220,14 @@ fn main() {
             r.us_per_call() - l.us_per_call(),
             r.us_per_call() / l.us_per_call().max(1e-9)
         );
+        artifact_rows.push(format!(
+            "{{\"artifact\":\"{artifact}\",\"lanes\":{lanes},\
+             \"calls\":{iters},\"local_us_per_call\":{:.2},\
+             \"remote_us_per_call\":{:.2},\"overhead_us_per_call\":{:.2}}}",
+            l.us_per_call(),
+            r.us_per_call(),
+            r.us_per_call() - l.us_per_call()
+        ));
     }
 
     // --- serial vs pipelined: same call set, one connection -------------
@@ -276,4 +285,21 @@ fn main() {
         m.max_inflight,
         groups.max(2)
     );
+
+    // Machine-readable artifact for CI trend tracking.
+    let json = format!(
+        "{{\"bench\":\"remote_overhead\",\
+         \"artifacts\":[{}],\
+         \"pipelining\":{{\"window\":{},\"chunks\":{groups},\
+         \"rounds\":{rounds},\"serial_wall_s\":{serial_s:.6},\
+         \"piped_wall_s\":{piped_s:.6},\"speedup\":{:.4},\
+         \"max_inflight\":{}}}}}",
+        artifact_rows.join(","),
+        groups.max(2),
+        serial_s / piped_s.max(1e-9),
+        m.max_inflight
+    );
+    let path = "BENCH_remote_overhead.json";
+    std::fs::write(path, format!("{json}\n")).expect("write bench artifact");
+    println!("[remote_overhead] wrote {path}");
 }

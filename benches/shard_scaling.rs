@@ -142,4 +142,28 @@ fn main() {
             r.wall_s * 1e3
         );
     }
+
+    // Machine-readable artifact for CI trend tracking.
+    let rows = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"label\":\"{}\",\"wall_s\":{:.6},\"tokens\":{},\
+                 \"tok_per_sec\":{:.1},\"occupancy\":{:.4}}}",
+                r.label,
+                r.wall_s,
+                r.tokens,
+                r.tokens as f64 / r.wall_s.max(1e-9),
+                r.occupancy
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let json = format!(
+        "{{\"bench\":\"shard_scaling\",\"seqs\":{},\"runs\":[{rows}]}}",
+        cases.len()
+    );
+    let path = "BENCH_shard_scaling.json";
+    std::fs::write(path, format!("{json}\n")).expect("write bench artifact");
+    println!("[shard_scaling] wrote {path}");
 }

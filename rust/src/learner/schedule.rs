@@ -105,6 +105,26 @@ impl Schedule {
         }
     }
 
+    /// Schedule phase at step `t`: 0 = KL warmup, 1 = ramp, 2 = RL.
+    pub fn phase_index(&self, t: u64) -> u64 {
+        if t < self.t_warmup {
+            0
+        } else if t < self.t_warmup + self.t_ramp {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Human-readable name of [`Schedule::phase_index`].
+    pub fn phase_name(&self, t: u64) -> &'static str {
+        match self.phase_index(t) {
+            0 => "warmup",
+            1 => "ramp",
+            _ => "rl",
+        }
+    }
+
     /// Ramp fraction in [0, 1].
     fn ramp(&self, t: u64) -> f32 {
         if t < self.t_warmup {

@@ -8,6 +8,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::obs::{metrics, trace};
 use crate::runtime::{Artifact, Runtime, Tensor};
 use crate::util::math::Ema;
 use crate::util::rng::Rng;
@@ -44,6 +45,9 @@ pub struct Trainer {
     vocab: usize,
     /// Learning-curve log: one entry per optimizer step.
     pub curve: Vec<TrainMetrics>,
+    /// Wall time of the most recent optimizer step (observation-only).
+    pub last_step_ns: u64,
+    m_step: metrics::HistHandle,
 }
 
 impl Trainer {
@@ -69,6 +73,8 @@ impl Trainer {
             d_model,
             vocab,
             curve: Vec::new(),
+            last_step_ns: 0,
+            m_step: metrics::hist("learner.train_step_ns"),
         })
     }
 
@@ -123,6 +129,7 @@ impl Trainer {
         self.baseline.update(batch_reward_mean);
 
         let hyper = self.schedule.hyper(self.steps_done, b);
+        let t0_ns = trace::now_ns();
         let out = self.train_step.call(
             &[],
             &[
@@ -134,6 +141,17 @@ impl Trainer {
                 Tensor::f32(vec![8], hyper.to_vec()),
             ],
         )?;
+        let step_ns = trace::now_ns().saturating_sub(t0_ns);
+        self.last_step_ns = step_ns;
+        self.m_step.observe(step_ns);
+        if trace::enabled() {
+            trace::complete_with_dur(
+                "learner.train_step",
+                "learner",
+                step_ns,
+                vec![("step", trace::Arg::I(self.steps_done as i64))],
+            );
+        }
         let m = out.outputs[0].as_f32()?;
         let metrics = TrainMetrics {
             step: self.steps_done,

@@ -30,6 +30,7 @@ pub mod engine;
 pub mod harness;
 pub mod learner;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod server;

@@ -10,6 +10,12 @@
 //!   fig2     --train 2000        ablation learning curves (Figure 2)
 //!   serve    --port 7501 --workers 2 [--no-online]
 //!            [--batched --max-batch 8 --slots 16]   continuous batching
+//!            [--metrics] [--trace-out FILE] [--report-secs 30]
+//!            [--smoke N]  observability: quantile metrics in the
+//!            periodic report, Chrome-trace export (forces tracing on),
+//!            or a self-driven N-prompt smoke run (no listener)
+//!   trace-summary FILE.json      reduce a Chrome trace to per-phase
+//!            latency quantiles (from `serve --trace-out` / DVI_TRACE)
 //!   serve-backend --listen 127.0.0.1:7600           executor server:
 //!            front the local backend (reference/pjrt) for remote
 //!            clients (`--backend remote --remote HOST:PORT`, or
@@ -26,19 +32,22 @@ use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use dvi::engine::Engine;
 use dvi::harness;
 use dvi::learner::Objective;
+use dvi::obs::{chrome, trace, TraceSink};
 use dvi::runtime::{log, Runtime};
 use dvi::sched::AdaptiveK;
 use dvi::server::{api, Router, RouterConfig};
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
-const FLAGS: [&str; 6] =
-    ["online", "no-online", "quiet", "verbose", "batched", "adaptive-k"];
+const FLAGS: [&str; 7] = [
+    "online", "no-online", "quiet", "verbose", "batched", "adaptive-k",
+    "metrics",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -104,10 +113,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("fig2") => fig2(args),
         Some("serve") => serve(args),
         Some("serve-backend") => serve_backend(args),
+        Some("trace-summary") => trace_summary(args),
         Some(other) => bail!("unknown subcommand '{other}' (see src/main.rs docs)"),
         None => bail!(
             "usage: dvi <info|run|train|table1|table2|table3|fig2|serve|\
-             serve-backend> [...]"
+             serve-backend|trace-summary> [...]"
         ),
     }
 }
@@ -126,6 +136,11 @@ fn info(args: &Args) -> Result<()> {
             None => println!("  shard {} @ {}: UNREACHABLE", s.shard, s.endpoint),
         }
     }
+    println!(
+        "trace: {} (dropped events: {})",
+        if trace::enabled() { "on" } else { "off (set DVI_TRACE=1)" },
+        trace::drop_count()
+    );
     println!("artifacts: {}", rt.manifest.dir.display());
     println!("model config: {}", rt.manifest.config.get("model"));
     println!("spec config: {}", rt.manifest.config.get("spec"));
@@ -272,6 +287,13 @@ fn fig2(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    // Tracing must be forced on before the router spawns its threads so
+    // prefill/learner spans from the very first request are captured.
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        trace::set_forced(Some(true));
+    }
+    let mut sink = trace_out.map(TraceSink::new);
     let rt = load_runtime(args)?;
     let port = args.get_usize("port", 7501).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
@@ -297,7 +319,7 @@ fn serve(args: &Args) -> Result<()> {
     };
     let tok = Arc::new(rt.tokenizer()?);
     let router = Arc::new(Router::start(
-        rt,
+        rt.clone(),
         RouterConfig {
             workers,
             method,
@@ -310,6 +332,34 @@ fn serve(args: &Args) -> Result<()> {
             adaptive,
         },
     )?);
+    let metrics_on = args.flag("metrics");
+    let smoke = args.get_usize("smoke", 0).map_err(anyhow::Error::msg)?;
+    if smoke > 0 {
+        // Self-driven smoke run: push N prompts through the router
+        // without binding a listener, print the observability surfaces,
+        // flush the trace, and exit. CI drives this to validate the
+        // trace/metrics pipeline end to end.
+        let set = harness::load_prompts(&rt, &args.get_or("task", "qa"))?;
+        ensure!(!set.samples.is_empty(), "no prompts for the smoke run");
+        let rxs: Vec<_> = (0..smoke)
+            .map(|i| {
+                let s = &set.samples[i % set.samples.len()];
+                router.submit(s.prompt.clone(), s.max_new)
+            })
+            .collect();
+        let served = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+        ensure!(served == smoke, "smoke run served {served}/{smoke}");
+        println!("smoke: served {served}/{smoke}");
+        println!("stats: {}", router.stats_json());
+        if metrics_on {
+            println!("metrics: {}", router.metrics_json());
+        }
+        if let Some(sink) = sink.as_mut() {
+            sink.flush()?;
+            println!("trace written to {}", sink.path().display());
+        }
+        return Ok(());
+    }
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     let stop = Arc::new(AtomicBool::new(false));
     for s in router.executor_status() {
@@ -344,9 +394,81 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!(
         "serving on 127.0.0.1:{port} ({mode}, online={online}); try:\n  \
-         echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}"
+         echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}\n  \
+         echo '{{\"metrics\": true}}' | nc 127.0.0.1 {port}"
     );
+    // Periodic report: serving stats, executor health (incl. the mux
+    // pipelining gauges), a never-silent trace-overflow warning, and —
+    // with --metrics — the quantile registry. Also the flush cadence
+    // for --trace-out. `--report-secs 0` silences the report but keeps
+    // flushing an active trace sink.
+    let report_secs =
+        args.get_usize("report-secs", 30).map_err(anyhow::Error::msg)?;
+    if report_secs > 0 || sink.is_some() {
+        let quiet = report_secs == 0;
+        let secs = if quiet { 5 } else { report_secs as u64 };
+        let r2 = router.clone();
+        let mut sink = sink.take();
+        std::thread::Builder::new().name("dvi-report".into()).spawn(
+            move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(secs));
+                if !quiet {
+                    println!("stats: {}", r2.stats_json());
+                    for s in r2.executor_status() {
+                        if let Some(m) = s.metrics {
+                            println!(
+                                "  shard {} @ {}: {} calls, occupancy \
+                                 {:.2}, inflight {}/{} (now/max)",
+                                s.shard,
+                                s.endpoint,
+                                m.calls,
+                                m.occupancy(),
+                                m.inflight,
+                                m.max_inflight
+                            );
+                        }
+                    }
+                    if metrics_on {
+                        println!("metrics: {}", r2.metrics_json());
+                    }
+                }
+                let dropped = trace::drop_count();
+                if dropped > 0 {
+                    println!(
+                        "WARNING: trace ring overflow — {dropped} events \
+                         dropped so far (raise DVI_TRACE_BUF)"
+                    );
+                }
+                if let Some(sink) = sink.as_mut() {
+                    if let Err(e) = sink.flush() {
+                        log::info(&format!("trace flush failed: {e:#}"));
+                    }
+                }
+            },
+        )?;
+    }
     api::serve(listener, router, tok, stop)
+}
+
+/// Reduce a Chrome trace (from `serve --trace-out` or an externally
+/// captured `DVI_TRACE=1` run) to per-phase/per-shard latency quantiles.
+fn trace_summary(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("trace"))
+        .context("usage: dvi trace-summary FILE.json")?
+        .to_string();
+    let doc = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path}"))?;
+    let (stats, dropped) = chrome::summarize(&doc)?;
+    ensure!(!stats.is_empty(), "trace {path} holds no complete events");
+    print!("{}", chrome::summary_table(&stats));
+    if dropped > 0 {
+        println!("(dropped events: {dropped})");
+    }
+    Ok(())
 }
 
 /// Executor-server mode: front the locally selected backend over the

@@ -1,0 +1,281 @@
+//! Chrome trace-event JSON export and reduction.
+//!
+//! The emitted document follows the Trace Event Format's JSON-object
+//! form (`{"traceEvents": [...]}`) with `'X'` complete and `'i'`
+//! instant events, microsecond timestamps, and one track per source
+//! thread — loadable in Perfetto / `chrome://tracing` as-is. Writes go
+//! to a temp file renamed into place, so the output path always holds
+//! a complete, parseable document even if the process dies mid-flush.
+//!
+//! [`summarize`] is the inverse reduction used by `dvi trace-summary`:
+//! it groups complete events by name (and shard, when tagged) and
+//! reports exact latency quantiles over the recorded durations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::trace::{self, Arg, Event};
+use crate::util::json::{escape, Json};
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push('0');
+    }
+}
+
+fn push_event(out: &mut String, e: &Event) {
+    out.push_str(&format!(
+        "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"ts\":{:.3},\"pid\":1,\"tid\":{}",
+        escape(e.name),
+        escape(e.cat),
+        e.ph,
+        e.ts_ns as f64 / 1e3,
+        e.tid
+    ));
+    if e.ph == 'X' {
+        out.push_str(&format!(",\"dur\":{:.3}", e.dur_ns as f64 / 1e3));
+    }
+    if e.ph == 'i' {
+        // thread-scoped instant marker
+        out.push_str(",\"s\":\"t\"");
+    }
+    if !e.args.is_empty() {
+        out.push_str(",\"args\":{");
+        for (i, (k, v)) in e.args.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&escape(k));
+            out.push(':');
+            match v {
+                Arg::I(n) => out.push_str(&n.to_string()),
+                Arg::F(f) => push_f64(out, *f),
+                Arg::S(s) => out.push_str(&escape(s)),
+            }
+        }
+        out.push('}');
+    }
+    out.push('}');
+}
+
+/// Render a full trace document. Events are sorted by (ts, tid) so
+/// every track is time-monotonic regardless of drain interleaving.
+pub fn render(events: &[Event], dropped: u64) -> String {
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by_key(|e| (e.ts_ns, e.tid));
+    let mut out = String::with_capacity(events.len() * 112 + 128);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in sorted.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_event(&mut out, e);
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"tool\":\"dvi\",\
+         \"dropped_events\":{dropped}}}}}"
+    ));
+    out
+}
+
+/// Write a trace document atomically (temp file + rename): the target
+/// path never holds a torn document.
+pub fn write_atomic(path: &Path, events: &[Event], dropped: u64) -> Result<()> {
+    let doc = render(events, dropped);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, doc)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+/// Accumulating export sink for `serve --trace-out`: each flush drains
+/// the live rings into an in-memory event log (bounded by
+/// `DVI_TRACE_MAX`, default 1M events; overflow counts as drops) and
+/// rewrites the output file atomically.
+pub struct TraceSink {
+    path: PathBuf,
+    events: Vec<Event>,
+    max_events: usize,
+    truncated: u64,
+}
+
+impl TraceSink {
+    pub fn new(path: PathBuf) -> TraceSink {
+        let max_events = std::env::var("DVI_TRACE_MAX")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(1_000_000);
+        TraceSink { path, events: Vec::new(), max_events, truncated: 0 }
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        for ev in trace::drain() {
+            if self.events.len() < self.max_events {
+                self.events.push(ev);
+            } else {
+                self.truncated += 1;
+            }
+        }
+        write_atomic(
+            &self.path,
+            &self.events,
+            trace::drop_count() + self.truncated,
+        )
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Latency summary for one (event name, shard) group of complete
+/// events. Quantiles are exact over the recorded durations.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    /// Event name, suffixed `/s<shard>` when the span carried a shard tag.
+    pub key: String,
+    pub count: usize,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub total_ms: f64,
+}
+
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Reduce a Chrome trace document to per-phase/per-shard stats.
+pub fn summarize(doc: &str) -> Result<(Vec<PhaseStat>, u64)> {
+    let j = Json::parse(doc).context("parse trace JSON")?;
+    let Some(events) = j.get("traceEvents").as_arr() else {
+        bail!("no traceEvents array in trace document");
+    };
+    let dropped = j
+        .get("otherData")
+        .get("dropped_events")
+        .as_f64()
+        .unwrap_or(0.0) as u64;
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let Some(name) = e.get("name").as_str() else {
+            bail!("complete event without a name");
+        };
+        let Some(dur) = e.get("dur").as_f64() else {
+            bail!("complete event '{name}' without a dur");
+        };
+        let key = match e.get("args").get("shard").as_f64() {
+            Some(s) => format!("{name}/s{}", s as i64),
+            None => name.to_string(),
+        };
+        groups.entry(key).or_default().push(dur);
+    }
+    let mut out = Vec::with_capacity(groups.len());
+    for (key, mut durs) in groups {
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(PhaseStat {
+            count: durs.len(),
+            p50_us: exact_quantile(&durs, 0.50),
+            p95_us: exact_quantile(&durs, 0.95),
+            p99_us: exact_quantile(&durs, 0.99),
+            max_us: *durs.last().unwrap(),
+            total_ms: durs.iter().sum::<f64>() / 1e3,
+            key,
+        });
+    }
+    Ok((out, dropped))
+}
+
+/// Render the summary as a markdown table (the `dvi trace-summary`
+/// output).
+pub fn summary_table(stats: &[PhaseStat]) -> String {
+    let mut out = String::new();
+    out.push_str("| phase | count | p50 us | p95 us | p99 us | max us | total ms |\n");
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for s in stats {
+        out.push_str(&format!(
+            "| {} | {} | {:.1} | {:.1} | {:.1} | {:.1} | {:.2} |\n",
+            s.key, s.count, s.p50_us, s.p95_us, s.p99_us, s.max_us, s.total_ms
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, ph: char, ts: u64, dur: u64, tid: u64) -> Event {
+        Event {
+            name,
+            cat: "test",
+            ph,
+            ts_ns: ts,
+            dur_ns: dur,
+            tid,
+            args: vec![("shard", Arg::I(0)), ("note", Arg::S("a\"b".into()))],
+        }
+    }
+
+    #[test]
+    fn render_parses_and_roundtrips_fields() {
+        let events =
+            vec![ev("b", 'X', 2000, 500, 2), ev("a", 'i', 1000, 0, 1)];
+        let doc = render(&events, 3);
+        let j = Json::parse(&doc).expect("rendered trace parses");
+        let arr = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        // sorted by ts: the instant comes first
+        assert_eq!(arr[0].get("name").as_str(), Some("a"));
+        assert_eq!(arr[0].get("ph").as_str(), Some("i"));
+        assert_eq!(arr[1].get("dur").as_f64(), Some(0.5));
+        assert_eq!(arr[1].get("args").get("note").as_str(), Some("a\"b"));
+        assert_eq!(j.get("otherData").get("dropped_events").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn summarize_groups_by_name_and_shard() {
+        let mut events = Vec::new();
+        for i in 0..10u64 {
+            events.push(Event {
+                name: "rpc.call",
+                cat: "rpc",
+                ph: 'X',
+                ts_ns: i * 1000,
+                dur_ns: (i + 1) * 1000,
+                tid: 1,
+                args: vec![("shard", Arg::I((i % 2) as i64))],
+            });
+        }
+        let doc = render(&events, 0);
+        let (stats, dropped) = summarize(&doc).unwrap();
+        assert_eq!(dropped, 0);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].key, "rpc.call/s0");
+        assert_eq!(stats[0].count, 5);
+        // shard 0 durations: 1,3,5,7,9 us; p50 = 5
+        assert_eq!(stats[0].p50_us, 5.0);
+        assert_eq!(stats[0].max_us, 9.0);
+    }
+
+    #[test]
+    fn summarize_rejects_garbage() {
+        assert!(summarize("not json").is_err());
+        assert!(summarize("{\"x\":1}").is_err());
+    }
+}

@@ -1,0 +1,582 @@
+//! Process-wide metrics registry: counters, gauges, and fixed-bucket
+//! log-scale histograms with quantile estimation.
+//!
+//! Design constraints, in order:
+//!
+//!   1. **Observation-only.** Recording a sample touches nothing but the
+//!      metric's own atomics — no RNG, no model state, no control flow
+//!      in the instrumented code — so instrumented streams are bitwise
+//!      identical to uninstrumented ones (the repo-wide losslessness
+//!      gate, asserted in `tests/obs.rs`).
+//!   2. **Lock-free hot path.** Handles are `Arc`s to atomic storage;
+//!      the registry mutex is taken only at get-or-create and snapshot
+//!      time. Call sites that record per-round (`sched/seq.rs`) cache
+//!      their handles at construction.
+//!   3. **Mergeable.** Every snapshot is elementwise-additive, so
+//!      per-shard histograms merge into fleet aggregates (associative
+//!      and commutative; property-tested).
+//!
+//! Histogram buckets are log-scale with [`SUB_BUCKETS`] linear
+//! sub-buckets per power-of-two octave: bucket widths are base/8 of the
+//! octave base, so a reported quantile over-estimates the true sample
+//! by at most 12.5% (plus one integer step). Values are plain `u64`s;
+//! by convention duration metrics carry a `_ns` name suffix.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::escape;
+
+/// Linear sub-buckets per power-of-two octave. 8 keeps the relative
+/// quantile error ≤ 1/8 while the whole bucket array stays 4 KiB.
+pub const SUB_BUCKETS: usize = 8;
+/// One octave per possible `u64` leading bit position.
+pub const OCTAVES: usize = 64;
+/// Total bucket count (512).
+pub const BUCKETS: usize = OCTAVES * SUB_BUCKETS;
+
+/// Bucket index for a sample. 0 maps with 1 into bucket 0; otherwise
+/// the octave is the leading-bit position and the sub-bucket is the
+/// linear position of the remainder within the octave.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let o = 63 - v.leading_zeros() as usize;
+    let base = 1u64 << o;
+    // (v - base) * SUB / 2^o, widened so the multiply cannot overflow.
+    let sub = (((v - base) as u128 * SUB_BUCKETS as u128) >> o) as usize;
+    o * SUB_BUCKETS + sub
+}
+
+/// Smallest value that maps at or above bucket `idx` (the bucket's
+/// inclusive lower bound, modulo the empty buckets in low octaves).
+pub fn bucket_lower(idx: usize) -> u64 {
+    let o = idx / SUB_BUCKETS;
+    let s = (idx % SUB_BUCKETS) as u128;
+    let base = 1u128 << o;
+    let sub = SUB_BUCKETS as u128;
+    (base + (s * base + (sub - 1)) / sub) as u64
+}
+
+/// Largest value that maps into bucket `idx` (inclusive upper bound).
+/// Quantiles report this bound, so they never under-estimate.
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(idx + 1).saturating_sub(1)
+    }
+}
+
+/// Lock-free histogram. All updates are relaxed atomics: snapshots are
+/// only approximately consistent across fields, which is fine for
+/// observability (counts never go backwards).
+pub struct Hist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+/// Shared handle to a registered histogram.
+pub type HistHandle = Arc<Hist>;
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+/// Point-in-time copy of a histogram; additive across shards/processes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `u64::MAX` when empty (additive identity for `fetch_min`).
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot {
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+            buckets: vec![0; BUCKETS],
+        }
+    }
+
+    /// Elementwise-additive merge (associative and commutative), the
+    /// cross-shard aggregation primitive.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    /// Upper bound on the q-quantile (0 < q ≤ 1) of the recorded
+    /// samples: the inclusive upper edge of the bucket holding the
+    /// rank-⌈q·count⌉ sample, clamped to the observed max. Returns 0
+    /// for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Compact stable-JSON rendering (no raw bucket dump; quantiles
+    /// are recomputed from the buckets at snapshot time).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"count\":{},\"sum\":{},\"mean\":{:.1},\"min\":{},\
+             \"max\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+            self.count,
+            self.sum,
+            self.mean(),
+            if self.count == 0 { 0 } else { self.min },
+            self.max,
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+        )
+    }
+}
+
+#[derive(Clone)]
+enum Slot {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Hist(HistHandle),
+}
+
+/// Named metric store. One process-wide instance lives behind
+/// [`global`]; tests construct their own.
+pub struct Registry {
+    slots: Mutex<BTreeMap<String, Slot>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { slots: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-create. Panics if `name` is already registered as a
+    /// different metric kind — that is a programming error, not a
+    /// runtime condition.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut g = self.slots.lock().unwrap();
+        match g
+            .entry(name.to_string())
+            .or_insert_with(|| Slot::Counter(Arc::new(AtomicU64::new(0))))
+        {
+            Slot::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered as a non-counter"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut g = self.slots.lock().unwrap();
+        match g
+            .entry(name.to_string())
+            .or_insert_with(|| Slot::Gauge(Arc::new(AtomicI64::new(0))))
+        {
+            Slot::Gauge(v) => v.clone(),
+            _ => panic!("metric '{name}' already registered as a non-gauge"),
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> HistHandle {
+        let mut g = self.slots.lock().unwrap();
+        match g
+            .entry(name.to_string())
+            .or_insert_with(|| Slot::Hist(Arc::new(Hist::new())))
+        {
+            Slot::Hist(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered as a non-histogram"),
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.slots.lock().unwrap();
+        let mut out = Snapshot::default();
+        for (name, slot) in g.iter() {
+            match slot {
+                Slot::Counter(c) => {
+                    out.counters
+                        .insert(name.clone(), c.load(Ordering::Relaxed));
+                }
+                Slot::Gauge(v) => {
+                    out.gauges.insert(name.clone(), v.load(Ordering::Relaxed));
+                }
+                Slot::Hist(h) => {
+                    out.hists.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// Point-in-time copy of a whole registry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    /// Merge another snapshot in: counters and gauges add, histograms
+    /// merge bucketwise. Used to aggregate per-shard registries.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists
+                .entry(k.clone())
+                .and_modify(|a| a.merge(h))
+                .or_insert_with(|| h.clone());
+        }
+    }
+
+    /// Derive fleet-wide aggregates from per-shard histograms: every
+    /// `<prefix>.s<digits><suffix>` family gains a merged
+    /// `<prefix>.all<suffix>` entry (e.g. `rpc.verify_block.s0_ns` +
+    /// `rpc.verify_block.s1_ns` → `rpc.verify_block.all_ns`).
+    pub fn rollup_shards(&mut self) {
+        let mut agg: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+        for (name, h) in &self.hists {
+            let Some((prefix, rest)) = name.rsplit_once(".s") else {
+                continue;
+            };
+            let digits_end =
+                rest.bytes().take_while(|b| b.is_ascii_digit()).count();
+            if digits_end == 0 {
+                continue;
+            }
+            let suffix = &rest[digits_end..];
+            agg.entry(format!("{prefix}.all{suffix}"))
+                .and_modify(|a| a.merge(h))
+                .or_insert_with(|| h.clone());
+        }
+        self.hists.extend(agg);
+    }
+
+    /// Stable JSON document: keys sorted (BTreeMap order), histograms
+    /// summarized to count/sum/mean/min/max/p50/p95/p99.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}:{}", escape(k), v));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}:{}", escape(k), v));
+        }
+        out.push_str("},\"hists\":{");
+        for (i, (k, h)) in self.hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}:{}", escape(k), h.to_json()));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every instrumented subsystem records into.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Convenience: get-or-create on the global registry.
+pub fn counter(name: &str) -> Arc<AtomicU64> {
+    global().counter(name)
+}
+
+pub fn gauge(name: &str) -> Arc<AtomicI64> {
+    global().gauge(name)
+}
+
+pub fn hist(name: &str) -> HistHandle {
+    global().hist(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_contain_their_values() {
+        let samples = [
+            0u64,
+            1,
+            2,
+            3,
+            7,
+            8,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1_000_000,
+            123_456_789,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        for &v in &samples {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS, "index out of range for {v}");
+            assert!(
+                bucket_upper(idx) >= v,
+                "upper({idx}) = {} < sample {v}",
+                bucket_upper(idx)
+            );
+            if idx > 0 {
+                assert!(
+                    bucket_lower(idx) <= v,
+                    "lower({idx}) = {} > sample {v}",
+                    bucket_lower(idx)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket_index not monotone at {v}");
+            prev = idx;
+            v = v * 3 / 2 + 1;
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_by_sub_bucket_width() {
+        // For any sample v, the reported bucket upper bound exceeds v
+        // by at most one sub-bucket width (base/8 ≤ v/8) plus rounding.
+        let mut v = 8u64;
+        while v < 1u64 << 60 {
+            let up = bucket_upper(bucket_index(v));
+            assert!(
+                up <= v + v / (SUB_BUCKETS as u64) + 1,
+                "upper bound {up} over-estimates {v} by more than 12.5%"
+            );
+            v = v * 7 / 4 + 3;
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_the_exact_quantile() {
+        let h = Hist::new();
+        let vals: Vec<u64> = (1..=1000u64).map(|i| i * 37).collect();
+        for &v in &vals {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        for (q, exact) in [(0.5, 500 * 37), (0.95, 950 * 37), (0.99, 990 * 37)] {
+            let est = s.quantile(q);
+            let exact = exact as u64;
+            assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+            assert!(
+                est <= exact + exact / 8 + 1,
+                "q={q}: est {est} over-estimates {exact} beyond the bound"
+            );
+        }
+        assert_eq!(s.quantile(1.0), *vals.last().unwrap());
+    }
+
+    #[test]
+    fn empty_and_singleton_quantiles() {
+        let h = Hist::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0);
+        h.observe(42);
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 42); // clamped to observed max
+        assert_eq!(s.min, 42);
+        assert_eq!(s.max, 42);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let h = Hist::new();
+            for &v in vals {
+                h.observe(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 5, 9, 1000]);
+        let b = mk(&[2, 2, 70_000]);
+        let c = mk(&[u64::MAX, 0, 3]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut a_bc = b.clone();
+        a_bc.merge(&c);
+        let mut left = a.clone();
+        left.merge(&a_bc);
+        assert_eq!(ab_c, left, "merge not associative");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge not commutative");
+        assert_eq!(ab.count, a.count + b.count);
+        assert_eq!(ab.sum, a.sum + b.sum);
+    }
+
+    #[test]
+    fn merged_quantiles_match_single_histogram() {
+        // Splitting a sample set across shards and merging must give
+        // the same quantiles as observing everything in one histogram.
+        let whole = Hist::new();
+        let s0 = Hist::new();
+        let s1 = Hist::new();
+        for i in 0..500u64 {
+            let v = i * 13 + 1;
+            whole.observe(v);
+            if i % 2 == 0 { &s0 } else { &s1 }.observe(v);
+        }
+        let mut merged = s0.snapshot();
+        merged.merge(&s1.snapshot());
+        assert_eq!(merged, whole.snapshot());
+    }
+
+    #[test]
+    fn registry_get_or_create_and_snapshot() {
+        let r = Registry::new();
+        r.counter("a").fetch_add(3, Ordering::Relaxed);
+        r.counter("a").fetch_add(2, Ordering::Relaxed); // same handle
+        r.gauge("g").store(-7, Ordering::Relaxed);
+        r.hist("h").observe(100);
+        let s = r.snapshot();
+        assert_eq!(s.counters["a"], 5);
+        assert_eq!(s.gauges["g"], -7);
+        assert_eq!(s.hists["h"].count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        r.hist("x");
+    }
+
+    #[test]
+    fn shard_rollup_aggregates_families() {
+        let r = Registry::new();
+        r.hist("rpc.verify_block.s0_ns").observe(10);
+        r.hist("rpc.verify_block.s1_ns").observe(20);
+        r.hist("rpc.verify_block.s1_ns").observe(30);
+        r.hist("sched.queue_wait_ns").observe(5); // no shard suffix
+        let mut s = r.snapshot();
+        s.rollup_shards();
+        let all = &s.hists["rpc.verify_block.all_ns"];
+        assert_eq!(all.count, 3);
+        assert_eq!(all.sum, 60);
+        assert!(!s.hists.contains_key("sched.queue_wait_ns.all"));
+    }
+
+    #[test]
+    fn snapshot_json_is_valid_and_stable() {
+        use crate::util::json::Json;
+        let r = Registry::new();
+        r.counter("c").fetch_add(1, Ordering::Relaxed);
+        r.hist("h_ns").observe(1234);
+        let mut s = r.snapshot();
+        s.rollup_shards();
+        let doc = s.to_json();
+        let j = Json::parse(&doc).expect("snapshot JSON parses");
+        assert_eq!(j.get("counters").get("c").as_f64(), Some(1.0));
+        assert_eq!(j.get("hists").get("h_ns").get("count").as_f64(), Some(1.0));
+        assert!(j.get("hists").get("h_ns").get("p99").as_f64().unwrap() >= 1234.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Observability layer: process-wide quantile metrics, structured
+//! event tracing, and Chrome-trace export.
+//!
+//! * [`metrics`] — counters/gauges/log-bucket histograms behind a
+//!   named registry; snapshots are additive across shards and render
+//!   to stable JSON (the `{"metrics": true}` serve probe).
+//! * [`trace`] — bounded per-thread event rings with an explicit drop
+//!   counter; near-no-op unless `DVI_TRACE=1` (or forced on by
+//!   `serve --trace-out`).
+//! * [`chrome`] — Perfetto-loadable trace-event JSON export plus the
+//!   `dvi trace-summary` reduction.
+//!
+//! Everything here is observation-only: with tracing and metrics on,
+//! every decode stream is bitwise identical to the uninstrumented run
+//! (asserted in `tests/obs.rs` and the `DVI_TRACE=1` CI lane).
+
+pub mod chrome;
+pub mod metrics;
+pub mod trace;
+
+pub use chrome::TraceSink;
+pub use metrics::{HistHandle, HistSnapshot, Registry, Snapshot};
+pub use trace::{Arg, Event};

@@ -1,0 +1,254 @@
+//! Low-overhead structured event tracer.
+//!
+//! Events land in a bounded per-thread ring buffer (overwrite-oldest,
+//! with a process-global drop counter so overflow is never silent) and
+//! are collected by [`drain`] for export (Chrome trace JSON via
+//! `obs::chrome`). When tracing is off — the default — every emit call
+//! is a single relaxed atomic load and an early return, so the
+//! instrumentation compiled into the serving hot paths is a near-no-op.
+//!
+//! Enabling: `DVI_TRACE=1` (read once per process), or programmatically
+//! via [`set_forced`] (used by `serve --trace-out` and by tests, which
+//! must not race on process-global env state).
+//!
+//! **Losslessness:** emitting is observation-only — no RNG, no model or
+//! scheduler state is touched — so traced streams are bitwise identical
+//! to untraced ones (asserted in `tests/obs.rs` and the `DVI_TRACE=1`
+//! CI lane).
+
+use std::sync::atomic::{AtomicI8, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity (events). Override with
+/// `DVI_TRACE_BUF`.
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+/// Structured argument value attached to an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    I(i64),
+    F(f64),
+    S(String),
+}
+
+/// One trace event. `ph` follows the Chrome trace-event phase codes we
+/// emit: `'X'` complete (has `dur_ns`) or `'i'` instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: char,
+    /// Nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    /// Duration for `'X'` events; 0 for instants.
+    pub dur_ns: u64,
+    /// Stable per-thread track id (assigned at first emit).
+    pub tid: u64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// -1 = follow `DVI_TRACE`, 0 = forced off, 1 = forced on.
+static FORCED: AtomicI8 = AtomicI8::new(-1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+/// 0 = follow `DVI_TRACE_BUF` / default (applies to rings created
+/// after the store; tests spawn a fresh thread to get a fresh ring).
+static FORCED_RING_CAP: AtomicUsize = AtomicUsize::new(0);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first call wins).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        matches!(
+            std::env::var("DVI_TRACE").as_deref(),
+            Ok("1") | Ok("true") | Ok("on")
+        )
+    })
+}
+
+/// Is tracing active? One relaxed load on the common (off) path.
+#[inline]
+pub fn enabled() -> bool {
+    match FORCED.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        _ => env_enabled(),
+    }
+}
+
+/// Force tracing on/off regardless of `DVI_TRACE` (`None` restores env
+/// behaviour). Process-global; tests serialize around it.
+pub fn set_forced(on: Option<bool>) {
+    let v = match on {
+        None => -1,
+        Some(false) => 0,
+        Some(true) => 1,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+/// Force the capacity of rings created *after* this call (`None`
+/// restores env/default). Test hook.
+pub fn set_forced_ring_cap(cap: Option<usize>) {
+    FORCED_RING_CAP.store(cap.unwrap_or(0), Ordering::Relaxed);
+}
+
+fn ring_cap() -> usize {
+    let forced = FORCED_RING_CAP.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced.max(2);
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DVI_TRACE_BUF")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 2)
+            .unwrap_or(DEFAULT_RING_CAP)
+    })
+}
+
+/// Bounded event ring: overwrite-oldest once full, counting every
+/// overwritten event in the global drop counter.
+struct Ring {
+    buf: Vec<Event>,
+    head: usize,
+    cap: usize,
+    tid: u64,
+}
+
+impl Ring {
+    fn push(&mut self, mut ev: Event) {
+        ev.tid = self.tid;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Remove and return the buffered events in emit order.
+    fn take(&mut self) -> Vec<Event> {
+        let head = self.head;
+        self.head = 0;
+        let mut out = std::mem::take(&mut self.buf);
+        out.rotate_left(head);
+        out
+    }
+}
+
+/// All rings ever created, including those of exited threads (their
+/// last events still export on the next drain).
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Ring>> = {
+        let ring = Arc::new(Mutex::new(Ring {
+            buf: Vec::new(),
+            head: 0,
+            cap: ring_cap(),
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        }));
+        rings().lock().unwrap().push(ring.clone());
+        ring
+    };
+}
+
+fn emit(ev: Event) {
+    LOCAL.with(|r| r.lock().unwrap().push(ev));
+}
+
+/// Emit an instant event (`ph: 'i'`) at the current time.
+pub fn instant(name: &'static str, cat: &'static str, args: Vec<(&'static str, Arg)>) {
+    if !enabled() {
+        return;
+    }
+    emit(Event {
+        name,
+        cat,
+        ph: 'i',
+        ts_ns: now_ns(),
+        dur_ns: 0,
+        tid: 0,
+        args,
+    });
+}
+
+/// Emit a complete span (`ph: 'X'`) that started at `start_ns` (a prior
+/// [`now_ns`] reading) and ends now.
+pub fn complete(
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    args: Vec<(&'static str, Arg)>,
+) {
+    if !enabled() {
+        return;
+    }
+    let now = now_ns();
+    emit(Event {
+        name,
+        cat,
+        ph: 'X',
+        ts_ns: start_ns.min(now),
+        dur_ns: now.saturating_sub(start_ns),
+        tid: 0,
+        args,
+    });
+}
+
+/// Emit a complete span that ends now and lasted `dur_ns`. Lets call
+/// sites that already hold an elapsed duration (e.g. `sched/seq.rs`
+/// timing fields) trace without keeping a second timestamp.
+pub fn complete_with_dur(
+    name: &'static str,
+    cat: &'static str,
+    dur_ns: u64,
+    args: Vec<(&'static str, Arg)>,
+) {
+    if !enabled() {
+        return;
+    }
+    let now = now_ns();
+    emit(Event {
+        name,
+        cat,
+        ph: 'X',
+        ts_ns: now.saturating_sub(dur_ns),
+        dur_ns,
+        tid: 0,
+        args,
+    });
+}
+
+/// Total events lost to ring overflow since process start.
+pub fn drop_count() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Collect-and-clear every thread's ring, globally ordered by
+/// timestamp (ties broken by track).
+pub fn drain() -> Vec<Event> {
+    let list: Vec<Arc<Mutex<Ring>>> = rings().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in list {
+        out.append(&mut ring.lock().unwrap().take());
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.tid));
+    out
+}

@@ -78,6 +78,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::obs::{metrics, trace};
 use crate::runtime::backend::{
     Backend, BatchHandle, BatchItem, Buffer, CallOut, ExecutorStatus,
     ReadyBatch,
@@ -191,13 +192,20 @@ pub struct LanesFuture {
     /// semantic `Reply::Err` (the executor processed the frees).
     frees: Vec<u64>,
     sub: Result<CallHandle>,
+    /// Submission timestamp (observation-only; feeds the per-shard RPC
+    /// latency histogram and the `rpc.call` trace span).
+    t0_ns: u64,
+    /// Window occupancy at submission time (0 unless tracing is on).
+    occ: u64,
 }
 
 impl LanesFuture {
     /// Block until the call resolves; per-lane results in lane order.
     pub fn wait_lanes(self) -> Vec<Result<CallOut>> {
-        let LanesFuture { spec_name, n, shard, freelist, frees, sub } = self;
+        let LanesFuture { spec_name, n, shard, freelist, frees, sub, t0_ns, occ } =
+            self;
         let all_err = |msg: String| -> Vec<Result<CallOut>> {
+            metrics::counter("rpc.errors").fetch_add(1, Ordering::Relaxed);
             (0..n).map(|_| Err(anyhow!("{spec_name}: {msg}"))).collect()
         };
         let requeue = |frees: Vec<u64>| {
@@ -213,6 +221,7 @@ impl LanesFuture {
                 return all_err(format!("{e:#}"));
             }
         };
+        let call_id = handle.id();
         match handle.wait() {
             Err(e) => {
                 // Transport failure: the frame may never have arrived,
@@ -226,6 +235,25 @@ impl LanesFuture {
             }
             Ok(Reply::Err(e)) => all_err(format!("remote executor: {e}")),
             Ok(Reply::Lanes(outs)) => {
+                // Successful calls only: failures would skew the
+                // latency quantiles (they are counted in `rpc.errors`).
+                let call_ns = trace::now_ns().saturating_sub(t0_ns);
+                metrics::hist(&format!("rpc.{spec_name}.s{shard}_ns"))
+                    .observe(call_ns);
+                if trace::enabled() {
+                    trace::complete_with_dur(
+                        "rpc.call",
+                        "rpc",
+                        call_ns,
+                        vec![
+                            ("spec", trace::Arg::S(spec_name.clone())),
+                            ("shard", trace::Arg::I(shard as i64)),
+                            ("id", trace::Arg::I(call_id as i64)),
+                            ("inflight", trace::Arg::I(occ as i64)),
+                            ("lanes", trace::Arg::I(n as i64)),
+                        ],
+                    );
+                }
                 if outs.len() != n {
                     return all_err(format!(
                         "executor returned {} lanes for {n}",
@@ -461,6 +489,8 @@ impl RemoteBackend {
             freelist: self.freelist.clone(),
             frees: Vec::new(),
             sub: Err(err),
+            t0_ns: trace::now_ns(),
+            occ: 0,
         }
     }
 
@@ -479,13 +509,30 @@ impl RemoteBackend {
             frees: frees.clone(),
             lanes,
         };
+        let t0_ns = trace::now_ns();
+        let sub = self.submit(&msg);
+        // Occupancy is a trace annotation only; skip the connection
+        // lock entirely when tracing is off.
+        let occ = if trace::enabled() {
+            self.conn
+                .lock()
+                .unwrap()
+                .live
+                .as_ref()
+                .map(|c| c.inflight())
+                .unwrap_or(0)
+        } else {
+            0
+        };
         LanesFuture {
             spec_name: spec.name.clone(),
             n,
             shard: self.shard,
             freelist: self.freelist.clone(),
             frees,
-            sub: self.submit(&msg),
+            sub,
+            t0_ns,
+            occ,
         }
     }
 

@@ -104,9 +104,15 @@ impl CallCell {
 /// free-list a failed `Call` was carrying).
 pub struct CallHandle {
     cell: Arc<CallCell>,
+    id: u64,
 }
 
 impl CallHandle {
+    /// The wire call id this handle is waiting on (trace correlation).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     pub fn wait(self) -> Result<Reply> {
         let mut g = self.cell.slot.lock().unwrap();
         loop {
@@ -269,7 +275,7 @@ impl MuxConn {
             self.shared.resolve(id, Err(anyhow!("connection closed")));
             bail!("connection dead: submission queue closed");
         }
-        Ok(CallHandle { cell })
+        Ok(CallHandle { cell, id })
     }
 
     /// True once a transport fault killed this connection (new

@@ -58,6 +58,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::obs::{metrics, trace};
 use crate::runtime::backend::{BatchItem, Buffer};
 use crate::runtime::manifest::Role;
 use crate::runtime::{log, Runtime};
@@ -227,6 +228,22 @@ fn hello_reply(rt: &Runtime, want_manifest: bool) -> Reply {
         backend: rt.backend_name().to_string(),
         manifest_json,
         weights_hash: rt.weights_fingerprint().unwrap_or(0),
+    }
+}
+
+/// Wire opcode name of a request (trace/metrics label).
+fn opcode(msg: &Msg) -> &'static str {
+    match msg {
+        Msg::Hello { .. } => "hello",
+        Msg::Call { .. } => "call",
+        Msg::FreshKv { .. } => "fresh_kv",
+        Msg::Upload { .. } => "upload",
+        Msg::Download { .. } => "download",
+        Msg::SetGlobal { .. } => "set_global",
+        Msg::ReadGlobal { .. } => "read_global",
+        Msg::ResetGlobal { .. } => "reset_global",
+        Msg::Free { .. } => "free",
+        Msg::Metrics => "metrics",
     }
 }
 
@@ -427,10 +444,46 @@ pub fn serve_connection(
             let (id, reply) = match proto::untag(&frame) {
                 Ok((id, payload)) => {
                     let reply = match Msg::decode(payload) {
-                        Ok(msg) => match execute(rt, state, session, msg) {
-                            Ok(reply) => reply,
-                            Err(e) => Reply::Err(format!("{e:#}")),
-                        },
+                        Ok(msg) => {
+                            // Dispatch timing is observation-only: the
+                            // reply is whatever execute() produced.
+                            let op = opcode(&msg);
+                            let is_call = matches!(&msg, Msg::Call { .. });
+                            let artifact = match (&msg, trace::enabled()) {
+                                (Msg::Call { artifact, .. }, true) => {
+                                    Some(artifact.clone())
+                                }
+                                _ => None,
+                            };
+                            let t0_ns = trace::now_ns();
+                            let reply = match execute(rt, state, session, msg)
+                            {
+                                Ok(reply) => reply,
+                                Err(e) => Reply::Err(format!("{e:#}")),
+                            };
+                            let exec_ns =
+                                trace::now_ns().saturating_sub(t0_ns);
+                            if is_call {
+                                metrics::hist("exec.call_ns")
+                                    .observe(exec_ns);
+                            }
+                            if trace::enabled() {
+                                let mut args = vec![(
+                                    "op",
+                                    trace::Arg::S(op.to_string()),
+                                )];
+                                if let Some(a) = artifact {
+                                    args.push((
+                                        "artifact",
+                                        trace::Arg::S(a),
+                                    ));
+                                }
+                                trace::complete_with_dur(
+                                    "exec", "exec", exec_ns, args,
+                                );
+                            }
+                            reply
+                        }
                         Err(e) => {
                             Reply::Err(format!("malformed request: {e:#}"))
                         }

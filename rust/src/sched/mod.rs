@@ -36,6 +36,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::engine::GenResult;
 use crate::learner::ReplayBuffer;
+use crate::obs::{metrics, trace};
 use crate::runtime::{log, BatchHandle, BatchItem, Runtime};
 
 use self::seq::{CallSpec, MethodCtx, SeqState};
@@ -195,6 +196,9 @@ pub struct Scheduler {
     done: Vec<SchedResult>,
     pub stats: Arc<SchedStats>,
     next_id: u64,
+    /// Cached `sched.queue_wait_ns` histogram handle (observation-only;
+    /// recording never influences admission or call construction).
+    m_queue_wait: metrics::HistHandle,
 }
 
 impl Scheduler {
@@ -218,6 +222,7 @@ impl Scheduler {
             done: Vec::new(),
             stats: Arc::new(SchedStats::default()),
             next_id: 0,
+            m_queue_wait: metrics::hist("sched.queue_wait_ns"),
         })
     }
 
@@ -367,6 +372,17 @@ impl Scheduler {
             };
             let p = self.queue.pop_front().expect("queue checked non-empty");
             let queue_wait_ns = p.submitted.elapsed().as_nanos() as u64;
+            self.m_queue_wait.observe(queue_wait_ns);
+            if trace::enabled() {
+                trace::instant(
+                    "seq.admit",
+                    "sched",
+                    vec![
+                        ("seq", trace::Arg::I(p.id as i64)),
+                        ("queue_wait_ns", trace::Arg::I(queue_wait_ns as i64)),
+                    ],
+                );
+            }
             match self.ctx.new_seq(&p.prompt, p.max_new) {
                 Ok(state) => {
                     self.slots[free] = Some(Lane { id: p.id, state, queue_wait_ns });
@@ -414,10 +430,14 @@ impl Scheduler {
             idxs: Vec<usize>,
             name: String,
             handle: Box<dyn BatchHandle>,
+            /// Submit timestamp ([`trace::now_ns`]) for the per-chunk
+            /// call-latency histogram and trace span.
+            t0_ns: u64,
             /// Owns the lanes' kv/inputs until the handle resolves (the
             /// buffers must not hit the free-list while in flight).
             _specs: Vec<CallSpec>,
         }
+        let submit_t0 = trace::now_ns();
         let mut in_flight: Vec<PendingChunk> = Vec::new();
         for (name, idxs) in groups {
             let chunks = self.plan_chunks(name, idxs);
@@ -449,15 +469,25 @@ impl Scheduler {
                     .iter()
                     .map(|s| BatchItem { kv: &s.kv, inputs: &s.inputs })
                     .collect();
+                let t0_ns = trace::now_ns();
                 let handle = specs[0].artifact.call_batched_submit(&items);
                 drop(items);
                 in_flight.push(PendingChunk {
                     idxs: chunk.to_vec(),
                     name: specs[0].artifact.spec.name.clone(),
                     handle,
+                    t0_ns,
                     _specs: specs,
                 });
             }
+        }
+        if trace::enabled() && !in_flight.is_empty() {
+            trace::complete(
+                "tick.submit",
+                "sched",
+                submit_t0,
+                vec![("chunks", trace::Arg::I(in_flight.len() as i64))],
+            );
         }
 
         // ---- drain completion handles in submission order --------------
@@ -467,10 +497,26 @@ impl Scheduler {
         // backends degenerate to whole-chunk fate sharing. Draining in
         // submission order keeps apply()/replay-buffer order — and thus
         // the committed streams — identical to the serial discipline.
+        let drain_t0 = trace::now_ns();
+        let mut drained = 0usize;
         let mut advanced = 0usize;
         for chunk in in_flight {
-            let PendingChunk { idxs, name, handle, _specs } = chunk;
+            let PendingChunk { idxs, name, handle, t0_ns, _specs } = chunk;
             let outs = handle.wait();
+            let call_ns = trace::now_ns().saturating_sub(t0_ns);
+            metrics::hist(&format!("sched.call.{name}_ns")).observe(call_ns);
+            if trace::enabled() {
+                trace::complete_with_dur(
+                    "sched.call",
+                    "sched",
+                    call_ns,
+                    vec![
+                        ("artifact", trace::Arg::S(name.clone())),
+                        ("lanes", trace::Arg::I(idxs.len() as i64)),
+                    ],
+                );
+            }
+            drained += 1;
             let mut ok_lanes = 0u64;
             for (&i, out) in idxs.iter().zip(outs) {
                 match out {
@@ -508,6 +554,14 @@ impl Scheduler {
                 self.stats.calls.fetch_add(1, Ordering::Relaxed);
                 self.stats.lanes.fetch_add(ok_lanes, Ordering::Relaxed);
             }
+        }
+        if trace::enabled() && drained > 0 {
+            trace::complete(
+                "tick.drain",
+                "sched",
+                drain_t0,
+                vec![("chunks", trace::Arg::I(drained as i64))],
+            );
         }
 
         // ---- drain completed sequences ---------------------------------

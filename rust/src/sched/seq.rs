@@ -19,6 +19,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::engine::{truncate_at_eos, GenResult, StepRecord};
 use crate::learner::{ReplayBuffer, Tuple};
+use crate::obs::{metrics, trace};
 use crate::runtime::{Artifact, Buffer, CallOut, Role, Runtime, Tensor};
 use crate::spec::{longest_prefix, SeqPos};
 use crate::util::math::argmax;
@@ -96,6 +97,36 @@ fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
     std::env::var(name).ok()?.parse().ok()
 }
 
+/// Cached global-registry handles for the per-sequence lifecycle
+/// histograms, resolved once per context so the per-round hot path
+/// records with lock-free atomics only. Observation-only: values are
+/// read from timing fields the machines already maintain, so decode
+/// streams are bitwise independent of whether anyone looks.
+#[derive(Clone)]
+pub struct SeqObs {
+    pub prefill: metrics::HistHandle,
+    pub draft_round: metrics::HistHandle,
+    pub verify: metrics::HistHandle,
+    pub ar_step: metrics::HistHandle,
+}
+
+impl SeqObs {
+    pub fn new() -> SeqObs {
+        SeqObs {
+            prefill: metrics::hist("seq.prefill_ns"),
+            draft_round: metrics::hist("seq.draft_round_ns"),
+            verify: metrics::hist("seq.verify_ns"),
+            ar_step: metrics::hist("seq.ar_step_ns"),
+        }
+    }
+}
+
+impl Default for SeqObs {
+    fn default() -> SeqObs {
+        SeqObs::new()
+    }
+}
+
 /// Coarse phase of a sequence, shared by both machines. AR sequences
 /// have no draft stage; their decode steps count as Verifying (each is
 /// one target-model call).
@@ -138,6 +169,8 @@ pub struct DviCtx {
     /// In port. Manifests exported before it existed don't; those run
     /// the historical 2-input calls and adaptive-k degrades to pinned.
     pub var_len: bool,
+    /// Cached lifecycle histogram handles (shared registry).
+    pub obs: SeqObs,
 }
 
 impl DviCtx {
@@ -169,6 +202,7 @@ impl DviCtx {
             max_seq,
             adaptive: AdaptiveK::from_env(),
             var_len,
+            obs: SeqObs::new(),
         })
     }
 
@@ -193,6 +227,8 @@ pub struct ArCtx {
     pub step: Arc<Artifact>,
     pub prefill_seq: usize,
     pub max_seq: usize,
+    /// Cached lifecycle histogram handles (shared registry).
+    pub obs: SeqObs,
 }
 
 impl ArCtx {
@@ -205,6 +241,7 @@ impl ArCtx {
             rt,
             prefill_seq,
             max_seq,
+            obs: SeqObs::new(),
         })
     }
 }
@@ -426,6 +463,15 @@ impl DviSeq {
             DviStep::Verify => {
                 self.call_t0 = now;
                 self.draft_ns = self.round_t0.elapsed().as_nanos() as u64;
+                self.ctx.obs.draft_round.observe(self.draft_ns);
+                if trace::enabled() {
+                    trace::complete_with_dur(
+                        "seq.draft_round",
+                        "seq",
+                        self.draft_ns,
+                        vec![("k", trace::Arg::I(self.round_k as i64))],
+                    );
+                }
                 // The hk block always travels at the manifest's uniform
                 // [k_spec, d] shape; short adaptive rounds zero-pad and
                 // tell the backend the live row count via `len`.
@@ -465,6 +511,15 @@ impl DviSeq {
                 self.seq.push_committed(first);
                 self.result.tokens.push(first);
                 self.result.prefill_ns = self.started.elapsed().as_nanos() as u64;
+                self.ctx.obs.prefill.observe(self.result.prefill_ns);
+                if trace::enabled() {
+                    trace::complete_with_dur(
+                        "seq.prefill",
+                        "seq",
+                        self.result.prefill_ns,
+                        vec![("prompt", trace::Arg::I(self.prompt_len as i64))],
+                    );
+                }
                 self.decode_t0 = Instant::now();
                 self.roll_or_finish();
                 // Delivered delta (post-truncation), so scheduler token
@@ -502,6 +557,18 @@ impl DviSeq {
                     .collect::<Result<_>>()?;
                 let outcome = longest_prefix(&self.drafted, &verifier);
                 let verify_ns = self.call_t0.elapsed().as_nanos() as u64;
+                self.ctx.obs.verify.observe(verify_ns);
+                if trace::enabled() {
+                    trace::complete_with_dur(
+                        "seq.verify",
+                        "seq",
+                        verify_ns,
+                        vec![
+                            ("k", trace::Arg::I(k as i64)),
+                            ("accepted", trace::Arg::I(outcome.accepted as i64)),
+                        ],
+                    );
+                }
 
                 let before = self.result.tokens.len();
                 self.seq.advance(k, outcome.accepted, &outcome.committed);
@@ -574,6 +641,16 @@ impl DviSeq {
             self.result.tokens.truncate(self.max_new);
             self.result.decode_ns = self.decode_t0.elapsed().as_nanos() as u64;
             self.step = DviStep::Done;
+            if trace::enabled() {
+                trace::instant(
+                    "seq.finish",
+                    "seq",
+                    vec![(
+                        "tokens",
+                        trace::Arg::I(self.result.tokens.len() as i64),
+                    )],
+                );
+            }
         }
     }
 }
@@ -698,6 +775,15 @@ impl ArSeq {
                 self.seq.push_committed(first);
                 self.result.tokens.push(first);
                 self.result.prefill_ns = self.started.elapsed().as_nanos() as u64;
+                self.ctx.obs.prefill.observe(self.result.prefill_ns);
+                if trace::enabled() {
+                    trace::complete_with_dur(
+                        "seq.prefill",
+                        "seq",
+                        self.result.prefill_ns,
+                        vec![("prompt", trace::Arg::I(self.prompt_len as i64))],
+                    );
+                }
                 self.decode_t0 = Instant::now();
                 self.roll_or_finish();
                 Ok(1)
@@ -707,12 +793,14 @@ impl ArSeq {
                 let tok = argmax(out.outputs[0].as_f32()?) as u32;
                 self.seq.advance_ar(tok);
                 self.result.tokens.push(tok);
+                let step_ns = self.call_t0.elapsed().as_nanos() as u64;
+                self.ctx.obs.ar_step.observe(step_ns);
                 self.result.steps.push(StepRecord {
                     drafted: 0,
                     accepted: 0,
                     committed: 1,
                     draft_ns: 0,
-                    verify_ns: self.call_t0.elapsed().as_nanos() as u64,
+                    verify_ns: step_ns,
                 });
                 self.roll_or_finish();
                 Ok(1)
@@ -731,6 +819,16 @@ impl ArSeq {
             truncate_at_eos(&mut self.result.tokens);
             self.result.decode_ns = self.decode_t0.elapsed().as_nanos() as u64;
             self.step = ArStep::Done;
+            if trace::enabled() {
+                trace::instant(
+                    "seq.finish",
+                    "seq",
+                    vec![(
+                        "tokens",
+                        trace::Arg::I(self.result.tokens.len() as i64),
+                    )],
+                );
+            }
         }
     }
 }

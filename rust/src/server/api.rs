@@ -6,6 +6,8 @@
 //!       "acceptance": 0.81, "decode_ms": 12.4}
 //!   -> {"stats": true}
 //!   <- {"served": 12, "tokens": 384, ..., "k_hist": [0,3,1,0,9,0,0,0,0]}
+//!   -> {"metrics": true}
+//!   <- {"metrics": {"hists": {"sched.queue_wait_ns": {"p50": ..}}}, ...}
 //!
 //! Designed for the `dvi serve` subcommand and the serving example; the
 //! protocol stays trivially scriptable (`nc localhost 7501`).
@@ -115,6 +117,13 @@ fn handle_conn(stream: TcpStream, router: &Router, tok: &Tokenizer) -> Result<()
         if let Ok(j) = Json::parse(&line) {
             if j.get("stats").as_bool() == Some(true) {
                 writeln!(writer, "{}", router.stats_json())?;
+                continue;
+            }
+            // Metrics probe: {"metrics": true} returns the quantile
+            // registry snapshot (p50/p95/p99 per histogram, per-shard
+            // RPC families rolled up) plus tracer state.
+            if j.get("metrics").as_bool() == Some(true) {
+                writeln!(writer, "{}", router.metrics_json())?;
                 continue;
             }
         }

@@ -29,6 +29,7 @@ use crate::engine::dvi::DviEngine;
 use crate::engine::Engine;
 use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
+use crate::obs::{metrics, trace};
 use crate::runtime::{log, ExecutorStatus, Runtime};
 use crate::sched::{AdaptiveK, SchedConfig, SchedStats, Scheduler};
 
@@ -101,6 +102,28 @@ pub struct RouterStats {
     pub train_steps: AtomicU64,
 }
 
+/// Learner-thread state mirrored for the stats probe (the trainer lives
+/// on its own thread; these are the fields operators watch).
+#[derive(Debug, Default)]
+pub struct LearnerObs {
+    /// Optimizer steps completed.
+    pub steps: AtomicU64,
+    /// KL→RL schedule phase index (0 warmup, 1 ramp, 2 rl).
+    pub phase: AtomicU64,
+    /// Wall time of the most recent optimizer step.
+    pub last_step_ns: AtomicU64,
+}
+
+impl LearnerObs {
+    pub fn phase_name(&self) -> &'static str {
+        match self.phase.load(Ordering::Relaxed) {
+            0 => "warmup",
+            1 => "ramp",
+            _ => "rl",
+        }
+    }
+}
+
 pub struct Router {
     tx: Sender<Request>,
     pub stats: Arc<RouterStats>,
@@ -110,6 +133,11 @@ pub struct Router {
     /// The served runtime, kept so operators can poll remote executor
     /// health ([`Router::executor_status`]) next to the serving stats.
     rt: Arc<Runtime>,
+    /// The replay buffer shared with the learner thread, retained so the
+    /// stats probe can report its depth/push counters.
+    buffer: Arc<Mutex<ReplayBuffer>>,
+    /// Mirrored learner-thread state; `Some` when the learner runs.
+    pub learner_obs: Option<Arc<LearnerObs>>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     learner: Option<JoinHandle<()>>,
@@ -225,7 +253,12 @@ fn scheduler_loop(
 /// quarter-batch of tuples — the learner must not free-run on stale
 /// buffer content (it would both overfit the replay and steal decode
 /// CPU).
-fn learner_loop(mut trainer: Trainer, stop: Arc<AtomicBool>, stats: Arc<RouterStats>) {
+fn learner_loop(
+    mut trainer: Trainer,
+    stop: Arc<AtomicBool>,
+    stats: Arc<RouterStats>,
+    obs: Arc<LearnerObs>,
+) {
     let mut last_pushed = 0u64;
     let fresh_quantum = (trainer.batch_size as u64 / 4).max(1);
     while !stop.load(Ordering::Relaxed) {
@@ -238,6 +271,27 @@ fn learner_loop(mut trainer: Trainer, stop: Arc<AtomicBool>, stats: Arc<RouterSt
             Ok(Some(_)) => {
                 last_pushed = pushed;
                 stats.train_steps.fetch_add(1, Ordering::Relaxed);
+                // Mirror trainer state for the stats probe; announce
+                // KL→RL phase transitions on the trace.
+                obs.steps.store(trainer.steps_done, Ordering::Relaxed);
+                obs.last_step_ns
+                    .store(trainer.last_step_ns, Ordering::Relaxed);
+                let phase =
+                    trainer.schedule.phase_index(trainer.steps_done);
+                let prev = obs.phase.swap(phase, Ordering::Relaxed);
+                if phase != prev && trace::enabled() {
+                    trace::instant(
+                        "learner.phase",
+                        "learner",
+                        vec![
+                            ("phase", trace::Arg::I(phase as i64)),
+                            (
+                                "step",
+                                trace::Arg::I(trainer.steps_done as i64),
+                            ),
+                        ],
+                    );
+                }
             }
             Ok(None) => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -311,18 +365,23 @@ impl Router {
 
         // Learner thread: constructed here for the same reason — a bad
         // train_step artifact fails start() instead of dying silently.
-        let learner = if online_dvi {
-            let trainer =
-                Trainer::new(rt.clone(), buffer, Schedule::new(cfg.objective), 0x1EA2)?;
+        let (learner, learner_obs) = if online_dvi {
+            let trainer = Trainer::new(
+                rt.clone(),
+                buffer.clone(),
+                Schedule::new(cfg.objective),
+                0x1EA2,
+            )?;
+            let obs = Arc::new(LearnerObs::default());
             let stop2 = stop.clone();
             let stats2 = stats.clone();
-            Some(
-                std::thread::Builder::new()
-                    .name("dvi-learner".into())
-                    .spawn(move || learner_loop(trainer, stop2, stats2))?,
-            )
+            let obs2 = obs.clone();
+            let handle = std::thread::Builder::new()
+                .name("dvi-learner".into())
+                .spawn(move || learner_loop(trainer, stop2, stats2, obs2))?;
+            (Some(handle), Some(obs))
         } else {
-            None
+            (None, None)
         };
 
         Ok(Router {
@@ -330,6 +389,8 @@ impl Router {
             stats,
             sched_stats,
             rt,
+            buffer,
+            learner_obs,
             stop,
             workers,
             learner,
@@ -374,9 +435,41 @@ impl Router {
                 ss.mean_accept_ema(),
             ));
         }
+        if let Some(obs) = &self.learner_obs {
+            let (pushed, depth, mean_reward) = {
+                let buf = self.buffer.lock().unwrap();
+                (buf.pushed, buf.len(), buf.mean_reward())
+            };
+            out.push_str(&format!(
+                ",\"learner\":{{\"phase\":\"{}\",\"step\":{},\
+                 \"last_train_step_ms\":{:.3},\"replay_pushed\":{pushed},\
+                 \"replay_depth\":{depth},\"replay_mean_reward\":{:.4}}}",
+                obs.phase_name(),
+                obs.steps.load(Ordering::Relaxed),
+                obs.last_step_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                mean_reward,
+            ));
+        }
         out.push_str(&format!(",\"executors\":{}", self.executor_status().len()));
         out.push('}');
         out
+    }
+
+    /// One-line JSON snapshot of the process-wide metrics registry
+    /// (counters, gauges, p50/p95/p99 histograms) with per-shard RPC
+    /// histogram families rolled up into `.all` aggregates, plus the
+    /// tracer's state. Served for `{"metrics": true}` probes and by
+    /// `dvi serve --metrics`.
+    pub fn metrics_json(&self) -> String {
+        let mut snap = metrics::global().snapshot();
+        snap.rollup_shards();
+        format!(
+            "{{\"metrics\":{},\"trace\":{{\"enabled\":{},\
+             \"dropped_events\":{}}}}}",
+            snap.to_json(),
+            trace::enabled(),
+            trace::drop_count(),
+        )
     }
 
     /// Submit a prompt; returns a receiver for the response.

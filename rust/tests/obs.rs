@@ -1,0 +1,332 @@
+//! Observability integration tests — hermetic on the reference backend.
+//!
+//! The headline gate: with tracing and metrics enabled, every committed
+//! token stream is **bitwise identical** to the uninstrumented run, for
+//! both the DVI and AR batched schedulers (the `DVI_TRACE=1` CI lane
+//! re-runs the whole sched/remote suites under the same gate). Plus:
+//! ring overflow increments the drop counter instead of blocking or
+//! silently truncating, the Chrome-trace export parses and keeps every
+//! track time-monotonic, the required latency histograms (queue wait,
+//! draft round, verify, per-shard RPC, train step) actually record, and
+//! the router's stats/metrics JSON surfaces stay valid JSON.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use dvi::harness::load_prompts;
+use dvi::learner::{Objective, ReplayBuffer, Schedule, Trainer, Tuple};
+use dvi::obs::{chrome, metrics, trace};
+use dvi::runtime::{Runtime, Tensor};
+use dvi::sched::{AdaptiveK, SchedConfig, Scheduler};
+use dvi::server::{Router, RouterConfig};
+use dvi::util::json::Json;
+
+const SEED: u64 = 0x0B5E2;
+
+/// Serializes the tests that toggle process-global tracer state (forced
+/// enable, forced ring cap) or drain the shared rings.
+fn test_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    test_lock().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_hermetic(SEED).expect("hermetic runtime"))
+}
+
+fn mixed_prompts(rt: &Runtime, n: usize, max_new: usize) -> Vec<(Vec<u32>, usize)> {
+    let stream = load_prompts(rt, "stream").unwrap();
+    stream
+        .shuffled(0x5EED)
+        .take(n)
+        .samples
+        .iter()
+        .map(|s| (s.prompt.clone(), s.max_new.min(max_new)))
+        .collect()
+}
+
+fn scheduler_tokens(
+    rt: &Arc<Runtime>,
+    method: &str,
+    cases: &[(Vec<u32>, usize)],
+) -> Vec<Vec<u32>> {
+    let cfg = SchedConfig {
+        method: method.into(),
+        max_batch: 4,
+        max_slots: cases.len(),
+        adaptive: AdaptiveK::from_env(),
+    };
+    let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+    let ids: Vec<u64> =
+        cases.iter().map(|(p, n)| sched.submit(p.clone(), *n)).collect();
+    sched.run_until_idle(100_000).unwrap();
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len());
+    done.sort_by_key(|r| r.id);
+    ids.iter()
+        .zip(done)
+        .map(|(&id, r)| {
+            assert_eq!(id, r.id);
+            r.result.expect("generation failed").tokens
+        })
+        .collect()
+}
+
+/// The hard gate plus trace-format validity in one serialized pass:
+/// identical streams traced vs untraced, then the traced run's events
+/// render to a parseable Chrome document with monotonic per-track
+/// timestamps, reduce through `summarize`, and back the required
+/// quantile histograms.
+#[test]
+fn traced_scheduler_is_bitwise_identical_and_trace_is_valid() {
+    let _g = lock();
+    let rt = runtime();
+    let cases = mixed_prompts(&rt, 6, 16);
+
+    trace::set_forced(Some(false));
+    let golden_dvi = scheduler_tokens(&rt, "dvi", &cases);
+    let golden_ar = scheduler_tokens(&rt, "ar", &cases);
+    let _ = trace::drain(); // discard anything emitted before forcing on
+
+    trace::set_forced(Some(true));
+    let traced_dvi = scheduler_tokens(&rt, "dvi", &cases);
+    let traced_ar = scheduler_tokens(&rt, "ar", &cases);
+    let events = trace::drain();
+    trace::set_forced(None);
+
+    assert_eq!(
+        traced_dvi, golden_dvi,
+        "tracing changed a DVI committed stream"
+    );
+    assert_eq!(traced_ar, golden_ar, "tracing changed an AR committed stream");
+
+    for name in
+        ["seq.admit", "seq.prefill", "seq.draft_round", "seq.verify",
+         "seq.finish", "sched.call", "tick.submit", "tick.drain"]
+    {
+        assert!(
+            events.iter().any(|e| e.name == name),
+            "traced run emitted no '{name}' event"
+        );
+    }
+
+    let doc = chrome::render(&events, trace::drop_count());
+    let j = Json::parse(&doc).expect("chrome trace must parse as JSON");
+    let arr = j.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(arr.len(), events.len());
+    let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    for e in arr {
+        let ph = e.get("ph").as_str().expect("event ph");
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph}");
+        assert!(e.get("name").as_str().is_some(), "event without name");
+        let ts = e.get("ts").as_f64().expect("event ts");
+        let tid = e.get("tid").as_f64().expect("event tid") as i64;
+        if ph == "X" {
+            assert!(e.get("dur").as_f64().is_some(), "X event without dur");
+        }
+        if let Some(prev) = last_ts.insert(tid, ts) {
+            assert!(ts >= prev, "track {tid} went backwards in time");
+        }
+    }
+
+    let (stats, _) = chrome::summarize(&doc).expect("trace summarizes");
+    assert!(
+        stats.iter().any(|s| s.key.starts_with("seq.draft_round")),
+        "summary lost the draft-round phase"
+    );
+
+    let snap = metrics::global().snapshot();
+    for name in [
+        "sched.queue_wait_ns",
+        "seq.prefill_ns",
+        "seq.draft_round_ns",
+        "seq.verify_ns",
+        "seq.ar_step_ns",
+    ] {
+        let h = snap
+            .hists
+            .get(name)
+            .unwrap_or_else(|| panic!("histogram '{name}' never registered"));
+        assert!(h.count > 0, "histogram '{name}' never observed");
+        assert!(h.quantile(0.5) >= h.min && h.quantile(0.99) <= h.max);
+    }
+}
+
+/// A full trace ring overwrites its oldest events and counts every
+/// overwrite in the global drop counter — overflow is never silent and
+/// never blocks the emitting thread.
+#[test]
+fn ring_overflow_increments_drop_counter() {
+    let _g = lock();
+    let _ = trace::drain();
+    trace::set_forced(Some(true));
+    trace::set_forced_ring_cap(Some(16));
+    let drops_before = trace::drop_count();
+    // Fresh thread: the forced cap applies to rings created after it was
+    // set, and this thread's ring is created at its first emit.
+    std::thread::spawn(|| {
+        for _ in 0..50 {
+            trace::instant("overflow.test", "test", Vec::new());
+        }
+    })
+    .join()
+    .unwrap();
+    let dropped = trace::drop_count() - drops_before;
+    let kept = trace::drain()
+        .iter()
+        .filter(|e| e.name == "overflow.test")
+        .count();
+    trace::set_forced_ring_cap(None);
+    trace::set_forced(None);
+    assert_eq!(kept, 16, "ring must retain exactly its capacity");
+    assert_eq!(dropped, 34, "every overwritten event must be counted");
+}
+
+/// With tracing off, emits are discarded (and cost nothing but the
+/// enabled() check) — nothing accumulates in any ring.
+#[test]
+fn disabled_tracer_records_nothing() {
+    let _g = lock();
+    trace::set_forced(Some(false));
+    let _ = trace::drain();
+    trace::instant("ghost", "test", Vec::new());
+    trace::complete_with_dur("ghost.span", "test", 100, Vec::new());
+    let events = trace::drain();
+    trace::set_forced(None);
+    assert!(
+        events.iter().all(|e| !e.name.starts_with("ghost")),
+        "disabled tracer must not record events"
+    );
+}
+
+/// Driving a loopback remote runtime records the per-shard RPC latency
+/// family and the executor-side dispatch histogram, and the snapshot
+/// shard rollup aggregates the family into `.all`.
+#[test]
+fn remote_calls_record_per_shard_rpc_histograms() {
+    let _g = lock();
+    let rt = Runtime::load_remote_loopback(SEED).expect("loopback runtime");
+    let art = rt.artifact("target_step").unwrap();
+    let kv = rt.fresh_kv("target_step").unwrap();
+    let inputs = [Tensor::scalar_i32(7), Tensor::scalar_i32(0)];
+    art.call(&kv, &inputs).unwrap();
+
+    let mut snap = metrics::global().snapshot();
+    let s0_count = snap
+        .hists
+        .get("rpc.target_step.s0_ns")
+        .expect("per-shard RPC histogram missing")
+        .count;
+    assert!(s0_count > 0);
+    assert!(
+        snap.hists.get("exec.call_ns").map(|h| h.count).unwrap_or(0) > 0,
+        "executor dispatch histogram missing"
+    );
+    snap.rollup_shards();
+    let all = snap
+        .hists
+        .get("rpc.target_step.all_ns")
+        .expect("shard rollup did not build the .all aggregate");
+    assert!(all.count >= s0_count);
+}
+
+/// One optimizer step lands in the train-step latency histogram and the
+/// trainer's `last_step_ns` mirror.
+#[test]
+fn train_step_latency_is_recorded() {
+    let _g = lock();
+    let rt = runtime();
+    let buffer = Arc::new(Mutex::new(ReplayBuffer::new(4096)));
+    let mut trainer = Trainer::new(
+        rt.clone(),
+        buffer.clone(),
+        Schedule::new(Objective::Dvi),
+        0xD1CE,
+    )
+    .unwrap();
+    let d_model = rt.manifest.model_usize("d_model").unwrap();
+    let vocab = rt.manifest.model_usize("vocab_size").unwrap();
+    let before = metrics::global()
+        .snapshot()
+        .hists
+        .get("learner.train_step_ns")
+        .map(|h| h.count)
+        .unwrap_or(0);
+    {
+        let mut buf = buffer.lock().unwrap();
+        for i in 0..trainer.batch_size {
+            buf.push(Tuple {
+                hk: vec![0.01 * i as f32; d_model],
+                action: (i % vocab) as u32,
+                logits_phi: vec![0.0; vocab],
+                reward: if i % 3 == 0 { 0.0 } else { 1.0 },
+            });
+        }
+    }
+    let m = trainer.maybe_train().unwrap();
+    assert!(m.is_some(), "full buffer must train");
+    assert!(trainer.last_step_ns > 0, "last_step_ns not stamped");
+    let after = metrics::global()
+        .snapshot()
+        .hists
+        .get("learner.train_step_ns")
+        .map(|h| h.count)
+        .unwrap_or(0);
+    assert_eq!(after, before + 1, "train-step histogram missed the step");
+}
+
+/// The router's probe surfaces: `stats_json` (with the learner block)
+/// and `metrics_json` both stay valid single-line JSON carrying the
+/// documented fields.
+#[test]
+fn router_stats_and_metrics_json_are_valid() {
+    let _g = lock();
+    let rt = runtime();
+    let router = Router::start(
+        rt,
+        RouterConfig {
+            batched: true,
+            max_batch: 4,
+            max_slots: 8,
+            adaptive: None,
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+    let cases = {
+        let rt2 = runtime();
+        mixed_prompts(&rt2, 2, 8)
+    };
+    for (prompt, max_new) in cases {
+        router.generate(prompt, max_new).unwrap();
+    }
+
+    let stats = router.stats_json();
+    let j = Json::parse(&stats).expect("stats_json must parse");
+    assert_eq!(j.get("served").as_usize(), Some(2));
+    assert!(
+        j.get("learner").get("phase").as_str().is_some(),
+        "learner block missing from stats: {stats}"
+    );
+    assert!(j.get("learner").get("replay_pushed").as_f64().is_some());
+    assert!(j.get("learner").get("replay_depth").as_f64().is_some());
+
+    let mj = router.metrics_json();
+    let j = Json::parse(&mj).expect("metrics_json must parse");
+    let qw = j
+        .get("metrics")
+        .get("hists")
+        .get("sched.queue_wait_ns");
+    assert!(
+        qw.get("p50").as_f64().is_some()
+            && qw.get("p95").as_f64().is_some()
+            && qw.get("p99").as_f64().is_some(),
+        "queue-wait quantiles missing from metrics: {mj}"
+    );
+    assert!(j.get("trace").get("enabled").as_bool().is_some());
+    router.shutdown();
+}
