@@ -1,0 +1,181 @@
+//! Prefix reuse: cold prefill vs warm (cached-prefix) admission on a
+//! shared-system-prompt workload — the radix cache's target shape.
+//! Every request carries the same system preamble plus a short unique
+//! tail, so a warm scheduler attaches most of each prompt from the tree
+//! and recomputes only the tail.
+//!
+//! Committed streams are cross-checked **bitwise** against the cold
+//! (cache-off) run before any timing is trusted — prefix reuse is a
+//! performance feature, never a semantic one. The row accounting is
+//! deterministic and hard-asserted: a warm pass must prefill strictly
+//! fewer positions than cold (cold rows − rows attached from cache).
+//!
+//!   cargo bench --bench prefix_reuse
+//!
+//! Knobs: DVI_BENCH_SEQS   sequences per pass (default 24)
+//!        DVI_BENCH_TINY=1 CI smoke scale (8 sequences)
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use dvi::runtime::Runtime;
+use dvi::sched::{CacheConfig, SchedConfig, Scheduler};
+
+const SEED: u64 = 0x9EF1C;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn cfg(cache: bool) -> SchedConfig {
+    SchedConfig {
+        method: "dvi".into(),
+        max_batch: 8,
+        max_slots: 16,
+        adaptive: None,
+        cache: if cache { Some(CacheConfig { capacity: 64 }) } else { None },
+    }
+}
+
+/// One pass of `cases` through `sched`: wall time + committed streams
+/// in submission order.
+fn pass(
+    sched: &mut Scheduler,
+    cases: &[(Vec<u32>, usize)],
+) -> (f64, Vec<Vec<u32>>) {
+    let t0 = Instant::now();
+    let ids: Vec<u64> = cases
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    sched.run_until_idle(1_000_000).expect("scheduler drained");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "sequences went missing");
+    done.sort_by_key(|r| r.id);
+    let streams = ids
+        .iter()
+        .zip(done)
+        .map(|(&id, r)| {
+            assert_eq!(id, r.id);
+            r.result.expect("generation failed").tokens
+        })
+        .collect();
+    (wall_s, streams)
+}
+
+fn main() {
+    let tiny = std::env::var("DVI_BENCH_TINY").is_ok();
+    let seqs = env_usize("DVI_BENCH_SEQS", if tiny { 8 } else { 24 });
+    let sys_len = 24usize;
+
+    let rt = Arc::new(Runtime::load_reference(SEED).expect("runtime"));
+    let prefill_seq = rt.manifest.spec_usize("prefill_seq").expect("prefill_seq");
+
+    // Shared-system-prompt workload: `sys_len` common tokens, unique tail.
+    let cases: Vec<(Vec<u32>, usize)> = {
+        let stream = dvi::harness::load_prompts(&rt, "stream").expect("prompts");
+        let shuffled = stream.shuffled(0x5EED);
+        let sys: Vec<u32> = shuffled.samples[0]
+            .prompt
+            .iter()
+            .cycle()
+            .take(sys_len)
+            .cloned()
+            .collect();
+        shuffled
+            .samples
+            .iter()
+            .cycle()
+            .take(seqs)
+            .enumerate()
+            .map(|(i, s)| {
+                let mut p = sys.clone();
+                // Per-request disambiguator inside the closed synthetic
+                // vocabulary (ids 4.. are ordinary words).
+                p.push((i % 60) as u32 + 4);
+                p.extend(s.prompt.iter().cloned());
+                p.truncate(prefill_seq.min(sys_len + 12));
+                (p, s.max_new.min(6))
+            })
+            .collect()
+    };
+
+    println!(
+        "\n== Prefix reuse: {} seqs sharing a {sys_len}-token system \
+         prompt, prefill_seq={prefill_seq} ==\n",
+        cases.len()
+    );
+
+    // Cold reference: cache off, every admission prefills from scratch.
+    let mut cold_sched = Scheduler::new(rt.clone(), cfg(false), None).unwrap();
+    let (cold_wall, cold_streams) = pass(&mut cold_sched, &cases);
+
+    // Warm: first pass populates the tree (later admissions already hit
+    // earlier donations), second pass is fully warm.
+    let mut warm_sched = Scheduler::new(rt.clone(), cfg(true), None).unwrap();
+    let (populate_wall, populate_streams) = pass(&mut warm_sched, &cases);
+    let rows_pass1 = warm_sched.stats.cache_shared_rows.load(Ordering::Relaxed);
+    let (warm_wall, warm_streams) = pass(&mut warm_sched, &cases);
+    let shared_rows = warm_sched.stats.cache_shared_rows.load(Ordering::Relaxed);
+    let rows_pass2 = shared_rows - rows_pass1;
+
+    // Losslessness first, timing second.
+    assert_eq!(
+        populate_streams, cold_streams,
+        "cache-populating pass diverged from cold streams"
+    );
+    assert_eq!(
+        warm_streams, cold_streams,
+        "warm pass diverged from cold streams"
+    );
+
+    // Deterministic admission-cost accounting (per prefill stage): a
+    // cold pass computes prefill_seq positions per sequence; a warm
+    // pass skips every attached row. Strictly fewer, by construction —
+    // hard-asserted so a silent cache regression fails the bench.
+    let cold_rows = (cases.len() * prefill_seq) as u64;
+    let warm_rows = cold_rows - rows_pass2;
+    assert!(
+        rows_pass2 > 0 && warm_rows < cold_rows,
+        "warm pass attached no cached rows (shared={rows_pass2})"
+    );
+    let cs = warm_sched.cache_stats().expect("cache on");
+    assert!(cs.hits >= cases.len() as u64, "second pass was not fully warm");
+
+    println!("| pass | wall ms | prefill rows/stage | shared rows |");
+    println!("|---|---|---|---|");
+    println!("| cold (cache off) | {:.2} | {cold_rows} | 0 |", cold_wall * 1e3);
+    println!(
+        "| populate (cache on, empty) | {:.2} | {} | {rows_pass1} |",
+        populate_wall * 1e3,
+        cold_rows - rows_pass1
+    );
+    println!(
+        "| warm (cache on, resident) | {:.2} | {warm_rows} | {rows_pass2} |",
+        warm_wall * 1e3
+    );
+    println!(
+        "[prefix_reuse] warm prefill rows {warm_rows} vs cold {cold_rows} \
+         ({:.1}% skipped), wall {:.1} ms -> {:.1} ms",
+        100.0 * rows_pass2 as f64 / cold_rows as f64,
+        cold_wall * 1e3,
+        warm_wall * 1e3
+    );
+
+    let json = format!(
+        "{{\"bench\":\"prefix_reuse\",\"seqs\":{},\"sys_len\":{sys_len},\
+         \"prefill_seq\":{prefill_seq},\"cold_wall_s\":{cold_wall:.6},\
+         \"populate_wall_s\":{populate_wall:.6},\
+         \"warm_wall_s\":{warm_wall:.6},\"cold_prefill_rows\":{cold_rows},\
+         \"warm_prefill_rows\":{warm_rows},\"warm_shared_rows\":{rows_pass2},\
+         \"cache_hits\":{},\"cache_evictions\":{}}}",
+        cases.len(),
+        cs.hits,
+        cs.evictions
+    );
+    let path = "BENCH_prefix_reuse.json";
+    std::fs::write(path, format!("{json}\n")).expect("write bench artifact");
+    println!("[prefix_reuse] wrote {path}");
+}

@@ -47,6 +47,7 @@ fn drive(
         max_batch: 8,
         max_slots: 16,
         adaptive: None,
+        cache: None,
     };
     let mut sched = Scheduler::new(rt, cfg, None).expect("scheduler");
     let t0 = Instant::now();

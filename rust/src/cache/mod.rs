@@ -1,0 +1,589 @@
+//! Cross-request prefix/KV reuse: a radix tree over committed token
+//! ids whose nodes own refcounted **KV segments** — immutable snapshots
+//! of a sequence's shallow-drafter and deep-verifier caches taken at
+//! the prompt boundary.
+//!
+//! ## Why attaching a cached prefix is lossless
+//!
+//! Row `j` of every KV cache in this repo is a pure function of tokens
+//! `0..=j` (causal attention, deterministic kernels), and KV buffers
+//! are **immutable**: each artifact call returns new buffers instead of
+//! mutating its inputs. Two consequences the cache is built on:
+//!
+//!   1. A segment snapshotted from prompt `A` can seed a sequence with
+//!      prompt `B` at `attach_len = common_prefix(A, B)`: rows below
+//!      the attach point are bitwise identical to what a cold prefill
+//!      of `B` would compute, and rows at/above it are stale in *both*
+//!      the warm and cold paths (always overwritten before they are
+//!      attended). So a segment stored at one node is usable at **any**
+//!      prefix length of its path, and the tree's longest-prefix match
+//!      is exactly the best attach point.
+//!   2. Inserting a segment is a handle clone, not a tensor copy, and
+//!      the copy-on-write "fork" at the divergence point
+//!      ([`crate::runtime::Backend::fork_kv`]) is handle aliasing too
+//!      — the first suffix-prefill call after the attach returns fresh
+//!      buffers, which is where the write actually goes.
+//!
+//! ## Ownership & eviction
+//!
+//! Segments are refcounted: a lookup pins the segment until the
+//! scheduler's terminal path for that sequence releases it (exactly
+//! once — `fail_lane`, drain, admission-reject all funnel through one
+//! release). Eviction is LRU over **leaf** segments with refcount 0
+//! (no pinned reader, no deeper segment extending the path) and is
+//! preemption-free: when the capacity is reached and nothing is
+//! evictable, the insert is skipped rather than anything reclaimed
+//! from under a reader.
+//!
+//! The tree is single-owner (it lives inside the scheduler, which is
+//! single-threaded per serving loop); no interior locking.
+
+use crate::runtime::Buffer;
+
+/// An immutable KV snapshot covering every prefix of the owning node's
+/// path. `shallow`/`deep` hold the drafter-layer and verifier-layer
+/// cache buffers in manifest port order.
+struct Segment {
+    shallow: Vec<Buffer>,
+    deep: Vec<Buffer>,
+    /// Live readers (sequences between lookup and terminal release).
+    refs: usize,
+    /// Logical LRU clock stamp (updated on insert/hit/release).
+    last_use: u64,
+}
+
+struct Node {
+    /// Token run on the edge from `parent` to this node.
+    edge: Vec<u32>,
+    /// Total tokens from the root through `edge` (== path length).
+    depth: usize,
+    parent: usize,
+    /// First edge token -> child index; BTreeMap so traversal order is
+    /// deterministic.
+    children: std::collections::BTreeMap<u32, usize>,
+    seg: Option<Segment>,
+}
+
+/// Pinned reference to a cache segment, returned by
+/// [`PrefixCache::lookup`]. Must be handed back to
+/// [`PrefixCache::release`] exactly once; the segment cannot be evicted
+/// while any reference is outstanding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegRef(usize);
+
+/// A successful prefix lookup: how many leading tokens of the query the
+/// segment covers, plus the pinned segment itself.
+pub struct Hit {
+    pub attach_len: usize,
+    pub seg: SegRef,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Live segments currently resident.
+    pub segments: u64,
+}
+
+pub struct PrefixCache {
+    nodes: Vec<Node>,
+    /// Recycled node slots (freed by pruning after eviction).
+    free: Vec<usize>,
+    /// Max resident segments; reaching it triggers LRU eviction of an
+    /// unpinned leaf segment, or skips the insert if none exists.
+    capacity: usize,
+    segments: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl PrefixCache {
+    pub fn new(capacity: usize) -> PrefixCache {
+        assert!(capacity >= 1, "prefix cache needs capacity >= 1");
+        PrefixCache {
+            nodes: vec![Node {
+                edge: Vec::new(),
+                depth: 0,
+                parent: 0,
+                children: std::collections::BTreeMap::new(),
+                seg: None,
+            }],
+            free: Vec::new(),
+            capacity,
+            segments: 0,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { segments: self.segments as u64, ..self.stats }
+    }
+
+    /// Total outstanding pinned references across every segment — the
+    /// scheduler's post-tick invariant compares this against its live
+    /// attachments.
+    pub fn total_refs(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.seg.as_ref())
+            .map(|s| s.refs)
+            .sum()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Walk the tree matching `tokens`; returns (node reached, tokens
+    /// matched, whether the walk ended part-way down an edge or before
+    /// consuming all of `tokens`).
+    fn walk(&self, tokens: &[u32]) -> (usize, usize) {
+        let mut at = 0usize;
+        let mut matched = 0usize;
+        while matched < tokens.len() {
+            let Some(&child) = self.nodes[at].children.get(&tokens[matched])
+            else {
+                break;
+            };
+            let edge = &self.nodes[child].edge;
+            let common = edge
+                .iter()
+                .zip(&tokens[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < edge.len() {
+                // Diverged (or ran out of query) mid-edge: everything
+                // under `child` still shares our first `matched` tokens.
+                return (child, matched);
+            }
+            at = child;
+        }
+        (at, matched)
+    }
+
+    /// First segment-bearing node in the subtree rooted at `at`
+    /// (deterministic preorder over the BTreeMap child order).
+    fn seg_in_subtree(&self, at: usize) -> Option<usize> {
+        let mut stack = vec![at];
+        while let Some(n) = stack.pop() {
+            if self.nodes[n].seg.is_some() {
+                return Some(n);
+            }
+            // Push in reverse so the smallest first-token child pops
+            // first.
+            for &c in self.nodes[n].children.values().rev() {
+                stack.push(c);
+            }
+        }
+        None
+    }
+
+    /// Longest cached prefix of `tokens`. On a hit the segment's
+    /// refcount is incremented (pinned until [`PrefixCache::release`]).
+    /// Queries whose best match is empty count as misses.
+    pub fn lookup(&mut self, tokens: &[u32]) -> Option<Hit> {
+        let (end, matched) = self.walk(tokens);
+        // Best candidate: any segment at/below the divergence point
+        // covers all `matched` tokens (its path shares them). Failing
+        // that, the deepest segment on the path above covers its own
+        // (shorter) depth.
+        let mut found: Option<(usize, usize)> = self
+            .seg_in_subtree(end)
+            .map(|n| (n, matched.min(self.nodes[n].depth)));
+        if found.is_none() {
+            let mut at = self.nodes[end].parent;
+            loop {
+                if self.nodes[at].seg.is_some() {
+                    found = Some((at, self.nodes[at].depth));
+                    break;
+                }
+                if at == 0 {
+                    break;
+                }
+                at = self.nodes[at].parent;
+            }
+        }
+        match found {
+            Some((node, attach_len)) if attach_len > 0 => {
+                let stamp = self.tick();
+                let seg = self.nodes[node].seg.as_mut().expect("seg present");
+                seg.refs += 1;
+                seg.last_use = stamp;
+                self.stats.hits += 1;
+                Some(Hit { attach_len, seg: SegRef(node) })
+            }
+            _ => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Borrow a pinned segment's KV buffer sets (shallow, deep).
+    pub fn segment_kv(&self, r: SegRef) -> (&[Buffer], &[Buffer]) {
+        let seg = self.nodes[r.0].seg.as_ref().expect("released segment");
+        (&seg.shallow, &seg.deep)
+    }
+
+    /// Release one pinned reference. Each [`Hit`] must be released
+    /// exactly once.
+    pub fn release(&mut self, r: SegRef) {
+        let stamp = self.tick();
+        let seg = self.nodes[r.0]
+            .seg
+            .as_mut()
+            .expect("release on an evicted segment (refcount underflow?)");
+        assert!(seg.refs > 0, "segment refcount underflow");
+        seg.refs -= 1;
+        seg.last_use = stamp;
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        if let Some(i) = self.free.pop() {
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Locate (creating/splitting as needed) the node whose path is
+    /// exactly `tokens`.
+    fn node_at(&mut self, tokens: &[u32]) -> usize {
+        let mut at = 0usize;
+        let mut consumed = 0usize;
+        while consumed < tokens.len() {
+            let first = tokens[consumed];
+            let Some(&child) = self.nodes[at].children.get(&first) else {
+                // No branch: the whole remainder becomes one edge.
+                let node = Node {
+                    edge: tokens[consumed..].to_vec(),
+                    depth: tokens.len(),
+                    parent: at,
+                    children: std::collections::BTreeMap::new(),
+                    seg: None,
+                };
+                let idx = self.alloc_node(node);
+                self.nodes[at].children.insert(first, idx);
+                return idx;
+            };
+            let common = self.nodes[child]
+                .edge
+                .iter()
+                .zip(&tokens[consumed..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common == self.nodes[child].edge.len() {
+                consumed += common;
+                at = child;
+                continue;
+            }
+            // Split `child`'s edge at the divergence point: a new
+            // interior node takes the shared run, the old child keeps
+            // the tail (with its subtree and segment untouched).
+            let tail = self.nodes[child].edge.split_off(common);
+            let shared = std::mem::take(&mut self.nodes[child].edge);
+            let mid_depth = self.nodes[child].depth - tail.len();
+            let mid = self.alloc_node(Node {
+                edge: shared,
+                depth: mid_depth,
+                parent: at,
+                children: std::collections::BTreeMap::new(),
+                seg: None,
+            });
+            self.nodes[child].edge = tail;
+            self.nodes[child].parent = mid;
+            let tail_first = self.nodes[child].edge[0];
+            self.nodes[mid].children.insert(tail_first, child);
+            self.nodes[at].children.insert(first, mid);
+            consumed += common;
+            at = mid;
+        }
+        at
+    }
+
+    /// True if any descendant of `n` (excluding `n`) owns a segment.
+    fn has_deeper_seg(&self, n: usize) -> bool {
+        self.nodes[n]
+            .children
+            .values()
+            .any(|&c| self.seg_in_subtree(c).is_some())
+    }
+
+    /// Evict the least-recently-used unpinned **leaf** segment. Returns
+    /// false when every segment is pinned or extended by a deeper one.
+    fn evict_one(&mut self) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| {
+                n.seg.as_ref().is_some_and(|s| s.refs == 0)
+                    && !self.has_deeper_seg(*i)
+            })
+            .min_by_key(|(_, n)| n.seg.as_ref().expect("filtered").last_use)
+            .map(|(i, _)| i);
+        let Some(victim) = victim else {
+            return false;
+        };
+        self.nodes[victim].seg = None;
+        self.segments -= 1;
+        self.stats.evictions += 1;
+        self.prune_from(victim);
+        true
+    }
+
+    /// Prune now-useless leaf nodes (no children, no segment) from `at`
+    /// upward so dead paths do not accrete.
+    fn prune_from(&mut self, at: usize) {
+        let mut at = at;
+        while at != 0
+            && self.nodes[at].children.is_empty()
+            && self.nodes[at].seg.is_none()
+        {
+            let parent = self.nodes[at].parent;
+            let first = self.nodes[at].edge[0];
+            self.nodes[parent].children.remove(&first);
+            self.nodes[at].edge.clear();
+            self.free.push(at);
+            at = parent;
+        }
+    }
+
+    /// Insert a snapshot for `tokens`. Skipped (returning false) when
+    /// the path already owns a segment (the resident one is refreshed —
+    /// snapshots of the same committed prefix are bitwise identical by
+    /// construction) or when the cache is full and nothing is
+    /// evictable. Empty token runs are never cached.
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        shallow: Vec<Buffer>,
+        deep: Vec<Buffer>,
+    ) -> bool {
+        if tokens.is_empty() {
+            return false;
+        }
+        let node = self.node_at(tokens);
+        if self.nodes[node].seg.is_some() {
+            let stamp = self.tick();
+            let seg = self.nodes[node].seg.as_mut().expect("seg present");
+            seg.last_use = stamp;
+            return false;
+        }
+        if self.segments >= self.capacity && !self.evict_one() {
+            // Preemption-free skip: undo the (seg-less) path the walk
+            // may have created so refused inserts don't accrete nodes.
+            self.prune_from(node);
+            return false;
+        }
+        let stamp = self.tick();
+        self.nodes[node].seg =
+            Some(Segment { shallow, deep, refs: 0, last_use: stamp });
+        self.segments += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn buf() -> Vec<Buffer> {
+        vec![Buffer::host(Tensor::zeros_f32(vec![1]))]
+    }
+
+    fn toks(rng: &mut Rng, len: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(4) as u32).collect()
+    }
+
+    fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    #[test]
+    fn insert_then_exact_and_partial_lookup() {
+        let mut c = PrefixCache::new(8);
+        assert!(c.insert(&[1, 2, 3], buf(), buf()));
+        let hit = c.lookup(&[1, 2, 3, 9]).expect("prefix hit");
+        assert_eq!(hit.attach_len, 3);
+        c.release(hit.seg);
+        let hit = c.lookup(&[1, 2, 7]).expect("partial hit");
+        assert_eq!(hit.attach_len, 2, "mid-edge divergence attaches at 2");
+        c.release(hit.seg);
+        assert!(c.lookup(&[5, 5]).is_none(), "disjoint prompt must miss");
+        assert_eq!(c.stats().hits, 2);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn split_at_divergence_preserves_both_paths() {
+        let mut c = PrefixCache::new(8);
+        assert!(c.insert(&[1, 2, 3, 4], buf(), buf()));
+        assert!(c.insert(&[1, 2, 9], buf(), buf()));
+        for (query, want) in
+            [(vec![1, 2, 3, 4], 4), (vec![1, 2, 9], 3), (vec![1, 2, 5], 2)]
+        {
+            let hit = c.lookup(&query).expect("hit");
+            assert_eq!(hit.attach_len, want, "query {query:?}");
+            c.release(hit.seg);
+        }
+    }
+
+    #[test]
+    fn prop_longest_prefix_matches_reference_model() {
+        run_prop("cache-longest-prefix", 64, |rng| {
+            // Unbounded capacity: the tree must agree with the brute
+            // force longest-common-prefix over every inserted prompt.
+            let mut c = PrefixCache::new(1 << 20);
+            let mut model: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..rng.usize_below(12) {
+                let t = toks(rng, 1 + rng.usize_below(10));
+                c.insert(&t, buf(), buf());
+                model.push(t);
+            }
+            for _ in 0..8 {
+                let q = toks(rng, 1 + rng.usize_below(10));
+                let want = model
+                    .iter()
+                    .map(|m| common_prefix(m, &q))
+                    .max()
+                    .unwrap_or(0);
+                match c.lookup(&q) {
+                    Some(hit) => {
+                        assert_eq!(hit.attach_len, want, "query {q:?}");
+                        c.release(hit.seg);
+                    }
+                    None => assert_eq!(want, 0, "missed query {q:?}"),
+                }
+            }
+            assert_eq!(c.total_refs(), 0, "lookup/release must balance");
+        });
+    }
+
+    #[test]
+    fn prop_refcounts_balance_under_random_interleavings() {
+        run_prop("cache-refcount-monotone", 64, |rng| {
+            let mut c = PrefixCache::new(16);
+            let mut held: Vec<SegRef> = Vec::new();
+            for _ in 0..40 {
+                match rng.usize_below(3) {
+                    0 => {
+                        let t = toks(rng, 1 + rng.usize_below(8));
+                        c.insert(&t, buf(), buf());
+                    }
+                    1 => {
+                        let q = toks(rng, 1 + rng.usize_below(8));
+                        if let Some(hit) = c.lookup(&q) {
+                            held.push(hit.seg);
+                        }
+                    }
+                    _ => {
+                        if !held.is_empty() {
+                            let i = rng.usize_below(held.len());
+                            c.release(held.swap_remove(i));
+                        }
+                    }
+                }
+                assert_eq!(
+                    c.total_refs(),
+                    held.len(),
+                    "total refcounts must equal live attachments"
+                );
+            }
+            for r in held.drain(..) {
+                c.release(r);
+            }
+            assert_eq!(c.total_refs(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_eviction_never_reclaims_a_pinned_segment() {
+        run_prop("cache-eviction-respects-pins", 48, |rng| {
+            let cap = 2 + rng.usize_below(3);
+            let mut c = PrefixCache::new(cap);
+            // Pin `cap` distinct single-branch segments.
+            let mut pinned: Vec<(Vec<u32>, SegRef)> = Vec::new();
+            for i in 0..cap {
+                let t = vec![i as u32 + 10, 1, 2];
+                assert!(c.insert(&t, buf(), buf()));
+                let hit = c.lookup(&t).expect("fresh insert must hit");
+                assert_eq!(hit.attach_len, t.len());
+                pinned.push((t, hit.seg));
+            }
+            // Flood with inserts: every one must be skipped (full, all
+            // pinned) and every pinned segment must stay resident.
+            for _ in 0..10 {
+                let t = toks(rng, 1 + rng.usize_below(6));
+                let before = c.stats().segments;
+                c.insert(&t, buf(), buf());
+                assert_eq!(c.stats().evictions, 0, "evicted a pinned segment");
+                assert_eq!(c.stats().segments, before);
+            }
+            for (t, r) in pinned.drain(..) {
+                let hit = c.lookup(&t).expect("pinned segment vanished");
+                assert_eq!(hit.attach_len, t.len());
+                c.release(hit.seg);
+                c.release(r);
+            }
+            // Everything unpinned now: the next insert may evict.
+            let before = c.stats().segments;
+            assert!(c.insert(&[7, 7, 7, 7], buf(), buf()));
+            assert_eq!(c.stats().segments, before, "evict-then-insert at cap");
+            assert_eq!(c.stats().evictions, 1);
+        });
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_unpinned_leaf() {
+        let mut c = PrefixCache::new(2);
+        assert!(c.insert(&[1, 1], buf(), buf()));
+        assert!(c.insert(&[2, 2], buf(), buf()));
+        // Touch [1,1] so [2,2] is the LRU victim.
+        let hit = c.lookup(&[1, 1]).unwrap();
+        c.release(hit.seg);
+        assert!(c.insert(&[3, 3], buf(), buf()));
+        assert!(c.lookup(&[2, 2, 5]).is_none(), "LRU segment must be gone");
+        let hit = c.lookup(&[1, 1]).expect("hot segment survived");
+        c.release(hit.seg);
+    }
+
+    #[test]
+    fn interior_segments_are_not_evicted_while_extended() {
+        let mut c = PrefixCache::new(2);
+        assert!(c.insert(&[1, 2], buf(), buf()));
+        assert!(c.insert(&[1, 2, 3, 4], buf(), buf()));
+        // [1,2] is interior (extended by [1,2,3,4]): only the deeper
+        // leaf is evictable.
+        assert!(c.insert(&[9, 9], buf(), buf()));
+        let hit = c.lookup(&[1, 2, 8]).expect("interior segment survived");
+        assert_eq!(hit.attach_len, 2);
+        c.release(hit.seg);
+        assert!(
+            c.lookup(&[1, 2, 3, 4]).map(|h| h.attach_len) < Some(4),
+            "leaf segment should have been the eviction victim"
+        );
+    }
+
+    #[test]
+    fn duplicate_insert_is_skipped_and_refreshes_lru() {
+        let mut c = PrefixCache::new(2);
+        assert!(c.insert(&[1, 1], buf(), buf()));
+        assert!(!c.insert(&[1, 1], buf(), buf()), "duplicate path");
+        assert!(c.insert(&[2, 2], buf(), buf()));
+        // Refresh [1,1] via duplicate insert; [2,2] becomes the victim.
+        assert!(!c.insert(&[1, 1], buf(), buf()));
+        assert!(c.insert(&[3, 3], buf(), buf()));
+        assert!(c.lookup(&[2, 2]).is_none());
+    }
+}

@@ -26,6 +26,7 @@
 //! [`runtime::Runtime::load_auto`], then construct engines from
 //! [`engine`], or drive everything through the `dvi` binary.
 
+pub mod cache;
 pub mod engine;
 pub mod harness;
 pub mod learner;

@@ -10,6 +10,8 @@
 //!   fig2     --train 2000        ablation learning curves (Figure 2)
 //!   serve    --port 7501 --workers 2 [--no-online]
 //!            [--batched --max-batch 8 --slots 16]   continuous batching
+//!            [--prefix-cache --cache-cap 64]   radix prefix/KV reuse
+//!            (batched mode; or DVI_PREFIX_CACHE=1)
 //!            [--metrics] [--trace-out FILE] [--report-secs 30]
 //!            [--smoke N]  observability: quantile metrics in the
 //!            periodic report, Chrome-trace export (forces tracing on),
@@ -39,14 +41,14 @@ use dvi::harness;
 use dvi::learner::Objective;
 use dvi::obs::{chrome, trace, TraceSink};
 use dvi::runtime::{log, Runtime};
-use dvi::sched::AdaptiveK;
+use dvi::sched::{AdaptiveK, CacheConfig};
 use dvi::server::{api, Router, RouterConfig};
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
-const FLAGS: [&str; 7] = [
+const FLAGS: [&str; 8] = [
     "online", "no-online", "quiet", "verbose", "batched", "adaptive-k",
-    "metrics",
+    "metrics", "prefix-cache",
 ];
 
 fn main() {
@@ -317,6 +319,16 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         AdaptiveK::from_env()
     };
+    // Prefix cache (batched mode): --prefix-cache (or DVI_PREFIX_CACHE=1)
+    // turns it on; --cache-cap sizes the segment pool.
+    let cache = if args.flag("prefix-cache") {
+        let capacity =
+            args.get_usize("cache-cap", 64).map_err(anyhow::Error::msg)?.max(1);
+        Some(CacheConfig { capacity })
+    } else {
+        CacheConfig::from_env()
+    };
+    let cache_cap = cache.as_ref().map(|c| c.capacity);
     let tok = Arc::new(rt.tokenizer()?);
     let router = Arc::new(Router::start(
         rt.clone(),
@@ -330,6 +342,7 @@ fn serve(args: &Args) -> Result<()> {
             max_batch,
             max_slots,
             adaptive,
+            cache,
         },
     )?);
     let metrics_on = args.flag("metrics");
@@ -391,6 +404,9 @@ fn serve(args: &Args) -> Result<()> {
             ", adaptive-k [{}..{ceil}] target={} alpha={}",
             ad.floor, ad.target, ad.alpha
         ));
+    }
+    if let Some(cap) = cache_cap {
+        mode.push_str(&format!(", prefix-cache cap={cap}"));
     }
     println!(
         "serving on 127.0.0.1:{port} ({mode}, online={online}); try:\n  \

@@ -247,6 +247,31 @@ pub trait Backend: Send + Sync {
         self.fresh_kv(spec)
     }
 
+    /// Copy-on-write fork of a set of KV buffers (a prefix-cache
+    /// segment being attached to a new sequence). The returned buffers
+    /// are **independently owned** — releasing the parent or the fork
+    /// never invalidates the other — but share storage until one side
+    /// is replaced by a later call's output. Because every backend in
+    /// this repo treats KV buffers as immutable (each call returns new
+    /// buffers instead of mutating its inputs), the fork point needs no
+    /// tensor copy: the default clones the handles (`Buffer` is an Arc
+    /// either way), and the remote backends mint fresh server-side ids
+    /// aliasing the same storage so per-sequence frees stay exact.
+    fn fork_kv(&self, spec: &ArtifactSpec, parents: &[Buffer]) -> Result<Vec<Buffer>> {
+        let _ = spec;
+        Ok(parents.to_vec())
+    }
+
+    /// Placement hint for a sequence with **no** cached prefix: the
+    /// shard index the backend would prefer new KV to land on (used as
+    /// the placement key for [`Backend::fresh_kv_keyed`]). `None` means
+    /// the backend has no placement opinion (in-process backends, or a
+    /// fleet whose load cannot be observed) — callers fall back to
+    /// their own key scheme (sequential round-robin).
+    fn kv_placement_hint(&self) -> Option<u64> {
+        None
+    }
+
     /// Upload a host tensor (used by tests to stage KV/global inputs).
     fn upload(&self, t: &Tensor) -> Result<Buffer>;
 

@@ -113,6 +113,16 @@ impl Backend for FlakyBackend {
         self.inner.fresh_kv_keyed(spec, key)
     }
 
+    fn fork_kv(&self, spec: &ArtifactSpec, parents: &[Buffer]) -> Result<Vec<Buffer>> {
+        // Forwarded, not defaulted: a wrapped remote backend must mint
+        // real server-side forks, not local handle clones.
+        self.inner.fork_kv(spec, parents)
+    }
+
+    fn kv_placement_hint(&self) -> Option<u64> {
+        self.inner.kv_placement_hint()
+    }
+
     fn upload(&self, t: &Tensor) -> Result<Buffer> {
         self.inner.upload(t)
     }

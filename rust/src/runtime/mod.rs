@@ -579,6 +579,22 @@ impl Runtime {
         self.backend.fresh_kv_keyed(&self.artifact(artifact)?.spec, key)
     }
 
+    /// Copy-on-write fork of existing KV buffers: returns child buffers
+    /// aliasing the parents' (immutable) storage but with independent
+    /// lifetimes. In-process backends clone the cheap `Arc` handles;
+    /// the remote backend mints fresh server-side ids on the shard
+    /// owning the parents. This is the prefix-cache attach primitive.
+    pub fn fork_kv(&self, artifact: &str, parents: &[Buffer]) -> Result<Vec<Buffer>> {
+        self.backend.fork_kv(&self.artifact(artifact)?.spec, parents)
+    }
+
+    /// Preferred placement key for the *next* fresh KV allocation, when
+    /// the backend has an opinion (sharded remote: the least-loaded
+    /// shard). `None` means "caller's keying is fine".
+    pub fn kv_placement_hint(&self) -> Option<u64> {
+        self.backend.kv_placement_hint()
+    }
+
     /// Health of the remote executor(s) behind this runtime (empty for
     /// in-process backends): per-shard endpoint plus the executor-side
     /// `Metrics` counters when reachable.

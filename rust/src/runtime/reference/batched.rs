@@ -69,16 +69,37 @@ impl ReferenceBackend {
         for t in &toks {
             ensure!(t.len() == p, "ragged prefill batch");
         }
+        // Optional per-lane resume point (prefix-cache attach): rows
+        // 0..start already live in the lane's KV, so those positions are
+        // neither embedded nor stepped; their hk rows stay zero, exactly
+        // matching the serial kernel's warm path.
+        let starts: Vec<usize> = batch
+            .iter()
+            .map(|item| {
+                Ok(match item.inputs.get(1) {
+                    Some(t) => t.as_i32()?[0] as usize,
+                    None => 0,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for &start in &starts {
+            ensure!(start < p, "prefill start {start} out of 0..{p}");
+        }
         let mut rows: Vec<Vec<f32>> =
-            (0..batch.len()).map(|_| Vec::with_capacity(p * m.d)).collect();
+            starts.iter().map(|&s| vec![0.0f32; s * m.d]).collect();
         for pos in 0..p {
-            for (lane, t) in lanes.iter_mut().zip(&toks) {
-                lane.h = m.embed_row(t[pos] as usize)?;
-                lane.pos = pos;
+            let active: Vec<bool> = starts.iter().map(|&s| pos >= s).collect();
+            for (li, (lane, t)) in lanes.iter_mut().zip(&toks).enumerate() {
+                if active[li] {
+                    lane.h = m.embed_row(t[pos] as usize)?;
+                    lane.pos = pos;
+                }
             }
-            m.step_layers_lanes(0, split, &mut lanes)?;
-            for (row, lane) in rows.iter_mut().zip(&lanes) {
-                row.extend_from_slice(&lane.h);
+            m.step_layers_lanes_masked(0, split, &mut lanes, Some(&active))?;
+            for (li, (row, lane)) in rows.iter_mut().zip(&lanes).enumerate() {
+                if active[li] {
+                    row.extend_from_slice(&lane.h);
+                }
             }
         }
         let outputs = rows
@@ -108,15 +129,35 @@ impl ReferenceBackend {
         for &len in &lens {
             ensure!(len >= 1 && len <= p, "prefill length {len} out of 1..={p}");
         }
+        // Optional per-lane resume point; `start < len` so the
+        // last-position logits are always computed live, never replayed
+        // from a cached row.
+        let starts: Vec<usize> = batch
+            .iter()
+            .map(|item| {
+                Ok(match item.inputs.get(2) {
+                    Some(t) => t.as_i32()?[0] as usize,
+                    None => 0,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (&start, &len) in starts.iter().zip(&lens) {
+            ensure!(start < len, "prefill start {start} out of 0..{len}");
+        }
         let mut lasts: Vec<Vec<f32>> = vec![Vec::new(); batch.len()];
         for pos in 0..p {
-            for (lane, hk) in lanes.iter_mut().zip(&hks) {
-                lane.h = hk.row_f32(pos)?.to_vec();
-                lane.pos = pos;
+            let active: Vec<bool> = starts.iter().map(|&s| pos >= s).collect();
+            for (li, (lane, hk)) in lanes.iter_mut().zip(&hks).enumerate() {
+                if active[li] {
+                    lane.h = hk.row_f32(pos)?.to_vec();
+                    lane.pos = pos;
+                }
             }
-            m.step_layers_lanes(split, l, &mut lanes)?;
-            for ((last, lane), &len) in lasts.iter_mut().zip(&lanes).zip(&lens) {
-                if pos == len - 1 {
+            m.step_layers_lanes_masked(split, l, &mut lanes, Some(&active))?;
+            for (li, ((last, lane), &len)) in
+                lasts.iter_mut().zip(&lanes).zip(&lens).enumerate()
+            {
+                if active[li] && pos == len - 1 {
                     *last = lane.h.clone();
                 }
             }
@@ -530,6 +571,64 @@ mod tests {
             })
             .collect();
         assert_batched_matches(&be, "target_step", &step_lanes);
+    }
+
+    /// Warm prefill (nonzero per-lane `start`, KV resumed from a cold
+    /// prefill of a donor prompt sharing a prefix) matches serial
+    /// bitwise AND matches a cold prefill of the full prompt — the
+    /// kernel-level half of the prefix-cache losslessness gate. Lanes
+    /// attach at different depths to exercise the per-lane masking.
+    #[test]
+    fn warm_prefill_matches_cold_and_serial() {
+        let be = be();
+        let manifest = synth::manifest(&be.cfg);
+        let p = be.cfg.prefill_seq;
+        let d = be.cfg.d_model;
+        let pad = |pr: &[i32]| {
+            let mut t = pr.to_vec();
+            t.resize(p, 0);
+            Tensor::i32(vec![p], t)
+        };
+        let prefix = vec![1, 40, 41, 42];
+        let prompts: Vec<Vec<i32>> = vec![
+            [&prefix[..], &[50, 3]].concat(),
+            [&prefix[..], &[60, 61, 3]].concat(),
+        ];
+        let sh_spec = manifest.artifact("prefill_shallow").unwrap();
+        // Donor: cold prefill of a third prompt sharing the prefix.
+        let donor_kv = be.fresh_kv(sh_spec).unwrap();
+        let donor = be
+            .call(sh_spec, &donor_kv, &[pad(&[&prefix[..], &[70, 3]].concat())])
+            .unwrap();
+        // Lane 0 attaches at the full shared prefix, lane 1 shallower —
+        // any prefix of a cached path is a valid attach point.
+        let starts = [prefix.len(), 2];
+        let warm_lanes: Vec<(Vec<Buffer>, Vec<Tensor>)> = prompts
+            .iter()
+            .zip(starts)
+            .map(|(pr, s)| {
+                (donor.kv.clone(), vec![pad(pr), Tensor::scalar_i32(s as i32)])
+            })
+            .collect();
+        let warm = assert_batched_matches(&be, "prefill_shallow", &warm_lanes);
+        for ((pr, w), &s) in prompts.iter().zip(&warm).zip(&starts) {
+            let kv = be.fresh_kv(sh_spec).unwrap();
+            let cold = be.call(sh_spec, &kv, &[pad(pr)]).unwrap();
+            for (ck, wk) in cold.kv.iter().zip(&w.kv) {
+                assert_eq!(
+                    ck.as_host().unwrap(),
+                    wk.as_host().unwrap(),
+                    "warm-attach KV diverged from cold prefill"
+                );
+            }
+            // hk rows below the attach point are zero-filled (the deep
+            // prefill never reads them when given the same start); rows
+            // at and above it must match the cold run bitwise.
+            let ch = cold.outputs[0].as_f32().unwrap();
+            let wh = w.outputs[0].as_f32().unwrap();
+            assert_eq!(&ch[s * d..], &wh[s * d..]);
+            assert!(wh[..s * d].iter().all(|&x| x == 0.0));
+        }
     }
 
     /// Artifacts without a lane-blocked kernel fall back to the serial

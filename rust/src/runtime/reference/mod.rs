@@ -295,14 +295,25 @@ impl ReferenceBackend {
     fn prefill_shallow(&self, spec: &ArtifactSpec, kv: &[Buffer],
                        inputs: &[Tensor]) -> Result<CallOut> {
         let toks = inputs[0].as_i32()?;
+        // Optional trailing `start` (prefix-cache attach point): rows
+        // below it are already resident in the input KV and are neither
+        // recomputed nor emitted (their hk rows are zero-filled — the
+        // deep prefill never reads below its own matching start).
+        // Trailing-optional so direct backend calls predating the port
+        // stay valid; `Artifact::check_lane` enforces it when declared.
+        let start = match inputs.get(1) {
+            Some(t) => t.as_i32()?[0] as usize,
+            None => 0,
+        };
+        ensure!(start < toks.len(), "prefill start {start} >= {}", toks.len());
         let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
         let m = &self.target;
         let split = self.cfg.split_layer;
-        let mut rows = Vec::with_capacity(toks.len() * m.d);
-        for (pos, &t) in toks.iter().enumerate() {
+        let mut rows = vec![0.0f32; toks.len() * m.d];
+        for (pos, &t) in toks.iter().enumerate().skip(start) {
             let mut h = m.embed_row(t as usize)?;
             m.step_layers(0, split, &mut h, &mut kc, &mut vc, pos)?;
-            rows.extend_from_slice(&h);
+            rows[pos * m.d..(pos + 1) * m.d].copy_from_slice(&h);
         }
         Ok(CallOut {
             outputs: vec![Tensor::f32(vec![toks.len(), m.d], rows)],
@@ -314,13 +325,22 @@ impl ReferenceBackend {
                     inputs: &[Tensor]) -> Result<CallOut> {
         let hk = &inputs[0];
         let len = inputs[1].as_i32()?[0] as usize;
+        let start = match inputs.get(2) {
+            Some(t) => t.as_i32()?[0] as usize,
+            None => 0,
+        };
         let p = hk.shape[0];
         ensure!(len >= 1 && len <= p, "prefill length {len} out of 1..={p}");
+        ensure!(
+            start < len,
+            "prefill start {start} must stay below length {len} so the \
+             last-position logits are computed live"
+        );
         let (mut kc, mut vc, shape) = self.kv_clone(spec, kv)?;
         let m = &self.target;
         let (split, l) = (self.cfg.split_layer, self.cfg.n_layers);
         let mut last = Vec::new();
-        for pos in 0..p {
+        for pos in start..p {
             let mut h = hk.row_f32(pos)?.to_vec();
             m.step_layers(split, l, &mut h, &mut kc, &mut vc, pos)?;
             if pos == len - 1 {

@@ -57,6 +57,9 @@ pub fn manifest(cfg: &ReferenceConfig) -> Manifest {
             port("kv_sh_k", sh_kv.clone(), f, Role::Kv),
             port("kv_sh_v", sh_kv.clone(), f, Role::Kv),
             port("tokens", vec![p], i, Role::In),
+            // Prefix-cache attach point: positions < start are already
+            // resident in the input KV (cold prefill passes 0).
+            port("start", vec![], i, Role::In),
         ],
         vec![
             port("hk_seq", vec![p, d], f, Role::Out),
@@ -71,6 +74,8 @@ pub fn manifest(cfg: &ReferenceConfig) -> Manifest {
             port("kv_dp_v", dp_kv.clone(), f, Role::Kv),
             port("hk_seq", vec![p, d], f, Role::In),
             port("length", vec![], i, Role::In),
+            // Prefix-cache attach point (must satisfy start < length).
+            port("start", vec![], i, Role::In),
         ],
         vec![
             port("logits_last", vec![v], f, Role::Out),

@@ -655,6 +655,39 @@ impl Backend for RemoteBackend {
         }
     }
 
+    fn fork_kv(&self, spec: &ArtifactSpec, parents: &[Buffer]) -> Result<Vec<Buffer>> {
+        // Server-side COW alias: the executor re-registers each parent
+        // buffer under a fresh id owned by this session, so the child
+        // outlives the parent's handle (and vice versa) without copying
+        // — buffers are immutable once written. Dtype/shape travel from
+        // our own handles; only the ids are server-minted.
+        let infos: Vec<BufInfo> = parents
+            .iter()
+            .map(|b| match b {
+                Buffer::Remote(h) if h.shard == self.shard => Ok(BufInfo {
+                    id: h.id,
+                    dtype: h.dtype,
+                    shape: h.shape.clone(),
+                }),
+                Buffer::Remote(h) => bail!(
+                    "fork_kv parent {h:?} belongs to shard {}, not this \
+                     executor (shard {})",
+                    h.shard,
+                    self.shard
+                ),
+                other => bail!(
+                    "fork_kv on a non-remote parent buffer ({other:?})"
+                ),
+            })
+            .collect::<Result<_>>()?;
+        match self.roundtrip(&Msg::ForkKv { parents: infos })? {
+            Reply::Buffers(bs) => {
+                Ok(bs.into_iter().map(|b| self.handle(b)).collect())
+            }
+            _ => bail!("{}: unexpected reply to fork_kv", spec.name),
+        }
+    }
+
     fn upload(&self, t: &Tensor) -> Result<Buffer> {
         match self.roundtrip(&Msg::Upload { tensor: t.clone() })? {
             Reply::Buffers(mut bs) if bs.len() == 1 => {

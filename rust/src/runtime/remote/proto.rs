@@ -40,7 +40,10 @@
 //!   KV state stays **server-resident**: lanes reference buffers by id,
 //!   and each reply returns fresh ids for the chained KV outputs. A
 //!   `frees` list piggybacks dropped client handles on the hot path.
-//! * `FreshKv` / `Upload` / `Download` — buffer lifecycle + staging.
+//! * `FreshKv` / `ForkKv` / `Upload` / `Download` — buffer lifecycle +
+//!   staging. `ForkKv` (v4) aliases server-resident parent buffers
+//!   under new ids owned by the caller's session: the copy-on-write
+//!   attach primitive behind the scheduler's prefix cache.
 //! * `SetGlobal` / `ReadGlobal` / `ResetGlobal` — mutable globals
 //!   (LoRA adapters, Adam moments), so the online learner runs
 //!   unmodified against a remote executor.
@@ -63,13 +66,15 @@ use crate::workload::{PromptSample, PromptSet};
 /// v3: pipelined multiplexing — every post-handshake frame is prefixed
 /// with a `u64` call id; the `Hello` reply carries the executor's
 /// weights fingerprint.
+/// v4: `ForkKv` added — copy-on-write aliasing of server-resident KV
+/// buffers under the caller's session (prefix-cache attach).
 ///
-/// The `Hello` request's wire layout is **stable across v2/v3**, so the
-/// version check happens in-band: a v2 peer dialing a v3 executor (or
-/// vice versa) gets a clean `Reply::Err` naming both versions, before
-/// any tagged frame is exchanged. Everything after the handshake is
-/// version-specific and never reached by a rejected peer.
-pub const VERSION: u32 = 3;
+/// The `Hello` request's wire layout is **stable across versions**, so
+/// the version check happens in-band: a mismatched peer gets a clean
+/// `Reply::Err` naming both versions, before any tagged frame is
+/// exchanged. Everything after the handshake is version-specific and
+/// never reached by a rejected peer.
+pub const VERSION: u32 = 4;
 
 /// Upper bound on a single frame, guarding a corrupted length prefix.
 pub const MAX_FRAME: usize = 256 << 20;
@@ -107,6 +112,7 @@ const OP_READ_GLOBAL: u8 = 7;
 const OP_RESET_GLOBAL: u8 = 8;
 const OP_FREE: u8 = 9;
 const OP_METRICS: u8 = 10;
+const OP_FORK_KV: u8 = 11;
 const RE_HELLO: u8 = 128;
 const RE_LANES: u8 = 129;
 const RE_BUFFERS: u8 = 130;
@@ -151,6 +157,14 @@ pub enum Msg {
     Hello { version: u32, want_manifest: bool, session: u64 },
     Call { artifact: String, frees: Vec<u64>, lanes: Vec<Lane> },
     FreshKv { artifact: String },
+    /// Copy-on-write fork: alias each parent buffer under a new id
+    /// owned by the caller's session. Buffers are immutable once
+    /// written (every call returns *fresh* output KV ids), so aliasing
+    /// the storage is bitwise-safe; the fork exists to give the child
+    /// an independent lifetime/refcount. The client supplies dtype and
+    /// shape from its own handles so the reply can mint new handles
+    /// without a server-side lookup of host metadata.
+    ForkKv { parents: Vec<BufInfo> },
     Upload { tensor: Tensor },
     Download { id: u64, dtype: DType, shape: Vec<usize> },
     SetGlobal { name: String, tensor: Tensor },
@@ -422,6 +436,10 @@ impl Msg {
                 e.u8(OP_FRESH_KV);
                 e.str(artifact);
             }
+            Msg::ForkKv { parents } => {
+                e.u8(OP_FORK_KV);
+                e.buf_infos(parents);
+            }
             Msg::Upload { tensor } => {
                 e.u8(OP_UPLOAD);
                 e.tensor(tensor);
@@ -474,6 +492,7 @@ impl Msg {
                 Msg::Call { artifact, frees, lanes }
             }
             OP_FRESH_KV => Msg::FreshKv { artifact: d.str()? },
+            OP_FORK_KV => Msg::ForkKv { parents: d.buf_infos()? },
             OP_UPLOAD => Msg::Upload { tensor: d.tensor()? },
             OP_DOWNLOAD => Msg::Download {
                 id: d.u64()?,
@@ -742,6 +761,13 @@ mod tests {
             ],
         });
         roundtrip_msg(Msg::FreshKv { artifact: "prefill_shallow".into() });
+        roundtrip_msg(Msg::ForkKv {
+            parents: vec![
+                BufInfo { id: 11, dtype: DType::F32, shape: vec![2, 160, 16] },
+                BufInfo { id: 12, dtype: DType::F32, shape: vec![2, 160, 16] },
+            ],
+        });
+        roundtrip_msg(Msg::ForkKv { parents: vec![] });
         roundtrip_msg(Msg::Upload { tensor: Tensor::i32(vec![3], vec![1, -2, 3]) });
         roundtrip_msg(Msg::Download {
             id: 42,

@@ -237,6 +237,7 @@ fn opcode(msg: &Msg) -> &'static str {
         Msg::Hello { .. } => "hello",
         Msg::Call { .. } => "call",
         Msg::FreshKv { .. } => "fresh_kv",
+        Msg::ForkKv { .. } => "fork_kv",
         Msg::Upload { .. } => "upload",
         Msg::Download { .. } => "download",
         Msg::SetGlobal { .. } => "set_global",
@@ -309,6 +310,26 @@ fn execute(
                 bufs.into_iter()
                     .zip(&ports)
                     .map(|(b, p)| table.insert(session, b, p.dtype, p.shape.clone()))
+                    .collect(),
+            ))
+        }
+        Msg::ForkKv { parents } => {
+            // Copy-on-write alias: the child id shares the parent's
+            // storage (buffers are immutable once written — every call
+            // mints fresh output KV, never rewrites) but has its own
+            // table entry under the caller's session, so parent and
+            // child free independently. Dtype/shape echo the client's
+            // request; only the id is server-minted.
+            let bufs: Vec<Buffer> = parents
+                .iter()
+                .map(|p| table.get(p.id))
+                .collect::<Result<_>>()?;
+            Ok(Reply::Buffers(
+                bufs.into_iter()
+                    .zip(&parents)
+                    .map(|(b, p)| {
+                        table.insert(session, b, p.dtype, p.shape.clone())
+                    })
                     .collect(),
             ))
         }

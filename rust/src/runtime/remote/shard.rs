@@ -16,6 +16,14 @@
 //! same shard (`tests/sched.rs` property-tests this under transport
 //! chaos). Sequential keys round-robin, so offered load balances.
 //!
+//! With the scheduler's prefix cache enabled, placement becomes
+//! **affinity-aware**: a cached-prefix hit forks its KV on the shard
+//! already holding the prefix (`fork_kv` routes to the parents' shard —
+//! an alias cannot live anywhere else), and cache misses consult
+//! `kv_placement_hint` (least-loaded shard by buffer-table size,
+//! deterministic lowest-index tiebreak) instead of pure round-robin;
+//! any metrics failure falls back to sequential keying.
+//!
 //! ## Execution: split, submit, drain
 //!
 //! A batched call is split by the shard of each lane's KV and the
@@ -414,6 +422,42 @@ impl Backend for ShardedRemoteBackend {
         self.shards[shard]
             .fresh_kv(spec)
             .with_context(|| format!("{}: fresh_kv on shard {shard}", spec.name))
+    }
+
+    fn fork_kv(&self, spec: &ArtifactSpec, parents: &[Buffer]) -> Result<Vec<Buffer>> {
+        // A fork is an alias of server-resident storage, so it can only
+        // live where its parents live: route to their (unanimous) shard.
+        // This is what makes prefix affinity work — a cache hit pins the
+        // child sequence to the shard already holding the prefix KV.
+        let shard = self.lane_shard(parents)?;
+        self.shards[shard]
+            .fork_kv(spec, parents)
+            .with_context(|| format!("{}: fork_kv on shard {shard}", spec.name))
+    }
+
+    fn kv_placement_hint(&self) -> Option<u64> {
+        // Least-loaded placement for cache misses: ask every shard for
+        // its buffer-table size (the count of live server-resident KV
+        // buffers — the stable proxy for resident sequences) and hint
+        // the emptiest shard's index, which `fresh_kv_keyed` maps back
+        // via `shard_for_key(hint, n) == hint`. Deterministic tiebreak
+        // (lowest index) keeps placement reproducible; any metrics
+        // failure falls back to the caller's sequential keying.
+        if self.shards.len() <= 1 {
+            return None;
+        }
+        let mut best: Option<(u64, usize)> = None;
+        for (i, be) in self.shards.iter().enumerate() {
+            let m = be.metrics().ok()?;
+            let better = match best {
+                None => true,
+                Some((load, _)) => m.buffers < load,
+            };
+            if better {
+                best = Some((m.buffers, i));
+            }
+        }
+        best.map(|(_, i)| i as u64)
     }
 
     fn upload(&self, t: &Tensor) -> Result<Buffer> {

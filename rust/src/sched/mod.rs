@@ -24,6 +24,14 @@
 //! DVI sequences log accept/reject tuples into the shared
 //! [`ReplayBuffer`] exactly like the per-thread engines do, so the
 //! online learner thread needs no changes to ride on batched serving.
+//!
+//! With `DVI_PREFIX_CACHE=1` the scheduler additionally keeps a radix
+//! [`PrefixCache`] over committed token ids: admission attaches new
+//! sequences to the longest cached prefix (COW-forked KV, suffix-only
+//! prefill) and every completed deep prefill donates its snapshot back.
+//! Warm streams are bitwise identical to cold ones — KV rows are pure
+//! functions of their token prefix — which `tests/cache.rs` gates
+//! across in-process, loopback-remote, sharded, and adaptive-k serving.
 
 pub mod seq;
 
@@ -34,14 +42,50 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::cache::{CacheStats, PrefixCache, SegRef};
 use crate::engine::GenResult;
 use crate::learner::ReplayBuffer;
 use crate::obs::{metrics, trace};
-use crate::runtime::{log, BatchHandle, BatchItem, Runtime};
+use crate::runtime::{log, BatchHandle, BatchItem, Role, Runtime};
 
-use self::seq::{CallSpec, MethodCtx, SeqState};
+use self::seq::{CallSpec, DviSeqOpts, MethodCtx, PrefixAttach, SeqState};
 
 pub use self::seq::AdaptiveK;
+
+/// Decay applied when folding a completed sequence's final acceptance
+/// EMA into its task's prior: `prior = (1-a)*prior + a*ema`. Observation
+/// only — priors seed new sequences' starting EMA, and greedy
+/// longest-prefix acceptance commits the same stream for any seed.
+const TASK_PRIOR_ALPHA: f64 = 0.25;
+
+/// Prefix-cache sizing. `None` in [`SchedConfig::cache`] disables the
+/// cache entirely — the historical byte-identical admission path.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Max resident KV segments; at capacity the least-recently-used
+    /// unpinned leaf segment is evicted (preemption-free: pinned
+    /// segments are never reclaimed, full caches skip the insert).
+    pub capacity: usize,
+}
+
+impl CacheConfig {
+    /// `DVI_PREFIX_CACHE=1` opts in; `DVI_PREFIX_CACHE_CAP` overrides
+    /// the default capacity (64 segments). Default OFF: warm admission
+    /// changes KV placement keys and call shapes (never committed
+    /// streams — see `tests/cache.rs`), and opt-in keeps the default
+    /// serving path byte-for-byte the historical one.
+    pub fn from_env() -> Option<CacheConfig> {
+        if std::env::var("DVI_PREFIX_CACHE").ok().as_deref() != Some("1") {
+            return None;
+        }
+        let capacity = std::env::var("DVI_PREFIX_CACHE_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(64)
+            .max(1);
+        Some(CacheConfig { capacity })
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
@@ -56,6 +100,11 @@ pub struct SchedConfig {
     /// the manifest `k_spec` — the bitwise-reference mode that the
     /// lossless test gates compare against.
     pub adaptive: Option<AdaptiveK>,
+    /// Radix prefix cache over committed token ids. `None` (the default
+    /// unless `DVI_PREFIX_CACHE=1`) disables caching; DVI sequences
+    /// then always cold-prefill. Ignored for methods that cannot attach
+    /// a cached prefix (AR, or manifests without suffix-only prefill).
+    pub cache: Option<CacheConfig>,
 }
 
 impl Default for SchedConfig {
@@ -65,6 +114,7 @@ impl Default for SchedConfig {
             max_batch: 8,
             max_slots: 16,
             adaptive: AdaptiveK::from_env(),
+            cache: CacheConfig::from_env(),
         }
     }
 }
@@ -104,6 +154,23 @@ pub struct SchedStats {
     /// their ratio.
     pub ema_milli_sum: AtomicU64,
     pub ema_rounds: AtomicU64,
+    /// Prefix-cache counters, mirrored from [`crate::cache::CacheStats`]
+    /// at the end of every tick (all zero with the cache disabled).
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    /// Segments currently resident in the tree.
+    pub cache_segments: AtomicU64,
+    /// KV rows (token positions) admitted sequences attached from the
+    /// cache instead of recomputing — Σ attach_len over warm admissions.
+    pub cache_shared_rows: AtomicU64,
+    /// Same, in KV bytes (rows × per-row KV footprint of both stages).
+    pub cache_shared_bytes: AtomicU64,
+    /// Per-task acceptance-EMA priors: a completed DVI sequence tagged
+    /// via [`Scheduler::submit_tagged`] folds its final EMA in (decay
+    /// [`TASK_PRIOR_ALPHA`]); new sequences of the same task seed their
+    /// adaptive-k EMA from the prior instead of the optimistic 1.0.
+    pub task_priors: Mutex<BTreeMap<String, f64>>,
 }
 
 impl SchedStats {
@@ -166,6 +233,35 @@ impl SchedStats {
                 / 1000.0
         }
     }
+
+    /// Starting acceptance EMA for a new sequence: the task's decayed
+    /// prior when one exists, the optimistic 1.0 otherwise (untagged
+    /// requests always get 1.0 — the historical seed).
+    pub fn task_prior(&self, task: Option<&str>) -> f64 {
+        let Some(task) = task else { return 1.0 };
+        let priors = self.task_priors.lock().expect("task priors poisoned");
+        priors.get(task).copied().unwrap_or(1.0)
+    }
+
+    /// Fold a completed sequence's final acceptance EMA into its task's
+    /// prior (first completion seeds the prior directly).
+    pub fn fold_task_prior(&self, task: &str, ema: f64) {
+        let mut priors = self.task_priors.lock().expect("task priors poisoned");
+        match priors.get_mut(task) {
+            Some(p) => {
+                *p = (1.0 - TASK_PRIOR_ALPHA) * *p + TASK_PRIOR_ALPHA * ema;
+            }
+            None => {
+                priors.insert(task.to_string(), ema);
+            }
+        }
+    }
+
+    /// Snapshot of every task's prior, for `stats_json` and tests.
+    pub fn task_priors_snapshot(&self) -> Vec<(String, f64)> {
+        let priors = self.task_priors.lock().expect("task priors poisoned");
+        priors.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
 }
 
 struct Pending {
@@ -173,12 +269,20 @@ struct Pending {
     prompt: Vec<u32>,
     max_new: usize,
     submitted: Instant,
+    /// Workload label for per-task acceptance priors (None = untagged).
+    task: Option<String>,
 }
 
 struct Lane {
     id: u64,
     state: SeqState,
     queue_wait_ns: u64,
+    /// Pin on the cache segment this sequence attached from. Released
+    /// exactly once, on whichever terminal path the lane takes (drain,
+    /// mid-flight [`Scheduler::fail_lane`]); the post-tick leak audit
+    /// cross-checks pins against the tree's refcounts.
+    cache_ref: Option<SegRef>,
+    task: Option<String>,
 }
 
 /// A completed sequence, in completion order.
@@ -196,6 +300,12 @@ pub struct Scheduler {
     done: Vec<SchedResult>,
     pub stats: Arc<SchedStats>,
     next_id: u64,
+    /// Radix prefix cache (None when disabled by config or when the
+    /// method cannot attach cached prefixes — AR, old manifests).
+    cache: Option<PrefixCache>,
+    /// Per-position KV footprint (bytes) across both prefill stages,
+    /// for the `cache_shared_bytes` counter.
+    kv_row_bytes: u64,
     /// Cached `sched.queue_wait_ns` histogram handle (observation-only;
     /// recording never influences admission or call construction).
     m_queue_wait: metrics::HistHandle,
@@ -214,6 +324,39 @@ impl Scheduler {
         ensure!(cfg.max_slots >= 1, "max_slots must be >= 1");
         let ctx = MethodCtx::new(rt, &cfg.method, buffer, cfg.adaptive)?;
         let slots = (0..cfg.max_slots).map(|_| None).collect();
+        let cache = match &cfg.cache {
+            Some(c) if ctx.supports_prefix_attach() => {
+                Some(PrefixCache::new(c.capacity))
+            }
+            _ => None,
+        };
+        // Per-row KV bytes: each KV port is [layers, positions, d], so
+        // one position costs Π(shape minus the position axis) elements
+        // × 4 bytes (f32), summed over both prefill stages' KV sets.
+        let kv_row_bytes = if cache.is_some() {
+            let per_row = |name: &str| -> u64 {
+                ctx.runtime()
+                    .artifact(name)
+                    .map(|a| {
+                        a.spec
+                            .params_with_role(Role::Kv)
+                            .map(|p| {
+                                p.shape
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|&(ax, _)| ax != 1)
+                                    .map(|(_, &d)| d as u64)
+                                    .product::<u64>()
+                                    * 4
+                            })
+                            .sum()
+                    })
+                    .unwrap_or(0)
+            };
+            per_row("prefill_shallow") + per_row("prefill_deep")
+        } else {
+            0
+        };
         Ok(Scheduler {
             ctx,
             cfg,
@@ -222,6 +365,8 @@ impl Scheduler {
             done: Vec::new(),
             stats: Arc::new(SchedStats::default()),
             next_id: 0,
+            cache,
+            kv_row_bytes,
             m_queue_wait: metrics::hist("sched.queue_wait_ns"),
         })
     }
@@ -241,10 +386,49 @@ impl Scheduler {
         max_new: usize,
         submitted: Instant,
     ) -> u64 {
+        self.push_pending(prompt, max_new, None, submitted)
+    }
+
+    /// [`Scheduler::submit`] with a workload label. The sequence seeds
+    /// its adaptive-k acceptance EMA from the task's decayed prior (see
+    /// [`SchedStats::task_priors`]) and folds its final EMA back in on
+    /// completion. Lossless for any prior: greedy longest-prefix
+    /// acceptance commits the same stream at every round length.
+    pub fn submit_tagged(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        task: &str,
+    ) -> u64 {
+        self.push_pending(
+            prompt,
+            max_new,
+            Some(task.to_string()),
+            Instant::now(),
+        )
+    }
+
+    fn push_pending(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        task: Option<String>,
+        submitted: Instant,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Pending { id, prompt, max_new, submitted });
+        self.queue.push_back(Pending { id, prompt, max_new, submitted, task });
         id
+    }
+
+    /// Prefix-cache counters (None when the cache is disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Live pinned-reference total across the tree (leak audits).
+    pub fn cache_total_refs(&self) -> Option<usize> {
+        self.cache.as_ref().map(|c| c.total_refs())
     }
 
     pub fn active(&self) -> usize {
@@ -268,7 +452,8 @@ impl Scheduler {
     /// mirror the success path exactly: served + queue-wait both move,
     /// plus the failure counter (see [`SchedStats::served`]).
     fn fail_lane(&mut self, slot: usize, err: anyhow::Error) {
-        if let Some(lane) = self.slots[slot].take() {
+        if let Some(mut lane) = self.slots[slot].take() {
+            Self::release_pin(&mut self.cache, &mut lane.cache_ref);
             log::info(&format!("scheduled sequence {} failed: {err}", lane.id));
             self.stats.served.fetch_add(1, Ordering::Relaxed);
             self.stats.failed.fetch_add(1, Ordering::Relaxed);
@@ -280,6 +465,32 @@ impl Scheduler {
                 queue_wait_ns: lane.queue_wait_ns,
                 result: Err(err),
             });
+        }
+    }
+
+    /// Drop a lane's prefix-cache pin. Every attached sequence funnels
+    /// through here exactly once — from [`Scheduler::fail_lane`], the
+    /// completed-lane drain, or the admission-reject path — so the
+    /// tree's refcounts always equal the live attachments (asserted
+    /// after every tick in debug builds). Associated fn (not `&mut
+    /// self`) so callers can hold the lane disjointly.
+    fn release_pin(cache: &mut Option<PrefixCache>, pin: &mut Option<SegRef>) {
+        if let Some(seg) = pin.take() {
+            if let Some(cache) = cache.as_mut() {
+                cache.release(seg);
+            }
+        }
+    }
+
+    /// Donate a lane's post-prefill KV snapshot to the cache (cheap
+    /// handle clones; duplicates of an already-resident path are
+    /// skipped). No-op unless the sequence just finished its deep
+    /// prefill with capture requested.
+    fn try_cache_insert(&mut self, slot: usize) {
+        let Some(cache) = self.cache.as_mut() else { return };
+        let Some(lane) = self.slots[slot].as_mut() else { return };
+        if let Some(snap) = lane.state.take_prefix_snapshot() {
+            cache.insert(&snap.tokens, snap.kv_sh, snap.kv_dp);
         }
     }
 
@@ -383,13 +594,80 @@ impl Scheduler {
                     ],
                 );
             }
-            match self.ctx.new_seq(&p.prompt, p.max_new) {
+            // Cache-aware admission. A hit pins the segment, forks its
+            // KV (COW aliases — cheap, shard-affine) and starts warm at
+            // the cached prefix; a miss cold-prefills toward the
+            // least-loaded shard. With the cache disabled this entire
+            // block reduces to the historical defaults (cold prefill,
+            // sequential placement keys, EMA seed from the task prior).
+            let mut opts = DviSeqOpts {
+                ema0: self.stats.task_prior(p.task.as_deref()),
+                ..DviSeqOpts::default()
+            };
+            let mut placement: Option<u64> = None;
+            let mut pin: Option<SegRef> = None;
+            if let Some(cache) = self.cache.as_mut() {
+                opts.capture_prefix = true;
+                if let Some(hit) = cache.lookup(&p.prompt) {
+                    // Clamp: at least one prompt token must run through
+                    // prefill so it emits the first committed logits.
+                    let attach_len =
+                        hit.attach_len.min(p.prompt.len().saturating_sub(1));
+                    let forked = if attach_len == 0 {
+                        None
+                    } else {
+                        let (sh, dp) = cache.segment_kv(hit.seg);
+                        let rt = self.ctx.runtime();
+                        rt.fork_kv("prefill_shallow", sh)
+                            .and_then(|kv_sh| {
+                                rt.fork_kv("prefill_deep", dp)
+                                    .map(|kv_dp| (kv_sh, kv_dp))
+                            })
+                            .ok()
+                    };
+                    match forked {
+                        Some((kv_sh, kv_dp)) => {
+                            self.stats.cache_shared_rows.fetch_add(
+                                attach_len as u64,
+                                Ordering::Relaxed,
+                            );
+                            self.stats.cache_shared_bytes.fetch_add(
+                                attach_len as u64 * self.kv_row_bytes,
+                                Ordering::Relaxed,
+                            );
+                            opts.attach = Some(PrefixAttach {
+                                kv_sh,
+                                kv_dp,
+                                attach_len,
+                            });
+                            pin = Some(hit.seg);
+                        }
+                        // Unusable hit (whole-prompt clamp, fork error,
+                        // dead shard): unpin and run cold instead.
+                        None => cache.release(hit.seg),
+                    }
+                }
+                if opts.attach.is_none() {
+                    placement = self.ctx.runtime().kv_placement_hint();
+                }
+            }
+            match self.ctx.new_seq_with(&p.prompt, p.max_new, placement, opts)
+            {
                 Ok(state) => {
-                    self.slots[free] = Some(Lane { id: p.id, state, queue_wait_ns });
+                    self.slots[free] = Some(Lane {
+                        id: p.id,
+                        state,
+                        queue_wait_ns,
+                        cache_ref: pin,
+                        task: p.task,
+                    });
                 }
                 Err(e) => {
                     // Bad request (e.g. oversized prompt): fail fast, keep
-                    // the slot for the next queued request.
+                    // the slot for the next queued request. An attached
+                    // sequence that never made it to a lane still owned a
+                    // pin — drop it here or the segment leaks.
+                    Self::release_pin(&mut self.cache, &mut pin);
                     self.stats.served.fetch_add(1, Ordering::Relaxed);
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     self.stats
@@ -536,6 +814,9 @@ impl Scheduler {
                                 if name == "verify_block" {
                                     self.record_round_stats(i);
                                 }
+                                if name == "prefill_deep" {
+                                    self.try_cache_insert(i);
+                                }
                             }
                             Err(e) => self.fail_lane(i, e),
                         }
@@ -569,7 +850,13 @@ impl Scheduler {
             let finished =
                 matches!(&self.slots[i], Some(l) if l.state.is_done());
             if finished {
-                let lane = self.slots[i].take().expect("finished lane");
+                let mut lane = self.slots[i].take().expect("finished lane");
+                Self::release_pin(&mut self.cache, &mut lane.cache_ref);
+                if let (Some(task), Some(ema)) =
+                    (lane.task.as_deref(), lane.state.accept_ema())
+                {
+                    self.stats.fold_task_prior(task, ema);
+                }
                 self.stats.served.fetch_add(1, Ordering::Relaxed);
                 self.stats
                     .queue_wait_ns
@@ -580,6 +867,42 @@ impl Scheduler {
                     result: Ok(lane.state.into_result()),
                 });
             }
+        }
+
+        // ---- cache accounting + refcount leak audit --------------------
+        if let Some(cache) = &self.cache {
+            let cs = cache.stats();
+            self.stats.cache_hits.store(cs.hits, Ordering::Relaxed);
+            self.stats.cache_misses.store(cs.misses, Ordering::Relaxed);
+            self.stats.cache_evictions.store(cs.evictions, Ordering::Relaxed);
+            self.stats.cache_segments.store(cs.segments, Ordering::Relaxed);
+            // Mirror into the process-wide registry so `metrics_json`
+            // probes see the cache next to the RPC/tick histograms.
+            metrics::counter("sched.cache.hits").store(cs.hits, Ordering::Relaxed);
+            metrics::counter("sched.cache.misses")
+                .store(cs.misses, Ordering::Relaxed);
+            metrics::counter("sched.cache.evictions")
+                .store(cs.evictions, Ordering::Relaxed);
+            metrics::gauge("sched.cache.segments")
+                .store(cs.segments as i64, Ordering::Relaxed);
+            metrics::counter("sched.cache.shared_bytes").store(
+                self.stats.cache_shared_bytes.load(Ordering::Relaxed),
+                Ordering::Relaxed,
+            );
+            let pinned = self
+                .slots
+                .iter()
+                .flatten()
+                .filter(|l| l.cache_ref.is_some())
+                .count();
+            debug_assert_eq!(
+                cache.total_refs(),
+                pinned,
+                "prefix-cache refcount leak: {} tree refs vs {} attached \
+                 lanes after tick",
+                cache.total_refs(),
+                pinned,
+            );
         }
         Ok(advanced)
     }
@@ -644,6 +967,7 @@ mod tests {
             max_batch: 2,
             max_slots: 4,
             adaptive: None,
+            cache: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let backdated = Instant::now()
@@ -694,6 +1018,7 @@ mod tests {
             max_batch: 4,
             max_slots: 3,
             adaptive: None,
+            cache: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let mut ids = Vec::new();
@@ -733,6 +1058,7 @@ mod tests {
             max_batch: 4,
             max_slots: 2,
             adaptive: None,
+            cache: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let bad = sched.submit(vec![1u32; prefill_seq + 5], 8);

@@ -169,6 +169,10 @@ pub struct DviCtx {
     /// In port. Manifests exported before it existed don't; those run
     /// the historical 2-input calls and adaptive-k degrades to pinned.
     pub var_len: bool,
+    /// Whether both prefill artifacts declare the scalar `start` In
+    /// port (suffix-only prefill). Without it the prefix cache cannot
+    /// attach and degrades to cold prefill for every sequence.
+    pub var_start: bool,
     /// Cached lifecycle histogram handles (shared registry).
     pub obs: SeqObs,
 }
@@ -189,9 +193,18 @@ impl DviCtx {
         let draft_block = rt.artifact("draft_block").ok();
         let var_len = has_len(&verify)
             && draft_block.as_deref().map_or(true, has_len);
+        let has_start = |a: &Artifact| {
+            a.spec
+                .params
+                .iter()
+                .any(|p| p.role == Role::In && p.name == "start")
+        };
+        let prefill_sh = rt.artifact("prefill_shallow")?;
+        let prefill_dp = rt.artifact("prefill_deep")?;
+        let var_start = has_start(&prefill_sh) && has_start(&prefill_dp);
         Ok(DviCtx {
-            prefill_sh: rt.artifact("prefill_shallow")?,
-            prefill_dp: rt.artifact("prefill_deep")?,
+            prefill_sh,
+            prefill_dp,
             draft: rt.artifact("draft_step")?,
             draft_block,
             verify,
@@ -202,6 +215,7 @@ impl DviCtx {
             max_seq,
             adaptive: AdaptiveK::from_env(),
             var_len,
+            var_start,
             obs: SeqObs::new(),
         })
     }
@@ -260,6 +274,52 @@ enum DviStep {
     Done,
 }
 
+/// A warm start handed to a new sequence by the scheduler's prefix
+/// cache: already-forked KV buffer sets (COW aliases of a cached
+/// segment — see [`crate::cache::PrefixCache`]) plus the attach length.
+/// Rows `0..attach_len` of both KV sets are valid for this sequence's
+/// prompt; the prefill calls compute only `attach_len..` and overwrite
+/// everything above the attach point, so the resulting streams are
+/// bitwise identical to a cold prefill.
+pub struct PrefixAttach {
+    pub kv_sh: Vec<Buffer>,
+    pub kv_dp: Vec<Buffer>,
+    pub attach_len: usize,
+}
+
+/// Post-prefill KV snapshot the scheduler inserts into the prefix
+/// cache: the prompt tokens (the radix-tree path) plus cheap handle
+/// clones of both prefill-output KV sets. Buffers are immutable once
+/// written, so holding these costs nothing and can never observe later
+/// decode steps (which mint fresh buffers).
+pub struct PrefixSnapshot {
+    pub tokens: Vec<u32>,
+    pub kv_sh: Vec<Buffer>,
+    pub kv_dp: Vec<Buffer>,
+}
+
+/// Construction options beyond the prompt itself; `Default` reproduces
+/// the historical cold-start behavior exactly.
+pub struct DviSeqOpts {
+    /// Warm start from the prefix cache (`None` = cold prefill).
+    pub attach: Option<PrefixAttach>,
+    /// Initial acceptance EMA. 1.0 (optimistic full-depth first round,
+    /// the pinned-k-compatible default) unless a per-task prior says
+    /// otherwise. Any seed is lossless: greedy longest-prefix
+    /// acceptance commits the same stream for every round length.
+    pub ema0: f64,
+    /// Capture a [`PrefixSnapshot`] after the deep prefill so the
+    /// scheduler can populate the cache. Off by default (no cost when
+    /// the cache is disabled).
+    pub capture_prefix: bool,
+}
+
+impl Default for DviSeqOpts {
+    fn default() -> DviSeqOpts {
+        DviSeqOpts { attach: None, ema0: 1.0, capture_prefix: false }
+    }
+}
+
 /// One in-flight DVI sequence (paper §3.2–3.3 round structure, unrolled).
 pub struct DviSeq {
     ctx: Arc<DviCtx>,
@@ -284,8 +344,15 @@ pub struct DviSeq {
     last_round_k: Option<usize>,
     /// Acceptance-rate EMA over this sequence's verify outcomes
     /// (accepted / drafted per round). Starts optimistic at 1.0 so the
-    /// first round speculates at full depth, matching pinned-k.
+    /// first round speculates at full depth, matching pinned-k — unless
+    /// a per-task prior seeded it (see [`DviSeqOpts::ema0`]).
     accept_ema: f64,
+    /// Cached-prefix attach point (0 = cold prefill).
+    attach_len: usize,
+    /// Whether to capture a prefix snapshot at deep-prefill completion.
+    capture_prefix: bool,
+    /// Snapshot parked for [`DviSeq::take_prefix_snapshot`].
+    snapshot: Option<PrefixSnapshot>,
     result: GenResult,
     started: Instant,
     round_t0: Instant,
@@ -306,14 +373,51 @@ impl DviSeq {
         max_new: usize,
         key: u64,
     ) -> Result<DviSeq> {
+        Self::new_with(ctx, buffer, prompt, max_new, key, DviSeqOpts::default())
+    }
+
+    /// [`DviSeq::new`] with prefix-cache / prior options. With a warm
+    /// [`DviSeqOpts::attach`], the provided (already-forked) KV sets are
+    /// used instead of fresh allocations and the prefill calls start at
+    /// `attach_len`; the attach requires the manifest's `start` ports.
+    pub fn new_with(
+        ctx: Arc<DviCtx>,
+        buffer: Option<Arc<Mutex<ReplayBuffer>>>,
+        prompt: &[u32],
+        max_new: usize,
+        key: u64,
+        opts: DviSeqOpts,
+    ) -> Result<DviSeq> {
         ensure!(
             prompt.len() <= ctx.prefill_seq,
             "prompt length {} exceeds prefill capacity {}",
             prompt.len(),
             ctx.prefill_seq
         );
-        let kv_sh = ctx.rt.fresh_kv_keyed("prefill_shallow", key)?;
-        let kv_dp = ctx.rt.fresh_kv_keyed("prefill_deep", key)?;
+        let (kv_sh, kv_dp, attach_len) = match opts.attach {
+            Some(a) => {
+                ensure!(
+                    ctx.var_start,
+                    "prefix attach requires prefill artifacts with a \
+                     'start' port"
+                );
+                // Strictly below the prompt length: the last prompt
+                // position's deep-prefill logits are always computed
+                // live (the kernels enforce start < len too).
+                ensure!(
+                    a.attach_len < prompt.len(),
+                    "attach length {} must be < prompt length {}",
+                    a.attach_len,
+                    prompt.len()
+                );
+                (a.kv_sh, a.kv_dp, a.attach_len)
+            }
+            None => (
+                ctx.rt.fresh_kv_keyed("prefill_shallow", key)?,
+                ctx.rt.fresh_kv_keyed("prefill_deep", key)?,
+                0,
+            ),
+        };
         let now = Instant::now();
         Ok(DviSeq {
             buffer,
@@ -329,7 +433,10 @@ impl DviSeq {
             hk_rows: Vec::with_capacity(ctx.k_spec * ctx.d_model),
             round_k: ctx.k_spec,
             last_round_k: None,
-            accept_ema: 1.0,
+            accept_ema: opts.ema0,
+            attach_len,
+            capture_prefix: opts.capture_prefix,
+            snapshot: None,
             result: GenResult::default(),
             started: now,
             round_t0: now,
@@ -376,6 +483,17 @@ impl DviSeq {
         self.accept_ema
     }
 
+    /// Cached-prefix attach point this sequence started from (0 = cold).
+    pub fn attach_len(&self) -> usize {
+        self.attach_len
+    }
+
+    /// Take the post-prefill snapshot (present once per sequence, after
+    /// the deep prefill completes, when construction asked for capture).
+    pub fn take_prefix_snapshot(&mut self) -> Option<PrefixSnapshot> {
+        self.snapshot.take()
+    }
+
     /// Draft length of the most recently verified round.
     pub fn last_round_k(&self) -> Option<usize> {
         self.last_round_k
@@ -401,10 +519,17 @@ impl DviSeq {
                     .map(|&t| t as i32)
                     .collect();
                 padded.resize(self.ctx.prefill_seq, 0);
+                let mut inputs =
+                    vec![Tensor::i32(vec![self.ctx.prefill_seq], padded)];
+                if self.ctx.var_start {
+                    // 0 for cold prefill — bitwise identical to the
+                    // historical no-start call by kernel construction.
+                    inputs.push(Tensor::scalar_i32(self.attach_len as i32));
+                }
                 Ok(CallSpec {
                     artifact: self.ctx.prefill_sh.clone(),
                     kv: self.kv_sh.clone(),
-                    inputs: vec![Tensor::i32(vec![self.ctx.prefill_seq], padded)],
+                    inputs,
                 })
             }
             DviStep::PrefillDeep => {
@@ -412,10 +537,15 @@ impl DviSeq {
                     Some(t) => t.clone(),
                     None => bail!("deep prefill without shallow prefill rows"),
                 };
+                let mut inputs =
+                    vec![hk, Tensor::scalar_i32(self.prompt_len as i32)];
+                if self.ctx.var_start {
+                    inputs.push(Tensor::scalar_i32(self.attach_len as i32));
+                }
                 Ok(CallSpec {
                     artifact: self.ctx.prefill_dp.clone(),
                     kv: self.kv_dp.clone(),
-                    inputs: vec![hk, Tensor::scalar_i32(self.prompt_len as i32)],
+                    inputs,
                 })
             }
             DviStep::Draft(i) => {
@@ -507,6 +637,17 @@ impl DviSeq {
             DviStep::PrefillDeep => {
                 self.kv_dp = out.kv;
                 self.hk_seq = None; // consumed; don't pin [P, d] per slot
+                if self.capture_prefix {
+                    // Post-prefill KV is a complete snapshot of the
+                    // prompt (the kernels clone *all* input rows before
+                    // computing the suffix), so even a warm-attached
+                    // sequence can donate its full prompt to the cache.
+                    self.snapshot = Some(PrefixSnapshot {
+                        tokens: self.seq.tokens[..self.prompt_len].to_vec(),
+                        kv_sh: self.kv_sh.clone(),
+                        kv_dp: self.kv_dp.clone(),
+                    });
+                }
                 let first = argmax(out.outputs[0].as_f32()?) as u32;
                 self.seq.push_committed(first);
                 self.result.tokens.push(first);
@@ -909,6 +1050,22 @@ impl SeqState {
             SeqState::Ar(_) => None,
         }
     }
+
+    /// Cached-prefix attach point (DVI only; AR bypasses the cache).
+    pub fn attach_len(&self) -> usize {
+        match self {
+            SeqState::Dvi(s) => s.attach_len(),
+            SeqState::Ar(_) => 0,
+        }
+    }
+
+    /// Take the post-prefill cache snapshot, if one was captured.
+    pub fn take_prefix_snapshot(&mut self) -> Option<PrefixSnapshot> {
+        match self {
+            SeqState::Dvi(s) => s.take_prefix_snapshot(),
+            SeqState::Ar(_) => None,
+        }
+    }
 }
 
 /// What the scheduler needs to mint fresh sequences of one method.
@@ -970,14 +1127,56 @@ impl MethodCtx {
         }
     }
 
-    pub fn new_seq(&self, prompt: &[u32], max_new: usize) -> Result<SeqState> {
-        let key = self
-            .next_key
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    /// True when sequences minted here can start from a cached prefix
+    /// (DVI with `start`-capable prefill artifacts; AR never attaches).
+    pub fn supports_prefix_attach(&self) -> bool {
         match &self.kind {
-            MethodKind::Dvi { ctx, buffer } => Ok(SeqState::Dvi(Box::new(
-                DviSeq::new(ctx.clone(), buffer.clone(), prompt, max_new, key)?,
-            ))),
+            MethodKind::Dvi { ctx, .. } => ctx.var_start,
+            MethodKind::Ar { .. } => false,
+        }
+    }
+
+    /// The runtime behind this method's artifacts (the scheduler's
+    /// prefix cache forks KV through it).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        match &self.kind {
+            MethodKind::Dvi { ctx, .. } => &ctx.rt,
+            MethodKind::Ar { ctx } => &ctx.rt,
+        }
+    }
+
+    pub fn new_seq(&self, prompt: &[u32], max_new: usize) -> Result<SeqState> {
+        self.new_seq_with(prompt, max_new, None, DviSeqOpts::default())
+    }
+
+    /// [`MethodCtx::new_seq`] with scheduler-supplied options.
+    /// `placement` overrides the sequential key for cold allocations
+    /// (the backend's least-loaded hint); when `None`, or always on the
+    /// default path, keys stay sequential (0, 1, 2, ...) so cache-off
+    /// placement is byte-for-byte the historical round-robin. AR
+    /// sequences ignore `opts` (no draft EMA, no prefix attach).
+    pub fn new_seq_with(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        placement: Option<u64>,
+        opts: DviSeqOpts,
+    ) -> Result<SeqState> {
+        let key = placement.unwrap_or_else(|| {
+            self.next_key
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        });
+        match &self.kind {
+            MethodKind::Dvi { ctx, buffer } => {
+                Ok(SeqState::Dvi(Box::new(DviSeq::new_with(
+                    ctx.clone(),
+                    buffer.clone(),
+                    prompt,
+                    max_new,
+                    key,
+                    opts,
+                )?)))
+            }
             MethodKind::Ar { ctx } => Ok(SeqState::Ar(Box::new(ArSeq::new(
                 ctx.clone(),
                 prompt,

@@ -31,7 +31,7 @@ use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
 use crate::obs::{metrics, trace};
 use crate::runtime::{log, ExecutorStatus, Runtime};
-use crate::sched::{AdaptiveK, SchedConfig, SchedStats, Scheduler};
+use crate::sched::{AdaptiveK, CacheConfig, SchedConfig, SchedStats, Scheduler};
 
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -54,6 +54,9 @@ pub struct RouterConfig {
     /// (the default unless `DVI_ADAPTIVE_K=1`) pins every round to the
     /// manifest `k_spec`.
     pub adaptive: Option<AdaptiveK>,
+    /// Batched mode: radix prefix cache over committed token ids.
+    /// `None` (the default unless `DVI_PREFIX_CACHE=1`) disables it.
+    pub cache: Option<CacheConfig>,
 }
 
 impl Default for RouterConfig {
@@ -68,6 +71,7 @@ impl Default for RouterConfig {
             max_batch: 8,
             max_slots: 16,
             adaptive: AdaptiveK::from_env(),
+            cache: CacheConfig::from_env(),
         }
     }
 }
@@ -320,6 +324,7 @@ impl Router {
                     max_batch: cfg.max_batch,
                     max_slots: cfg.max_slots,
                     adaptive: cfg.adaptive,
+                    cache: cfg.cache.clone(),
                 },
                 if online_dvi { Some(buffer.clone()) } else { None },
             )?;
@@ -434,6 +439,25 @@ impl Router {
                 ss.mean_queue_wait_ms(),
                 ss.mean_accept_ema(),
             ));
+            out.push_str(&format!(
+                ",\"cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\
+                 \"segments\":{},\"shared_rows\":{},\"shared_bytes\":{}}}",
+                ss.cache_hits.load(Ordering::Relaxed),
+                ss.cache_misses.load(Ordering::Relaxed),
+                ss.cache_evictions.load(Ordering::Relaxed),
+                ss.cache_segments.load(Ordering::Relaxed),
+                ss.cache_shared_rows.load(Ordering::Relaxed),
+                ss.cache_shared_bytes.load(Ordering::Relaxed),
+            ));
+            let priors = ss.task_priors_snapshot();
+            if !priors.is_empty() {
+                let body = priors
+                    .iter()
+                    .map(|(t, p)| format!("\"{t}\":{p:.4}"))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                out.push_str(&format!(",\"task_priors\":{{{body}}}"));
+            }
         }
         if let Some(obs) = &self.learner_obs {
             let (pushed, depth, mean_reward) = {

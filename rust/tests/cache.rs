@@ -1,0 +1,352 @@
+//! Prefix-cache integration gates — hermetic on the reference backend.
+//!
+//! Defining constraint (losslessness): a sequence admitted onto a
+//! cached prefix (COW-forked KV + suffix-only prefill) must commit a
+//! token stream **bitwise identical** to the same prompt cold-prefilled
+//! from scratch. KV rows are pure functions of their token prefix, so
+//! attaching rows 0..L of a donor that shares L prompt tokens and
+//! recomputing only L.. is exact — not approximate. Proven here across
+//! all four serving modes: in-process batched, loopback remote,
+//! 2-shard fleet, and adaptive-k.
+//!
+//! Plus the refcount-lifecycle regressions: killing a shard mid-prefill
+//! must release every pinned segment (no leaks — the scheduler's
+//! post-tick debug audit runs on every tick of every test here), and
+//! eviction under capacity pressure must never change a stream.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dvi::harness::load_prompts;
+use dvi::runtime::remote::server::{spawn_loopback_shard, LoopbackShard};
+use dvi::runtime::remote::transport::Connector;
+use dvi::runtime::Runtime;
+use dvi::sched::{AdaptiveK, CacheConfig, SchedConfig, Scheduler};
+
+const SEED: u64 = 0xCAC4E;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_hermetic(SEED).expect("hermetic runtime"))
+}
+
+/// Chaos soak factor, mirroring tests/sched.rs: the CI chaos lane
+/// (`DVI_TEST_CHAOS=1`) repeats eviction-pressure scenarios.
+fn chaos_reps() -> usize {
+    match std::env::var("DVI_TEST_CHAOS").as_deref() {
+        Ok("") | Err(_) => 1,
+        Ok(_) => 3,
+    }
+}
+
+/// A shared-system-prompt workload: every prompt starts with the same
+/// `sys_len`-token preamble, then diverges into a per-request tail —
+/// the shape the radix tree exists for.
+fn shared_prefix_cases(
+    rt: &Runtime,
+    n: usize,
+    sys_len: usize,
+    max_new: usize,
+) -> Vec<(Vec<u32>, usize)> {
+    let prefill_seq = rt.manifest.spec_usize("prefill_seq").unwrap();
+    let stream = load_prompts(rt, "stream").unwrap().shuffled(0x5EED);
+    let sys: Vec<u32> = stream.samples[0]
+        .prompt
+        .iter()
+        .cycle()
+        .take(sys_len)
+        .cloned()
+        .collect();
+    stream
+        .samples
+        .iter()
+        .take(n)
+        .map(|s| {
+            let mut p = sys.clone();
+            p.extend(s.prompt.iter().cloned());
+            p.truncate(prefill_seq.min(sys_len + 16));
+            (p, s.max_new.min(max_new))
+        })
+        .collect()
+}
+
+fn cfg(
+    adaptive: Option<AdaptiveK>,
+    cache_cap: Option<usize>,
+) -> SchedConfig {
+    SchedConfig {
+        method: "dvi".into(),
+        max_batch: 4,
+        max_slots: 16,
+        adaptive,
+        cache: cache_cap.map(|capacity| CacheConfig { capacity }),
+    }
+}
+
+/// Push `cases` through `sched` and return their committed streams in
+/// submission order. Reusable across passes on one scheduler (the
+/// second pass of the same prompts runs fully warm).
+fn drive(
+    sched: &mut Scheduler,
+    cases: &[(Vec<u32>, usize)],
+) -> Vec<Vec<u32>> {
+    let ids: Vec<u64> = cases
+        .iter()
+        .map(|(p, n)| sched.submit(p.clone(), *n))
+        .collect();
+    sched.run_until_idle(100_000).unwrap();
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "every sequence must complete");
+    done.sort_by_key(|r| r.id);
+    ids.iter()
+        .zip(done)
+        .map(|(&id, r)| {
+            assert_eq!(id, r.id);
+            r.result.expect("scheduled generation failed").tokens
+        })
+        .collect()
+}
+
+/// Core warm-vs-cold gate, parameterized over the runtime. Three runs:
+///   1. cache OFF — the historical cold-prefill reference streams;
+///   2. cache ON, empty — later admissions already attach to prefixes
+///      donated by earlier ones mid-run (partial-prefix hits);
+///   3. cache ON, second pass of identical prompts — every admission is
+///      a full-prefix hit.
+/// All three must be bitwise identical, and the warm runs must show
+/// real hits/shared rows and end with zero pinned segments.
+fn assert_warm_equals_cold(
+    rt: &Arc<Runtime>,
+    adaptive: Option<AdaptiveK>,
+    cases: &[(Vec<u32>, usize)],
+) {
+    let cold = {
+        let mut sched =
+            Scheduler::new(rt.clone(), cfg(adaptive, None), None).unwrap();
+        assert!(sched.cache_stats().is_none(), "cache must be off");
+        drive(&mut sched, cases)
+    };
+
+    let mut sched =
+        Scheduler::new(rt.clone(), cfg(adaptive, Some(64)), None).unwrap();
+    let first = drive(&mut sched, cases);
+    assert_eq!(
+        first, cold,
+        "cache-on first pass diverged from cold-prefill streams"
+    );
+    let second = drive(&mut sched, cases);
+    assert_eq!(
+        second, cold,
+        "fully-warm second pass diverged from cold-prefill streams"
+    );
+
+    let cs = sched.cache_stats().expect("cache is on");
+    assert!(cs.hits > 0, "no cache hit ever happened: {cs:?}");
+    assert!(cs.segments > 0, "no snapshot was ever donated");
+    assert!(
+        sched.stats.cache_shared_rows.load(Ordering::Relaxed) > 0,
+        "hits attached zero KV rows"
+    );
+    assert_eq!(
+        sched.cache_total_refs(),
+        Some(0),
+        "pinned segments leaked past sequence completion"
+    );
+    // The second pass admits every sequence on a full-prefix hit, so
+    // hits must cover at least that pass.
+    assert!(
+        cs.hits >= cases.len() as u64,
+        "second pass should have been fully warm: {cs:?}"
+    );
+}
+
+#[test]
+fn warm_streams_bitwise_equal_cold_in_process() {
+    let rt = runtime();
+    let cases = shared_prefix_cases(&rt, 10, 12, 16);
+    assert_warm_equals_cold(&rt, None, &cases);
+}
+
+#[test]
+fn warm_streams_bitwise_equal_cold_adaptive_k() {
+    let rt = runtime();
+    let cases = shared_prefix_cases(&rt, 10, 12, 16);
+    assert_warm_equals_cold(&rt, Some(AdaptiveK::default()), &cases);
+}
+
+#[test]
+fn warm_streams_bitwise_equal_cold_remote_loopback() {
+    let remote = Arc::new(Runtime::load_remote_loopback(SEED).unwrap());
+    assert_eq!(remote.backend_name(), "remote");
+    let cases = shared_prefix_cases(&remote, 8, 12, 14);
+    assert_warm_equals_cold(&remote, None, &cases);
+}
+
+/// Sharded loopback fleet (same seed per shard, so shards are bitwise
+/// interchangeable) plus per-shard kill handles.
+fn sharded_fleet(n: usize) -> (Arc<Runtime>, Vec<LoopbackShard>) {
+    let shards: Vec<LoopbackShard> = (0..n)
+        .map(|_| {
+            spawn_loopback_shard(
+                Arc::new(Runtime::load_reference(SEED).unwrap()),
+                None,
+            )
+        })
+        .collect();
+    let connectors = shards
+        .iter()
+        .map(|s| Box::new(s.connector.clone()) as Box<dyn Connector>)
+        .collect();
+    let rt = Runtime::load_remote_sharded_with(connectors)
+        .expect("sharded loopback runtime");
+    (Arc::new(rt), shards)
+}
+
+/// Two-executor fleet: warm admission routes by prefix affinity (a hit
+/// forks on the donor's shard; a miss takes the least-loaded placement
+/// hint) — and none of that may change a committed stream.
+#[test]
+fn warm_streams_bitwise_equal_cold_sharded() {
+    let (remote, _shards) = sharded_fleet(2);
+    assert_eq!(remote.backend_name(), "remote-sharded");
+    let cases = shared_prefix_cases(&remote, 8, 12, 14);
+    assert_warm_equals_cold(&remote, None, &cases);
+}
+
+/// Satellite regression (terminal-path refcounts): kill one executor of
+/// a 2-shard fleet while warm-admitted sequences are mid-prefill. The
+/// failed lanes' pins must be released on the `fail_lane` path exactly
+/// like completions — afterwards the tree holds zero references and the
+/// scheduler still serves. (The scheduler's post-tick debug audit also
+/// cross-checks refs == attached lanes on every tick of the drain.)
+#[test]
+fn shard_kill_mid_prefill_releases_every_cache_pin() {
+    let (remote, shards) = sharded_fleet(2);
+    let cases = shared_prefix_cases(&remote, 10, 12, 14);
+    let mut sched =
+        Scheduler::new(remote.clone(), cfg(None, Some(64)), None).unwrap();
+
+    // Warm-up pass: populate the cache (donations end unpinned).
+    drive(&mut sched, &cases);
+    assert_eq!(sched.cache_total_refs(), Some(0));
+    let warm_segments = sched.cache_stats().unwrap().segments;
+    assert!(warm_segments > 0, "warm-up donated nothing");
+
+    // Second pass: every admission pins a segment. One tick admits all
+    // of them and issues the shallow prefills — then the kill lands
+    // while the deep prefills are still owed.
+    for (p, n) in &cases {
+        sched.submit(p.clone(), *n);
+    }
+    sched.tick().unwrap();
+    let pinned = sched.cache_total_refs().unwrap();
+    assert!(pinned > 0, "no admission pinned a cache segment");
+    shards[1].kill.kill();
+    sched.run_until_idle(100_000).unwrap();
+
+    let done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len(), "every sequence must terminate");
+    let errs = done.iter().filter(|r| r.result.is_err()).count();
+    assert!(errs >= 1, "the killed shard hosted no in-flight sequence");
+    assert!(errs < cases.len(), "the surviving shard served nothing");
+    assert_eq!(
+        sched.cache_total_refs(),
+        Some(0),
+        "a failed lane leaked its pinned segment"
+    );
+    assert_eq!(
+        sched.stats.failed.load(Ordering::Relaxed) as usize,
+        errs,
+        "failure accounting diverged"
+    );
+}
+
+/// Eviction under capacity pressure (soaked by the CI chaos lane):
+/// with room for only 2 segments and 10 distinct prompts, inserts must
+/// evict continuously — and neither eviction nor the resulting cold
+/// re-prefills may change a single committed token. Live-reader safety
+/// (pinned segments never reclaimed) is enforced structurally by the
+/// tree and audited per-tick by the scheduler.
+#[test]
+fn chaos_eviction_under_capacity_pressure_stays_lossless() {
+    for _ in 0..chaos_reps() {
+        let rt = runtime();
+        let cases = shared_prefix_cases(&rt, 10, 12, 14);
+        let cold = {
+            let mut sched =
+                Scheduler::new(rt.clone(), cfg(None, None), None).unwrap();
+            drive(&mut sched, &cases)
+        };
+        let mut sched =
+            Scheduler::new(rt.clone(), cfg(None, Some(2)), None).unwrap();
+        let first = drive(&mut sched, &cases);
+        let second = drive(&mut sched, &cases);
+        assert_eq!(first, cold, "evicting cache changed a committed stream");
+        assert_eq!(second, cold, "second pass under eviction diverged");
+        let cs = sched.cache_stats().unwrap();
+        assert!(cs.evictions > 0, "capacity 2 never evicted: {cs:?}");
+        assert!(cs.segments <= 2, "capacity overrun: {cs:?}");
+        assert_eq!(sched.cache_total_refs(), Some(0));
+    }
+}
+
+/// Satellite (per-task acceptance priors): tagged submissions fold
+/// their final acceptance EMA into a decayed per-task prior, and later
+/// sequences of that task seed their adaptive-k EMA from it instead of
+/// the optimistic 1.0. Any seed is lossless — the streams must stay
+/// bitwise identical to the untagged pinned-k reference.
+#[test]
+fn task_priors_seed_adaptive_k_without_changing_streams() {
+    let rt = runtime();
+    let cases = shared_prefix_cases(&rt, 8, 12, 16);
+    let golden = {
+        let mut sched =
+            Scheduler::new(rt.clone(), cfg(None, None), None).unwrap();
+        drive(&mut sched, &cases)
+    };
+
+    let mut sched = Scheduler::new(
+        rt.clone(),
+        cfg(Some(AdaptiveK::default()), Some(64)),
+        None,
+    )
+    .unwrap();
+    for pass in 0..2 {
+        let ids: Vec<u64> = cases
+            .iter()
+            .map(|(p, n)| sched.submit_tagged(p.clone(), *n, "stream"))
+            .collect();
+        sched.run_until_idle(100_000).unwrap();
+        let mut done = sched.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        done.sort_by_key(|r| r.id);
+        let got: Vec<Vec<u32>> = ids
+            .iter()
+            .zip(done)
+            .map(|(&id, r)| {
+                assert_eq!(id, r.id);
+                r.result.expect("generation failed").tokens
+            })
+            .collect();
+        assert_eq!(
+            got, golden,
+            "prior-seeded adaptive-k diverged on pass {pass}"
+        );
+        // After pass 0 the prior exists; pass 1's sequences seeded from
+        // it (and still matched the reference bitwise).
+        let priors = sched.stats.task_priors_snapshot();
+        let (_, prior) = priors
+            .iter()
+            .find(|(t, _)| t == "stream")
+            .expect("tagged completions must create the task prior");
+        assert!(
+            *prior > 0.0 && *prior <= 1.0,
+            "prior out of range: {prior}"
+        );
+        assert_eq!(sched.stats.task_prior(Some("stream")), *prior);
+        assert_eq!(
+            sched.stats.task_prior(None),
+            1.0,
+            "untagged requests must keep the optimistic seed"
+        );
+    }
+}

@@ -59,6 +59,7 @@ fn scheduler_tokens(
         max_batch: 4,
         max_slots: cases.len(),
         adaptive: AdaptiveK::from_env(),
+        cache: None,
     };
     let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
     let ids: Vec<u64> =

@@ -89,8 +89,16 @@ fn scheduler_tokens_with(
     max_slots: usize,
     adaptive: Option<AdaptiveK>,
 ) -> (Vec<Vec<u32>>, Arc<SchedStats>) {
-    let cfg =
-        SchedConfig { method: method.into(), max_batch, max_slots, adaptive };
+    // cache: None pins these gates to the historical cold-prefill path
+    // regardless of DVI_PREFIX_CACHE; warm-vs-cold bitwise equivalence
+    // has its own dedicated gates in tests/cache.rs.
+    let cfg = SchedConfig {
+        method: method.into(),
+        max_batch,
+        max_slots,
+        adaptive,
+        cache: None,
+    };
     let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
     let ids: Vec<u64> = cases
         .iter()
@@ -255,6 +263,7 @@ fn step_accounting_and_replay_tuples_match_delivered_tokens() {
             max_batch: 3,
             max_slots: 4,
             adaptive: None,
+            cache: None,
         };
         let mut sched =
             Scheduler::new(rt.clone(), cfg, Some(buf.clone())).unwrap();
@@ -300,11 +309,14 @@ fn chaos_run(rt: Arc<Runtime>, method: &str, cases: &[(Vec<u32>, usize)]) {
             .map(|(p, n)| engine.generate(p, *n).unwrap().tokens)
             .collect()
     };
+    // The chaos rate math below counts exact backend calls, so pin the
+    // cold-prefill path (the cache would remove prefill work).
     let cfg = SchedConfig {
         method: method.into(),
         max_batch: 2,
         max_slots: 4,
         adaptive: AdaptiveK::from_env(),
+        cache: None,
     };
     let mut sched = Scheduler::new(rt, cfg, None).unwrap();
     let half = cases.len() / 2;
@@ -505,11 +517,15 @@ fn killing_one_shard_degrades_only_its_sequences() {
     assert!(cases.len() >= 6, "not enough multi-round prompts in the stream");
 
     let (remote, shards) = sharded_fleet(2);
+    // The even/odd failure accounting below assumes sequential
+    // placement keys, so pin the cache off (placement hints would
+    // re-home sequences).
     let cfg = SchedConfig {
         method: "dvi".into(),
         max_batch: 4,
         max_slots: 16,
         adaptive: AdaptiveK::from_env(),
+        cache: None,
     };
     let mut sched = Scheduler::new(remote, cfg, None).unwrap();
     let ids: Vec<u64> = cases
@@ -640,6 +656,7 @@ fn prop_interleaved_admission_never_starves() {
             max_batch: 1 + rng.usize_below(4),
             max_slots,
             adaptive: None,
+            cache: None,
         };
         let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
         let total = 4 + rng.usize_below(5);
