@@ -165,7 +165,8 @@ fn main() {
     );
 
     let json = format!(
-        "{{\"bench\":\"prefix_reuse\",\"seqs\":{},\"sys_len\":{sys_len},\
+        "{{\"schema\":\"dvi.bench/1\",\
+         \"bench\":\"prefix_reuse\",\"seqs\":{},\"sys_len\":{sys_len},\
          \"prefill_seq\":{prefill_seq},\"cold_wall_s\":{cold_wall:.6},\
          \"populate_wall_s\":{populate_wall:.6},\
          \"warm_wall_s\":{warm_wall:.6},\"cold_prefill_rows\":{cold_rows},\

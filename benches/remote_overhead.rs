@@ -288,7 +288,8 @@ fn main() {
 
     // Machine-readable artifact for CI trend tracking.
     let json = format!(
-        "{{\"bench\":\"remote_overhead\",\
+        "{{\"schema\":\"dvi.bench/1\",\
+         \"bench\":\"remote_overhead\",\
          \"artifacts\":[{}],\
          \"pipelining\":{{\"window\":{},\"chunks\":{groups},\
          \"rounds\":{rounds},\"serial_wall_s\":{serial_s:.6},\

@@ -1,0 +1,349 @@
+//! Open-loop multi-tenant serving load: a seeded workload schedule
+//! (Poisson and bursty arrivals over per-tenant task mixes — see
+//! `dvi::workload::gen`) drives the batched scheduler on the in-process
+//! reference backend, a loopback executor, and a 2-shard loopback
+//! fleet. Requests are admitted at their scheduled wall-clock arrival
+//! via `submit_tagged_at`, so queue-wait and TTFT include time spent in
+//! the admission queue — the part a closed-loop driver can't see.
+//!
+//! Reports per-request queue-wait / TTFT / end-to-end latency
+//! (p50/p95/p99), goodput (committed tokens/s), acceptance EMA, and —
+//! with `DVI_PREFIX_CACHE=1` — cache hit rate, per tenant and overall,
+//! and persists a schema-versioned `BENCH_serving_load.json` for the
+//! `dvi bench-compare` trajectory gate.
+//!
+//!   cargo bench --bench serving_load
+//!
+//! Knobs: DVI_BENCH_REQS       requests per scenario (default 96)
+//!        DVI_BENCH_RATE       mean poisson arrival rate, req/s (150)
+//!        DVI_BENCH_SEED       workload seed            (default 0x10AD)
+//!        DVI_BENCH_MAX_BATCH  scheduler max_batch      (default 8)
+//!        DVI_BENCH_SLOTS     scheduler slot pool       (default 16)
+//!        DVI_BENCH_METHOD    sequence engine           (default dvi)
+//!        DVI_BENCH_TINY=1    CI smoke: 16 requests, 300 req/s,
+//!                            in-process + loopback only
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use dvi::metrics::bench::SCHEMA;
+use dvi::obs::metrics::Registry;
+use dvi::runtime::Runtime;
+use dvi::sched::{CacheConfig, SchedConfig, Scheduler};
+use dvi::util::json::{self, Json};
+use dvi::workload::gen::{
+    encode_schedule, fingerprint, generate, Admission, Arrival, LenDist,
+    TenantSpec, WorkloadSpec,
+};
+use dvi::workload::TASK_NAMES;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Two tenants with deliberately different task mixes and shapes:
+/// acceptance — hence speedup — is task-dependent, so a uniform stream
+/// would hide exactly the contention this bench exists to measure.
+fn tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "chat".into(),
+            weight: 0.7,
+            task_mix: vec![("qa".into(), 0.6), ("mt".into(), 0.4)],
+            prompt_len: LenDist::Uniform { lo: 6, hi: 16 },
+            max_new: LenDist::Uniform { lo: 4, hi: 10 },
+        },
+        TenantSpec {
+            name: "batch".into(),
+            weight: 0.3,
+            task_mix: vec![
+                ("summarization".into(), 0.5),
+                ("rag".into(), 0.3),
+                ("translation".into(), 0.2),
+            ],
+            prompt_len: LenDist::Uniform { lo: 10, hi: 24 },
+            max_new: LenDist::Uniform { lo: 8, hi: 16 },
+        },
+    ]
+}
+
+/// p50/p95/p99 (milliseconds) of a nanosecond histogram; zeros when
+/// the histogram saw no samples (a tenant with no completed requests).
+fn quantiles_ms(reg: &Registry, name: &str) -> Json {
+    let snap = reg.hist(name).snapshot();
+    let q = |p: f64| -> Json {
+        if snap.count == 0 {
+            json::num(0.0)
+        } else {
+            json::num(snap.quantile(p) as f64 / 1e6)
+        }
+    };
+    json::obj(vec![("p50", q(0.50)), ("p95", q(0.95)), ("p99", q(0.99))])
+}
+
+struct Done {
+    tenant: u32,
+    tokens: u64,
+}
+
+/// Replay `schedule` open-loop against a fresh scheduler on `rt`:
+/// requests are admitted when their arrival timestamp passes, stamped
+/// with that arrival, regardless of whether the scheduler has kept up.
+/// Returns the scenario's artifact object.
+fn drive(
+    rt: Arc<Runtime>,
+    arrival: &str,
+    backend: &str,
+    schedule: &[Admission],
+    tenant_names: &[String],
+) -> Json {
+    let cfg = SchedConfig {
+        method: std::env::var("DVI_BENCH_METHOD")
+            .unwrap_or_else(|_| "dvi".into()),
+        max_batch: env_usize("DVI_BENCH_MAX_BATCH", 8),
+        max_slots: env_usize("DVI_BENCH_SLOTS", 16),
+        adaptive: None,
+        cache: CacheConfig::from_env(),
+    };
+    let label = format!("{arrival}/{backend}");
+    let mut sched = Scheduler::new(rt, cfg, None).expect("scheduler");
+    let reg = Registry::new();
+    let mut recs: Vec<Option<Done>> =
+        (0..schedule.len()).map(|_| None).collect();
+    let epoch = Instant::now();
+    let mut next = 0usize;
+    let mut guard = 0u64;
+    while next < schedule.len() || !sched.is_idle() {
+        guard += 1;
+        assert!(guard < 50_000_000, "{label}: driver wedged");
+        let now_ns = epoch.elapsed().as_nanos() as u64;
+        while next < schedule.len() && schedule[next].at_ns <= now_ns {
+            let a = &schedule[next];
+            let id = sched.submit_tagged_at(
+                a.prompt.clone(),
+                a.max_new,
+                TASK_NAMES[a.task as usize],
+                epoch + Duration::from_nanos(a.at_ns),
+            );
+            assert_eq!(
+                id as usize, next,
+                "{label}: scheduler ids must track submission order"
+            );
+            next += 1;
+        }
+        if sched.is_idle() {
+            // Nothing resident and nothing due: sleep until the next
+            // scheduled arrival (loop invariant: next < len here).
+            let due = schedule[next].at_ns;
+            let now = epoch.elapsed().as_nanos() as u64;
+            if due > now {
+                thread::sleep(Duration::from_nanos(due - now));
+            }
+            continue;
+        }
+        sched.tick().expect("tick");
+        for r in sched.drain_completed() {
+            let done_ns = epoch.elapsed().as_nanos() as u64;
+            let a = &schedule[r.id as usize];
+            let out = r.result.unwrap_or_else(|e| {
+                panic!("{label}: sequence {} failed: {e:#}", r.id)
+            });
+            let e2e_ns = done_ns.saturating_sub(a.at_ns);
+            let ttft_ns =
+                r.ttft_ns.expect("committed sequence reports a TTFT");
+            reg.hist("queue_wait_ns.all").observe(r.queue_wait_ns);
+            reg.hist("ttft_ns.all").observe(ttft_ns);
+            reg.hist("e2e_ns.all").observe(e2e_ns);
+            let tname = &tenant_names[a.tenant as usize];
+            reg.hist(&format!("e2e_ns.{tname}")).observe(e2e_ns);
+            recs[r.id as usize] =
+                Some(Done { tenant: a.tenant, tokens: out.tokens.len() as u64 });
+        }
+    }
+    let wall_s = epoch.elapsed().as_secs_f64().max(1e-9);
+    assert!(
+        recs.iter().all(|r| r.is_some()),
+        "{label}: a scheduled request never completed"
+    );
+
+    let total_tokens: u64 = recs.iter().flatten().map(|r| r.tokens).sum();
+    let tenants_json: Vec<Json> = tenant_names
+        .iter()
+        .enumerate()
+        .map(|(ti, name)| {
+            let mine: Vec<&Done> = recs
+                .iter()
+                .flatten()
+                .filter(|r| r.tenant == ti as u32)
+                .collect();
+            let tokens: u64 = mine.iter().map(|r| r.tokens).sum();
+            json::obj(vec![
+                ("name", json::s(name)),
+                ("requests", json::num(mine.len() as f64)),
+                ("tokens", json::num(tokens as f64)),
+                ("goodput_tok_per_sec", json::num(tokens as f64 / wall_s)),
+                ("e2e_ms", quantiles_ms(&reg, &format!("e2e_ns.{name}"))),
+            ])
+        })
+        .collect();
+
+    let ema = sched.stats.mean_accept_ema();
+    let mut fields = vec![
+        ("label", json::s(&label)),
+        ("arrival", json::s(arrival)),
+        ("backend", json::s(backend)),
+        ("requests", json::num(schedule.len() as f64)),
+        ("wall_s", json::num(wall_s)),
+        (
+            "goodput_tok_per_sec",
+            json::num(total_tokens as f64 / wall_s),
+        ),
+        (
+            "accept_ema",
+            json::num(if ema.is_finite() { ema } else { 0.0 }),
+        ),
+        (
+            "latency",
+            json::obj(vec![
+                ("queue_wait_ms", quantiles_ms(&reg, "queue_wait_ns.all")),
+                ("ttft_ms", quantiles_ms(&reg, "ttft_ns.all")),
+                ("e2e_ms", quantiles_ms(&reg, "e2e_ns.all")),
+            ]),
+        ),
+        ("tenants", Json::Arr(tenants_json)),
+    ];
+    if let Some(cs) = sched.cache_stats() {
+        let total = (cs.hits + cs.misses).max(1);
+        fields.push((
+            "cache_hit_rate",
+            json::num(cs.hits as f64 / total as f64),
+        ));
+    }
+    let scenario = json::obj(fields);
+    println!(
+        "| {label} | {} | {:.0} | {:.2} | {:.2} | {:.2} |",
+        schedule.len(),
+        total_tokens as f64 / wall_s,
+        scenario.get("latency").get("e2e_ms").get("p50").as_f64().unwrap(),
+        scenario.get("latency").get("e2e_ms").get("p99").as_f64().unwrap(),
+        wall_s * 1e3,
+    );
+    scenario
+}
+
+fn main() {
+    let tiny = std::env::var("DVI_BENCH_TINY").is_ok();
+    let requests = env_usize("DVI_BENCH_REQS", if tiny { 16 } else { 96 });
+    let rate = env_f64("DVI_BENCH_RATE", if tiny { 300.0 } else { 150.0 });
+    let seed = env_usize("DVI_BENCH_SEED", 0x10AD) as u64;
+
+    let local =
+        Arc::new(Runtime::load_reference(0x5EED).expect("local runtime"));
+    let source =
+        dvi::harness::load_prompts(&local, "stream").expect("stream prompts");
+    let tenants = tenants();
+    let tenant_names: Vec<String> =
+        tenants.iter().map(|t| t.name.clone()).collect();
+
+    // Bursty: on/off phases around the same mean rate — 2.5x the rate
+    // inside bursts, a trickle between them.
+    let arrivals: Vec<(&str, Arrival)> = vec![
+        ("poisson", Arrival::Poisson { rate_per_s: rate }),
+        (
+            "bursty",
+            Arrival::Bursty {
+                rate_on: rate * 2.5,
+                rate_off: rate * 0.25,
+                on_s: 0.12,
+                off_s: 0.12,
+            },
+        ),
+    ];
+
+    println!(
+        "\n== Open-loop serving load: {} requests/scenario, {} tenants, \
+         mean rate {:.0} req/s, seed {seed:#x} ==",
+        requests,
+        tenants.len(),
+        rate
+    );
+    println!();
+    println!("| scenario | reqs | goodput tok/s | e2e p50 ms | e2e p99 ms | wall ms |");
+    println!("|---|---|---|---|---|---|");
+
+    let mut schedules: Vec<(&str, Vec<Admission>, u64)> = Vec::new();
+    for (name, arrival) in &arrivals {
+        let spec = WorkloadSpec {
+            seed,
+            requests,
+            arrival: arrival.clone(),
+            tenants: tenants.clone(),
+        };
+        let schedule = generate(&spec, &source).expect("workload");
+        // Replay gate: the same seed must reproduce the admission
+        // schedule bitwise before any timing is trusted.
+        let replay = generate(&spec, &source).expect("workload replay");
+        assert_eq!(
+            encode_schedule(&schedule),
+            encode_schedule(&replay),
+            "{name}: schedule replay diverged for seed {seed:#x}"
+        );
+        let fp = fingerprint(&schedule);
+        schedules.push((name, schedule, fp));
+    }
+
+    let backends: &[&str] = if tiny {
+        &["in-process", "loopback"]
+    } else {
+        &["in-process", "loopback", "sharded x2"]
+    };
+    let mut scenarios: Vec<Json> = Vec::new();
+    for (arrival_name, schedule, _) in &schedules {
+        for backend in backends {
+            let rt = match *backend {
+                "in-process" => local.clone(),
+                "loopback" => Arc::new(
+                    Runtime::load_remote_loopback(0x5EED)
+                        .expect("loopback runtime"),
+                ),
+                _ => Arc::new(
+                    Runtime::load_remote_sharded_loopback(0x5EED, 2)
+                        .expect("sharded loopback runtime"),
+                ),
+            };
+            scenarios.push(drive(
+                rt,
+                arrival_name,
+                backend,
+                schedule,
+                &tenant_names,
+            ));
+        }
+    }
+
+    let doc = json::obj(vec![
+        ("schema", json::s(SCHEMA)),
+        ("bench", json::s("serving_load")),
+        ("seed", json::num(seed as f64)),
+        ("requests", json::num(requests as f64)),
+        ("rate_per_s", json::num(rate)),
+        (
+            "schedule_fingerprints",
+            json::obj(
+                schedules
+                    .iter()
+                    .map(|(n, _, fp)| (*n, json::s(&format!("{fp:016x}"))))
+                    .collect(),
+            ),
+        ),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    let path = "BENCH_serving_load.json";
+    std::fs::write(path, format!("{doc}\n")).expect("write bench artifact");
+    println!("\n[serving_load] wrote {path}");
+}

@@ -161,7 +161,8 @@ fn main() {
         .collect::<Vec<_>>()
         .join(",");
     let json = format!(
-        "{{\"bench\":\"shard_scaling\",\"seqs\":{},\"runs\":[{rows}]}}",
+        "{{\"schema\":\"dvi.bench/1\",\
+         \"bench\":\"shard_scaling\",\"seqs\":{},\"runs\":[{rows}]}}",
         cases.len()
     );
     let path = "BENCH_shard_scaling.json";

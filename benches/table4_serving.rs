@@ -261,7 +261,8 @@ fn main() {
 
         // Machine-readable artifact for CI trend tracking.
         let json = format!(
-            "{{\"bench\":\"table4_serving\",\"method\":\"{method}\",\
+            "{{\"schema\":\"dvi.bench/1\",\
+             \"bench\":\"table4_serving\",\"method\":\"{method}\",\
              \"load\":{load},\"workers\":{workers},\"max_batch\":{max_batch},\
              \"fixed_k\":{},\"adaptive_k\":{},\
              \"adaptive_over_fixed\":{ratio:.4}}}",

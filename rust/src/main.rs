@@ -18,6 +18,10 @@
 //!            or a self-driven N-prompt smoke run (no listener)
 //!   trace-summary FILE.json      reduce a Chrome trace to per-phase
 //!            latency quantiles (from `serve --trace-out` / DVI_TRACE)
+//!   bench-compare OLD.json NEW.json [--tol 0.10] [--warn-only]
+//!            trajectory gate: diff two schema-versioned BENCH_*.json
+//!            artifacts of the same bench; exits non-zero when a metric
+//!            regresses beyond the tolerance band (see BENCHMARKS.md)
 //!   serve-backend --listen 127.0.0.1:7600           executor server:
 //!            front the local backend (reference/pjrt) for remote
 //!            clients (`--backend remote --remote HOST:PORT`, or
@@ -34,7 +38,7 @@ use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use dvi::engine::Engine;
 use dvi::harness;
@@ -46,9 +50,9 @@ use dvi::server::{api, Router, RouterConfig};
 use dvi::util::cli::Args;
 use dvi::util::plot::ascii_plot;
 
-const FLAGS: [&str; 8] = [
+const FLAGS: [&str; 9] = [
     "online", "no-online", "quiet", "verbose", "batched", "adaptive-k",
-    "metrics", "prefix-cache",
+    "metrics", "prefix-cache", "warn-only",
 ];
 
 fn main() {
@@ -116,10 +120,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("serve-backend") => serve_backend(args),
         Some("trace-summary") => trace_summary(args),
+        Some("bench-compare") => bench_compare(args),
         Some(other) => bail!("unknown subcommand '{other}' (see src/main.rs docs)"),
         None => bail!(
             "usage: dvi <info|run|train|table1|table2|table3|fig2|serve|\
-             serve-backend|trace-summary> [...]"
+             serve-backend|trace-summary|bench-compare> [...]"
         ),
     }
 }
@@ -483,6 +488,45 @@ fn trace_summary(args: &Args) -> Result<()> {
     print!("{}", chrome::summary_table(&stats));
     if dropped > 0 {
         println!("(dropped events: {dropped})");
+    }
+    Ok(())
+}
+
+/// Trajectory gate: diff two schema-versioned `BENCH_*.json` artifacts
+/// of the same bench (see `dvi::metrics::bench` and BENCHMARKS.md).
+/// Exits non-zero when any judged metric regresses beyond the relative
+/// tolerance band, unless `--warn-only` (CI's cross-machine mode, where
+/// absolute timings are advisory) downgrades that to a printed warning.
+fn bench_compare(args: &Args) -> Result<()> {
+    let usage =
+        "usage: dvi bench-compare OLD.json NEW.json [--tol 0.10] [--warn-only]";
+    let old_path = args.positional.first().context(usage)?;
+    let new_path = args.positional.get(1).context(usage)?;
+    let tol = args.get_f64("tol", 0.10).map_err(anyhow::Error::msg)?;
+    let load = |path: &str| -> Result<dvi::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        dvi::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))
+    };
+    let report =
+        dvi::metrics::bench::compare(&load(old_path)?, &load(new_path)?, tol)?;
+    print!("{}", report.render());
+    if report.has_regression() {
+        if args.flag("warn-only") {
+            println!(
+                "bench-compare: {} regression(s) beyond +/-{:.1}% \
+                 (warn-only: exit 0)",
+                report.regressions(),
+                tol * 100.0
+            );
+        } else {
+            bail!(
+                "{} metric(s) regressed beyond the +/-{:.1}% band",
+                report.regressions(),
+                tol * 100.0
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,437 @@
+//! Schema-versioned bench artifacts and the trajectory comparator.
+//!
+//! Every bench persists a `BENCH_*.json` with a top-level
+//! `"schema": "dvi.bench/1"` and `"bench": <name>` pair. CI uploads the
+//! files as one artifact per run; `dvi bench-compare OLD NEW` flattens
+//! two runs of the same bench into dot-joined numeric leaves, classifies
+//! each shared metric by its leaf name (throughput-like leaves must not
+//! drop, latency-like leaves must not grow), and reports a verdict per
+//! metric against a relative tolerance band. That is the trajectory
+//! gate: a perf regression shows up as a named metric, not as a vague
+//! diff between JSON blobs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+/// Current artifact schema. Bump when field semantics change; the
+/// comparator refuses to diff across schema versions.
+pub const SCHEMA: &str = "dvi.bench/1";
+
+/// Which way a metric is supposed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Improvement,
+    WithinBand,
+    Regression,
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+    /// Signed relative change `(new - old) / old`.
+    pub change: f64,
+    pub direction: Direction,
+    pub verdict: Verdict,
+}
+
+/// Full comparison of two artifacts of the same bench.
+#[derive(Debug)]
+pub struct Report {
+    pub bench: String,
+    pub tol: f64,
+    pub deltas: Vec<Delta>,
+    /// Metrics present on only one side, or with a non-positive
+    /// baseline (no meaningful ratio).
+    pub skipped: usize,
+}
+
+/// Classify a flattened metric path by its final dot segment. `None`
+/// means the leaf is configuration/context (seeds, counts, shard
+/// totals) and is not judged. Quantile/aggregate leaves (`p50`, `p95`,
+/// `p99`, `mean`, `max`) inherit the direction of their parent family
+/// key (`e2e_ms.p99` judges as `_ms`).
+pub fn direction_of(path: &str) -> Option<Direction> {
+    let mut parts = path.rsplit('.');
+    let mut leaf = parts.next().unwrap_or(path);
+    if matches!(leaf, "p50" | "p95" | "p99" | "mean" | "max") {
+        leaf = parts.next().unwrap_or(leaf);
+    }
+    if leaf.ends_with("per_sec")
+        || leaf.ends_with("per_tick")
+        || leaf == "speedup"
+        || leaf == "adaptive_over_fixed"
+        || leaf == "occupancy"
+        || leaf == "hit_rate"
+        || leaf == "accept_ema"
+    {
+        return Some(Direction::HigherIsBetter);
+    }
+    if leaf.ends_with("_ns")
+        || leaf.ends_with("_ms")
+        || leaf.ends_with("wall_s")
+        || leaf.ends_with("us_per_call")
+        || leaf == "warm_prefill_rows"
+    {
+        return Some(Direction::LowerIsBetter);
+    }
+    None
+}
+
+/// Key an array element by a stable identity field so trajectories
+/// line up across runs even if array order shifts.
+fn element_key(v: &Json, i: usize) -> String {
+    for field in ["label", "name", "artifact"] {
+        if let Some(s) = v.get(field).as_str() {
+            return s.to_string();
+        }
+    }
+    i.to_string()
+}
+
+fn flatten_into(prefix: &str, v: &Json, out: &mut BTreeMap<String, f64>) {
+    let join = |key: &str| {
+        if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        }
+    };
+    match v {
+        Json::Num(n) => {
+            out.insert(prefix.to_string(), *n);
+        }
+        Json::Obj(o) => {
+            for (k, child) in o {
+                flatten_into(&join(k), child, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, child) in a.iter().enumerate() {
+                flatten_into(&join(&element_key(child, i)), child, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Dot-joined numeric leaves of an artifact. Array elements are keyed
+/// by their `label`/`name`/`artifact` field when present (index
+/// otherwise); strings/bools/nulls are dropped.
+pub fn flatten(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    flatten_into("", doc, &mut out);
+    out
+}
+
+/// Diff two artifacts of the same bench under a relative tolerance
+/// band (e.g. `0.10` = ±10%). Fails on schema or bench-name mismatch —
+/// cross-version or cross-bench diffs are meaningless.
+pub fn compare(old: &Json, new: &Json, tol: f64) -> Result<Report> {
+    ensure!(tol.is_finite() && tol > 0.0, "tolerance must be > 0");
+    for (side, doc) in [("old", old), ("new", new)] {
+        match doc.get("schema").as_str() {
+            Some(s) if s == SCHEMA => {}
+            Some(s) => bail!(
+                "{side} artifact has schema {s:?}, comparator expects \
+                 {SCHEMA:?}"
+            ),
+            None => bail!(
+                "{side} artifact has no \"schema\" field (predates \
+                 {SCHEMA:?}; re-run the bench on both builds)"
+            ),
+        }
+    }
+    let bench = match (old.get("bench").as_str(), new.get("bench").as_str()) {
+        (Some(a), Some(b)) if a == b => a.to_string(),
+        (Some(a), Some(b)) => {
+            bail!("artifacts are different benches: {a:?} vs {b:?}")
+        }
+        _ => bail!("artifact is missing the \"bench\" field"),
+    };
+    let old_flat = flatten(old);
+    let new_flat = flatten(new);
+    let mut deltas = Vec::new();
+    let mut skipped = 0usize;
+    for (metric, &old_v) in &old_flat {
+        let Some(direction) = direction_of(metric) else {
+            continue;
+        };
+        let Some(&new_v) = new_flat.get(metric) else {
+            skipped += 1;
+            continue;
+        };
+        if old_v <= 0.0 {
+            skipped += 1;
+            continue;
+        }
+        let change = (new_v - old_v) / old_v;
+        let verdict = match direction {
+            Direction::HigherIsBetter => {
+                if change < -tol {
+                    Verdict::Regression
+                } else if change > tol {
+                    Verdict::Improvement
+                } else {
+                    Verdict::WithinBand
+                }
+            }
+            Direction::LowerIsBetter => {
+                if change > tol {
+                    Verdict::Regression
+                } else if change < -tol {
+                    Verdict::Improvement
+                } else {
+                    Verdict::WithinBand
+                }
+            }
+        };
+        deltas.push(Delta {
+            metric: metric.clone(),
+            old: old_v,
+            new: new_v,
+            change,
+            direction,
+            verdict,
+        });
+    }
+    // New-run-only judged metrics have no baseline yet; note them so a
+    // shrinking artifact can't silently pass.
+    skipped += new_flat
+        .keys()
+        .filter(|k| direction_of(k).is_some() && !old_flat.contains_key(*k))
+        .count();
+    // Regressions first, then largest absolute movement.
+    deltas.sort_by(|a, b| {
+        let rank = |v: Verdict| match v {
+            Verdict::Regression => 0,
+            Verdict::Improvement => 1,
+            Verdict::WithinBand => 2,
+        };
+        rank(a.verdict).cmp(&rank(b.verdict)).then(
+            b.change
+                .abs()
+                .partial_cmp(&a.change.abs())
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    Ok(Report { bench, tol, deltas, skipped })
+}
+
+impl Report {
+    pub fn regressions(&self) -> usize {
+        self.deltas
+            .iter()
+            .filter(|d| d.verdict == Verdict::Regression)
+            .count()
+    }
+
+    pub fn has_regression(&self) -> bool {
+        self.regressions() > 0
+    }
+
+    /// Human-readable summary, one line per judged metric.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench-compare: {} (tolerance +/-{:.1}%)\n",
+            self.bench,
+            self.tol * 100.0
+        );
+        for d in &self.deltas {
+            let tag = match d.verdict {
+                Verdict::Regression => "REGRESSION ",
+                Verdict::Improvement => "improvement",
+                Verdict::WithinBand => "within-band",
+            };
+            let dir = match d.direction {
+                Direction::HigherIsBetter => "higher is better",
+                Direction::LowerIsBetter => "lower is better",
+            };
+            out.push_str(&format!(
+                "  {tag}  {}  {:.4} -> {:.4}  ({:+.1}%, {dir})\n",
+                d.metric,
+                d.old,
+                d.new,
+                d.change * 100.0
+            ));
+        }
+        let (mut imp, mut band, mut reg) = (0, 0, 0);
+        for d in &self.deltas {
+            match d.verdict {
+                Verdict::Improvement => imp += 1,
+                Verdict::WithinBand => band += 1,
+                Verdict::Regression => reg += 1,
+            }
+        }
+        out.push_str(&format!(
+            "  summary: {imp} improved, {band} within band, {reg} \
+             regressed ({} skipped)\n",
+            self.skipped
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(goodput: f64, p99: f64) -> Json {
+        let text = format!(
+            r#"{{"schema":"dvi.bench/1","bench":"serving_load","seed":7,
+                "scenarios":[{{"label":"poisson/in-process",
+                               "goodput_tok_per_sec":{goodput},
+                               "latency":{{"e2e_ms":{{"p99":{p99}}}}},
+                               "tenants":[{{"name":"chat",
+                                            "tok_per_sec":{goodput}}}]}}]}}"#
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn direction_rules() {
+        assert_eq!(
+            direction_of("scenarios.x.goodput_tok_per_sec"),
+            Some(Direction::HigherIsBetter)
+        );
+        assert_eq!(
+            direction_of("runs.shard=2.tok_per_sec"),
+            Some(Direction::HigherIsBetter)
+        );
+        assert_eq!(
+            direction_of("adaptive_over_fixed"),
+            Some(Direction::HigherIsBetter)
+        );
+        assert_eq!(
+            direction_of("scenarios.x.latency.e2e_ms.p99_ms"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(
+            direction_of("scenarios.x.latency.e2e_ms.p99"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(
+            direction_of("scenarios.x.latency.queue_wait_ms.p50"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(direction_of("x.counts.mean"), None);
+        assert_eq!(
+            direction_of("pipelining.serial_wall_s"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(
+            direction_of("warm.warm_prefill_rows"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(
+            direction_of("artifacts.target_step.remote_us_per_call"),
+            Some(Direction::LowerIsBetter)
+        );
+        assert_eq!(direction_of("seed"), None);
+        assert_eq!(direction_of("scenarios.x.requests"), None);
+    }
+
+    #[test]
+    fn flatten_keys_arrays_by_label() {
+        let flat = flatten(&doc(100.0, 12.0));
+        assert_eq!(
+            flat.get("scenarios.poisson/in-process.goodput_tok_per_sec"),
+            Some(&100.0)
+        );
+        assert_eq!(
+            flat.get(
+                "scenarios.poisson/in-process.tenants.chat.tok_per_sec"
+            ),
+            Some(&100.0)
+        );
+        assert_eq!(flat.get("seed"), Some(&7.0));
+        // Strings (schema, bench, label) never become metrics.
+        assert!(flat.keys().all(|k| !k.ends_with("label")));
+    }
+
+    #[test]
+    fn verdicts_classify_synthetic_fixture() {
+        // Goodput -30% and p99 +50%: both regress.
+        let report = compare(&doc(100.0, 12.0), &doc(70.0, 18.0), 0.10)
+            .unwrap();
+        assert!(report.has_regression());
+        assert_eq!(report.regressions(), 3); // goodput x2 + p99
+        // Within band: +/-5% moves under a 10% tolerance.
+        let report = compare(&doc(100.0, 12.0), &doc(105.0, 11.4), 0.10)
+            .unwrap();
+        assert!(!report.has_regression());
+        assert!(report
+            .deltas
+            .iter()
+            .all(|d| d.verdict == Verdict::WithinBand));
+        // Improvement: goodput +30%, p99 -40%.
+        let report = compare(&doc(100.0, 12.0), &doc(130.0, 7.2), 0.10)
+            .unwrap();
+        assert!(!report.has_regression());
+        assert!(report
+            .deltas
+            .iter()
+            .all(|d| d.verdict == Verdict::Improvement));
+        let text = report.render();
+        assert!(text.contains("serving_load"));
+        assert!(text.contains("improvement"));
+    }
+
+    #[test]
+    fn schema_and_bench_mismatches_are_rejected() {
+        let good = doc(100.0, 12.0);
+        let no_schema =
+            Json::parse(r#"{"bench":"serving_load","tok_per_sec":1}"#)
+                .unwrap();
+        assert!(compare(&good, &no_schema, 0.1).is_err());
+        let wrong = Json::parse(
+            r#"{"schema":"dvi.bench/0","bench":"serving_load"}"#,
+        )
+        .unwrap();
+        assert!(compare(&wrong, &good, 0.1).is_err());
+        let other = Json::parse(
+            r#"{"schema":"dvi.bench/1","bench":"shard_scaling"}"#,
+        )
+        .unwrap();
+        assert!(compare(&good, &other, 0.1).is_err());
+        assert!(compare(&good, &good, 0.0).is_err());
+    }
+
+    #[test]
+    fn missing_metrics_are_counted_not_ignored() {
+        let old = doc(100.0, 12.0);
+        let new = Json::parse(
+            r#"{"schema":"dvi.bench/1","bench":"serving_load",
+                "scenarios":[{"label":"poisson/in-process",
+                              "goodput_tok_per_sec":100.0}]}"#,
+        )
+        .unwrap();
+        let report = compare(&old, &new, 0.1).unwrap();
+        assert!(report.skipped >= 2, "dropped p99 + tenant tok_per_sec");
+        assert!(!report.has_regression());
+    }
+
+    #[test]
+    fn artifact_round_trips_through_display() {
+        let d = doc(123.5, 9.25);
+        let back = Json::parse(&d.to_string()).unwrap();
+        assert_eq!(flatten(&d), flatten(&back));
+        let report = compare(&d, &back, 0.05).unwrap();
+        assert!(!report.has_regression());
+        assert!(report
+            .deltas
+            .iter()
+            .all(|x| x.verdict == Verdict::WithinBand && x.change == 0.0));
+    }
+}

@@ -1,5 +1,6 @@
 //! Spec-Bench-style metrics aggregation and report rendering.
 
+pub mod bench;
 pub mod report;
 
 use crate::engine::GenResult;

@@ -1,5 +1,5 @@
 //! Dependency-free length-prefixed wire protocol for the remote
-//! executor (`DVIR` v3, pipelined).
+//! executor (`DVIR` v4, pipelined: v3 framing + `ForkKv`).
 //!
 //! Every message is one frame: a `u32` little-endian payload length
 //! followed by the payload; the payload's first byte is an opcode tag.

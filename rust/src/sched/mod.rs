@@ -277,6 +277,13 @@ struct Lane {
     id: u64,
     state: SeqState,
     queue_wait_ns: u64,
+    /// Original submit stamp (possibly backdated via `submit_at` /
+    /// `submit_tagged_at`), the origin for TTFT.
+    submitted: Instant,
+    /// Submit → first committed token(s), set on the first apply() that
+    /// commits. None until then (and forever, for lanes that fail before
+    /// committing anything).
+    first_commit_ns: Option<u64>,
     /// Pin on the cache segment this sequence attached from. Released
     /// exactly once, on whichever terminal path the lane takes (drain,
     /// mid-flight [`Scheduler::fail_lane`]); the post-tick leak audit
@@ -289,6 +296,10 @@ struct Lane {
 pub struct SchedResult {
     pub id: u64,
     pub queue_wait_ns: u64,
+    /// Time-to-first-token: submit stamp → the tick that committed this
+    /// sequence's first token(s). None for sequences that never
+    /// committed (admission rejects, failures before the first commit).
+    pub ttft_ns: Option<u64>,
     pub result: Result<GenResult>,
 }
 
@@ -400,12 +411,23 @@ impl Scheduler {
         max_new: usize,
         task: &str,
     ) -> u64 {
-        self.push_pending(
-            prompt,
-            max_new,
-            Some(task.to_string()),
-            Instant::now(),
-        )
+        self.submit_tagged_at(prompt, max_new, task, Instant::now())
+    }
+
+    /// [`Scheduler::submit_tagged`] with an externally stamped submit
+    /// time. Open-loop drivers (benches/serving_load.rs) stamp each
+    /// request with its scheduled arrival, so queue-wait and TTFT both
+    /// include time spent in the admission queue before a slot freed —
+    /// previously tagged submissions could only stamp `Instant::now()`,
+    /// which under-reported wait under load.
+    pub fn submit_tagged_at(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        task: &str,
+        submitted: Instant,
+    ) -> u64 {
+        self.push_pending(prompt, max_new, Some(task.to_string()), submitted)
     }
 
     fn push_pending(
@@ -463,6 +485,7 @@ impl Scheduler {
             self.done.push(SchedResult {
                 id: lane.id,
                 queue_wait_ns: lane.queue_wait_ns,
+                ttft_ns: lane.first_commit_ns,
                 result: Err(err),
             });
         }
@@ -658,6 +681,8 @@ impl Scheduler {
                         id: p.id,
                         state,
                         queue_wait_ns,
+                        submitted: p.submitted,
+                        first_commit_ns: None,
                         cache_ref: pin,
                         task: p.task,
                     });
@@ -676,6 +701,7 @@ impl Scheduler {
                     self.done.push(SchedResult {
                         id: p.id,
                         queue_wait_ns,
+                        ttft_ns: None,
                         result: Err(e),
                     });
                 }
@@ -811,6 +837,20 @@ impl Scheduler {
                                     committed as u64,
                                     Ordering::Relaxed,
                                 );
+                                if committed > 0 {
+                                    if let Some(lane) =
+                                        self.slots[i].as_mut()
+                                    {
+                                        if lane.first_commit_ns.is_none() {
+                                            lane.first_commit_ns = Some(
+                                                lane.submitted
+                                                    .elapsed()
+                                                    .as_nanos()
+                                                    as u64,
+                                            );
+                                        }
+                                    }
+                                }
                                 if name == "verify_block" {
                                     self.record_round_stats(i);
                                 }
@@ -864,6 +904,7 @@ impl Scheduler {
                 self.done.push(SchedResult {
                     id: lane.id,
                     queue_wait_ns: lane.queue_wait_ns,
+                    ttft_ns: lane.first_commit_ns,
                     result: Ok(lane.state.into_result()),
                 });
             }
@@ -1005,6 +1046,113 @@ mod tests {
     fn prompts(rt: &Runtime, n: usize) -> Vec<Vec<u32>> {
         let set = rt.synthetic_prompts("qa").expect("qa prompts");
         set.samples.iter().take(n).map(|s| s.prompt.clone()).collect()
+    }
+
+    /// Regression (open-loop bugfix): `submit_tagged_at` must honor the
+    /// caller's stamp so queue-wait under load includes admission-queue
+    /// time. Backdated tagged submissions through a 1-slot scheduler
+    /// must all report >= the backdate, and TTFT (measured from the
+    /// same origin) must be at least the queue wait.
+    #[test]
+    fn backdated_tagged_submissions_count_admission_queue_time() {
+        let rt = runtime();
+        let cfg = SchedConfig {
+            method: "dvi".into(),
+            max_batch: 2,
+            max_slots: 1,
+            adaptive: None,
+            cache: None,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let backdated = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .expect("monotonic clock supports a 50ms backdate");
+        for p in prompts(&rt, 3) {
+            sched.submit_tagged_at(p, 4, "qa", backdated);
+        }
+        sched.run_until_idle(10_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), 3);
+        let floor = Duration::from_millis(50).as_nanos() as u64;
+        for r in &done {
+            assert!(r.result.is_ok(), "sequence {} failed", r.id);
+            assert!(
+                r.queue_wait_ns >= floor,
+                "queue wait {}ns dropped the 50ms backdate",
+                r.queue_wait_ns
+            );
+            let ttft = r.ttft_ns.expect("committed sequence has a TTFT");
+            assert!(
+                ttft >= r.queue_wait_ns,
+                "TTFT {}ns < queue wait {}ns",
+                ttft,
+                r.queue_wait_ns
+            );
+        }
+        // With one slot, later arrivals also absorb earlier sequences'
+        // service time, so the max wait strictly exceeds the backdate.
+        let max = done.iter().map(|r| r.queue_wait_ns).max().unwrap();
+        assert!(max > floor, "no request waited for the busy slot");
+        let sum: u64 = done.iter().map(|r| r.queue_wait_ns).sum();
+        assert_eq!(sched.stats.queue_wait_ns.load(Ordering::Relaxed), sum);
+        // Tagged path still feeds the per-task prior.
+        assert!(sched
+            .stats
+            .task_priors_snapshot()
+            .iter()
+            .any(|(t, _)| t == "qa"));
+    }
+
+    /// Regression (closed-loop accounting unchanged): `submit_tagged`
+    /// now routes through `submit_tagged_at(.., Instant::now())`; the
+    /// committed streams and serving counters must be identical to the
+    /// pre-refactor behavior (compared against an explicitly now-stamped
+    /// scheduler), and TTFT never exceeds the run's wall time.
+    #[test]
+    fn closed_loop_tagged_accounting_is_unchanged() {
+        let rt = runtime();
+        let cfg = SchedConfig {
+            method: "dvi".into(),
+            max_batch: 4,
+            max_slots: 4,
+            adaptive: None,
+            cache: None,
+        };
+        let run = |explicit: bool| -> Vec<(u64, Vec<u32>)> {
+            let mut sched =
+                Scheduler::new(rt.clone(), cfg.clone(), None).unwrap();
+            let t0 = Instant::now();
+            for p in prompts(&rt, 4) {
+                if explicit {
+                    sched.submit_tagged_at(p, 6, "qa", Instant::now());
+                } else {
+                    sched.submit_tagged(p, 6, "qa");
+                }
+            }
+            sched.run_until_idle(10_000).unwrap();
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            let mut done = sched.drain_completed();
+            done.sort_by_key(|r| r.id);
+            assert_eq!(sched.stats.served.load(Ordering::Relaxed), 4);
+            assert_eq!(sched.stats.failed.load(Ordering::Relaxed), 0);
+            done.iter()
+                .map(|r| {
+                    let ttft =
+                        r.ttft_ns.expect("committed sequence has a TTFT");
+                    assert!(
+                        ttft <= wall_ns,
+                        "TTFT {ttft}ns exceeds the run's wall time"
+                    );
+                    assert!(ttft >= r.queue_wait_ns);
+                    (r.id, r.result.as_ref().unwrap().tokens.clone())
+                })
+                .collect()
+        };
+        assert_eq!(
+            run(false),
+            run(true),
+            "tagged closed-loop streams diverged from now-stamped streams"
+        );
     }
 
     /// 9 sequences through 3 slots: slots must be recycled (high-water

@@ -1,0 +1,547 @@
+//! Deterministic open-loop workload generation.
+//!
+//! Serving benchmarks need *open-loop* load — requests arrive on a
+//! wall-clock schedule regardless of whether the system has kept up —
+//! because closed-loop drivers (submit, wait, submit) hide queueing
+//! collapse entirely. This module turns a seeded [`WorkloadSpec`] into a
+//! concrete admission schedule: every request carries an arrival
+//! timestamp, a tenant, a task tag, a prompt drawn from the existing
+//! [`PromptSet`] corpora (optionally truncated to a sampled length), and
+//! a sampled output budget.
+//!
+//! The same seed always yields the bitwise-identical schedule
+//! ([`encode_schedule`] / [`fingerprint`] make that checkable), so a
+//! benchmark run is replayable and two builds can be compared under the
+//! exact same traffic.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::weights::Fnv64;
+use crate::util::rng::Rng;
+use crate::workload::{PromptSet, TASK_NAMES};
+
+const NS_PER_S: f64 = 1e9;
+
+/// Arrival process for the open-loop schedule. Timestamps are
+/// nanoseconds relative to the start of the run.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Homogeneous Poisson arrivals at `rate_per_s` requests/second.
+    Poisson { rate_per_s: f64 },
+    /// On/off-modulated Poisson: alternating phases of `on_s` seconds
+    /// at `rate_on` req/s and `off_s` seconds at `rate_off` req/s,
+    /// starting in the on phase. Sampled exactly via the time-change
+    /// construction: a unit-rate exponential "exposure" is consumed at
+    /// the phase-dependent rate, carrying correctly across phase
+    /// boundaries.
+    Bursty { rate_on: f64, rate_off: f64, on_s: f64, off_s: f64 },
+}
+
+impl Arrival {
+    fn validate(&self) -> Result<()> {
+        match *self {
+            Arrival::Poisson { rate_per_s } => {
+                if !rate_per_s.is_finite() || rate_per_s <= 0.0 {
+                    bail!("poisson rate must be finite and > 0");
+                }
+            }
+            Arrival::Bursty { rate_on, rate_off, on_s, off_s } => {
+                if !rate_on.is_finite() || rate_on <= 0.0 {
+                    bail!("bursty rate_on must be finite and > 0");
+                }
+                if !rate_off.is_finite() || rate_off < 0.0 {
+                    bail!("bursty rate_off must be finite and >= 0");
+                }
+                if on_s <= 0.0 || off_s <= 0.0 {
+                    bail!("bursty phase durations must be > 0");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Time (seconds) of the next arrival strictly after `t` seconds.
+    fn next_after_s(&self, t: f64, rng: &mut Rng) -> f64 {
+        // Unit-mean exponential exposure; (1 - u) is in (0, 1] so the
+        // log is finite and the sample strictly positive.
+        let exposure = -(1.0 - rng.f64()).ln();
+        match *self {
+            Arrival::Poisson { rate_per_s } => t + exposure / rate_per_s,
+            Arrival::Bursty { rate_on, rate_off, on_s, off_s } => {
+                let period = on_s + off_s;
+                let mut t = t;
+                let mut left = exposure;
+                loop {
+                    let pos = t.rem_euclid(period);
+                    let (rate, phase_end) = if pos < on_s {
+                        (rate_on, on_s)
+                    } else {
+                        (rate_off, period)
+                    };
+                    let span = phase_end - pos;
+                    // Exposure this phase can still absorb.
+                    let cap = rate * span;
+                    if rate > 0.0 && left <= cap {
+                        return t + left / rate;
+                    }
+                    left -= cap;
+                    t += span;
+                }
+            }
+        }
+    }
+}
+
+/// Sampled length distribution (prompt truncation, output budgets).
+#[derive(Debug, Clone)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Uniform over `lo..=hi` (inclusive).
+    Uniform { lo: usize, hi: usize },
+}
+
+impl LenDist {
+    fn validate(&self, what: &str) -> Result<()> {
+        match *self {
+            LenDist::Fixed(n) => {
+                if n == 0 {
+                    bail!("{what}: fixed length must be >= 1");
+                }
+            }
+            LenDist::Uniform { lo, hi } => {
+                if lo == 0 || lo > hi {
+                    bail!("{what}: uniform bounds need 1 <= lo <= hi");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { lo, hi } => lo + rng.usize_below(hi - lo + 1),
+        }
+    }
+}
+
+/// One tenant's traffic profile: a share of overall arrivals, a task
+/// mix over [`TASK_NAMES`], and length distributions.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of arrivals (normalized across tenants).
+    pub weight: f64,
+    /// `(task_name, weight)` pairs; normalized within the tenant.
+    pub task_mix: Vec<(String, f64)>,
+    /// Prompt truncation length (clamped to the source sample's length,
+    /// floor 2 so BOS + content survive).
+    pub prompt_len: LenDist,
+    /// Output token budget per request.
+    pub max_new: LenDist,
+}
+
+/// Full description of a workload; `generate` is a pure function of
+/// this spec plus the source prompt corpus.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub requests: usize,
+    pub arrival: Arrival,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// One scheduled request. `tenant` indexes `WorkloadSpec::tenants`;
+/// `task` indexes [`TASK_NAMES`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Admission {
+    pub at_ns: u64,
+    pub tenant: u32,
+    pub task: u32,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+fn task_id(name: &str) -> Result<u32> {
+    match TASK_NAMES.iter().position(|t| *t == name) {
+        Some(i) => Ok(i as u32),
+        None => bail!("unknown task {name:?} (expected one of {TASK_NAMES:?})"),
+    }
+}
+
+/// Weighted index draw over `cum` (inclusive prefix sums of weights).
+fn pick_weighted(rng: &mut Rng, cum: &[f64]) -> usize {
+    let total = *cum.last().expect("non-empty weights");
+    let u = rng.f64() * total;
+    cum.iter().position(|c| u < *c).unwrap_or(cum.len() - 1)
+}
+
+fn prefix_sums(weights: &[f64], what: &str) -> Result<Vec<f64>> {
+    if weights.is_empty() {
+        bail!("{what}: empty weight list");
+    }
+    let mut acc = 0.0;
+    let mut cum = Vec::with_capacity(weights.len());
+    for &w in weights {
+        if !w.is_finite() || w <= 0.0 {
+            bail!("{what}: weights must be finite and > 0");
+        }
+        acc += w;
+        cum.push(acc);
+    }
+    Ok(cum)
+}
+
+/// Expand a seeded [`WorkloadSpec`] into a concrete admission schedule
+/// over `source` (typically the mixed-task "stream" prompt set).
+/// Deterministic: the same `(spec, source)` pair always returns the
+/// bitwise-identical schedule.
+pub fn generate(spec: &WorkloadSpec, source: &PromptSet) -> Result<Vec<Admission>> {
+    if spec.requests == 0 {
+        bail!("workload spec needs requests > 0");
+    }
+    spec.arrival.validate()?;
+    if spec.tenants.is_empty() {
+        bail!("workload spec needs at least one tenant");
+    }
+    let tenant_cum = prefix_sums(
+        &spec.tenants.iter().map(|t| t.weight).collect::<Vec<_>>(),
+        "tenants",
+    )?;
+    // Per-tenant: resolved task ids + cumulative mix weights.
+    let mut mixes: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
+    for t in &spec.tenants {
+        t.prompt_len.validate(&format!("tenant {}: prompt_len", t.name))?;
+        t.max_new.validate(&format!("tenant {}: max_new", t.name))?;
+        let mut ids = Vec::with_capacity(t.task_mix.len());
+        for (name, _) in &t.task_mix {
+            ids.push(task_id(name)?);
+        }
+        let cum = prefix_sums(
+            &t.task_mix.iter().map(|m| m.1).collect::<Vec<_>>(),
+            &format!("tenant {}: task_mix", t.name),
+        )?;
+        mixes.push((ids, cum));
+    }
+    // Index the source corpus by task once; every task named by any
+    // tenant must have at least one sample to draw from.
+    let mut by_task: Vec<Vec<usize>> = vec![Vec::new(); TASK_NAMES.len()];
+    for (i, s) in source.samples.iter().enumerate() {
+        if (s.task as usize) < by_task.len() && !s.prompt.is_empty() {
+            by_task[s.task as usize].push(i);
+        }
+    }
+    for (ids, _) in &mixes {
+        for id in ids {
+            if by_task[*id as usize].is_empty() {
+                bail!(
+                    "source prompt set has no samples for task {:?}",
+                    TASK_NAMES[*id as usize]
+                );
+            }
+        }
+    }
+
+    let mut rng = Rng::new(spec.seed);
+    let mut t_s = 0.0f64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for _ in 0..spec.requests {
+        t_s = spec.arrival.next_after_s(t_s, &mut rng);
+        let tenant = pick_weighted(&mut rng, &tenant_cum);
+        let (ids, cum) = &mixes[tenant];
+        let task = ids[pick_weighted(&mut rng, cum)];
+        let pool = &by_task[task as usize];
+        let sample = &source.samples[pool[rng.usize_below(pool.len())]];
+        let want = spec.tenants[tenant].prompt_len.sample(&mut rng);
+        let keep = want.clamp(2.min(sample.prompt.len()), sample.prompt.len());
+        let prompt = sample.prompt[..keep].to_vec();
+        let max_new = spec.tenants[tenant].max_new.sample(&mut rng).max(1);
+        out.push(Admission {
+            at_ns: (t_s * NS_PER_S).round() as u64,
+            tenant: tenant as u32,
+            task,
+            prompt,
+            max_new,
+        });
+    }
+    Ok(out)
+}
+
+/// Canonical byte encoding of a schedule (little-endian, versioned).
+/// Two schedules are identical iff their encodings are byte-equal —
+/// benches assert this for replay determinism.
+pub fn encode_schedule(schedule: &[Admission]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"DVIW");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(schedule.len() as u32).to_le_bytes());
+    for a in schedule {
+        out.extend_from_slice(&a.at_ns.to_le_bytes());
+        out.extend_from_slice(&a.tenant.to_le_bytes());
+        out.extend_from_slice(&a.task.to_le_bytes());
+        out.extend_from_slice(&(a.max_new as u32).to_le_bytes());
+        out.extend_from_slice(&(a.prompt.len() as u32).to_le_bytes());
+        for t in &a.prompt {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// FNV-1a fingerprint of [`encode_schedule`] — a compact replay stamp
+/// persisted into `BENCH_serving_load.json`.
+pub fn fingerprint(schedule: &[Admission]) -> u64 {
+    let mut h = Fnv64::new();
+    h.bytes(&encode_schedule(schedule));
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::PromptSample;
+
+    /// Synthetic corpus: 8 samples per task, prompts long enough to
+    /// exercise truncation, first token tagged with the task id.
+    fn corpus() -> PromptSet {
+        let mut samples = Vec::new();
+        for task in 0..TASK_NAMES.len() as u32 {
+            for j in 0..8u32 {
+                samples.push(PromptSample {
+                    task,
+                    max_new: 32,
+                    prompt: (0..24).map(|k| task * 1000 + j * 32 + k).collect(),
+                    answer: Vec::new(),
+                });
+            }
+        }
+        PromptSet { samples }
+    }
+
+    fn one_tenant(mix: &[(&str, f64)]) -> TenantSpec {
+        TenantSpec {
+            name: "t0".into(),
+            weight: 1.0,
+            task_mix: mix.iter().map(|(n, w)| (n.to_string(), *w)).collect(),
+            prompt_len: LenDist::Uniform { lo: 4, hi: 12 },
+            max_new: LenDist::Uniform { lo: 2, hi: 6 },
+        }
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_within_tolerance() {
+        let rate = 500.0;
+        let spec = WorkloadSpec {
+            seed: 11,
+            requests: 4000,
+            arrival: Arrival::Poisson { rate_per_s: rate },
+            tenants: vec![one_tenant(&[("qa", 1.0)])],
+        };
+        let sched = generate(&spec, &corpus()).unwrap();
+        let span_s = sched.last().unwrap().at_ns as f64 / NS_PER_S;
+        let mean = span_s / (sched.len() - 1) as f64;
+        let expect = 1.0 / rate;
+        assert!(
+            (mean - expect).abs() / expect < 0.05,
+            "mean inter-arrival {mean:.6}s vs expected {expect:.6}s"
+        );
+        // Strictly increasing timestamps (arrivals never collide).
+        for w in sched.windows(2) {
+            assert!(w[0].at_ns < w[1].at_ns);
+        }
+    }
+
+    #[test]
+    fn bursty_duty_cycle_matches_rates() {
+        let (rate_on, rate_off, on_s, off_s) = (1000.0, 50.0, 0.1, 0.1);
+        let spec = WorkloadSpec {
+            seed: 12,
+            requests: 4000,
+            arrival: Arrival::Bursty { rate_on, rate_off, on_s, off_s },
+            tenants: vec![one_tenant(&[("mt", 1.0)])],
+        };
+        let sched = generate(&spec, &corpus()).unwrap();
+        let period = on_s + off_s;
+        let in_on = sched
+            .iter()
+            .filter(|a| {
+                (a.at_ns as f64 / NS_PER_S).rem_euclid(period) < on_s
+            })
+            .count();
+        let frac = in_on as f64 / sched.len() as f64;
+        let expect =
+            (rate_on * on_s) / (rate_on * on_s + rate_off * off_s);
+        assert!(
+            (frac - expect).abs() < 0.03,
+            "on-phase fraction {frac:.3} vs expected {expect:.3}"
+        );
+    }
+
+    #[test]
+    fn bursty_off_rate_zero_skips_off_phases() {
+        let spec = WorkloadSpec {
+            seed: 13,
+            requests: 500,
+            arrival: Arrival::Bursty {
+                rate_on: 800.0,
+                rate_off: 0.0,
+                on_s: 0.05,
+                off_s: 0.05,
+            },
+            tenants: vec![one_tenant(&[("rag", 1.0)])],
+        };
+        let sched = generate(&spec, &corpus()).unwrap();
+        for a in &sched {
+            let pos = (a.at_ns as f64 / NS_PER_S).rem_euclid(0.1);
+            assert!(
+                pos <= 0.05 + 1e-6,
+                "arrival at phase offset {pos:.4}s despite rate_off=0"
+            );
+        }
+    }
+
+    #[test]
+    fn tenant_and_task_mix_proportions() {
+        let mut chat = one_tenant(&[("qa", 1.0)]);
+        chat.name = "chat".into();
+        chat.weight = 3.0;
+        let mut batch = one_tenant(&[("mt", 0.5), ("math", 0.5)]);
+        batch.name = "batch".into();
+        batch.weight = 1.0;
+        let spec = WorkloadSpec {
+            seed: 14,
+            requests: 4000,
+            arrival: Arrival::Poisson { rate_per_s: 100.0 },
+            tenants: vec![chat, batch],
+        };
+        let sched = generate(&spec, &corpus()).unwrap();
+        let n = sched.len() as f64;
+        let chat_frac =
+            sched.iter().filter(|a| a.tenant == 0).count() as f64 / n;
+        assert!(
+            (chat_frac - 0.75).abs() < 0.03,
+            "chat share {chat_frac:.3} vs expected 0.75"
+        );
+        let qa = task_id("qa").unwrap();
+        let mt = task_id("mt").unwrap();
+        let math = task_id("math").unwrap();
+        let batch_reqs: Vec<_> =
+            sched.iter().filter(|a| a.tenant == 1).collect();
+        let mt_frac = batch_reqs.iter().filter(|a| a.task == mt).count()
+            as f64
+            / batch_reqs.len() as f64;
+        assert!(
+            (mt_frac - 0.5).abs() < 0.05,
+            "mt share within batch tenant {mt_frac:.3}"
+        );
+        for a in &sched {
+            let ok = if a.tenant == 0 {
+                a.task == qa
+            } else {
+                a.task == mt || a.task == math
+            };
+            assert!(ok, "task {} outside tenant {}'s mix", a.task, a.tenant);
+            // Prompt is a prefix of a real corpus sample of that task.
+            assert_eq!(a.prompt[0] / 1000, a.task);
+        }
+    }
+
+    #[test]
+    fn length_bounds_respected() {
+        let mut t = one_tenant(&[("summarization", 1.0)]);
+        t.prompt_len = LenDist::Uniform { lo: 5, hi: 9 };
+        t.max_new = LenDist::Fixed(7);
+        let spec = WorkloadSpec {
+            seed: 15,
+            requests: 300,
+            arrival: Arrival::Poisson { rate_per_s: 50.0 },
+            tenants: vec![t],
+        };
+        for a in generate(&spec, &corpus()).unwrap() {
+            assert!((5..=9).contains(&a.prompt.len()), "{}", a.prompt.len());
+            assert_eq!(a.max_new, 7);
+        }
+    }
+
+    #[test]
+    fn replay_is_bitwise_deterministic() {
+        let spec = WorkloadSpec {
+            seed: 16,
+            requests: 256,
+            arrival: Arrival::Bursty {
+                rate_on: 400.0,
+                rate_off: 40.0,
+                on_s: 0.2,
+                off_s: 0.1,
+            },
+            tenants: vec![
+                one_tenant(&[("qa", 0.6), ("mt", 0.4)]),
+                one_tenant(&[("rag", 1.0)]),
+            ],
+        };
+        let c = corpus();
+        let a = generate(&spec, &c).unwrap();
+        let b = generate(&spec, &c).unwrap();
+        assert_eq!(encode_schedule(&a), encode_schedule(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        let mut other = spec.clone();
+        other.seed = 17;
+        let d = generate(&other, &c).unwrap();
+        assert_ne!(encode_schedule(&a), encode_schedule(&d));
+        assert_ne!(fingerprint(&a), fingerprint(&d));
+    }
+
+    #[test]
+    fn encode_distinguishes_every_field() {
+        let base = Admission {
+            at_ns: 10,
+            tenant: 0,
+            task: 1,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+        };
+        let enc = |a: &Admission| encode_schedule(std::slice::from_ref(a));
+        let mut m = base.clone();
+        m.at_ns = 11;
+        assert_ne!(enc(&base), enc(&m));
+        let mut m = base.clone();
+        m.prompt = vec![1, 2, 9];
+        assert_ne!(enc(&base), enc(&m));
+        let mut m = base.clone();
+        m.max_new = 5;
+        assert_ne!(enc(&base), enc(&m));
+    }
+
+    #[test]
+    fn rejects_invalid_specs() {
+        let c = corpus();
+        let good = WorkloadSpec {
+            seed: 1,
+            requests: 4,
+            arrival: Arrival::Poisson { rate_per_s: 10.0 },
+            tenants: vec![one_tenant(&[("qa", 1.0)])],
+        };
+        assert!(generate(&good, &c).is_ok());
+        let mut bad = good.clone();
+        bad.requests = 0;
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.tenants.clear();
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.tenants[0].task_mix = vec![("nosuch".into(), 1.0)];
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.tenants[0].weight = 0.0;
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.arrival = Arrival::Poisson { rate_per_s: 0.0 };
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.tenants[0].task_mix = vec![("qa".into(), -1.0)];
+        assert!(generate(&bad, &c).is_err());
+        // Empty corpus for a requested task.
+        let empty = PromptSet { samples: Vec::new() };
+        assert!(generate(&good, &empty).is_err());
+    }
+}

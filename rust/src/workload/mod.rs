@@ -7,6 +7,8 @@
 //!   u32 task_id, u32 max_new, u32 prompt_len, u32 answer_len,
 //!   prompt_len x u32 ids, answer_len x u32 ids.
 
+pub mod gen;
+
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
