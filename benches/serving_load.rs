@@ -3,14 +3,19 @@
 //! `dvi::workload::gen`) drives the batched scheduler on the in-process
 //! reference backend, a loopback executor, and a 2-shard loopback
 //! fleet. Requests are admitted at their scheduled wall-clock arrival
-//! via `submit_tagged_at`, so queue-wait and TTFT include time spent in
-//! the admission queue — the part a closed-loop driver can't see.
+//! via `submit_with_deadline`, so queue-wait and TTFT include time
+//! spent in the admission queue — the part a closed-loop driver can't
+//! see — and each admission's tenant deadline rides into the
+//! scheduler's health ledger.
 //!
 //! Reports per-request queue-wait / TTFT / end-to-end latency
-//! (p50/p95/p99), goodput (committed tokens/s), acceptance EMA, and —
-//! with `DVI_PREFIX_CACHE=1` — cache hit rate, per tenant and overall,
-//! and persists a schema-versioned `BENCH_serving_load.json` for the
-//! `dvi bench-compare` trajectory gate.
+//! (p50/p95/p99), goodput (committed tokens/s), **SLO goodput** (tokens
+//! from in-deadline completions only — the chat tenant carries a
+//! per-request latency deadline, the batch tenant is best-effort),
+//! acceptance EMA, and — with `DVI_PREFIX_CACHE=1` — cache hit rate,
+//! per tenant and overall, and persists a schema-versioned
+//! `BENCH_serving_load.json` for the `dvi bench-compare` trajectory
+//! gate.
 //!
 //!   cargo bench --bench serving_load
 //!
@@ -20,6 +25,7 @@
 //!        DVI_BENCH_MAX_BATCH  scheduler max_batch      (default 8)
 //!        DVI_BENCH_SLOTS     scheduler slot pool       (default 16)
 //!        DVI_BENCH_METHOD    sequence engine           (default dvi)
+//!        DVI_BENCH_SLO_MS    chat tenant's deadline, ms (default 500)
 //!        DVI_BENCH_TINY=1    CI smoke: 16 requests, 300 req/s,
 //!                            in-process + loopback only
 
@@ -57,6 +63,10 @@ fn tenants() -> Vec<TenantSpec> {
             task_mix: vec![("qa".into(), 0.6), ("mt".into(), 0.4)],
             prompt_len: LenDist::Uniform { lo: 6, hi: 16 },
             max_new: LenDist::Uniform { lo: 4, hi: 10 },
+            // Interactive tenant: every request carries a latency
+            // deadline, so queueing collapse shows up as lost SLO
+            // goodput even while raw goodput looks healthy.
+            slo_ms: Some(env_usize("DVI_BENCH_SLO_MS", 500) as u64),
         },
         TenantSpec {
             name: "batch".into(),
@@ -68,6 +78,8 @@ fn tenants() -> Vec<TenantSpec> {
             ],
             prompt_len: LenDist::Uniform { lo: 10, hi: 24 },
             max_new: LenDist::Uniform { lo: 8, hi: 16 },
+            // Throughput tenant: best-effort, no deadline.
+            slo_ms: None,
         },
     ]
 }
@@ -89,6 +101,9 @@ fn quantiles_ms(reg: &Registry, name: &str) -> Json {
 struct Done {
     tenant: u32,
     tokens: u64,
+    /// Completed within its admission's deadline (always true for
+    /// best-effort requests) — the SLO-goodput filter.
+    met: bool,
 }
 
 /// Replay `schedule` open-loop against a fresh scheduler on `rt`:
@@ -124,11 +139,12 @@ fn drive(
         let now_ns = epoch.elapsed().as_nanos() as u64;
         while next < schedule.len() && schedule[next].at_ns <= now_ns {
             let a = &schedule[next];
-            let id = sched.submit_tagged_at(
+            let id = sched.submit_with_deadline(
                 a.prompt.clone(),
                 a.max_new,
-                TASK_NAMES[a.task as usize],
+                Some(TASK_NAMES[a.task as usize]),
                 epoch + Duration::from_nanos(a.at_ns),
+                a.deadline_ns,
             );
             assert_eq!(
                 id as usize, next,
@@ -161,8 +177,11 @@ fn drive(
             reg.hist("e2e_ns.all").observe(e2e_ns);
             let tname = &tenant_names[a.tenant as usize];
             reg.hist(&format!("e2e_ns.{tname}")).observe(e2e_ns);
-            recs[r.id as usize] =
-                Some(Done { tenant: a.tenant, tokens: out.tokens.len() as u64 });
+            recs[r.id as usize] = Some(Done {
+                tenant: a.tenant,
+                tokens: out.tokens.len() as u64,
+                met: a.deadline_ns.map_or(true, |d| e2e_ns <= d),
+            });
         }
     }
     let wall_s = epoch.elapsed().as_secs_f64().max(1e-9);
@@ -172,6 +191,8 @@ fn drive(
     );
 
     let total_tokens: u64 = recs.iter().flatten().map(|r| r.tokens).sum();
+    let slo_tokens: u64 =
+        recs.iter().flatten().filter(|r| r.met).map(|r| r.tokens).sum();
     let tenants_json: Vec<Json> = tenant_names
         .iter()
         .enumerate()
@@ -182,11 +203,26 @@ fn drive(
                 .filter(|r| r.tenant == ti as u32)
                 .collect();
             let tokens: u64 = mine.iter().map(|r| r.tokens).sum();
+            let in_deadline = mine.iter().filter(|r| r.met).count();
+            let slo_tok: u64 =
+                mine.iter().filter(|r| r.met).map(|r| r.tokens).sum();
             json::obj(vec![
                 ("name", json::s(name)),
                 ("requests", json::num(mine.len() as f64)),
                 ("tokens", json::num(tokens as f64)),
                 ("goodput_tok_per_sec", json::num(tokens as f64 / wall_s)),
+                (
+                    "slo_attainment",
+                    json::num(if mine.is_empty() {
+                        1.0
+                    } else {
+                        in_deadline as f64 / mine.len() as f64
+                    }),
+                ),
+                (
+                    "slo_goodput_tok_per_sec",
+                    json::num(slo_tok as f64 / wall_s),
+                ),
                 ("e2e_ms", quantiles_ms(&reg, &format!("e2e_ns.{name}"))),
             ])
         })
@@ -202,6 +238,10 @@ fn drive(
         (
             "goodput_tok_per_sec",
             json::num(total_tokens as f64 / wall_s),
+        ),
+        (
+            "slo_goodput_tok_per_sec",
+            json::num(slo_tokens as f64 / wall_s),
         ),
         (
             "accept_ema",
@@ -226,9 +266,10 @@ fn drive(
     }
     let scenario = json::obj(fields);
     println!(
-        "| {label} | {} | {:.0} | {:.2} | {:.2} | {:.2} |",
+        "| {label} | {} | {:.0} | {:.0} | {:.2} | {:.2} | {:.2} |",
         schedule.len(),
         total_tokens as f64 / wall_s,
+        slo_tokens as f64 / wall_s,
         scenario.get("latency").get("e2e_ms").get("p50").as_f64().unwrap(),
         scenario.get("latency").get("e2e_ms").get("p99").as_f64().unwrap(),
         wall_s * 1e3,
@@ -273,8 +314,11 @@ fn main() {
         rate
     );
     println!();
-    println!("| scenario | reqs | goodput tok/s | e2e p50 ms | e2e p99 ms | wall ms |");
-    println!("|---|---|---|---|---|---|");
+    println!(
+        "| scenario | reqs | goodput tok/s | slo tok/s | e2e p50 ms | \
+         e2e p99 ms | wall ms |"
+    );
+    println!("|---|---|---|---|---|---|---|");
 
     let mut schedules: Vec<(&str, Vec<Admission>, u64)> = Vec::new();
     for (name, arrival) in &arrivals {

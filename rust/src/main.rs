@@ -17,7 +17,13 @@
 //!            periodic report, Chrome-trace export (forces tracing on),
 //!            or a self-driven N-prompt smoke run (no listener)
 //!   trace-summary FILE.json      reduce a Chrome trace to per-phase
-//!            latency quantiles (from `serve --trace-out` / DVI_TRACE)
+//!            latency quantiles (from `serve --trace-out` / DVI_TRACE);
+//!            merged fleet traces additionally get a per-shard
+//!            client/server/wire latency decomposition
+//!   trace-collect [OUT.json] --backend remote --remote h1:p1,h2:p2
+//!            drain every executor's trace ring + metrics over the wire
+//!            and write ONE merged, clock-aligned Chrome trace (client
+//!            track + one process track per shard)
 //!   bench-compare OLD.json NEW.json [--tol 0.10] [--warn-only]
 //!            trajectory gate: diff two schema-versioned BENCH_*.json
 //!            artifacts of the same bench; exits non-zero when a metric
@@ -34,6 +40,7 @@
 //!
 //! Everything reads `--artifacts DIR` (default: ./artifacts).
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -120,11 +127,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("serve-backend") => serve_backend(args),
         Some("trace-summary") => trace_summary(args),
+        Some("trace-collect") => trace_collect(args),
         Some("bench-compare") => bench_compare(args),
         Some(other) => bail!("unknown subcommand '{other}' (see src/main.rs docs)"),
         None => bail!(
             "usage: dvi <info|run|train|table1|table2|table3|fig2|serve|\
-             serve-backend|trace-summary|bench-compare> [...]"
+             serve-backend|trace-summary|trace-collect|bench-compare> [...]"
         ),
     }
 }
@@ -293,6 +301,56 @@ fn fig2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flush the trace sink as a merged fleet document when the runtime
+/// fronts remote executors: the client's accumulated ring stays on
+/// [`chrome::CLIENT_PID`] and every shard's drained events land on
+/// their own process track, clock-aligned onto the client epoch. Shard
+/// events accumulate in `shard_tracks` across flushes (executor pulls
+/// are destructive — each event arrives exactly once). Falls back to
+/// the flat single-process flush for in-process backends.
+fn flush_fleet_trace(
+    sink: &mut TraceSink,
+    rt: &Runtime,
+    shard_tracks: &mut BTreeMap<u64, chrome::ProcessTrack>,
+) -> Result<()> {
+    let pulls = match rt.obs_pull() {
+        Ok(p) => p,
+        Err(e) => {
+            // A flapping executor must not kill the flush cadence: keep
+            // the tracks pulled so far and merge again next tick.
+            log::info(&format!("fleet trace pull failed: {e:#}"));
+            Vec::new()
+        }
+    };
+    sink.absorb();
+    for obs in pulls {
+        let track = obs.into_track();
+        match shard_tracks.get_mut(&track.pid) {
+            Some(t) => {
+                t.events.extend(track.events);
+                t.dropped = track.dropped;
+            }
+            None => {
+                shard_tracks.insert(track.pid, track);
+            }
+        }
+    }
+    if shard_tracks.is_empty() {
+        return sink.flush();
+    }
+    let mut tracks = vec![chrome::ProcessTrack {
+        pid: chrome::CLIENT_PID,
+        label: "dvi client".to_string(),
+        events: sink.events().iter().map(trace::Event::to_owned_event).collect(),
+        dropped: trace::drop_count(),
+    }];
+    tracks.extend(shard_tracks.values().cloned());
+    chrome::write_doc_atomic(
+        sink.path(),
+        &chrome::render_merged(&tracks, sink.truncated()),
+    )
+}
+
 fn serve(args: &Args) -> Result<()> {
     // Tracing must be forced on before the router spawns its threads so
     // prefill/learner spans from the very first request are captured.
@@ -369,12 +427,29 @@ fn serve(args: &Args) -> Result<()> {
         ensure!(served == smoke, "smoke run served {served}/{smoke}");
         println!("smoke: served {served}/{smoke}");
         println!("stats: {}", router.stats_json());
+        println!("{}", router.health.report_line());
         if metrics_on {
             println!("metrics: {}", router.metrics_json());
         }
         if let Some(sink) = sink.as_mut() {
-            sink.flush()?;
-            println!("trace written to {}", sink.path().display());
+            let mut shard_tracks = BTreeMap::new();
+            flush_fleet_trace(sink, &rt, &mut shard_tracks)?;
+            if sink.truncated() > 0 {
+                println!(
+                    "WARNING: trace export capped — {} events discarded \
+                     (raise DVI_TRACE_MAX)",
+                    sink.truncated()
+                );
+            }
+            println!(
+                "trace written to {}{}",
+                sink.path().display(),
+                if shard_tracks.is_empty() {
+                    String::new()
+                } else {
+                    format!(" (merged, {} executor tracks)", shard_tracks.len())
+                }
+            );
         }
         return Ok(());
     }
@@ -416,7 +491,8 @@ fn serve(args: &Args) -> Result<()> {
     println!(
         "serving on 127.0.0.1:{port} ({mode}, online={online}); try:\n  \
          echo '{{\"prompt\": \"question : what owns ent01 ? <sep>\"}}' | nc 127.0.0.1 {port}\n  \
-         echo '{{\"metrics\": true}}' | nc 127.0.0.1 {port}"
+         echo '{{\"metrics\": true}}' | nc 127.0.0.1 {port}\n  \
+         echo '{{\"health\": true}}' | nc 127.0.0.1 {port}"
     );
     // Periodic report: serving stats, executor health (incl. the mux
     // pipelining gauges), a never-silent trace-overflow warning, and —
@@ -429,12 +505,15 @@ fn serve(args: &Args) -> Result<()> {
         let quiet = report_secs == 0;
         let secs = if quiet { 5 } else { report_secs as u64 };
         let r2 = router.clone();
+        let rt2 = rt.clone();
         let mut sink = sink.take();
+        let mut shard_tracks = BTreeMap::new();
         std::thread::Builder::new().name("dvi-report".into()).spawn(
             move || loop {
                 std::thread::sleep(std::time::Duration::from_secs(secs));
                 if !quiet {
                     println!("stats: {}", r2.stats_json());
+                    println!("{}", r2.health.report_line());
                     for s in r2.executor_status() {
                         if let Some(m) = s.metrics {
                             println!(
@@ -461,8 +540,17 @@ fn serve(args: &Args) -> Result<()> {
                     );
                 }
                 if let Some(sink) = sink.as_mut() {
-                    if let Err(e) = sink.flush() {
+                    if let Err(e) =
+                        flush_fleet_trace(sink, &rt2, &mut shard_tracks)
+                    {
                         log::info(&format!("trace flush failed: {e:#}"));
+                    }
+                    if sink.truncated() > 0 {
+                        println!(
+                            "WARNING: trace export capped — {} events \
+                             discarded so far (raise DVI_TRACE_MAX)",
+                            sink.truncated()
+                        );
                     }
                 }
             },
@@ -472,7 +560,11 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 /// Reduce a Chrome trace (from `serve --trace-out` or an externally
-/// captured `DVI_TRACE=1` run) to per-phase/per-shard latency quantiles.
+/// captured `DVI_TRACE=1` run) to per-phase/per-shard latency
+/// quantiles. Merged fleet traces (from `trace-collect` or a remote
+/// `serve --trace-out`) additionally get the per-shard
+/// client/server/wire decomposition: each client `rpc.call` span paired
+/// with the executor `exec` span carrying the same call id.
 fn trace_summary(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -483,12 +575,74 @@ fn trace_summary(args: &Args) -> Result<()> {
         .to_string();
     let doc = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {path}"))?;
-    let (stats, dropped) = chrome::summarize(&doc)?;
+    let (stats, dropped, truncated) = chrome::summarize(&doc)?;
     ensure!(!stats.is_empty(), "trace {path} holds no complete events");
     print!("{}", chrome::summary_table(&stats));
+    let decomp = chrome::decompose(&doc)?;
+    if !decomp.is_empty() {
+        println!("\nper-shard client/server/wire decomposition:");
+        print!("{}", chrome::decomp_table(&decomp));
+    }
     if dropped > 0 {
         println!("(dropped events: {dropped})");
     }
+    if truncated > 0 {
+        println!(
+            "WARNING: export was capped — {truncated} events discarded by \
+             DVI_TRACE_MAX; quantiles above cover the surviving prefix"
+        );
+    }
+    Ok(())
+}
+
+/// Drain trace events + metrics from every executor of a remote fleet
+/// and write ONE merged, clock-aligned Chrome trace: this process's
+/// ring on the client track, each shard on its own process track with
+/// timestamps shifted onto the local epoch by the per-connection offset
+/// estimator. Destructive on the executors' rings (each event is
+/// collected exactly once), so successive collects tile the timeline.
+fn trace_collect(args: &Args) -> Result<()> {
+    let out = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("out"))
+        .unwrap_or("trace_fleet.json")
+        .to_string();
+    let rt = load_runtime(args)?;
+    let pulls = rt.obs_pull()?;
+    ensure!(
+        !pulls.is_empty(),
+        "backend '{}' fronts no remote executors to collect from \
+         (use --backend remote --remote h1:p1,h2:p2 or DVI_REMOTE)",
+        rt.backend_name()
+    );
+    let mut tracks = vec![chrome::ProcessTrack {
+        pid: chrome::CLIENT_PID,
+        label: "dvi client".to_string(),
+        events: trace::drain().iter().map(trace::Event::to_owned_event).collect(),
+        dropped: trace::drop_count(),
+    }];
+    for obs in pulls {
+        println!(
+            "shard {} @ {}: {} events, clock offset {:+} ns (+/- {} ns), \
+             {} dropped",
+            obs.shard,
+            obs.endpoint,
+            obs.events.len(),
+            obs.offset.offset_ns,
+            obs.offset.uncertainty_ns,
+            obs.dropped
+        );
+        tracks.push(obs.into_track());
+    }
+    let path = PathBuf::from(&out);
+    chrome::write_doc_atomic(&path, &chrome::render_merged(&tracks, 0))?;
+    println!(
+        "merged fleet trace written to {out} ({} process tracks); reduce it \
+         with: dvi trace-summary {out}",
+        tracks.len()
+    );
     Ok(())
 }
 

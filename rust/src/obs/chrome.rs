@@ -16,8 +16,18 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::trace::{self, Arg, Event};
+use super::trace::{self, Arg, Event, OwnedEvent};
 use crate::util::json::{escape, Json};
+
+/// The `pid` every locally drained event renders under. Merged fleet
+/// documents keep the client on this pid and place shard `N` on
+/// [`shard_pid`]`(N)`.
+pub const CLIENT_PID: u64 = 1;
+
+/// Chrome `pid` assigned to executor shard `N` in a merged document.
+pub fn shard_pid(shard: u32) -> u64 {
+    CLIENT_PID + 1 + shard as u64
+}
 
 fn push_f64(out: &mut String, v: f64) {
     if v.is_finite() {
@@ -27,9 +37,29 @@ fn push_f64(out: &mut String, v: f64) {
     }
 }
 
+fn push_args<K: AsRef<str>>(out: &mut String, args: &[(K, Arg)]) {
+    if args.is_empty() {
+        return;
+    }
+    out.push_str(",\"args\":{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&escape(k.as_ref()));
+        out.push(':');
+        match v {
+            Arg::I(n) => out.push_str(&n.to_string()),
+            Arg::F(f) => push_f64(out, *f),
+            Arg::S(s) => out.push_str(&escape(s)),
+        }
+    }
+    out.push('}');
+}
+
 fn push_event(out: &mut String, e: &Event) {
     out.push_str(&format!(
-        "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"ts\":{:.3},\"pid\":1,\"tid\":{}",
+        "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"ts\":{:.3},\"pid\":{CLIENT_PID},\"tid\":{}",
         escape(e.name),
         escape(e.cat),
         e.ph,
@@ -43,28 +73,110 @@ fn push_event(out: &mut String, e: &Event) {
         // thread-scoped instant marker
         out.push_str(",\"s\":\"t\"");
     }
-    if !e.args.is_empty() {
-        out.push_str(",\"args\":{");
-        for (i, (k, v)) in e.args.iter().enumerate() {
-            if i > 0 {
-                out.push(',');
-            }
-            out.push_str(&escape(k));
-            out.push(':');
-            match v {
-                Arg::I(n) => out.push_str(&n.to_string()),
-                Arg::F(f) => push_f64(out, *f),
-                Arg::S(s) => out.push_str(&escape(s)),
-            }
-        }
-        out.push('}');
-    }
+    push_args(out, &e.args);
     out.push('}');
+}
+
+fn push_owned_event(out: &mut String, e: &OwnedEvent, pid: u64) {
+    out.push_str(&format!(
+        "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"ts\":{:.3},\"pid\":{pid},\"tid\":{}",
+        escape(&e.name),
+        escape(&e.cat),
+        e.ph,
+        e.ts_ns as f64 / 1e3,
+        e.tid
+    ));
+    if e.ph == 'X' {
+        out.push_str(&format!(",\"dur\":{:.3}", e.dur_ns as f64 / 1e3));
+    }
+    if e.ph == 'i' {
+        out.push_str(",\"s\":\"t\"");
+    }
+    push_args(out, &e.args);
+    out.push('}');
+}
+
+/// Chrome `M` metadata event naming a process track.
+fn push_process_name(out: &mut String, pid: u64, label: &str) {
+    out.push_str(&format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+         \"args\":{{\"name\":{}}}}}",
+        escape(label)
+    ));
+}
+
+/// One process track of a merged fleet trace: the client or one
+/// executor shard, with its events already clock-aligned onto the
+/// client's trace epoch (see `runtime::remote`'s offset estimator).
+#[derive(Debug, Clone)]
+pub struct ProcessTrack {
+    pub pid: u64,
+    /// Human label for the Perfetto process row
+    /// (`"dvi client"`, `"executor shard 0 @ host:port"`).
+    pub label: String,
+    pub events: Vec<OwnedEvent>,
+    /// Ring-overflow drops reported by this track's process.
+    pub dropped: u64,
+}
+
+/// Render a merged multi-process trace document: one `process_name`
+/// metadata track per process, then every event sorted by
+/// (ts, pid, tid) so each track is time-monotonic. `truncated` > 0
+/// additionally records an explicit `trace.truncated` marker (the
+/// sink-cap analogue of the ring-overflow drop counter).
+pub fn render_merged(tracks: &[ProcessTrack], truncated: u64) -> String {
+    let n_events: usize = tracks.iter().map(|t| t.events.len()).sum();
+    let dropped: u64 = tracks.iter().map(|t| t.dropped).sum();
+    let mut out = String::with_capacity(n_events * 112 + 256);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for t in tracks {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        push_process_name(&mut out, t.pid, &t.label);
+    }
+    let mut sorted: Vec<(u64, &OwnedEvent)> = tracks
+        .iter()
+        .flat_map(|t| t.events.iter().map(move |e| (t.pid, e)))
+        .collect();
+    sorted.sort_by_key(|(pid, e)| (e.ts_ns, *pid, e.tid));
+    for (pid, e) in sorted {
+        out.push(',');
+        push_owned_event(&mut out, e, pid);
+    }
+    if truncated > 0 {
+        out.push_str(&format!(
+            ",{{\"name\":\"trace.truncated\",\"cat\":\"meta\",\"ph\":\"i\",\
+             \"ts\":0,\"pid\":{CLIENT_PID},\"tid\":0,\"s\":\"g\",\
+             \"args\":{{\"truncated_events\":{truncated}}}}}"
+        ));
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"tool\":\"dvi\",\
+         \"dropped_events\":{dropped},\"truncated_events\":{truncated},\
+         \"processes\":{}}}}}",
+        tracks.len()
+    ));
+    out
 }
 
 /// Render a full trace document. Events are sorted by (ts, tid) so
 /// every track is time-monotonic regardless of drain interleaving.
 pub fn render(events: &[Event], dropped: u64) -> String {
+    render_with_truncated(events, dropped, 0)
+}
+
+/// [`render`], recording `truncated` sink-cap casualties explicitly: a
+/// `trace.truncated` marker event plus an `otherData` counter, so a
+/// capped export is never mistaken for a complete one (satellite of
+/// the ring-overflow drop-counter convention).
+pub fn render_with_truncated(
+    events: &[Event],
+    dropped: u64,
+    truncated: u64,
+) -> String {
     let mut sorted: Vec<&Event> = events.iter().collect();
     sorted.sort_by_key(|e| (e.ts_ns, e.tid));
     let mut out = String::with_capacity(events.len() * 112 + 128);
@@ -75,9 +187,19 @@ pub fn render(events: &[Event], dropped: u64) -> String {
         }
         push_event(&mut out, e);
     }
+    if truncated > 0 {
+        if !sorted.is_empty() {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"trace.truncated\",\"cat\":\"meta\",\"ph\":\"i\",\
+             \"ts\":0,\"pid\":{CLIENT_PID},\"tid\":0,\"s\":\"g\",\
+             \"args\":{{\"truncated_events\":{truncated}}}}}"
+        ));
+    }
     out.push_str(&format!(
         "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"tool\":\"dvi\",\
-         \"dropped_events\":{dropped}}}}}"
+         \"dropped_events\":{dropped},\"truncated_events\":{truncated}}}}}"
     ));
     out
 }
@@ -85,7 +207,12 @@ pub fn render(events: &[Event], dropped: u64) -> String {
 /// Write a trace document atomically (temp file + rename): the target
 /// path never holds a torn document.
 pub fn write_atomic(path: &Path, events: &[Event], dropped: u64) -> Result<()> {
-    let doc = render(events, dropped);
+    write_doc_atomic(path, &render(events, dropped))
+}
+
+/// Atomically persist an already-rendered document (merged fleet
+/// traces, capped sink flushes).
+pub fn write_doc_atomic(path: &Path, doc: &str) -> Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = PathBuf::from(tmp);
@@ -117,7 +244,10 @@ impl TraceSink {
         TraceSink { path, events: Vec::new(), max_events, truncated: 0 }
     }
 
-    pub fn flush(&mut self) -> Result<()> {
+    /// Drain the live ring into the capped accumulator *without*
+    /// writing — used by merged fleet flushes, which render their own
+    /// multi-process document around the accumulated client events.
+    pub fn absorb(&mut self) {
         for ev in trace::drain() {
             if self.events.len() < self.max_events {
                 self.events.push(ev);
@@ -125,11 +255,39 @@ impl TraceSink {
                 self.truncated += 1;
             }
         }
-        write_atomic(
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.absorb();
+        // Truncation is reported in its own channel (marker event +
+        // otherData counter), NOT folded into the ring-drop count: an
+        // operator raising DVI_TRACE_BUF to cure "drops" that were
+        // really sink-cap truncation would be chasing the wrong knob.
+        write_doc_atomic(
             &self.path,
-            &self.events,
-            trace::drop_count() + self.truncated,
+            &render_with_truncated(
+                &self.events,
+                trace::drop_count(),
+                self.truncated,
+            ),
         )
+    }
+
+    /// Events discarded by the `DVI_TRACE_MAX` cap so far.
+    pub fn truncated(&self) -> u64 {
+        self.truncated
+    }
+
+    /// Take the accumulated (already-drained) client events, e.g. to
+    /// fold them into a merged fleet document instead of a flat flush.
+    pub fn take_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// The accumulated (already-drained) client events, borrowed — the
+    /// merged fleet flush re-renders them on every cadence tick.
+    pub fn events(&self) -> &[Event] {
+        &self.events
     }
 
     pub fn path(&self) -> &Path {
@@ -158,7 +316,8 @@ fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Reduce a Chrome trace document to per-phase/per-shard stats.
-pub fn summarize(doc: &str) -> Result<(Vec<PhaseStat>, u64)> {
+/// Returns `(stats, ring-dropped events, sink-truncated events)`.
+pub fn summarize(doc: &str) -> Result<(Vec<PhaseStat>, u64, u64)> {
     let j = Json::parse(doc).context("parse trace JSON")?;
     let Some(events) = j.get("traceEvents").as_arr() else {
         bail!("no traceEvents array in trace document");
@@ -166,6 +325,11 @@ pub fn summarize(doc: &str) -> Result<(Vec<PhaseStat>, u64)> {
     let dropped = j
         .get("otherData")
         .get("dropped_events")
+        .as_f64()
+        .unwrap_or(0.0) as u64;
+    let truncated = j
+        .get("otherData")
+        .get("truncated_events")
         .as_f64()
         .unwrap_or(0.0) as u64;
     let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
@@ -198,7 +362,121 @@ pub fn summarize(doc: &str) -> Result<(Vec<PhaseStat>, u64)> {
             key,
         });
     }
-    Ok((out, dropped))
+    Ok((out, dropped, truncated))
+}
+
+/// Per-shard client/server/wire latency split from a *merged* fleet
+/// trace: each client `rpc.call` span is paired with the executor
+/// `exec` span carrying the same call id and shard, and the wire+queue
+/// residual is `client dur − exec dur` (clamped at zero — an exec span
+/// can only exceed its enclosing rpc span through clock-offset error).
+#[derive(Debug, Clone)]
+pub struct ShardDecomp {
+    pub shard: i64,
+    /// rpc spans with a matched exec span / total rpc spans on the shard.
+    pub matched: usize,
+    pub total: usize,
+    pub client_p50_us: f64,
+    pub client_p95_us: f64,
+    pub server_p50_us: f64,
+    pub server_p95_us: f64,
+    pub wire_p50_us: f64,
+    pub wire_p95_us: f64,
+}
+
+/// Compute the decomposition. Empty when the document holds no merged
+/// executor tracks (a plain single-process trace).
+pub fn decompose(doc: &str) -> Result<Vec<ShardDecomp>> {
+    let j = Json::parse(doc).context("parse trace JSON")?;
+    let Some(events) = j.get("traceEvents").as_arr() else {
+        bail!("no traceEvents array in trace document");
+    };
+    // (shard, call id) -> dur us
+    let mut rpc: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut exec: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let name = e.get("name").as_str().unwrap_or("");
+        let args = e.get("args");
+        let (Some(id), Some(shard)) =
+            (args.get("id").as_f64(), args.get("shard").as_f64())
+        else {
+            continue;
+        };
+        let key = (shard as i64, id as i64);
+        let dur = e.get("dur").as_f64().unwrap_or(0.0);
+        match name {
+            "rpc.call" => {
+                rpc.insert(key, dur);
+            }
+            "exec" => {
+                exec.insert(key, dur);
+            }
+            _ => {}
+        }
+    }
+    let mut per_shard: BTreeMap<i64, (Vec<f64>, Vec<f64>, Vec<f64>, usize)> =
+        BTreeMap::new();
+    for (&(shard, id), &client_us) in &rpc {
+        let slot = per_shard.entry(shard).or_default();
+        slot.3 += 1;
+        let Some(&server_us) = exec.get(&(shard, id)) else {
+            continue;
+        };
+        slot.0.push(client_us);
+        slot.1.push(server_us);
+        slot.2.push((client_us - server_us).max(0.0));
+    }
+    let mut out = Vec::new();
+    for (shard, (mut client, mut server, mut wire, total)) in per_shard {
+        if client.is_empty() {
+            continue;
+        }
+        let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
+        client.sort_by(cmp);
+        server.sort_by(cmp);
+        wire.sort_by(cmp);
+        out.push(ShardDecomp {
+            shard,
+            matched: client.len(),
+            total,
+            client_p50_us: exact_quantile(&client, 0.50),
+            client_p95_us: exact_quantile(&client, 0.95),
+            server_p50_us: exact_quantile(&server, 0.50),
+            server_p95_us: exact_quantile(&server, 0.95),
+            wire_p50_us: exact_quantile(&wire, 0.50),
+            wire_p95_us: exact_quantile(&wire, 0.95),
+        });
+    }
+    Ok(out)
+}
+
+/// Render the decomposition as a markdown table (appended by
+/// `dvi trace-summary` when the trace holds merged executor tracks).
+pub fn decomp_table(rows: &[ShardDecomp]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| shard | matched | client p50 us | client p95 us | server p50 us \
+         | server p95 us | wire p50 us | wire p95 us |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| s{} | {}/{} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} |\n",
+            r.shard,
+            r.matched,
+            r.total,
+            r.client_p50_us,
+            r.client_p95_us,
+            r.server_p50_us,
+            r.server_p95_us,
+            r.wire_p50_us,
+            r.wire_p95_us,
+        ));
+    }
+    out
 }
 
 /// Render the summary as a markdown table (the `dvi trace-summary`
@@ -263,8 +541,9 @@ mod tests {
             });
         }
         let doc = render(&events, 0);
-        let (stats, dropped) = summarize(&doc).unwrap();
+        let (stats, dropped, truncated) = summarize(&doc).unwrap();
         assert_eq!(dropped, 0);
+        assert_eq!(truncated, 0);
         assert_eq!(stats.len(), 2);
         assert_eq!(stats[0].key, "rpc.call/s0");
         assert_eq!(stats[0].count, 5);
@@ -277,5 +556,137 @@ mod tests {
     fn summarize_rejects_garbage() {
         assert!(summarize("not json").is_err());
         assert!(summarize("{\"x\":1}").is_err());
+    }
+
+    /// Satellite: a capped export must announce its truncation — marker
+    /// event in the stream AND an otherData counter summarize reports —
+    /// instead of silently folding it into ring drops.
+    #[test]
+    fn truncation_is_reported_not_silent() {
+        let events = vec![ev("a", 'X', 1000, 500, 1)];
+        let doc = render_with_truncated(&events, 2, 7);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("otherData").get("dropped_events").as_f64(), Some(2.0));
+        assert_eq!(
+            j.get("otherData").get("truncated_events").as_f64(),
+            Some(7.0)
+        );
+        let arr = j.get("traceEvents").as_arr().unwrap();
+        let marker = arr
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("trace.truncated"))
+            .expect("truncation marker present");
+        assert_eq!(
+            marker.get("args").get("truncated_events").as_f64(),
+            Some(7.0)
+        );
+        let (_, dropped, truncated) = summarize(&doc).unwrap();
+        assert_eq!((dropped, truncated), (2, 7));
+    }
+
+    fn owned(
+        name: &str,
+        ts_ns: i64,
+        dur_ns: u64,
+        args: Vec<(String, Arg)>,
+    ) -> OwnedEvent {
+        OwnedEvent {
+            name: name.to_string(),
+            cat: "t".to_string(),
+            ph: 'X',
+            ts_ns,
+            dur_ns,
+            tid: 1,
+            args,
+        }
+    }
+
+    #[test]
+    fn merged_render_names_processes_and_stays_parseable() {
+        let sargs = |shard: i64, id: i64| {
+            vec![
+                ("shard".to_string(), Arg::I(shard)),
+                ("id".to_string(), Arg::I(id)),
+            ]
+        };
+        let tracks = vec![
+            ProcessTrack {
+                pid: CLIENT_PID,
+                label: "dvi client".into(),
+                events: vec![owned("rpc.call", 1000, 9000, sargs(0, 3))],
+                dropped: 1,
+            },
+            ProcessTrack {
+                pid: shard_pid(0),
+                label: "executor shard 0".into(),
+                // negative ts: aligned onto a client epoch that started
+                // after this span
+                events: vec![owned("exec", -500, 4000, sargs(0, 3))],
+                dropped: 2,
+            },
+        ];
+        let doc = render_merged(&tracks, 0);
+        let j = Json::parse(&doc).expect("merged doc parses");
+        let arr = j.get("traceEvents").as_arr().unwrap();
+        let names: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .map(|e| e.get("args").get("name").as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["dvi client", "executor shard 0"]);
+        assert_eq!(j.get("otherData").get("dropped_events").as_f64(), Some(3.0));
+        assert_eq!(j.get("otherData").get("processes").as_f64(), Some(2.0));
+        // the negative-ts exec event survives with its sign
+        let exec = arr
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("exec"))
+            .unwrap();
+        assert_eq!(exec.get("ts").as_f64(), Some(-0.5));
+        assert_eq!(exec.get("pid").as_f64(), Some(shard_pid(0) as f64));
+    }
+
+    #[test]
+    fn decompose_pairs_rpc_and_exec_by_call_id() {
+        let sargs = |shard: i64, id: i64| {
+            vec![
+                ("shard".to_string(), Arg::I(shard)),
+                ("id".to_string(), Arg::I(id)),
+            ]
+        };
+        let mut client = Vec::new();
+        let mut exec0 = Vec::new();
+        for id in 0..4i64 {
+            client.push(owned("rpc.call", id * 10_000, 10_000, sargs(0, id)));
+            // server half: 6us of the 10us rpc span
+            exec0.push(owned("exec", id * 10_000 + 2000, 6000, sargs(0, id)));
+        }
+        // one unmatched rpc span (in-flight when the dump was pulled)
+        client.push(owned("rpc.call", 90_000, 8000, sargs(0, 99)));
+        let tracks = vec![
+            ProcessTrack {
+                pid: CLIENT_PID,
+                label: "dvi client".into(),
+                events: client,
+                dropped: 0,
+            },
+            ProcessTrack {
+                pid: shard_pid(0),
+                label: "executor shard 0".into(),
+                events: exec0,
+                dropped: 0,
+            },
+        ];
+        let doc = render_merged(&tracks, 0);
+        let rows = decompose(&doc).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.shard, 0);
+        assert_eq!(r.matched, 4);
+        assert_eq!(r.total, 5);
+        assert_eq!(r.client_p50_us, 10.0);
+        assert_eq!(r.server_p50_us, 6.0);
+        assert_eq!(r.wire_p50_us, 4.0);
+        let table = decomp_table(&rows);
+        assert!(table.contains("| s0 | 4/5 |"));
     }
 }

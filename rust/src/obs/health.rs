@@ -1,0 +1,456 @@
+//! Serving-health subsystem: per-tenant latency-SLO attainment and an
+//! acceptance-EMA drift detector keyed to the learner's KL→RL phase.
+//!
+//! Two failure modes the raw metrics quantiles hide:
+//!
+//! * **SLO misses concentrated in one tenant.** Fleet-wide p95 can look
+//!   healthy while a single tenant (task tag) blows its deadline on
+//!   every request. The monitor tracks completions per tenant against
+//!   the deadline each request carried (threaded through
+//!   `Scheduler::submit_with_deadline`) and reports attainment and
+//!   **SLO goodput** — tokens from in-deadline completions only.
+//! * **Acceptance drift.** In DVI the draft's acceptance rate is the
+//!   training-health signal: a sustained drop means the learner is
+//!   regressing, not that traffic changed. The detector folds each
+//!   verified round's acceptance (per-mille) into fixed-size windows,
+//!   keeps a trailing baseline of healthy window means, and raises an
+//!   alarm after `sustain` consecutive windows at least `drop_milli`
+//!   below baseline. The learner's phase transitions (KL warmup → ramp
+//!   → RL) *legitimately* change acceptance, so a phase change resets
+//!   the window and baseline instead of alarming.
+//!
+//! Knobs: `DVI_DRIFT_WINDOW` (samples per window, default 64),
+//! `DVI_DRIFT_DROP` (per-mille drop vs baseline that counts as low,
+//! default 100), `DVI_DRIFT_SUSTAIN` (consecutive low windows before
+//! the alarm, default 3).
+//!
+//! Everything here is observation-only: recording never touches model,
+//! RNG, or scheduler state, so decode streams stay bitwise identical
+//! with the monitor attached (asserted by the losslessness gate in
+//! `tests/obs.rs`). State is mirrored to `sched.health.*` metrics so
+//! snapshots and the `{"health": true}` probe agree.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+use super::metrics;
+
+/// Drift-detector tuning (see module docs for the knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Acceptance samples folded into one window.
+    pub window: usize,
+    /// A window mean this many per-mille below baseline counts as low.
+    pub drop_milli: u64,
+    /// Consecutive low windows before the alarm raises.
+    pub sustain: u32,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { window: 64, drop_milli: 100, sustain: 3 }
+    }
+}
+
+impl DriftConfig {
+    /// Defaults overridden by `DVI_DRIFT_WINDOW` / `DVI_DRIFT_DROP` /
+    /// `DVI_DRIFT_SUSTAIN`.
+    pub fn from_env() -> DriftConfig {
+        fn num<T: std::str::FromStr>(key: &str) -> Option<T> {
+            std::env::var(key).ok().and_then(|s| s.parse().ok())
+        }
+        let d = DriftConfig::default();
+        DriftConfig {
+            window: num::<usize>("DVI_DRIFT_WINDOW")
+                .filter(|&n| n >= 2)
+                .unwrap_or(d.window),
+            drop_milli: num::<u64>("DVI_DRIFT_DROP")
+                .filter(|&n| n >= 1)
+                .unwrap_or(d.drop_milli),
+            sustain: num::<u32>("DVI_DRIFT_SUSTAIN")
+                .filter(|&n| n >= 1)
+                .unwrap_or(d.sustain),
+        }
+    }
+}
+
+/// Per-tenant SLO ledger. `tokens` counts every completion's output;
+/// `goodput_tokens` only those that met their deadline — the ratio is
+/// what an operator actually sells.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TenantSlo {
+    pub completed: u64,
+    pub in_deadline: u64,
+    pub tokens: u64,
+    pub goodput_tokens: u64,
+}
+
+impl TenantSlo {
+    /// In-deadline completions per thousand (1000 when nothing has a
+    /// deadline to miss).
+    pub fn attainment_milli(&self) -> u64 {
+        if self.completed == 0 {
+            1000
+        } else {
+            self.in_deadline * 1000 / self.completed
+        }
+    }
+}
+
+/// Point-in-time copy of the monitor (probe/report/test surface).
+#[derive(Debug, Clone)]
+pub struct HealthSnapshot {
+    pub phase: u8,
+    pub phase_name: String,
+    pub alarm: bool,
+    /// Trailing mean of healthy windows (None until one window fills).
+    pub baseline_milli: Option<u64>,
+    /// Mean of the last completed window (None until one fills).
+    pub last_window_milli: Option<u64>,
+    pub low_windows: u32,
+    pub tenants: BTreeMap<String, TenantSlo>,
+}
+
+struct Inner {
+    cfg: DriftConfig,
+    phase: u8,
+    phase_name: String,
+    window: Vec<u64>,
+    baseline_milli: Option<u64>,
+    last_window_milli: Option<u64>,
+    low_windows: u32,
+    alarm: bool,
+    tenants: BTreeMap<String, TenantSlo>,
+}
+
+/// Tenant bucket for completions submitted without a task tag.
+pub const UNTAGGED: &str = "_untagged";
+
+/// The monitor itself: shared (`Arc`) between the scheduler loop that
+/// records and the probe/report paths that read.
+pub struct HealthMonitor {
+    inner: Mutex<Inner>,
+}
+
+impl HealthMonitor {
+    pub fn new() -> HealthMonitor {
+        HealthMonitor::with_config(DriftConfig::from_env())
+    }
+
+    pub fn with_config(cfg: DriftConfig) -> HealthMonitor {
+        HealthMonitor {
+            inner: Mutex::new(Inner {
+                cfg,
+                phase: 0,
+                phase_name: "warmup".to_string(),
+                window: Vec::new(),
+                baseline_milli: None,
+                last_window_milli: None,
+                low_windows: 0,
+                alarm: false,
+                tenants: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Learner phase transition (KL warmup → ramp → RL). Acceptance is
+    /// *expected* to move across phases, so the detector starts a fresh
+    /// window and baseline rather than flagging the shift as drift.
+    pub fn set_phase(&self, phase: u8, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.phase == phase {
+            return;
+        }
+        g.phase = phase;
+        g.phase_name = name.to_string();
+        g.window.clear();
+        g.baseline_milli = None;
+        g.last_window_milli = None;
+        g.low_windows = 0;
+        g.alarm = false;
+        metrics::gauge("sched.health.drift_alarm").store(0, Ordering::Relaxed);
+        metrics::gauge("sched.health.phase")
+            .store(phase as i64, Ordering::Relaxed);
+    }
+
+    /// Fold one verified round's acceptance (per-mille) into the
+    /// current window; runs the window/baseline logic when it fills.
+    pub fn record_accept(&self, accept_milli: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.window.push(accept_milli);
+        if g.window.len() < g.cfg.window {
+            return;
+        }
+        let mean = g.window.iter().sum::<u64>() / g.window.len() as u64;
+        g.window.clear();
+        g.last_window_milli = Some(mean);
+        match g.baseline_milli {
+            None => g.baseline_milli = Some(mean),
+            Some(base) if base.saturating_sub(mean) >= g.cfg.drop_milli => {
+                // Low window: count toward the alarm and *freeze* the
+                // baseline — folding the drop in would let a slow
+                // regression walk the baseline down and never alarm.
+                g.low_windows += 1;
+                g.alarm = g.low_windows >= g.cfg.sustain;
+            }
+            Some(base) => {
+                // Healthy window: recover and track slow drift up/down
+                // with a 1/8 EMA step.
+                g.low_windows = 0;
+                g.alarm = false;
+                g.baseline_milli = Some((base * 7 + mean) / 8);
+            }
+        }
+        metrics::gauge("sched.health.accept_window_milli")
+            .store(mean as i64, Ordering::Relaxed);
+        metrics::gauge("sched.health.drift_alarm")
+            .store(g.alarm as i64, Ordering::Relaxed);
+    }
+
+    /// One finished request: `tokens` generated, observed `latency_ns`,
+    /// against the deadline it was submitted with (`None` = no SLO —
+    /// counts as in-deadline, contributes to goodput). `ok = false`
+    /// (failed/rejected request) always counts as a miss: an error is
+    /// never goodput, deadline or not.
+    pub fn record_completion(
+        &self,
+        tenant: Option<&str>,
+        ok: bool,
+        latency_ns: u64,
+        deadline_ns: Option<u64>,
+        tokens: u64,
+    ) {
+        let met = ok && deadline_ns.map_or(true, |d| latency_ns <= d);
+        let mut g = self.inner.lock().unwrap();
+        let slo = g
+            .tenants
+            .entry(tenant.unwrap_or(UNTAGGED).to_string())
+            .or_default();
+        slo.completed += 1;
+        slo.tokens += tokens;
+        if met {
+            slo.in_deadline += 1;
+            slo.goodput_tokens += tokens;
+        }
+        metrics::counter("sched.health.completed")
+            .fetch_add(1, Ordering::Relaxed);
+        if met {
+            metrics::counter("sched.health.in_deadline")
+                .fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics::counter("sched.health.slo_miss")
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn drift_alarm(&self) -> bool {
+        self.inner.lock().unwrap().alarm
+    }
+
+    pub fn snapshot(&self) -> HealthSnapshot {
+        let g = self.inner.lock().unwrap();
+        HealthSnapshot {
+            phase: g.phase,
+            phase_name: g.phase_name.clone(),
+            alarm: g.alarm,
+            baseline_milli: g.baseline_milli,
+            last_window_milli: g.last_window_milli,
+            low_windows: g.low_windows,
+            tenants: g.tenants.clone(),
+        }
+    }
+
+    /// Stable JSON for the `{"health": true}` probe.
+    pub fn to_json(&self) -> String {
+        let s = self.snapshot();
+        let mut out = String::from("{\"schema\":\"dvi.health/1\"");
+        out.push_str(&format!(
+            ",\"drift\":{{\"phase\":{},\"phase_name\":\"{}\",\"alarm\":{},\
+             \"baseline_milli\":{},\"last_window_milli\":{},\
+             \"low_windows\":{}}}",
+            s.phase,
+            escape(&s.phase_name),
+            s.alarm,
+            opt(s.baseline_milli),
+            opt(s.last_window_milli),
+            s.low_windows,
+        ));
+        out.push_str(",\"tenants\":{");
+        for (i, (name, t)) in s.tenants.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"completed\":{},\"in_deadline\":{},\
+                 \"attainment_milli\":{},\"tokens\":{},\
+                 \"slo_goodput_tokens\":{}}}",
+                escape(name),
+                t.completed,
+                t.in_deadline,
+                t.attainment_milli(),
+                t.tokens,
+                t.goodput_tokens,
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// One-line operator summary for the periodic `serve` report.
+    pub fn report_line(&self) -> String {
+        let s = self.snapshot();
+        let (completed, in_deadline): (u64, u64) = s
+            .tenants
+            .values()
+            .fold((0, 0), |(c, d), t| (c + t.completed, d + t.in_deadline));
+        let attain = if completed == 0 {
+            1000
+        } else {
+            in_deadline * 1000 / completed
+        };
+        format!(
+            "health: phase={} slo={}/{} ({}.{}%) drift={}{}",
+            s.phase_name,
+            in_deadline,
+            completed,
+            attain / 10,
+            attain % 10,
+            if s.alarm { "ALARM" } else { "ok" },
+            match (s.alarm, s.baseline_milli, s.last_window_milli) {
+                (true, Some(b), Some(w)) =>
+                    format!(" (accept {w}‰ vs baseline {b}‰)"),
+                _ => String::new(),
+            },
+        )
+    }
+}
+
+impl Default for HealthMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn opt(v: Option<u64>) -> String {
+    v.map_or_else(|| "null".to_string(), |n| n.to_string())
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window: usize, drop_milli: u64, sustain: u32) -> DriftConfig {
+        DriftConfig { window, drop_milli, sustain }
+    }
+
+    #[test]
+    fn slo_ledger_counts_goodput_per_tenant() {
+        let h = HealthMonitor::with_config(cfg(4, 100, 3));
+        let ms = |n: u64| n * 1_000_000;
+        h.record_completion(Some("chat"), true, ms(40), Some(ms(50)), 10);
+        h.record_completion(Some("chat"), true, ms(90), Some(ms(50)), 10);
+        h.record_completion(Some("batch"), true, ms(900), Some(ms(1000)), 100);
+        h.record_completion(None, true, ms(10), None, 7); // no SLO: good
+        // A failure is never goodput, even without a deadline.
+        h.record_completion(Some("batch"), false, ms(1), None, 0);
+        let s = h.snapshot();
+        let chat = &s.tenants["chat"];
+        assert_eq!(
+            (chat.completed, chat.in_deadline, chat.tokens, chat.goodput_tokens),
+            (2, 1, 20, 10)
+        );
+        assert_eq!(chat.attainment_milli(), 500);
+        assert_eq!(s.tenants["batch"].attainment_milli(), 500);
+        assert_eq!(s.tenants["batch"].goodput_tokens, 100);
+        let untagged = &s.tenants[UNTAGGED];
+        assert_eq!((untagged.in_deadline, untagged.goodput_tokens), (1, 7));
+    }
+
+    #[test]
+    fn drift_alarm_needs_sustained_low_windows() {
+        let h = HealthMonitor::with_config(cfg(2, 100, 2));
+        // Two healthy windows: baseline settles at 800.
+        for _ in 0..4 {
+            h.record_accept(800);
+        }
+        assert!(!h.drift_alarm());
+        assert_eq!(h.snapshot().baseline_milli, Some(800));
+        // One low window is not an alarm...
+        h.record_accept(600);
+        h.record_accept(600);
+        assert!(!h.drift_alarm(), "one low window must not alarm");
+        // ...the second consecutive one is.
+        h.record_accept(600);
+        h.record_accept(600);
+        assert!(h.drift_alarm());
+        assert_eq!(
+            h.snapshot().baseline_milli,
+            Some(800),
+            "baseline must freeze through low windows, not chase the drop"
+        );
+        // Recovery clears the alarm.
+        h.record_accept(800);
+        h.record_accept(800);
+        assert!(!h.drift_alarm());
+    }
+
+    #[test]
+    fn phase_change_resets_instead_of_alarming() {
+        let h = HealthMonitor::with_config(cfg(2, 100, 1));
+        for _ in 0..4 {
+            h.record_accept(900);
+        }
+        // KL→RL hand-off: acceptance legitimately drops.
+        h.set_phase(2, "rl");
+        h.record_accept(600);
+        h.record_accept(600);
+        assert!(
+            !h.drift_alarm(),
+            "first window after a phase change seeds the new baseline"
+        );
+        let s = h.snapshot();
+        assert_eq!((s.phase, s.baseline_milli), (2, Some(600)));
+        assert_eq!(s.phase_name, "rl");
+    }
+
+    #[test]
+    fn json_is_parseable_and_carries_the_schema() {
+        let h = HealthMonitor::with_config(cfg(2, 100, 2));
+        h.record_completion(Some("a\"b"), true, 5, Some(3), 2);
+        let json = h.to_json();
+        let doc =
+            crate::util::json::Json::parse(&json).expect("health json parses");
+        assert_eq!(doc.get("schema").as_str(), Some("dvi.health/1"));
+        let t = doc.get("tenants").get("a\"b");
+        assert!(!t.is_null(), "escaped tenant key must survive");
+        assert_eq!(t.get("completed").as_f64(), Some(1.0));
+        assert_eq!(t.get("slo_goodput_tokens").as_f64(), Some(0.0));
+        assert_eq!(doc.get("drift").get("alarm").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn report_line_reads_like_an_operator_summary() {
+        let h = HealthMonitor::with_config(cfg(2, 100, 1));
+        h.record_completion(Some("chat"), true, 10, Some(20), 5);
+        h.record_completion(Some("chat"), true, 30, Some(20), 5);
+        let line = h.report_line();
+        assert!(line.contains("slo=1/2"), "got: {line}");
+        assert!(line.contains("drift=ok"), "got: {line}");
+    }
+}

@@ -310,27 +310,38 @@ impl Snapshot {
         }
     }
 
-    /// Derive fleet-wide aggregates from per-shard histograms: every
-    /// `<prefix>.s<digits><suffix>` family gains a merged
+    /// Derive fleet-wide aggregates from per-shard metric families:
+    /// every `<prefix>.s<digits><suffix>` histogram gains a merged
     /// `<prefix>.all<suffix>` entry (e.g. `rpc.verify_block.s0_ns` +
-    /// `rpc.verify_block.s1_ns` → `rpc.verify_block.all_ns`).
+    /// `rpc.verify_block.s1_ns` → `rpc.verify_block.all_ns`), and
+    /// per-shard counters (`rpc.errors.s0` + `rpc.errors.s1`) sum into
+    /// the same `.all` form — a flaky shard stays attributable while
+    /// dashboards keep one fleet-wide series.
     pub fn rollup_shards(&mut self) {
-        let mut agg: BTreeMap<String, HistSnapshot> = BTreeMap::new();
-        for (name, h) in &self.hists {
-            let Some((prefix, rest)) = name.rsplit_once(".s") else {
-                continue;
-            };
+        fn family_key(name: &str) -> Option<String> {
+            let (prefix, rest) = name.rsplit_once(".s")?;
             let digits_end =
                 rest.bytes().take_while(|b| b.is_ascii_digit()).count();
             if digits_end == 0 {
-                continue;
+                return None;
             }
             let suffix = &rest[digits_end..];
-            agg.entry(format!("{prefix}.all{suffix}"))
+            Some(format!("{prefix}.all{suffix}"))
+        }
+        let mut agg: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+        for (name, h) in &self.hists {
+            let Some(key) = family_key(name) else { continue };
+            agg.entry(key)
                 .and_modify(|a| a.merge(h))
                 .or_insert_with(|| h.clone());
         }
         self.hists.extend(agg);
+        let mut cagg: BTreeMap<String, u64> = BTreeMap::new();
+        for (name, v) in &self.counters {
+            let Some(key) = family_key(name) else { continue };
+            *cagg.entry(key).or_insert(0) += v;
+        }
+        self.counters.extend(cagg);
     }
 
     /// Stable JSON document: keys sorted (BTreeMap order), histograms
@@ -563,6 +574,22 @@ mod tests {
         assert_eq!(all.count, 3);
         assert_eq!(all.sum, 60);
         assert!(!s.hists.contains_key("sched.queue_wait_ns.all"));
+    }
+
+    /// Satellite regression: per-shard COUNTER families roll up too —
+    /// `rpc.errors.s0` + `rpc.errors.s1` → `rpc.errors.all` — with
+    /// unsuffixed counters untouched.
+    #[test]
+    fn shard_rollup_aggregates_counter_families() {
+        let r = Registry::new();
+        r.counter("rpc.errors.s0").fetch_add(2, Ordering::Relaxed);
+        r.counter("rpc.errors.s1").fetch_add(3, Ordering::Relaxed);
+        r.counter("sched.cache.hits").fetch_add(9, Ordering::Relaxed);
+        let mut s = r.snapshot();
+        s.rollup_shards();
+        assert_eq!(s.counters["rpc.errors.all"], 5);
+        assert_eq!(s.counters["rpc.errors.s0"], 2, "per-shard entry kept");
+        assert!(!s.counters.contains_key("sched.cache.hits.all"));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Observability layer: process-wide quantile metrics, structured
-//! event tracing, and Chrome-trace export.
+//! event tracing, Chrome-trace export, and serving health.
 //!
 //! * [`metrics`] — counters/gauges/log-bucket histograms behind a
 //!   named registry; snapshots are additive across shards and render
@@ -7,17 +7,23 @@
 //! * [`trace`] — bounded per-thread event rings with an explicit drop
 //!   counter; near-no-op unless `DVI_TRACE=1` (or forced on by
 //!   `serve --trace-out`).
-//! * [`chrome`] — Perfetto-loadable trace-event JSON export plus the
-//!   `dvi trace-summary` reduction.
+//! * [`chrome`] — Perfetto-loadable trace-event JSON export (local and
+//!   clock-aligned merged fleet documents) plus the `dvi trace-summary`
+//!   reduction and per-shard client/server/wire decomposition.
+//! * [`health`] — per-tenant latency-SLO attainment and the
+//!   acceptance-EMA drift detector behind the `{"health": true}` probe.
 //!
-//! Everything here is observation-only: with tracing and metrics on,
-//! every decode stream is bitwise identical to the uninstrumented run
-//! (asserted in `tests/obs.rs` and the `DVI_TRACE=1` CI lane).
+//! Everything here is observation-only: with tracing, collection, and
+//! health monitoring on, every decode stream is bitwise identical to
+//! the uninstrumented run (asserted in `tests/obs.rs` and the
+//! `DVI_TRACE=1` CI lane).
 
 pub mod chrome;
+pub mod health;
 pub mod metrics;
 pub mod trace;
 
 pub use chrome::TraceSink;
+pub use health::HealthMonitor;
 pub use metrics::{HistHandle, HistSnapshot, Registry, Snapshot};
-pub use trace::{Arg, Event};
+pub use trace::{Arg, Event, OwnedEvent};

@@ -48,6 +48,44 @@ pub struct Event {
     pub args: Vec<(&'static str, Arg)>,
 }
 
+/// An [`Event`] with owned strings and a signed timestamp: the shape a
+/// trace event takes once it has crossed a process boundary. Events
+/// decoded from a remote executor's `ObsDump` cannot borrow `&'static`
+/// names, and clock-aligning them onto the client's trace epoch can
+/// legitimately shift a timestamp below zero (an executor span that
+/// started before the client process's epoch), hence `ts_ns: i64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OwnedEvent {
+    pub name: String,
+    pub cat: String,
+    pub ph: char,
+    /// Nanoseconds on the *client's* trace epoch after alignment (or
+    /// the origin process's epoch before it).
+    pub ts_ns: i64,
+    pub dur_ns: u64,
+    pub tid: u64,
+    pub args: Vec<(String, Arg)>,
+}
+
+impl Event {
+    /// Owned copy, for export across a process boundary.
+    pub fn to_owned_event(&self) -> OwnedEvent {
+        OwnedEvent {
+            name: self.name.to_string(),
+            cat: self.cat.to_string(),
+            ph: self.ph,
+            ts_ns: self.ts_ns as i64,
+            dur_ns: self.dur_ns,
+            tid: self.tid,
+            args: self
+                .args
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        }
+    }
+}
+
 static DROPPED: AtomicU64 = AtomicU64::new(0);
 /// -1 = follow `DVI_TRACE`, 0 = forced off, 1 = forced on.
 static FORCED: AtomicI8 = AtomicI8::new(-1);

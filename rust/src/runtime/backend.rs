@@ -293,6 +293,15 @@ pub trait Backend: Send + Sync {
         Vec::new()
     }
 
+    /// Drain observability state (trace events + metrics snapshot) from
+    /// the remote executor(s) behind this backend: one clock-aligned
+    /// dump per shard. Empty for in-process backends — their events are
+    /// already in the local tracer ring. Destructive: each executor
+    /// event is returned exactly once across successive pulls.
+    fn obs_pull(&self) -> Result<Vec<crate::runtime::remote::ShardObs>> {
+        Ok(Vec::new())
+    }
+
     /// Fingerprint of the weights (and initial globals) this backend
     /// serves, used by the remote handshake so a sharded client can
     /// reject a fleet whose executors front divergent weights at

@@ -151,6 +151,10 @@ impl Backend for FlakyBackend {
         self.inner.weights_fingerprint()
     }
 
+    fn obs_pull(&self) -> Result<Vec<crate::runtime::remote::ShardObs>> {
+        self.inner.obs_pull()
+    }
+
     // `call_batched_submit` deliberately stays on the trait default:
     // it routes through this wrapper's `call_batched_partial`, so the
     // scheduler's submit path keeps the fault injection (at the cost of

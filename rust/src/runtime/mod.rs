@@ -602,6 +602,15 @@ impl Runtime {
         self.backend.executor_status()
     }
 
+    /// Drain trace events + metrics from the remote executor(s) behind
+    /// this runtime, one clock-aligned [`remote::ShardObs`] per shard
+    /// (empty for in-process backends — their events are already in the
+    /// local tracer ring). Destructive: each executor event is returned
+    /// exactly once across successive pulls.
+    pub fn obs_pull(&self) -> Result<Vec<remote::ShardObs>> {
+        self.backend.obs_pull()
+    }
+
     /// Fingerprint of the weights (and initial globals) this runtime's
     /// backend serves; carried in the executor handshake so sharded
     /// clients can reject fleets with divergent weights at connect

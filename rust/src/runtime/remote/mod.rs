@@ -93,6 +93,91 @@ use self::transport::{Connector, Transport};
 /// Dial attempts per call before giving up on a dead executor.
 pub const RECONNECT_ATTEMPTS: u32 = 3;
 
+/// Ping exchanges per clock-offset estimate (`DVI_CLOCK_PINGS` to
+/// override). More pings tighten the bound — the estimate keeps the
+/// minimum-RTT sample — at the cost of extra round trips; offsets are
+/// only estimated on demand (trace collection), never on the serving
+/// path.
+pub const DEFAULT_CLOCK_PINGS: usize = 8;
+
+fn env_clock_pings() -> usize {
+    std::env::var("DVI_CLOCK_PINGS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_CLOCK_PINGS)
+}
+
+/// Estimated alignment between this process's trace epoch and one
+/// executor's, from `ObsPull` ping exchanges: `client_ts ≈ server_ts +
+/// offset_ns`. Assuming a symmetric path, the server read its clock
+/// somewhere inside the ping's RTT, so the midpoint estimate is wrong
+/// by at most half the RTT — `uncertainty_ns`. Keeping the minimum-RTT
+/// sample across pings tightens that bound without any clock-rate
+/// modelling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClockOffset {
+    /// Add to an executor timestamp to land on the client's epoch.
+    pub offset_ns: i64,
+    /// Half the best ping's RTT: the worst-case error of `offset_ns`.
+    pub uncertainty_ns: u64,
+}
+
+/// One ping's estimate: the client sampled `t0`/`t1` around a reply
+/// carrying the executor clock `server_ns`; the midpoint is the best
+/// guess for when the server read its clock.
+fn offset_sample(t0_ns: u64, server_ns: u64, t1_ns: u64) -> ClockOffset {
+    let rtt = t1_ns.saturating_sub(t0_ns);
+    let mid = t0_ns as i64 + (rtt / 2) as i64;
+    ClockOffset {
+        offset_ns: mid - server_ns as i64,
+        uncertainty_ns: rtt / 2,
+    }
+}
+
+/// One executor's drained observability state
+/// ([`RemoteBackend::obs_pull`]): trace events still on the
+/// *executor's* clock, its ring-drop counter, a metrics snapshot
+/// (JSON), and the clock offset needed to align it all onto the
+/// client's epoch.
+pub struct ShardObs {
+    pub shard: u32,
+    pub endpoint: String,
+    pub offset: ClockOffset,
+    /// Executor-side ring overflow (events lost before the pull).
+    pub dropped: u64,
+    pub events: Vec<trace::OwnedEvent>,
+    /// `Snapshot::to_json()` of the executor's metrics registry.
+    pub metrics_json: String,
+}
+
+impl ShardObs {
+    /// Package as a merged-trace process track: timestamps shifted onto
+    /// the client epoch (may go negative for spans predating the
+    /// client's start) and a `shard` arg injected on every event so the
+    /// client/server/wire decomposition can pair `rpc.call` ↔ `exec`
+    /// spans by `(shard, id)`.
+    pub fn into_track(mut self) -> crate::obs::chrome::ProcessTrack {
+        let shard = self.shard;
+        for ev in &mut self.events {
+            ev.ts_ns += self.offset.offset_ns;
+            // Don't overwrite an existing tag: a loopback executor's
+            // dump can carry client-side spans (shared rings) that
+            // already know their true shard.
+            if !ev.args.iter().any(|(k, _)| k == "shard") {
+                ev.args
+                    .push(("shard".to_string(), trace::Arg::I(shard as i64)));
+            }
+        }
+        crate::obs::chrome::ProcessTrack {
+            pid: crate::obs::chrome::shard_pid(shard),
+            label: format!("executor s{shard} ({})", self.endpoint),
+            events: self.events,
+            dropped: self.dropped,
+        }
+    }
+}
+
 /// Mint a process-unique session id: time entropy (distinct across
 /// processes sharing an executor) mixed with a counter (distinct across
 /// backends within one process).
@@ -176,6 +261,9 @@ fn finish(reply: Result<Reply>) -> Result<Reply> {
 struct ConnSlot {
     live: Option<Arc<MuxConn>>,
     zombie: Option<Arc<MuxConn>>,
+    /// Cached clock alignment for this executor (estimated on demand by
+    /// [`RemoteBackend::clock_offset`]; cleared only with the slot).
+    offset: Option<ClockOffset>,
 }
 
 /// Completion handle for one submitted lane call
@@ -205,7 +293,11 @@ impl LanesFuture {
         let LanesFuture { spec_name, n, shard, freelist, frees, sub, t0_ns, occ } =
             self;
         let all_err = |msg: String| -> Vec<Result<CallOut>> {
-            metrics::counter("rpc.errors").fetch_add(1, Ordering::Relaxed);
+            // Per-shard family: `metrics::rollup_shards` re-derives the
+            // fleet total as `rpc.errors.all`, so one flapping executor
+            // is attributable without losing the old aggregate view.
+            metrics::counter(&format!("rpc.errors.s{shard}"))
+                .fetch_add(1, Ordering::Relaxed);
             (0..n).map(|_| Err(anyhow!("{spec_name}: {msg}"))).collect()
         };
         let requeue = |frees: Vec<u64>| {
@@ -553,6 +645,61 @@ impl RemoteBackend {
         Ok(m)
     }
 
+    /// The cached clock alignment for this executor, estimating it
+    /// first if no estimate exists yet. Estimation costs
+    /// `DVI_CLOCK_PINGS` round trips, so it runs on demand (trace
+    /// collection), never on the serving path.
+    pub fn clock_offset(&self) -> Result<ClockOffset> {
+        if let Some(off) = self.conn.lock().unwrap().offset {
+            return Ok(off);
+        }
+        self.estimate_clock_offset()
+    }
+
+    /// Run the ping exchanges now and cache the result, replacing any
+    /// prior estimate (`dvi trace-collect` re-estimates per pull so a
+    /// long-lived fleet doesn't serve stale alignments).
+    pub fn estimate_clock_offset(&self) -> Result<ClockOffset> {
+        let mut best: Option<ClockOffset> = None;
+        for _ in 0..env_clock_pings() {
+            let t0 = trace::now_ns();
+            let reply = self.roundtrip(&Msg::ObsPull { drain: false })?;
+            let t1 = trace::now_ns();
+            let server_ns = match reply {
+                Reply::ObsDump { now_ns, .. } => now_ns,
+                _ => bail!("unexpected reply to clock ping"),
+            };
+            let est = offset_sample(t0, server_ns, t1);
+            if best.map_or(true, |b| est.uncertainty_ns < b.uncertainty_ns) {
+                best = Some(est);
+            }
+        }
+        let best = best.expect("DVI_CLOCK_PINGS >= 1");
+        self.conn.lock().unwrap().offset = Some(best);
+        Ok(best)
+    }
+
+    /// Drain this executor's trace ring and metrics snapshot
+    /// (destructive: each event is returned exactly once across pulls),
+    /// re-estimating the clock alignment alongside so the events can be
+    /// shifted onto the client epoch via [`ShardObs::into_track`].
+    pub fn obs_pull(&self) -> Result<ShardObs> {
+        let offset = self.estimate_clock_offset()?;
+        match self.roundtrip(&Msg::ObsPull { drain: true })? {
+            Reply::ObsDump { dropped, events, metrics_json, .. } => {
+                Ok(ShardObs {
+                    shard: self.shard,
+                    endpoint: self.endpoint(),
+                    offset,
+                    dropped,
+                    events,
+                    metrics_json,
+                })
+            }
+            _ => bail!("unexpected reply to obs_pull"),
+        }
+    }
+
     fn drain_frees(&self) -> Vec<u64> {
         std::mem::take(&mut *self.freelist.lock().unwrap())
     }
@@ -749,5 +896,75 @@ impl Backend for RemoteBackend {
     fn weights_fingerprint(&self) -> Option<u64> {
         let h = self.expected_hash.load(Ordering::Relaxed);
         (h != 0).then_some(h)
+    }
+
+    fn obs_pull(&self) -> Result<Vec<ShardObs>> {
+        RemoteBackend::obs_pull(self).map(|obs| vec![obs])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offset_sample_midpoint_and_uncertainty() {
+        // Client pings at t0=1000, reply lands at t1=3000 (RTT 2000),
+        // server clock read 500_000: best guess is the server read its
+        // clock at the midpoint 2000, so client ≈ server − 498_000,
+        // wrong by at most half the RTT.
+        let est = offset_sample(1000, 500_000, 3000);
+        assert_eq!(est.offset_ns, 2000 - 500_000);
+        assert_eq!(est.uncertainty_ns, 1000);
+
+        // Server clock behind the client: positive offset.
+        let est = offset_sample(10_000, 2_000, 10_400);
+        assert_eq!(est.offset_ns, 10_200 - 2_000);
+        assert_eq!(est.uncertainty_ns, 200);
+
+        // The true offset always lies within ±uncertainty of the
+        // estimate: with true offset D and server read at any point
+        // s ∈ [t0, t1] on the client clock, server_ns = s − D, so
+        // est = mid − s + D and |est − D| = |mid − s| ≤ RTT/2.
+        let (true_offset, t0, t1) = (-7_000i64, 5_000u64, 6_000u64);
+        for s in [t0, t0 + 250, t0 + 500, t1] {
+            let server_ns = (s as i64 - true_offset) as u64;
+            let est = offset_sample(t0, server_ns, t1);
+            assert!(
+                (est.offset_ns - true_offset).unsigned_abs()
+                    <= est.uncertainty_ns,
+                "sample at s={s} missed: est {est:?} vs true {true_offset}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_obs_track_aligns_and_tags_events() {
+        let obs = ShardObs {
+            shard: 3,
+            endpoint: "loopback".to_string(),
+            offset: ClockOffset { offset_ns: -600, uncertainty_ns: 40 },
+            dropped: 9,
+            events: vec![trace::OwnedEvent {
+                name: "exec".to_string(),
+                cat: "exec".to_string(),
+                ph: 'X',
+                ts_ns: 100,
+                dur_ns: 50,
+                tid: 1,
+                args: vec![("id".to_string(), trace::Arg::I(12))],
+            }],
+            metrics_json: String::new(),
+        };
+        let track = obs.into_track();
+        assert_eq!(track.pid, crate::obs::chrome::shard_pid(3));
+        assert!(track.label.contains("s3"));
+        assert_eq!(track.dropped, 9);
+        let ev = &track.events[0];
+        assert_eq!(ev.ts_ns, -500, "alignment may shift below zero");
+        assert!(
+            ev.args.contains(&("shard".to_string(), trace::Arg::I(3))),
+            "shard arg must be injected for decomposition pairing"
+        );
     }
 }

@@ -1,5 +1,5 @@
 //! Dependency-free length-prefixed wire protocol for the remote
-//! executor (`DVIR` v4, pipelined: v3 framing + `ForkKv`).
+//! executor (`DVIR` v5, pipelined: v3 framing + `ForkKv` + `ObsPull`).
 //!
 //! Every message is one frame: a `u32` little-endian payload length
 //! followed by the payload; the payload's first byte is an opcode tag.
@@ -51,11 +51,21 @@
 //! * `Metrics` — executor-side occupancy counters ([`ExecMetrics`]:
 //!   calls/lanes served, buffer-table size, live sessions), so a client
 //!   router can expose remote executor health next to its own stats.
+//! * `ObsPull` (v5) — fleet trace collection. With `drain: false` it is
+//!   a lightweight clock ping: the `ObsDump` reply carries only the
+//!   executor's trace-epoch `now_ns`, which the client's offset
+//!   estimator midpoints against its own send/receive stamps. With
+//!   `drain: true` the reply additionally drains the executor's
+//!   trace-event rings (as owned [`OwnedEvent`]s — `exec` spans carry
+//!   their call id, the cross-process correlation key) and snapshots
+//!   its metrics registry as JSON, so `dvi trace-collect` can merge
+//!   per-shard executor timelines with the client trace.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::obs::trace::{Arg as TraceArg, OwnedEvent};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::{DType, Tensor, TensorData};
 use crate::util::json::Json;
@@ -68,13 +78,16 @@ use crate::workload::{PromptSample, PromptSet};
 /// weights fingerprint.
 /// v4: `ForkKv` added — copy-on-write aliasing of server-resident KV
 /// buffers under the caller's session (prefix-cache attach).
+/// v5: `ObsPull` / `ObsDump` added — clock pings and remote drains of
+/// the executor's trace rings + metrics snapshot (fleet trace
+/// collection).
 ///
 /// The `Hello` request's wire layout is **stable across versions**, so
 /// the version check happens in-band: a mismatched peer gets a clean
 /// `Reply::Err` naming both versions, before any tagged frame is
 /// exchanged. Everything after the handshake is version-specific and
 /// never reached by a rejected peer.
-pub const VERSION: u32 = 4;
+pub const VERSION: u32 = 5;
 
 /// Upper bound on a single frame, guarding a corrupted length prefix.
 pub const MAX_FRAME: usize = 256 << 20;
@@ -113,6 +126,7 @@ const OP_RESET_GLOBAL: u8 = 8;
 const OP_FREE: u8 = 9;
 const OP_METRICS: u8 = 10;
 const OP_FORK_KV: u8 = 11;
+const OP_OBS_PULL: u8 = 12;
 const RE_HELLO: u8 = 128;
 const RE_LANES: u8 = 129;
 const RE_BUFFERS: u8 = 130;
@@ -120,6 +134,7 @@ const RE_TENSOR: u8 = 131;
 const RE_UNIT: u8 = 132;
 const RE_ERR: u8 = 133;
 const RE_METRICS: u8 = 134;
+const RE_OBS_DUMP: u8 = 135;
 
 /// Server-side buffer descriptor: the id plus the host-visible
 /// dtype/shape the client needs to rehydrate a handle.
@@ -172,6 +187,11 @@ pub enum Msg {
     ResetGlobal { name: String },
     Free { ids: Vec<u64> },
     Metrics,
+    /// Fleet trace collection (v5). `drain: false` is a clock ping —
+    /// the reply carries only the executor's trace-epoch `now_ns`.
+    /// `drain: true` additionally collect-and-clears the executor's
+    /// trace rings and snapshots its metrics registry.
+    ObsPull { drain: bool },
 }
 
 /// Server → client messages.
@@ -187,6 +207,18 @@ pub enum Reply {
     Unit,
     Err(String),
     Metrics(ExecMetrics),
+    /// Reply to [`Msg::ObsPull`]. `now_ns` is the executor's
+    /// trace-epoch clock at execution time (the offset estimator's
+    /// server stamp). For drains, `events` holds the collected trace
+    /// events (empty for clock pings), `dropped` the executor's
+    /// ring-overflow total, and `metrics_json` its registry snapshot
+    /// (empty string for pings).
+    ObsDump {
+        now_ns: u64,
+        dropped: u64,
+        events: Vec<OwnedEvent>,
+        metrics_json: String,
+    },
 }
 
 // ----------------------------------------------------------------------------
@@ -262,6 +294,44 @@ impl Enc {
         self.u32(bs.len() as u32);
         for b in bs {
             self.buf_info(b);
+        }
+    }
+
+    fn trace_arg(&mut self, v: &TraceArg) {
+        match v {
+            TraceArg::I(n) => {
+                self.u8(0);
+                self.u64(*n as u64);
+            }
+            TraceArg::F(f) => {
+                self.u8(1);
+                self.u64(f.to_bits());
+            }
+            TraceArg::S(s) => {
+                self.u8(2);
+                self.str(s);
+            }
+        }
+    }
+
+    fn owned_event(&mut self, ev: &OwnedEvent) {
+        self.str(&ev.name);
+        self.str(&ev.cat);
+        self.u8(ev.ph as u8);
+        self.u64(ev.ts_ns as u64);
+        self.u64(ev.dur_ns);
+        self.u64(ev.tid);
+        self.u32(ev.args.len() as u32);
+        for (k, v) in &ev.args {
+            self.str(k);
+            self.trace_arg(v);
+        }
+    }
+
+    fn owned_events(&mut self, evs: &[OwnedEvent]) {
+        self.u32(evs.len() as u32);
+        for ev in evs {
+            self.owned_event(ev);
         }
     }
 }
@@ -382,6 +452,37 @@ impl<'a> Dec<'a> {
         (0..n).map(|_| self.buf_info()).collect()
     }
 
+    fn trace_arg(&mut self) -> Result<TraceArg> {
+        Ok(match self.u8()? {
+            0 => TraceArg::I(self.u64()? as i64),
+            1 => TraceArg::F(f64::from_bits(self.u64()?)),
+            2 => TraceArg::S(self.str()?),
+            code => bail!("unknown trace-arg code {code}"),
+        })
+    }
+
+    fn owned_event(&mut self) -> Result<OwnedEvent> {
+        let name = self.str()?;
+        let cat = self.str()?;
+        let ph = self.u8()? as char;
+        let ts_ns = self.u64()? as i64;
+        let dur_ns = self.u64()?;
+        let tid = self.u64()?;
+        // key len (4) + value tag (1) is the smallest argument.
+        let n = self.len(5)?;
+        let args = (0..n)
+            .map(|_| Ok((self.str()?, self.trace_arg()?)))
+            .collect::<Result<_>>()?;
+        Ok(OwnedEvent { name, cat, ph, ts_ns, dur_ns, tid, args })
+    }
+
+    fn owned_events(&mut self) -> Result<Vec<OwnedEvent>> {
+        // name len (4) + cat len (4) + ph (1) + ts (8) + dur (8) +
+        // tid (8) + args count (4) is the smallest event.
+        let n = self.len(37)?;
+        (0..n).map(|_| self.owned_event()).collect()
+    }
+
     fn finish(self) -> Result<()> {
         ensure!(
             self.i == self.b.len(),
@@ -468,6 +569,10 @@ impl Msg {
                 e.ids(ids);
             }
             Msg::Metrics => e.u8(OP_METRICS),
+            Msg::ObsPull { drain } => {
+                e.u8(OP_OBS_PULL);
+                e.u8(*drain as u8);
+            }
         }
     }
 
@@ -507,6 +612,7 @@ impl Msg {
             OP_RESET_GLOBAL => Msg::ResetGlobal { name: d.str()? },
             OP_FREE => Msg::Free { ids: d.ids()? },
             OP_METRICS => Msg::Metrics,
+            OP_OBS_PULL => Msg::ObsPull { drain: d.u8()? != 0 },
             op => bail!("unknown request opcode {op}"),
         };
         d.finish()?;
@@ -575,6 +681,13 @@ impl Reply {
                 e.u64(m.buffers);
                 e.u64(m.sessions);
             }
+            Reply::ObsDump { now_ns, dropped, events, metrics_json } => {
+                e.u8(RE_OBS_DUMP);
+                e.u64(*now_ns);
+                e.u64(*dropped);
+                e.owned_events(events);
+                e.str(metrics_json);
+            }
         }
     }
 
@@ -615,6 +728,12 @@ impl Reply {
                 sessions: d.u64()?,
                 ..ExecMetrics::default()
             }),
+            RE_OBS_DUMP => Reply::ObsDump {
+                now_ns: d.u64()?,
+                dropped: d.u64()?,
+                events: d.owned_events()?,
+                metrics_json: d.str()?,
+            },
             op => bail!("unknown reply opcode {op}"),
         };
         d.finish()?;
@@ -782,6 +901,8 @@ mod tests {
         roundtrip_msg(Msg::ResetGlobal { name: "adam.mA".into() });
         roundtrip_msg(Msg::Free { ids: vec![7] });
         roundtrip_msg(Msg::Metrics);
+        roundtrip_msg(Msg::ObsPull { drain: false });
+        roundtrip_msg(Msg::ObsPull { drain: true });
     }
 
     #[test]
@@ -815,6 +936,76 @@ mod tests {
             sessions: 2,
             ..ExecMetrics::default()
         }));
+        // Clock-ping form: no events, no metrics document.
+        roundtrip_reply(Reply::ObsDump {
+            now_ns: 123_456_789,
+            dropped: 0,
+            events: vec![],
+            metrics_json: String::new(),
+        });
+        // Drain form: owned events with every arg kind, including a
+        // negative-integer arg and an exact float payload.
+        roundtrip_reply(Reply::ObsDump {
+            now_ns: u64::MAX / 3,
+            dropped: 17,
+            events: vec![
+                OwnedEvent {
+                    name: "exec".into(),
+                    cat: "exec".into(),
+                    ph: 'X',
+                    ts_ns: 1_000_000,
+                    dur_ns: 42_000,
+                    tid: 3,
+                    args: vec![
+                        ("op".into(), TraceArg::S("call".into())),
+                        ("id".into(), TraceArg::I(-1)),
+                        ("ema".into(), TraceArg::F(0.1 + 0.2)),
+                    ],
+                },
+                OwnedEvent {
+                    name: "mark".into(),
+                    cat: "exec".into(),
+                    ph: 'i',
+                    ts_ns: -5,
+                    dur_ns: 0,
+                    tid: 1,
+                    args: vec![],
+                },
+            ],
+            metrics_json: "{\"counters\":{}}".into(),
+        });
+    }
+
+    #[test]
+    fn obs_dump_rejects_garbage_events() {
+        // Bad trace-arg code inside an otherwise valid event.
+        let good = Reply::ObsDump {
+            now_ns: 1,
+            dropped: 0,
+            events: vec![OwnedEvent {
+                name: "e".into(),
+                cat: "c".into(),
+                ph: 'X',
+                ts_ns: 0,
+                dur_ns: 0,
+                tid: 0,
+                args: vec![("k".into(), TraceArg::I(9))],
+            }],
+            metrics_json: String::new(),
+        };
+        let mut enc = good.encode();
+        // The arg-kind tag is 9 bytes from the end (tag + u64 payload);
+        // stomp it with an invalid code.
+        let n = enc.len();
+        // layout tail: ... args: key("k") tag(0) u64(9) metrics_json len(4)
+        enc[n - 4 - 8 - 1] = 250;
+        assert!(Reply::decode(&enc).is_err());
+        // Implausible event count must error before allocating.
+        let mut e = vec![RE_OBS_DUMP];
+        e.extend_from_slice(&1u64.to_le_bytes());
+        e.extend_from_slice(&0u64.to_le_bytes());
+        e.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Reply::decode(&e).is_err());
     }
 
     #[test]

@@ -245,6 +245,7 @@ fn opcode(msg: &Msg) -> &'static str {
         Msg::ResetGlobal { .. } => "reset_global",
         Msg::Free { .. } => "free",
         Msg::Metrics => "metrics",
+        Msg::ObsPull { .. } => "obs_pull",
     }
 }
 
@@ -357,6 +358,30 @@ fn execute(
             Ok(Reply::Unit)
         }
         Msg::Metrics => Ok(Reply::Metrics(state.metrics())),
+        Msg::ObsPull { drain } => {
+            // drain=false is the clock ping: the reply carries only the
+            // executor's trace-epoch clock (plus the running drop
+            // counter, which is free). drain=true additionally hands
+            // over the buffered trace events and a metrics snapshot.
+            // Draining is destructive by design — each collector pull
+            // sees every event exactly once — and never *emits*, so
+            // the losslessness guarantee is untouched.
+            let (events, metrics_json) = if drain {
+                let events: Vec<_> = trace::drain()
+                    .iter()
+                    .map(trace::Event::to_owned_event)
+                    .collect();
+                (events, metrics::global().snapshot().to_json())
+            } else {
+                (Vec::new(), String::new())
+            };
+            Ok(Reply::ObsDump {
+                now_ns: trace::now_ns(),
+                dropped: trace::drop_count(),
+                events,
+                metrics_json,
+            })
+        }
     }
 }
 
@@ -489,10 +514,15 @@ pub fn serve_connection(
                                     .observe(exec_ns);
                             }
                             if trace::enabled() {
-                                let mut args = vec![(
-                                    "op",
-                                    trace::Arg::S(op.to_string()),
-                                )];
+                                // The call id doubles as the cross-
+                                // process correlation key: the client's
+                                // `rpc.call` span for this request
+                                // carries the same id, so a merged
+                                // fleet trace can pair them.
+                                let mut args = vec![
+                                    ("op", trace::Arg::S(op.to_string())),
+                                    ("id", trace::Arg::I(id as i64)),
+                                ];
                                 if let Some(a) = artifact {
                                     args.push((
                                         "artifact",

@@ -79,7 +79,7 @@ use crate::runtime::tensor::{DType, Tensor, TensorData};
 
 use super::proto::{HelloInfo, Lane, Msg, Reply};
 use super::transport::Connector;
-use super::{LanesFuture, RemoteBackend};
+use super::{LanesFuture, RemoteBackend, ShardObs};
 
 /// Pure placement function: which shard owns the KV of a sequence with
 /// this placement key. Deliberately the identity modulo — sequential
@@ -164,6 +164,25 @@ impl ShardedRemoteBackend {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Drain every executor's trace ring and metrics snapshot, one
+    /// [`ShardObs`] per shard in shard order. Sequential on purpose:
+    /// each pull re-estimates that shard's clock offset with
+    /// `DVI_CLOCK_PINGS` serial ping exchanges, and interleaving pings
+    /// across shards would inflate every RTT (and thus every alignment
+    /// uncertainty) with cross-shard queueing. Collection is a
+    /// diagnostic path, not a serving path.
+    pub fn obs_pull_all(&self) -> Result<Vec<ShardObs>> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, be)| {
+                be.obs_pull().with_context(|| {
+                    format!("draining observability from shard {i}")
+                })
+            })
+            .collect()
     }
 
     /// The shard owning a lane's KV set; every buffer in the lane must
@@ -520,6 +539,10 @@ impl Backend for ShardedRemoteBackend {
         // Connect-time checking guarantees the fleet agrees; shard 0
         // speaks for it.
         self.shards[0].weights_fingerprint()
+    }
+
+    fn obs_pull(&self) -> Result<Vec<ShardObs>> {
+        self.obs_pull_all()
     }
 }
 

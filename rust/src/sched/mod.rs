@@ -45,6 +45,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::cache::{CacheStats, PrefixCache, SegRef};
 use crate::engine::GenResult;
 use crate::learner::ReplayBuffer;
+use crate::obs::health::HealthMonitor;
 use crate::obs::{metrics, trace};
 use crate::runtime::{log, BatchHandle, BatchItem, Role, Runtime};
 
@@ -271,6 +272,9 @@ struct Pending {
     submitted: Instant,
     /// Workload label for per-task acceptance priors (None = untagged).
     task: Option<String>,
+    /// Latency SLO for this request (submit → completion budget, ns);
+    /// observation-only — admission and scheduling never look at it.
+    deadline_ns: Option<u64>,
 }
 
 struct Lane {
@@ -290,6 +294,7 @@ struct Lane {
     /// cross-checks pins against the tree's refcounts.
     cache_ref: Option<SegRef>,
     task: Option<String>,
+    deadline_ns: Option<u64>,
 }
 
 /// A completed sequence, in completion order.
@@ -320,6 +325,11 @@ pub struct Scheduler {
     /// Cached `sched.queue_wait_ns` histogram handle (observation-only;
     /// recording never influences admission or call construction).
     m_queue_wait: metrics::HistHandle,
+    /// Serving-health monitor (SLO attainment + acceptance drift).
+    /// Observation-only: recording never influences admission, chunk
+    /// planning, or call construction, so attaching it keeps committed
+    /// streams bitwise identical (gated in `tests/obs.rs`).
+    health: Option<Arc<HealthMonitor>>,
 }
 
 impl Scheduler {
@@ -379,7 +389,15 @@ impl Scheduler {
             cache,
             kv_row_bytes,
             m_queue_wait: metrics::hist("sched.queue_wait_ns"),
+            health: None,
         })
+    }
+
+    /// Attach the shared serving-health monitor: every completion from
+    /// here on is scored against its deadline, and each verified
+    /// round's acceptance EMA feeds the drift detector.
+    pub fn attach_health(&mut self, health: Arc<HealthMonitor>) {
+        self.health = Some(health);
     }
 
     /// Enqueue a request; returns its scheduler-local id (also carried
@@ -397,7 +415,7 @@ impl Scheduler {
         max_new: usize,
         submitted: Instant,
     ) -> u64 {
-        self.push_pending(prompt, max_new, None, submitted)
+        self.push_pending(prompt, max_new, None, submitted, None)
     }
 
     /// [`Scheduler::submit`] with a workload label. The sequence seeds
@@ -427,7 +445,36 @@ impl Scheduler {
         task: &str,
         submitted: Instant,
     ) -> u64 {
-        self.push_pending(prompt, max_new, Some(task.to_string()), submitted)
+        self.submit_with_deadline(
+            prompt,
+            max_new,
+            Some(task),
+            submitted,
+            None,
+        )
+    }
+
+    /// The fully general submit: optional task tag plus an optional
+    /// latency SLO (`deadline_ns`, measured submit → completion). The
+    /// deadline rides along untouched until the request finishes, where
+    /// the attached [`HealthMonitor`] scores it — per-tenant attainment
+    /// and SLO goodput. Scheduling itself never reads it: deadlines
+    /// observe, they do not prioritize (admission stays strictly FIFO).
+    pub fn submit_with_deadline(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        task: Option<&str>,
+        submitted: Instant,
+        deadline_ns: Option<u64>,
+    ) -> u64 {
+        self.push_pending(
+            prompt,
+            max_new,
+            task.map(str::to_string),
+            submitted,
+            deadline_ns,
+        )
     }
 
     fn push_pending(
@@ -436,10 +483,18 @@ impl Scheduler {
         max_new: usize,
         task: Option<String>,
         submitted: Instant,
+        deadline_ns: Option<u64>,
     ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Pending { id, prompt, max_new, submitted, task });
+        self.queue.push_back(Pending {
+            id,
+            prompt,
+            max_new,
+            submitted,
+            task,
+            deadline_ns,
+        });
         id
     }
 
@@ -477,6 +532,15 @@ impl Scheduler {
         if let Some(mut lane) = self.slots[slot].take() {
             Self::release_pin(&mut self.cache, &mut lane.cache_ref);
             log::info(&format!("scheduled sequence {} failed: {err}", lane.id));
+            if let Some(h) = &self.health {
+                h.record_completion(
+                    lane.task.as_deref(),
+                    false,
+                    lane.submitted.elapsed().as_nanos() as u64,
+                    lane.deadline_ns,
+                    0,
+                );
+            }
             self.stats.served.fetch_add(1, Ordering::Relaxed);
             self.stats.failed.fetch_add(1, Ordering::Relaxed);
             self.stats
@@ -531,6 +595,9 @@ impl Scheduler {
                 .ema_milli_sum
                 .fetch_add((ema * 1000.0).round() as u64, Ordering::Relaxed);
             self.stats.ema_rounds.fetch_add(1, Ordering::Relaxed);
+            if let Some(h) = &self.health {
+                h.record_accept((ema * 1000.0).round() as u64);
+            }
         }
     }
 
@@ -685,6 +752,7 @@ impl Scheduler {
                         first_commit_ns: None,
                         cache_ref: pin,
                         task: p.task,
+                        deadline_ns: p.deadline_ns,
                     });
                 }
                 Err(e) => {
@@ -693,6 +761,15 @@ impl Scheduler {
                     // sequence that never made it to a lane still owned a
                     // pin — drop it here or the segment leaks.
                     Self::release_pin(&mut self.cache, &mut pin);
+                    if let Some(h) = &self.health {
+                        h.record_completion(
+                            p.task.as_deref(),
+                            false,
+                            queue_wait_ns,
+                            p.deadline_ns,
+                            0,
+                        );
+                    }
                     self.stats.served.fetch_add(1, Ordering::Relaxed);
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     self.stats
@@ -901,11 +978,21 @@ impl Scheduler {
                 self.stats
                     .queue_wait_ns
                     .fetch_add(lane.queue_wait_ns, Ordering::Relaxed);
+                let result = lane.state.into_result();
+                if let Some(h) = &self.health {
+                    h.record_completion(
+                        lane.task.as_deref(),
+                        true,
+                        lane.submitted.elapsed().as_nanos() as u64,
+                        lane.deadline_ns,
+                        result.tokens.len() as u64,
+                    );
+                }
                 self.done.push(SchedResult {
                     id: lane.id,
                     queue_wait_ns: lane.queue_wait_ns,
                     ttft_ns: lane.first_commit_ns,
-                    result: Ok(lane.state.into_result()),
+                    result: Ok(result),
                 });
             }
         }
@@ -1046,6 +1133,68 @@ mod tests {
     fn prompts(rt: &Runtime, n: usize) -> Vec<Vec<u32>> {
         let set = rt.synthetic_prompts("qa").expect("qa prompts");
         set.samples.iter().take(n).map(|s| s.prompt.clone()).collect()
+    }
+
+    /// Deadlines ride `submit_with_deadline` untouched and the attached
+    /// [`HealthMonitor`] scores each completion per tenant: a backdated
+    /// request whose deadline already passed is a miss (tokens counted,
+    /// zero goodput), a generous deadline is pure goodput.
+    #[test]
+    fn deadlines_feed_the_health_monitor_per_tenant() {
+        let rt = runtime();
+        let cfg = SchedConfig {
+            method: "dvi".into(),
+            max_batch: 2,
+            max_slots: 2,
+            adaptive: None,
+            cache: None,
+        };
+        let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+        let health = Arc::new(HealthMonitor::with_config(
+            crate::obs::health::DriftConfig {
+                window: 4,
+                drop_milli: 100,
+                sustain: 2,
+            },
+        ));
+        sched.attach_health(health.clone());
+        let backdated = Instant::now()
+            .checked_sub(Duration::from_millis(50))
+            .expect("monotonic clock supports a 50ms backdate");
+        let ps = prompts(&rt, 2);
+        // 1ms budget, submitted 50ms ago: missed before it was admitted.
+        sched.submit_with_deadline(
+            ps[0].clone(),
+            4,
+            Some("strict"),
+            backdated,
+            Some(1_000_000),
+        );
+        // One-hour budget: cannot miss.
+        sched.submit_with_deadline(
+            ps[1].clone(),
+            4,
+            Some("lax"),
+            backdated,
+            Some(3_600_000_000_000),
+        );
+        sched.run_until_idle(10_000).unwrap();
+        let done = sched.drain_completed();
+        assert_eq!(done.len(), 2);
+        let tokens_of = |id: u64| -> u64 {
+            let r = done.iter().find(|r| r.id == id).expect("result by id");
+            r.result.as_ref().expect("sequence completed").tokens.len() as u64
+        };
+        let s = health.snapshot();
+        let strict = &s.tenants["strict"];
+        assert_eq!((strict.completed, strict.in_deadline), (1, 0));
+        assert_eq!(strict.tokens, tokens_of(0));
+        assert_eq!(strict.goodput_tokens, 0, "missed deadline is not goodput");
+        assert_eq!(strict.attainment_milli(), 0);
+        let lax = &s.tenants["lax"];
+        assert_eq!((lax.completed, lax.in_deadline), (1, 1));
+        assert_eq!(lax.goodput_tokens, tokens_of(1));
+        assert_eq!(lax.attainment_milli(), 1000);
     }
 
     /// Regression (open-loop bugfix): `submit_tagged_at` must honor the

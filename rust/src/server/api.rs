@@ -8,6 +8,12 @@
 //!   <- {"served": 12, "tokens": 384, ..., "k_hist": [0,3,1,0,9,0,0,0,0]}
 //!   -> {"metrics": true}
 //!   <- {"metrics": {"hists": {"sched.queue_wait_ns": {"p50": ..}}}, ...}
+//!   -> {"health": true}
+//!   <- {"schema": "dvi.health/1", "drift": {...}, "tenants": {...}}
+//!
+//! Generation requests may carry `"task"` (tenant tag for the health
+//! monitor's per-tenant SLO ledger) and `"slo_ms"` (per-request latency
+//! deadline; falls back to the `DVI_SLO_MS` fleet default).
 //!
 //! Designed for the `dvi serve` subcommand and the serving example; the
 //! protocol stays trivially scriptable (`nc localhost 7501`).
@@ -114,7 +120,8 @@ fn handle_conn(stream: TcpStream, router: &Router, tok: &Tokenizer) -> Result<()
         // Stats probe: {"stats": true} returns the serving snapshot
         // (router counters, scheduler metrics, adaptive-k histogram)
         // without consuming a generation.
-        if let Ok(j) = Json::parse(&line) {
+        let j = Json::parse(&line).ok();
+        if let Some(j) = &j {
             if j.get("stats").as_bool() == Some(true) {
                 writeln!(writer, "{}", router.stats_json())?;
                 continue;
@@ -126,10 +133,31 @@ fn handle_conn(stream: TcpStream, router: &Router, tok: &Tokenizer) -> Result<()
                 writeln!(writer, "{}", router.metrics_json())?;
                 continue;
             }
+            // Health probe: {"health": true} returns per-tenant SLO
+            // attainment and the acceptance drift detector's state.
+            if j.get("health").as_bool() == Some(true) {
+                writeln!(writer, "{}", router.health_json())?;
+                continue;
+            }
         }
         match parse_request(&line, tok) {
             Ok((prompt, max_new)) => {
-                let resp = router.generate(prompt, max_new)?;
+                let task = j
+                    .as_ref()
+                    .and_then(|j| j.get("task").as_str())
+                    .map(str::to_string);
+                let deadline_ns = j
+                    .as_ref()
+                    .and_then(|j| j.get("slo_ms").as_f64())
+                    .filter(|&ms| ms > 0.0)
+                    .map(|ms| (ms * 1e6) as u64);
+                let rx = router.submit_with_slo(
+                    prompt,
+                    max_new,
+                    task.as_deref(),
+                    deadline_ns,
+                );
+                let resp = rx.recv()?;
                 let out = format_response(
                     resp.id, &resp.tokens, tok, resp.mat,
                     resp.acceptance, resp.decode_ns,

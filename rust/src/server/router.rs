@@ -29,6 +29,7 @@ use crate::engine::dvi::DviEngine;
 use crate::engine::Engine;
 use crate::harness::make_engine;
 use crate::learner::{Objective, ReplayBuffer, Schedule, Trainer};
+use crate::obs::health::HealthMonitor;
 use crate::obs::{metrics, trace};
 use crate::runtime::{log, ExecutorStatus, Runtime};
 use crate::sched::{AdaptiveK, CacheConfig, SchedConfig, SchedStats, Scheduler};
@@ -84,6 +85,25 @@ pub struct Request {
     /// Stamped at [`Router::submit`]; channel residency counts toward
     /// the batched scheduler's queue-wait metric.
     pub submitted: Instant,
+    /// Tenant/workload tag for the health monitor's per-tenant SLO
+    /// ledger (and, in batched mode, the per-task acceptance priors).
+    pub task: Option<String>,
+    /// Latency SLO (submit → completion, ns). Observation-only.
+    pub deadline_ns: Option<u64>,
+}
+
+/// Default request deadline from `DVI_SLO_MS` (unset/0 = no SLO).
+/// Parsed once; serves as the fleet-wide SLO when callers don't carry
+/// per-request deadlines.
+fn env_slo_deadline_ns() -> Option<u64> {
+    static SLO: std::sync::OnceLock<Option<u64>> = std::sync::OnceLock::new();
+    *SLO.get_or_init(|| {
+        std::env::var("DVI_SLO_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&ms| ms > 0)
+            .map(|ms| ms * 1_000_000)
+    })
 }
 
 #[derive(Debug, Clone)]
@@ -142,6 +162,9 @@ pub struct Router {
     buffer: Arc<Mutex<ReplayBuffer>>,
     /// Mirrored learner-thread state; `Some` when the learner runs.
     pub learner_obs: Option<Arc<LearnerObs>>,
+    /// Serving-health monitor: per-tenant SLO attainment and the
+    /// acceptance drift detector ([`Router::health_json`] probe).
+    pub health: Arc<HealthMonitor>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
     learner: Option<JoinHandle<()>>,
@@ -154,6 +177,7 @@ fn worker_loop(
     mut engine: Box<dyn Engine + Send>,
     rx: Arc<Mutex<Receiver<Request>>>,
     stats: Arc<RouterStats>,
+    health: Arc<HealthMonitor>,
 ) {
     loop {
         let req = {
@@ -166,6 +190,13 @@ fn worker_loop(
                 stats.served.fetch_add(1, Ordering::Relaxed);
                 stats.tokens.fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
                 stats.decode_ns.fetch_add(r.decode_ns, Ordering::Relaxed);
+                health.record_completion(
+                    req.task.as_deref(),
+                    true,
+                    req.submitted.elapsed().as_nanos() as u64,
+                    req.deadline_ns,
+                    r.tokens.len() as u64,
+                );
                 let resp = Response {
                     id: req.id,
                     mat: r.mat(),
@@ -178,6 +209,13 @@ fn worker_loop(
                 let _ = req.respond.send(resp);
             }
             Err(e) => {
+                health.record_completion(
+                    req.task.as_deref(),
+                    false,
+                    req.submitted.elapsed().as_nanos() as u64,
+                    req.deadline_ns,
+                    0,
+                );
                 log::info(&format!("worker {w} generate failed: {e}"));
             }
         }
@@ -199,7 +237,13 @@ fn scheduler_loop(
         waiting: &mut BTreeMap<u64, (u64, Sender<Response>)>,
         req: Request,
     ) {
-        let sid = sched.submit_at(req.prompt, req.max_new, req.submitted);
+        let sid = sched.submit_with_deadline(
+            req.prompt,
+            req.max_new,
+            req.task.as_deref(),
+            req.submitted,
+            req.deadline_ns,
+        );
         waiting.insert(sid, (req.id, req.respond));
     }
     loop {
@@ -262,6 +306,7 @@ fn learner_loop(
     stop: Arc<AtomicBool>,
     stats: Arc<RouterStats>,
     obs: Arc<LearnerObs>,
+    health: Arc<HealthMonitor>,
 ) {
     let mut last_pushed = 0u64;
     let fresh_quantum = (trainer.batch_size as u64 / 4).max(1);
@@ -283,18 +328,24 @@ fn learner_loop(
                 let phase =
                     trainer.schedule.phase_index(trainer.steps_done);
                 let prev = obs.phase.swap(phase, Ordering::Relaxed);
-                if phase != prev && trace::enabled() {
-                    trace::instant(
-                        "learner.phase",
-                        "learner",
-                        vec![
-                            ("phase", trace::Arg::I(phase as i64)),
-                            (
-                                "step",
-                                trace::Arg::I(trainer.steps_done as i64),
-                            ),
-                        ],
-                    );
+                if phase != prev {
+                    // Key the drift detector to the schedule: a KL→RL
+                    // hand-off legitimately moves acceptance, so the
+                    // monitor re-baselines instead of alarming.
+                    health.set_phase(phase as u8, obs.phase_name());
+                    if trace::enabled() {
+                        trace::instant(
+                            "learner.phase",
+                            "learner",
+                            vec![
+                                ("phase", trace::Arg::I(phase as i64)),
+                                (
+                                    "step",
+                                    trace::Arg::I(trainer.steps_done as i64),
+                                ),
+                            ],
+                        );
+                    }
                 }
             }
             Ok(None) => {
@@ -315,9 +366,10 @@ impl Router {
         let stop = Arc::new(AtomicBool::new(false));
         let buffer = Arc::new(Mutex::new(ReplayBuffer::new(cfg.buffer_capacity)));
         let online_dvi = cfg.online && cfg.method == "dvi";
+        let health = Arc::new(HealthMonitor::new());
 
         let (workers, sched_stats) = if cfg.batched {
-            let sched = Scheduler::new(
+            let mut sched = Scheduler::new(
                 rt.clone(),
                 SchedConfig {
                     method: cfg.method.clone(),
@@ -328,6 +380,7 @@ impl Router {
                 },
                 if online_dvi { Some(buffer.clone()) } else { None },
             )?;
+            sched.attach_health(health.clone());
             let sched_stats = sched.stats.clone();
             let stats2 = stats.clone();
             let handle = std::thread::Builder::new()
@@ -359,10 +412,13 @@ impl Router {
             for (w, engine) in engines.into_iter().enumerate() {
                 let rx = rx.clone();
                 let stats = stats.clone();
+                let health = health.clone();
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("dvi-worker-{w}"))
-                        .spawn(move || worker_loop(w, engine, rx, stats))?,
+                        .spawn(move || {
+                            worker_loop(w, engine, rx, stats, health)
+                        })?,
                 );
             }
             (workers, None)
@@ -381,9 +437,12 @@ impl Router {
             let stop2 = stop.clone();
             let stats2 = stats.clone();
             let obs2 = obs.clone();
+            let health2 = health.clone();
             let handle = std::thread::Builder::new()
                 .name("dvi-learner".into())
-                .spawn(move || learner_loop(trainer, stop2, stats2, obs2))?;
+                .spawn(move || {
+                    learner_loop(trainer, stop2, stats2, obs2, health2)
+                })?;
             (Some(handle), Some(obs))
         } else {
             (None, None)
@@ -396,6 +455,7 @@ impl Router {
             rt,
             buffer,
             learner_obs,
+            health,
             stop,
             workers,
             learner,
@@ -496,8 +556,30 @@ impl Router {
         )
     }
 
-    /// Submit a prompt; returns a receiver for the response.
+    /// One-line JSON health snapshot: per-tenant SLO attainment and the
+    /// acceptance drift detector's state, keyed by the learner phase.
+    /// Served for `{"health": true}` probes and summarized in the
+    /// periodic `dvi serve` report.
+    pub fn health_json(&self) -> String {
+        self.health.to_json()
+    }
+
+    /// Submit a prompt; returns a receiver for the response. The
+    /// request carries the fleet default SLO (`DVI_SLO_MS`) if one is
+    /// configured; [`Router::submit_with_slo`] overrides per request.
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Receiver<Response> {
+        self.submit_with_slo(prompt, max_new, None, None)
+    }
+
+    /// [`Router::submit`] with an explicit tenant tag and deadline
+    /// (`None` falls back to the `DVI_SLO_MS` fleet default).
+    pub fn submit_with_slo(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        task: Option<&str>,
+        deadline_ns: Option<u64>,
+    ) -> Receiver<Response> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let _ = self.tx.send(Request {
@@ -506,6 +588,8 @@ impl Router {
             max_new,
             respond: tx,
             submitted: Instant::now(),
+            task: task.map(str::to_string),
+            deadline_ns: deadline_ns.or_else(env_slo_deadline_ns),
         });
         rx
     }

@@ -6,8 +6,9 @@
 //! collapse entirely. This module turns a seeded [`WorkloadSpec`] into a
 //! concrete admission schedule: every request carries an arrival
 //! timestamp, a tenant, a task tag, a prompt drawn from the existing
-//! [`PromptSet`] corpora (optionally truncated to a sampled length), and
-//! a sampled output budget.
+//! [`PromptSet`] corpora (optionally truncated to a sampled length), a
+//! sampled output budget, and the tenant's latency deadline (`slo_ms`)
+//! when one is configured.
 //!
 //! The same seed always yields the bitwise-identical schedule
 //! ([`encode_schedule`] / [`fingerprint`] make that checkable), so a
@@ -139,6 +140,11 @@ pub struct TenantSpec {
     pub prompt_len: LenDist,
     /// Output token budget per request.
     pub max_new: LenDist,
+    /// Per-tenant latency SLO: every request this tenant admits carries
+    /// this deadline (milliseconds, submit → completion), feeding the
+    /// health monitor's attainment ledger and the bench's SLO-goodput
+    /// metric. `None` = best-effort tenant (always in-deadline).
+    pub slo_ms: Option<u64>,
 }
 
 /// Full description of a workload; `generate` is a pure function of
@@ -160,6 +166,9 @@ pub struct Admission {
     pub task: u32,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Latency deadline (nanoseconds, submit → completion) inherited
+    /// from the tenant's `slo_ms`; `None` = best-effort.
+    pub deadline_ns: Option<u64>,
 }
 
 fn task_id(name: &str) -> Result<u32> {
@@ -213,6 +222,9 @@ pub fn generate(spec: &WorkloadSpec, source: &PromptSet) -> Result<Vec<Admission
     for t in &spec.tenants {
         t.prompt_len.validate(&format!("tenant {}: prompt_len", t.name))?;
         t.max_new.validate(&format!("tenant {}: max_new", t.name))?;
+        if t.slo_ms == Some(0) {
+            bail!("tenant {}: slo_ms must be >= 1 (use None for no SLO)", t.name);
+        }
         let mut ids = Vec::with_capacity(t.task_mix.len());
         for (name, _) in &t.task_mix {
             ids.push(task_id(name)?);
@@ -262,6 +274,7 @@ pub fn generate(spec: &WorkloadSpec, source: &PromptSet) -> Result<Vec<Admission
             task,
             prompt,
             max_new,
+            deadline_ns: spec.tenants[tenant].slo_ms.map(|ms| ms * 1_000_000),
         });
     }
     Ok(out)
@@ -273,13 +286,16 @@ pub fn generate(spec: &WorkloadSpec, source: &PromptSet) -> Result<Vec<Admission
 pub fn encode_schedule(schedule: &[Admission]) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(b"DVIW");
-    out.extend_from_slice(&1u32.to_le_bytes());
+    // v2: per-admission deadline_ns (0 = none; generate rejects
+    // slo_ms=0 so the sentinel is unambiguous).
+    out.extend_from_slice(&2u32.to_le_bytes());
     out.extend_from_slice(&(schedule.len() as u32).to_le_bytes());
     for a in schedule {
         out.extend_from_slice(&a.at_ns.to_le_bytes());
         out.extend_from_slice(&a.tenant.to_le_bytes());
         out.extend_from_slice(&a.task.to_le_bytes());
         out.extend_from_slice(&(a.max_new as u32).to_le_bytes());
+        out.extend_from_slice(&a.deadline_ns.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&(a.prompt.len() as u32).to_le_bytes());
         for t in &a.prompt {
             out.extend_from_slice(&t.to_le_bytes());
@@ -325,6 +341,7 @@ mod tests {
             task_mix: mix.iter().map(|(n, w)| (n.to_string(), *w)).collect(),
             prompt_len: LenDist::Uniform { lo: 4, hi: 12 },
             max_new: LenDist::Uniform { lo: 2, hi: 6 },
+            slo_ms: None,
         }
     }
 
@@ -499,6 +516,7 @@ mod tests {
             task: 1,
             prompt: vec![1, 2, 3],
             max_new: 4,
+            deadline_ns: Some(250_000_000),
         };
         let enc = |a: &Admission| encode_schedule(std::slice::from_ref(a));
         let mut m = base.clone();
@@ -510,6 +528,38 @@ mod tests {
         let mut m = base.clone();
         m.max_new = 5;
         assert_ne!(enc(&base), enc(&m));
+        let mut m = base.clone();
+        m.deadline_ns = Some(300_000_000);
+        assert_ne!(enc(&base), enc(&m));
+        let mut m = base.clone();
+        m.deadline_ns = None;
+        assert_ne!(enc(&base), enc(&m));
+    }
+
+    /// Every admission inherits exactly its tenant's deadline, scaled
+    /// to nanoseconds; best-effort tenants stay `None`.
+    #[test]
+    fn deadlines_follow_the_tenant() {
+        let mut chat = one_tenant(&[("qa", 1.0)]);
+        chat.name = "chat".into();
+        chat.slo_ms = Some(250);
+        let mut batch = one_tenant(&[("mt", 1.0)]);
+        batch.name = "batch".into();
+        let spec = WorkloadSpec {
+            seed: 21,
+            requests: 400,
+            arrival: Arrival::Poisson { rate_per_s: 200.0 },
+            tenants: vec![chat, batch],
+        };
+        let sched = generate(&spec, &corpus()).unwrap();
+        assert!(sched.iter().any(|a| a.tenant == 0));
+        assert!(sched.iter().any(|a| a.tenant == 1));
+        for a in &sched {
+            match a.tenant {
+                0 => assert_eq!(a.deadline_ns, Some(250_000_000)),
+                _ => assert_eq!(a.deadline_ns, None),
+            }
+        }
     }
 
     #[test]
@@ -539,6 +589,9 @@ mod tests {
         assert!(generate(&bad, &c).is_err());
         let mut bad = good.clone();
         bad.tenants[0].task_mix = vec![("qa".into(), -1.0)];
+        assert!(generate(&bad, &c).is_err());
+        let mut bad = good.clone();
+        bad.tenants[0].slo_ms = Some(0);
         assert!(generate(&bad, &c).is_err());
         // Empty corpus for a requested task.
         let empty = PromptSet { samples: Vec::new() };

@@ -12,10 +12,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use dvi::harness::load_prompts;
 use dvi::learner::{Objective, ReplayBuffer, Schedule, Trainer, Tuple};
-use dvi::obs::{chrome, metrics, trace};
+use dvi::obs::{chrome, metrics, trace, HealthMonitor};
 use dvi::runtime::{Runtime, Tensor};
 use dvi::sched::{AdaptiveK, SchedConfig, Scheduler};
 use dvi::server::{Router, RouterConfig};
@@ -134,7 +135,7 @@ fn traced_scheduler_is_bitwise_identical_and_trace_is_valid() {
         }
     }
 
-    let (stats, _) = chrome::summarize(&doc).expect("trace summarizes");
+    let (stats, _, _) = chrome::summarize(&doc).expect("trace summarizes");
     assert!(
         stats.iter().any(|s| s.key.starts_with("seq.draft_round")),
         "summary lost the draft-round phase"
@@ -330,4 +331,206 @@ fn router_stats_and_metrics_json_are_valid() {
     );
     assert!(j.get("trace").get("enabled").as_bool().is_some());
     router.shutdown();
+}
+
+/// Tentpole gate: pull a loopback executor's ring over the wire, merge
+/// it with the client track, and check the merged document end to end —
+/// parseable, per-(pid, tid)-track time-monotonic, every client
+/// `rpc.call` span's call id resolving to exactly one executor `exec`
+/// span nested inside it (up to the clock estimator's uncertainty), and
+/// the client/server/wire decomposition reducing those pairs per shard.
+#[test]
+fn merged_fleet_trace_pairs_every_rpc_with_one_exec() {
+    let _g = lock();
+    trace::set_forced(Some(true));
+    let _ = trace::drain();
+    let rt = Runtime::load_remote_loopback(SEED).expect("loopback runtime");
+    let art = rt.artifact("target_step").unwrap();
+    let kv = rt.fresh_kv("target_step").unwrap();
+    for step in 0..4 {
+        let inputs =
+            [Tensor::scalar_i32(5 + step), Tensor::scalar_i32(step)];
+        art.call(&kv, &inputs).unwrap();
+    }
+    let pulls = rt.obs_pull().expect("obs pull");
+    let leftover: Vec<_> =
+        trace::drain().iter().map(trace::Event::to_owned_event).collect();
+    trace::set_forced(None);
+    assert_eq!(pulls.len(), 1, "one loopback shard");
+    let obs = pulls.into_iter().next().unwrap();
+    // Loopback shares the process clock, so the estimator's guarantee
+    // |offset − true_offset| <= uncertainty collapses to a checkable
+    // absolute bound.
+    assert!(
+        obs.offset.offset_ns.unsigned_abs() <= obs.offset.uncertainty_ns,
+        "loopback clock offset {} ns outside its own uncertainty {} ns",
+        obs.offset.offset_ns,
+        obs.offset.uncertainty_ns
+    );
+    // Enclosure slack: clock-alignment error plus a little scheduling
+    // jitter between a reply landing and its span being emitted.
+    let slack_us = 2.0 * obs.offset.uncertainty_ns as f64 / 1e3 + 500.0;
+    let client = chrome::ProcessTrack {
+        pid: chrome::CLIENT_PID,
+        label: "dvi client".into(),
+        // The loopback executor shares the client's rings, so the pull
+        // drained (almost) everything into the shard dump — an empty
+        // client track is what a merge around an idle client looks like.
+        events: leftover,
+        dropped: trace::drop_count(),
+    };
+    let shard = obs.into_track();
+    assert_eq!(shard.pid, chrome::shard_pid(0));
+    let doc = chrome::render_merged(&[client, shard], 0);
+
+    let j = Json::parse(&doc).expect("merged doc parses");
+    let arr = j.get("traceEvents").as_arr().expect("traceEvents array");
+    let procs = arr
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .count();
+    assert!(procs >= 2, "merged doc must name both process tracks");
+    let mut last: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    for e in arr {
+        if e.get("ph").as_str() == Some("M") {
+            continue;
+        }
+        let ts = e.get("ts").as_f64().expect("event ts");
+        let key = (
+            e.get("pid").as_f64().expect("event pid") as i64,
+            e.get("tid").as_f64().expect("event tid") as i64,
+        );
+        if let Some(prev) = last.insert(key, ts) {
+            assert!(ts >= prev, "track {key:?} went backwards in time");
+        }
+    }
+
+    let spans = |name: &str| -> Vec<(i64, f64, f64)> {
+        arr.iter()
+            .filter(|e| e.get("name").as_str() == Some(name))
+            .map(|e| {
+                (
+                    e.get("args").get("id").as_f64().expect("span id") as i64,
+                    e.get("ts").as_f64().unwrap(),
+                    e.get("dur").as_f64().unwrap(),
+                )
+            })
+            .collect()
+    };
+    let rpcs = spans("rpc.call");
+    let execs = spans("exec");
+    assert!(
+        rpcs.len() >= 4,
+        "expected an rpc.call span per artifact call, got {}",
+        rpcs.len()
+    );
+    for (id, ts, dur) in &rpcs {
+        let partners: Vec<_> =
+            execs.iter().filter(|(eid, ..)| eid == id).collect();
+        assert_eq!(
+            partners.len(),
+            1,
+            "rpc call id {id} must resolve to exactly one exec span"
+        );
+        let (_, ets, edur) = partners[0];
+        assert!(
+            *edur <= dur + 0.01,
+            "server exec ({edur} us) cannot outlast its rpc span ({dur} us)"
+        );
+        assert!(
+            *ets + slack_us >= *ts && ets + edur <= ts + dur + slack_us,
+            "exec span for call {id} escapes its rpc span beyond the \
+             clock uncertainty"
+        );
+    }
+
+    let rows = chrome::decompose(&doc).expect("decomposition");
+    assert_eq!(rows.len(), 1, "one shard row");
+    assert_eq!(rows[0].shard, 0);
+    assert_eq!(rows[0].matched, rpcs.len());
+    assert!(rows[0].server_p50_us <= rows[0].client_p50_us + 0.01);
+    assert!(rows[0].wire_p50_us >= 0.0);
+}
+
+/// The whole observability stack at once — forced tracing, a wire
+/// collection landing mid-run, and an attached health monitor scoring
+/// per-tenant deadlines — must leave committed token streams bitwise
+/// identical to the all-off in-process run, on a 2-shard loopback
+/// fleet.
+#[test]
+fn full_observability_stack_is_bitwise_inert_on_a_sharded_fleet() {
+    let _g = lock();
+    let cases = {
+        let rt = runtime();
+        mixed_prompts(&rt, 6, 12)
+    };
+    trace::set_forced(Some(false));
+    let golden = scheduler_tokens(&runtime(), "dvi", &cases);
+
+    trace::set_forced(Some(true));
+    let _ = trace::drain();
+    let rt = Arc::new(
+        Runtime::load_remote_sharded_loopback(SEED, 2)
+            .expect("sharded loopback runtime"),
+    );
+    let cfg = SchedConfig {
+        method: "dvi".into(),
+        max_batch: 4,
+        max_slots: cases.len(),
+        adaptive: AdaptiveK::from_env(),
+        cache: None,
+    };
+    let mut sched = Scheduler::new(rt.clone(), cfg, None).unwrap();
+    let health = Arc::new(HealthMonitor::new());
+    sched.attach_health(health.clone());
+    for (p, n) in &cases {
+        // Generous one-hour deadline: the run must be scored (and met),
+        // never perturbed.
+        sched.submit_with_deadline(
+            p.clone(),
+            *n,
+            Some("chat"),
+            Instant::now(),
+            Some(3_600_000_000_000),
+        );
+    }
+    let mut pulled = false;
+    let mut guard = 0u64;
+    while !sched.is_idle() {
+        guard += 1;
+        assert!(guard < 100_000, "scheduler wedged");
+        sched.tick().expect("tick");
+        if !pulled {
+            // Wire collection racing live traffic on the same mux
+            // connections: a control-plane drain must never disturb the
+            // data plane.
+            pulled = true;
+            let pulls = rt.obs_pull().expect("mid-run obs pull");
+            assert_eq!(pulls.len(), 2, "one dump per shard");
+        }
+    }
+    let mut done = sched.drain_completed();
+    assert_eq!(done.len(), cases.len());
+    done.sort_by_key(|r| r.id);
+    let streams: Vec<Vec<u32>> = done
+        .into_iter()
+        .map(|r| r.result.expect("generation failed").tokens)
+        .collect();
+    let _ = trace::drain();
+    trace::set_forced(None);
+    assert_eq!(
+        streams, golden,
+        "observability stack changed a committed stream"
+    );
+
+    let snap = health.snapshot();
+    let chat = snap.tenants.get("chat").expect("chat tenant ledger");
+    assert_eq!(chat.completed, cases.len() as u64);
+    assert_eq!(
+        chat.in_deadline,
+        cases.len() as u64,
+        "a one-hour deadline must always be met"
+    );
+    assert!(chat.goodput_tokens > 0, "goodput must count committed tokens");
+    assert!(!snap.alarm, "a healthy run must not trip the drift alarm");
 }
